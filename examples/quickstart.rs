@@ -1,0 +1,92 @@
+//! Quickstart: the GAVINA public API in one page.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Quantize two matrices and run a bit-serial GEMM exactly.
+//! 2. Calibrate an undervolting error model from gate-level simulation
+//!    (a small array so it runs in seconds).
+//! 3. Re-run the GEMM under an aggressive GAV schedule and measure the
+//!    error (VAR_NED) and the modelled power saving.
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::errmodel::{calibrate, CalibrationConfig};
+use gavina::gls::{DelayModel, GlsContext};
+use gavina::power::PowerModel;
+use gavina::simulator::{GavinaSim, GemmJob};
+use gavina::stats::var_ned;
+use gavina::util::Prng;
+use gavina::workload::uniform_ip_matrices;
+
+fn main() {
+    // --- 1. an exact mixed-precision bit-serial GEMM ------------------
+    let arch = ArchConfig::tiny(); // [C, L, K] = [36, 4, 4] for speed
+    let prec = Precision::new(4, 4);
+    let mut rng = Prng::new(42);
+    let (c, l, k) = (72, 8, 8); // 2x2x2 hardware tiles
+    let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+
+    let exact_sched = GavSchedule::all_guarded(prec);
+    let mut sim = GavinaSim::new(arch.clone(), None, 1);
+    let job = GemmJob {
+        a: &a,
+        b: &b,
+        c,
+        l,
+        k,
+        sched: exact_sched.clone(),
+    };
+    let exact = sim.run_gemm(&job);
+    println!(
+        "exact GEMM: {} tiles, {} cycles, utilization {:.2}",
+        exact.n_tiles,
+        exact.cycles,
+        exact.utilization(&arch, &exact_sched)
+    );
+
+    // --- 2. calibrate the undervolting error model from GLS -----------
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        7,
+    );
+    let (tables, stats) = calibrate(
+        &ctx,
+        CalibrationConfig {
+            n_streams: 128,
+            seq_len: 32,
+            ..Default::default()
+        },
+    );
+    println!(
+        "calibrated error model from {} GLS samples in {:.1}s",
+        stats.samples, stats.gls_seconds
+    );
+
+    // --- 3. the same GEMM under aggressive undervolting ----------------
+    let power = PowerModel::paper_calibrated();
+    println!("\n  G | VAR_NED     | approx-region power");
+    for g in 0..=prec.max_g() {
+        let sched = GavSchedule::two_level(prec, g);
+        let mut sim_uv = GavinaSim::new(arch.clone(), Some(&tables), 2);
+        let rep = sim_uv.run_gemm(&GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched: sched.clone(),
+        });
+        let err = var_ned(&exact.p, &rep.p);
+        println!(
+            "  {g} | {err:11.3e} | {:6.2} mW",
+            power.array_avg_power_mw(&sched)
+        );
+    }
+    println!(
+        "\nundervolting boost at a2w2 (throughput unchanged): ×{:.2}",
+        power.undervolting_boost(Precision::new(2, 2))
+    );
+}

@@ -1,0 +1,92 @@
+//! Serving demo: the Layer-3 coordinator batching inference requests onto
+//! the GAVINA simulator — load the trained model, replay the evaluation
+//! set as a request stream, report latency percentiles, throughput and
+//! accelerator-side energy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve [n_requests] [g]
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gavina::arch::{GavSchedule, Precision};
+use gavina::coordinator::{Coordinator, ServeConfig};
+use gavina::dnn;
+use gavina::errmodel;
+use gavina::power::PowerModel;
+use gavina::stats::accuracy;
+
+fn main() {
+    let n_req: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let prec = Precision::new(4, 4);
+    let g: u32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(prec.max_g());
+
+    let artifacts = Path::new("artifacts");
+    let weights = Arc::new(
+        dnn::load_tensors(&artifacts.join("weights_a4w4.bin")).expect("run `make artifacts`"),
+    );
+    let eval = dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
+    let tables = errmodel::io::load(&artifacts.join("caltables_v035.bin"))
+        .map(|(t, _)| Arc::new(t))
+        .ok();
+
+    let mut cfg = ServeConfig::new(prec, g);
+    cfg.workers = 4;
+    cfg.max_batch = 8;
+    cfg.batch_timeout = Duration::from_millis(10);
+    println!(
+        "starting coordinator: {} workers, max batch {}, {prec} G={g}",
+        cfg.workers, cfg.max_batch
+    );
+    let coord = Coordinator::start(cfg, Arc::clone(&weights), tables.clone());
+
+    let n = n_req.min(eval.n);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit(eval.images[i * 3072..(i + 1) * 3072].to_vec()))
+        .collect();
+
+    let mut logits = Vec::with_capacity(n * 10);
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(600))
+            .expect("response");
+        logits.extend_from_slice(&resp.logits);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let acc = accuracy(&logits, &eval.labels[..n], 10);
+
+    let m = coord.shutdown();
+    let (p50, p95, max) = m.latency_percentiles();
+    let power = PowerModel::paper_calibrated();
+    let sched = GavSchedule::two_level(prec, g);
+    let cycles = m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed);
+
+    println!("\nserved {n} requests in {wall:.2} s  ({:.1} img/s host)", n as f64 / wall);
+    println!("accuracy under service config: {acc:.4}");
+    println!(
+        "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",
+        p50 as f64 / 1e3,
+        p95 as f64 / 1e3,
+        max as f64 / 1e3
+    );
+    println!(
+        "batches: {} (avg {:.1} img/batch)",
+        m.batches.load(std::sync::atomic::Ordering::Relaxed),
+        n as f64 / m.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
+    );
+    println!(
+        "accelerator: {cycles} cycles = {:.2} ms hw time, {:.3} mJ ({:.3} mJ/img)",
+        cycles as f64 / 50e6 * 1e3,
+        power.energy_mj(&sched, cycles),
+        power.energy_mj(&sched, cycles) / n as f64
+    );
+}

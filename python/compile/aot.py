@@ -1,0 +1,139 @@
+"""AOT bridge: lower the L2/L1 jax functions to HLO *text* artifacts that
+the Rust runtime loads via the PJRT C API.
+
+HLO text, NOT ``lowered.compile()``/``.serialize()``: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids fail
+``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced (all shapes are the paper's hardware tile
+[C,L,K] = [576,8,16], Sec. IV-A):
+
+  bitserial_gemm_aXwY.hlo.txt  exact integer GEMM of one tile from
+                               bit-planes: (a_planes [X,576,8] f32{0,1},
+                               b_planes [Y,16,576] f32{0,1}) -> [16,8] f32
+  binary_plane.hlo.txt         one Parallel-Array cycle:
+                               ([576,8], [16,576]) -> [16,8]
+  errinject_aXwY.hlo.txt       the undervolting error model applied to one
+                               tile's iPE step sequence (LUT tables and
+                               uniforms as runtime inputs)
+  gav_gemm_aXwY.hlo.txt        full approximate tile: planes -> steps ->
+                               error injection -> shift-accumulate
+
+A manifest (artifacts/manifest.txt) lists each artifact with its input
+signature so the Rust loader can self-check shapes at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import bitserial
+
+C, L, K = bitserial.C_DIM, bitserial.L_DIM, bitserial.K_DIM
+S_BITS = 10  # ceil(log2(C+1)) for C=576
+P_BINS = 16
+N_NEI = 2
+
+PRECISIONS = [(2, 2), (3, 3), (4, 4), (8, 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, lowered, manifest: list[str],
+           signature: str) -> None:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"{name}\t{signature}")
+    print(f"  wrote {name} ({len(text)} chars)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = []
+
+    # --- single binary plane (raw Parallel Array cycle) ---
+    lowered = jax.jit(bitserial.binary_gemm_plane).lower(f32(C, L), f32(K, C))
+    _write(out_dir, "binary_plane.hlo.txt", lowered, manifest,
+           f"a_plane f32[{C},{L}], b_plane f32[{K},{C}] -> f32[{K},{L}]")
+
+    for (ab, wb) in PRECISIONS:
+        # --- exact bit-serial GEMM of one tile ---
+        fn = lambda ap, bp: M.bitserial_gemm_tile(ap, bp, a_bits=ab, b_bits=wb)
+        lowered = jax.jit(fn).lower(f32(ab, C, L), f32(wb, K, C))
+        _write(out_dir, f"bitserial_gemm_a{ab}w{wb}.hlo.txt", lowered,
+               manifest,
+               f"a_planes f32[{ab},{C},{L}], b_planes f32[{wb},{K},{C}] "
+               f"-> f32[{K},{L}]")
+
+        # --- error injection on the iPE step sequence ---
+        seqlen = ab * wb
+        errfn = lambda seq, tab, uni, msk: M.errmodel_jax(
+            seq, tab, uni, msk, c_dim=C, n_nei=N_NEI, p_bins=P_BINS,
+            s_bits=S_BITS)
+        lowered = jax.jit(errfn).lower(
+            i32(seqlen, K, L), f32(S_BITS, C + 1, P_BINS, 2 ** N_NEI),
+            f32(seqlen, K, L, S_BITS),
+            jax.ShapeDtypeStruct((seqlen,), jnp.bool_))
+        _write(out_dir, f"errinject_a{ab}w{wb}.hlo.txt", lowered, manifest,
+               f"exact i32[{seqlen},{K},{L}], tables "
+               f"f32[{S_BITS},{C + 1},{P_BINS},{2 ** N_NEI}], uniforms "
+               f"f32[{seqlen},{K},{L},{S_BITS}], approx pred[{seqlen}] "
+               f"-> i32[{seqlen},{K},{L}]")
+
+    # --- full approximate tile (a4w4 reference config) ---
+    ab, wb = 4, 4
+    gavfn = lambda ap, bp, tab, uni, msk: M.gav_gemm_tile(
+        ap, bp, tab, uni, msk, a_bits=ab, b_bits=wb, c_dim=C, n_nei=N_NEI,
+        p_bins=P_BINS, s_bits=S_BITS)
+    lowered = jax.jit(gavfn).lower(
+        f32(ab, C, L), f32(wb, K, C),
+        f32(S_BITS, C + 1, P_BINS, 2 ** N_NEI),
+        f32(ab * wb, K, L, S_BITS),
+        jax.ShapeDtypeStruct((ab * wb,), jnp.bool_))
+    _write(out_dir, f"gav_gemm_a{ab}w{wb}.hlo.txt", lowered, manifest,
+           f"a_planes f32[{ab},{C},{L}], b_planes f32[{wb},{K},{C}], tables, "
+           f"uniforms, approx -> i32[{K},{L}]")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out_dir = args.out
+    # argparse gives us e.g. ../artifacts/model.hlo.txt from the Makefile's
+    # legacy invocation; accept both a dir and a file-ish path.
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir)
+    build_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

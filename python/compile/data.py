@@ -1,0 +1,80 @@
+"""Synthetic CIFAR-like dataset (substitution for CIFAR-10 — see DESIGN.md).
+
+The environment has no network access, so the real CIFAR-10 cannot be
+downloaded. We substitute a *procedural* 10-class 32x32x3 image task with
+class structure rich enough that a quantized ResNet-18 has to learn real
+features (oriented gratings + class-colored blobs + per-sample pose/phase
+jitter + pixel noise), yet learnable in minutes on one CPU core. The role
+of the dataset in the paper is to expose accuracy-vs-G / accuracy-vs-
+precision *trends*; this task preserves that role: accuracy is high when
+exact, degrades with quantization noise and with injected GAV errors.
+
+The same generator seeds/test split are exported to ``artifacts/`` so the
+Rust evaluation path scores the identical images.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32
+NUM_CLASSES = 10
+
+
+def _grating(theta: float, freq: float, phase: float) -> np.ndarray:
+    ys, xs = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    t = xs * np.cos(theta) + ys * np.sin(theta)
+    return 0.5 + 0.5 * np.sin(2 * np.pi * freq * t + phase)
+
+
+def _blob(cx: float, cy: float, r: float) -> np.ndarray:
+    ys, xs = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    d2 = (xs - cx) ** 2 + (ys - cy) ** 2
+    return np.exp(-d2 / (2 * r * r))
+
+
+# Per-class signature: (grating angle, frequency, RGB tint, blob quadrant)
+_CLASS_DEFS = [
+    (0.0, 2.0, (1.0, 0.2, 0.2), (0.25, 0.25)),
+    (np.pi / 4, 3.0, (0.2, 1.0, 0.2), (0.75, 0.25)),
+    (np.pi / 2, 2.0, (0.2, 0.2, 1.0), (0.25, 0.75)),
+    (3 * np.pi / 4, 4.0, (1.0, 1.0, 0.2), (0.75, 0.75)),
+    (0.0, 5.0, (1.0, 0.2, 1.0), (0.5, 0.5)),
+    (np.pi / 3, 2.5, (0.2, 1.0, 1.0), (0.25, 0.5)),
+    (2 * np.pi / 3, 3.5, (1.0, 0.6, 0.2), (0.5, 0.25)),
+    (np.pi / 6, 4.5, (0.6, 0.2, 1.0), (0.75, 0.5)),
+    (5 * np.pi / 6, 1.5, (0.4, 0.8, 0.4), (0.5, 0.75)),
+    (np.pi / 2, 5.5, (0.8, 0.8, 0.8), (0.25, 0.25)),
+]
+
+
+def make_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` images. Returns (images [n,32,32,3] float32 in [0,1],
+    labels [n] int32). Class-balanced round-robin."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, IMG, IMG, 3), dtype=np.float32)
+    labels = np.zeros(n, dtype=np.int32)
+    for i in range(n):
+        cls = i % NUM_CLASSES
+        theta, freq, tint, (bx, by) = _CLASS_DEFS[cls]
+        theta = theta + rng.normal(0, 0.12)
+        freq = freq * (1 + rng.normal(0, 0.08))
+        phase = rng.uniform(0, 2 * np.pi)
+        g = _grating(theta, freq, phase)
+        blob = _blob(bx + rng.normal(0, 0.05), by + rng.normal(0, 0.05),
+                     0.15 + rng.normal(0, 0.02))
+        img = np.zeros((IMG, IMG, 3), dtype=np.float32)
+        for ch in range(3):
+            img[..., ch] = 0.55 * g * tint[ch] + 0.45 * blob * tint[ch]
+        img += rng.normal(0, 0.06, img.shape).astype(np.float32)
+        images[i] = np.clip(img, 0.0, 1.0)
+        labels[i] = cls
+    return images, labels
+
+
+def train_eval_split(n_train: int = 2000, n_eval: int = 512,
+                     seed: int = 2025) -> tuple:
+    """Deterministic train/eval sets (disjoint seeds)."""
+    xtr, ytr = make_dataset(n_train, seed)
+    xev, yev = make_dataset(n_eval, seed + 1)
+    return (xtr, ytr), (xev, yev)

@@ -1,0 +1,154 @@
+"""Layer-1 Pallas kernels: the GAVINA Parallel-Array hot-spot.
+
+The ASIC computes, every clock cycle, a binary GEMM between one activation
+bit-plane A_bit[C, L] and one weight bit-plane B_bit[K, C]:
+
+    iPE[k, l] = popcount_c( A_bit[c, l] & B_bit[k, c] )     (0 <= iPE <= C)
+
+and shift-accumulates the result with significance 2^(ba+bb) and the
+two's-complement sign rule. On TPU-style hardware we re-express the
+AND+popcount reduction as a dense {0,1} matmul so it lands on the MXU
+systolic array, and the (bb, ba) bit-plane loop becomes the Pallas *grid*:
+the same HBM->VMEM schedule the ASIC implements with its A0/B0 SCM level.
+
+The per-plane dot runs as int32 accumulation (int8 x int8 -> int32 is the
+MXU's native integer mode); every intermediate is bounded by
+C * (2^a_bits - 1) * (2^b_bits - 1) < 2^31 (asserted below), so the whole
+bit-serial GEMM is exact for all supported precisions including a8w8.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness runs through the interpreter, TPU performance is
+estimated analytically in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Architectural tile of the paper's physical design (Sec. IV-A).
+C_DIM, L_DIM, K_DIM = 576, 8, 16
+
+# MXU-friendly sub-tile of the C reduction dimension. 576 = 4 * 144; we pad
+# the C axis to a multiple of C_BLK inside the wrapper so BlockSpec tiling
+# stays regular.
+C_BLK = 144
+
+
+def _plane_signed_shift(step: jnp.ndarray, a_bits: int, b_bits: int):
+    """Decode grid step -> signed 2^(ba+bb) weight under the (bb outer,
+    ba inner) schedule used by the GAVINA controller (Fig. 3)."""
+    ba = step % a_bits
+    bb = step // a_bits
+    neg = (ba == a_bits - 1) != (bb == b_bits - 1)
+    shift = jnp.left_shift(jnp.int32(1), (ba + bb).astype(jnp.int32))
+    return jnp.where(neg, -shift, shift)
+
+
+def _bitserial_kernel(a_ref, b_ref, o_ref, *, a_bits: int, b_bits: int):
+    """Grid: (a_bits*b_bits, C//C_BLK). a_ref block: [1, C_BLK, L] of the
+    current activation plane; b_ref block: [1, K, C_BLK] of the current
+    weight plane; o_ref: the full [K, L] int32 accumulator (revisited every
+    step)."""
+    step = pl.program_id(0)
+    cblk = pl.program_id(1)
+
+    @pl.when((step == 0) & (cblk == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Binary GEMM: {0,1} values; int8 x int8 -> int32 (MXU integer mode).
+    a = a_ref[0].astype(jnp.int8)
+    b = b_ref[0].astype(jnp.int8)
+    part = jnp.dot(b, a, preferred_element_type=jnp.int32)
+    o_ref[...] += _plane_signed_shift(step, a_bits, b_bits) * part
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "b_bits"))
+def bitserial_gemm(a_planes: jnp.ndarray, b_planes: jnp.ndarray, *,
+                   a_bits: int, b_bits: int) -> jnp.ndarray:
+    """Bit-serial integer GEMM over pre-sliced bit-planes.
+
+    a_planes: [a_bits, C, L] f32 of {0,1}; b_planes: [b_bits, K, C] f32 of
+    {0,1}. Returns [K, L] int32 holding the exact signed integer GEMM
+    B @ A for the two's-complement operands the planes encode.
+    """
+    ab, c, l = a_planes.shape
+    bb_, k, c2 = b_planes.shape
+    assert ab == a_bits and bb_ == b_bits and c == c2, "plane shape mismatch"
+    # Exactness bound for int32 accumulation (see module docstring).
+    assert c * ((1 << a_bits) - 1) * ((1 << b_bits) - 1) < (1 << 31)
+
+    cpad = (-c) % C_BLK
+    if cpad:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, cpad), (0, 0)))
+        b_planes = jnp.pad(b_planes, ((0, 0), (0, 0), (0, cpad)))
+        c += cpad
+
+    # Flatten the (bb, ba) loop into one grid axis, ba fastest (controller
+    # schedule). Plane index for step s: a-plane = s % a_bits (axis 0 of
+    # a_planes), b-plane = s // a_bits.
+    steps = a_bits * b_bits
+    grid = (steps, c // C_BLK)
+
+    return pl.pallas_call(
+        functools.partial(_bitserial_kernel, a_bits=a_bits, b_bits=b_bits),
+        grid=grid,
+        in_specs=[
+            # a_planes[s % a_bits, cblk*C_BLK :+ C_BLK, :]
+            pl.BlockSpec((1, C_BLK, l), lambda s, cb: (s % a_bits, cb, 0)),
+            # b_planes[s // a_bits, :, cblk*C_BLK :+ C_BLK]
+            pl.BlockSpec((1, k, C_BLK), lambda s, cb: (s // a_bits, 0, cb)),
+        ],
+        out_specs=pl.BlockSpec((k, l), lambda s, cb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, l), jnp.int32),
+        interpret=True,
+    )(a_planes, b_planes)
+
+
+def _plane_kernel(a_ref, b_ref, o_ref):
+    """Single-plane binary GEMM kernel (the raw Parallel Array step).
+    Grid: (C//C_BLK,)."""
+    cblk = pl.program_id(0)
+
+    @pl.when(cblk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(b_ref[...], a_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def binary_gemm_plane(a_plane: jnp.ndarray, b_plane: jnp.ndarray) -> jnp.ndarray:
+    """One Parallel-Array cycle: a_plane [C, L] x b_plane [K, C] -> [K, L]
+    unsigned iPE outputs (values 0..C), as f32."""
+    c, l = a_plane.shape
+    k, c2 = b_plane.shape
+    assert c == c2
+    cpad = (-c) % C_BLK
+    if cpad:
+        a_plane = jnp.pad(a_plane, ((0, cpad), (0, 0)))
+        b_plane = jnp.pad(b_plane, ((0, 0), (0, cpad)))
+        c += cpad
+    return pl.pallas_call(
+        _plane_kernel,
+        grid=(c // C_BLK,),
+        in_specs=[
+            pl.BlockSpec((C_BLK, l), lambda cb: (cb, 0)),
+            pl.BlockSpec((k, C_BLK), lambda cb: (0, cb)),
+        ],
+        out_specs=pl.BlockSpec((k, l), lambda cb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, l), jnp.float32),
+        interpret=True,
+    )(a_plane, b_plane)
+
+
+def vmem_footprint_bytes(a_bits: int, b_bits: int,
+                         c: int = C_DIM, l: int = L_DIM, k: int = K_DIM) -> int:
+    """Static VMEM footprint of one bitserial_gemm grid step (for the
+    DESIGN.md roofline estimate): A block + B block + accumulator, f32."""
+    return 4 * (C_BLK * l + k * C_BLK + k * l)

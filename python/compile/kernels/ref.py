@@ -1,0 +1,195 @@
+"""Pure-jnp reference oracles for the GAVINA bit-serial compute path.
+
+Everything in this file is the *semantic ground truth* the Pallas kernels,
+the AOT-lowered HLO artifacts and the Rust cycle-level simulator are all
+checked against. No pallas, no cleverness — plain jnp so it is obviously
+correct.
+
+Conventions (shared with the Rust side, see rust/src/quant/):
+  * Signed operands use two's complement over ``bits`` bits:
+    value = -2^(bits-1) * b_{bits-1} + sum_i 2^i * b_i.
+  * Matrices follow the paper's Listing 1 shapes: A is [C, L] (activations),
+    B is [K, C] (weights), P = B @ A is [K, L].
+  * Bit-planes are stored "bit-serial": plane index is the significance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Quantization (uniform symmetric, per tensor) — paper §IV-B / [27]
+# ---------------------------------------------------------------------------
+
+
+def quant_range(bits: int) -> tuple[int, int]:
+    """Symmetric signed integer range for ``bits`` bits: [-(2^(b-1)-1), 2^(b-1)-1].
+
+    Symmetric quantization drops the most negative code so the grid is
+    symmetric around zero (standard practice, and what Brevitas does with
+    ``narrow_range=True``).
+    """
+    hi = 2 ** (bits - 1) - 1
+    return -hi, hi
+
+
+def quantize_sym(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniform symmetric quantization. Returns (int values, scale)."""
+    lo, hi = quant_range(bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / hi
+    q = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane slicing
+# ---------------------------------------------------------------------------
+
+
+def to_bitplanes(x_int: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Slice signed ints into two's-complement bit-planes.
+
+    Returns planes with shape ``(bits,) + x.shape``; plane ``i`` holds bit
+    ``i`` (LSB first). Works for any ints representable in ``bits`` bits.
+    """
+    # Two's complement over `bits` bits: reinterpret as unsigned.
+    ux = jnp.where(x_int < 0, x_int + (1 << bits), x_int).astype(jnp.uint32)
+    planes = [(ux >> i) & 1 for i in range(bits)]
+    return jnp.stack(planes).astype(jnp.int32)
+
+
+def from_bitplanes(planes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`to_bitplanes` (two's complement reassembly)."""
+    weights = jnp.array(
+        [-(1 << (bits - 1)) if i == bits - 1 else (1 << i) for i in range(bits)],
+        dtype=jnp.int32,
+    )
+    return jnp.tensordot(weights, planes.astype(jnp.int32), axes=1)
+
+
+# ---------------------------------------------------------------------------
+# GEMM references
+# ---------------------------------------------------------------------------
+
+
+def gemm_exact(a_int: jnp.ndarray, b_int: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer GEMM P[K,L] = B[K,C] @ A[C,L] in int32."""
+    return jnp.matmul(b_int.astype(jnp.int32), a_int.astype(jnp.int32))
+
+
+def binary_gemm_plane(a_plane: jnp.ndarray, b_plane: jnp.ndarray) -> jnp.ndarray:
+    """One bit-serial step: the Parallel Array's binary GEMM.
+
+    a_plane: [C, L] of {0,1}; b_plane: [K, C] of {0,1}.
+    Output: [K, L] unsigned partial sums in 0..C (the iPE outputs).
+    AND + popcount over C is exactly a {0,1} matmul.
+    """
+    return jnp.matmul(b_plane.astype(jnp.int32), a_plane.astype(jnp.int32))
+
+
+def bitserial_gemm_ref(
+    a_int: jnp.ndarray, b_int: jnp.ndarray, a_bits: int, b_bits: int
+) -> jnp.ndarray:
+    """Bit-serial GEMM per Listing 1 — must equal :func:`gemm_exact`.
+
+    sign = -1 iff exactly one of (ba, bb) indexes its operand's MSB
+    (two's-complement MSB carries negative weight; two negatives cancel).
+    """
+    a_planes = to_bitplanes(a_int, a_bits)  # [a_bits, C, L]
+    b_planes = to_bitplanes(b_int, b_bits)  # [b_bits, K, C]
+    k, l = b_int.shape[0], a_int.shape[1]
+    p = jnp.zeros((k, l), dtype=jnp.int32)
+    for ba in range(a_bits):
+        for bb in range(b_bits):
+            sign = -1 if (ba == a_bits - 1) != (bb == b_bits - 1) else 1
+            part = binary_gemm_plane(a_planes[ba], b_planes[bb])
+            p = p + sign * (part << (ba + bb))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# iPE output sequence (what the undervolted Parallel Array produces) — the
+# error model operates on this sequence, ordered exactly as GAVINA's
+# controller schedules the (ba, bb) steps (Fig. 3 example: bb outer, ba inner).
+# ---------------------------------------------------------------------------
+
+
+def ipe_sequence(
+    a_int: jnp.ndarray, b_int: jnp.ndarray, a_bits: int, b_bits: int
+) -> jnp.ndarray:
+    """Exact iPE outputs per (bb, ba) step: shape [seqlen, K, L], values 0..C."""
+    a_planes = to_bitplanes(a_int, a_bits)
+    b_planes = to_bitplanes(b_int, b_bits)
+    steps = []
+    for bb in range(b_bits):
+        for ba in range(a_bits):
+            steps.append(binary_gemm_plane(a_planes[ba], b_planes[bb]))
+    return jnp.stack(steps)
+
+
+def recombine_sequence(seq: jnp.ndarray, a_bits: int, b_bits: int) -> jnp.ndarray:
+    """Shift-accumulate an iPE output sequence back into the integer GEMM.
+
+    This mirrors the L0/L1 accumulator: it is where an (approximate) iPE
+    sequence — e.g. with undervolting errors injected — becomes the final
+    (approximate) GEMM result.
+    """
+    k, l = seq.shape[1], seq.shape[2]
+    p = jnp.zeros((k, l), dtype=jnp.int32)
+    i = 0
+    for bb in range(b_bits):
+        for ba in range(a_bits):
+            sign = -1 if (ba == a_bits - 1) != (bb == b_bits - 1) else 1
+            p = p + sign * (seq[i].astype(jnp.int32) << (ba + bb))
+            i += 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Error-model reference (Listing 2) — numpy, sequential, obviously-correct.
+# ---------------------------------------------------------------------------
+
+
+def errmodel_ref(
+    exact_seq: np.ndarray,  # [seqlen, K, L] ints in 0..C
+    tables: np.ndarray,  # [s_bits, C+1, p_bins, n_cond] flip probabilities
+    uniforms: np.ndarray,  # [seqlen, K, L, s_bits] pre-drawn U(0,1)
+    c_dim: int,
+    n_nei: int,
+    p_bins: int,
+    plane_approx: np.ndarray | None = None,  # [seqlen] bool: step undervolted?
+) -> np.ndarray:
+    """Reference implementation of the GAVINA undervolting model (Listing 2).
+
+    Iterates bits MSB -> LSB; the flip probability of bit ``b`` is indexed by
+    (b, exact value, previous-value bin, condition of the n_nei more
+    significant neighbour bits). Guarded steps (plane_approx False) are exact.
+    The first step of the sequence sees prev=0 (registers reset at context
+    load), matching the Rust simulator.
+    """
+    s_bits = tables.shape[0]
+    seqlen = exact_seq.shape[0]
+    out = exact_seq.copy()
+    prev = np.zeros_like(exact_seq[0])
+    for t in range(seqlen):
+        exact = exact_seq[t]
+        if plane_approx is not None and not plane_approx[t]:
+            prev = exact
+            continue
+        pbin = np.minimum((prev.astype(np.int64) * p_bins) // (c_dim + 1), p_bins - 1)
+        bit_err = np.zeros((s_bits,) + exact.shape, dtype=np.int64)
+        err_mask = np.zeros_like(exact)
+        for bit in range(s_bits - 1, -1, -1):
+            cond = np.zeros_like(exact)
+            for j in range(1, n_nei + 1):
+                if bit + j < s_bits:
+                    cond = cond | (bit_err[bit + j] << (j - 1))
+            prob = tables[bit, exact, pbin, cond]
+            flip = (uniforms[t, ..., bit] < prob).astype(np.int64)
+            bit_err[bit] = flip
+            err_mask = err_mask | (flip << bit)
+        out[t] = exact ^ err_mask
+        prev = exact
+    return out

@@ -1,0 +1,307 @@
+"""Layer-2 JAX model: GAVINA's compute graph, built on the L1 kernels.
+
+Three build-time components live here:
+
+1. ``bitserial_gemm_tile`` — the full mixed-precision integer GEMM of one
+   GAVINA hardware tile ([C,L] x [K,C]), composed from the Pallas bit-plane
+   kernel. AOT-lowered to ``artifacts/bitserial_gemm_aXwY.hlo.txt`` and
+   executed from the Rust runtime.
+2. ``errmodel_jax`` — the GAVINA undervolting error model (paper Listing 2)
+   as a vectorized scan over the (bb, ba) step sequence, with the LUT
+   calibration tables as a runtime input. Lowered to
+   ``artifacts/errinject_aXwY.hlo.txt``.
+3. A quantization-aware ResNet-18 (CIFAR topology, configurable width
+   multiplier) used by ``train.py`` for the progressive-precision QAT of
+   paper §IV-D. Only the *trained weights* ship as artifacts; inference on
+   the request path runs in Rust.
+
+Python never runs at serving time: everything here exists to produce
+``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bitserial, ref
+
+# ---------------------------------------------------------------------------
+# GAV schedule (paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+def gav_schedule(a_bits: int, b_bits: int, g: int) -> list[bool]:
+    """Per-step undervolting mask under the two-level GAV policy.
+
+    Step order is the controller's (bb outer, ba inner). A step computing
+    significance s = ba + bb is *guarded* (V_guard, exact) iff
+    ``s > s_max - g`` where ``s_max = a_bits + b_bits - 2``; otherwise it is
+    *approximate* (V_aprox, undervolted). g=0 undervolts everything,
+    g = s_max + 1 guards everything. Returns True where undervolted.
+    """
+    s_max = a_bits + b_bits - 2
+    assert 0 <= g <= s_max + 1, f"G out of range: {g}"
+    mask = []
+    for bb in range(b_bits):
+        for ba in range(a_bits):
+            mask.append((ba + bb) <= s_max - g)
+    return mask
+
+
+def max_g(a_bits: int, b_bits: int) -> int:
+    """Largest meaningful G (everything guarded)."""
+    return a_bits + b_bits - 1
+
+
+# ---------------------------------------------------------------------------
+# (1) Bit-serial GEMM of one hardware tile
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "b_bits"))
+def bitserial_gemm_tile(a_planes: jnp.ndarray, b_planes: jnp.ndarray, *,
+                        a_bits: int, b_bits: int) -> jnp.ndarray:
+    """Exact integer GEMM of one GAVINA tile from bit-planes (f32 {0,1}).
+
+    Thin alias over the L1 kernel so the AOT entry point and the tests have
+    a single name to target.
+    """
+    return bitserial.bitserial_gemm(a_planes, b_planes,
+                                    a_bits=a_bits, b_bits=b_bits)
+
+
+# ---------------------------------------------------------------------------
+# (2) Undervolting error model (Listing 2), vectorized
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("c_dim", "n_nei", "p_bins", "s_bits"))
+def errmodel_jax(exact_seq: jnp.ndarray,  # [T, K, L] int32, values 0..C
+                 tables: jnp.ndarray,     # [s_bits, C+1, p_bins, 2^n_nei] f32
+                 uniforms: jnp.ndarray,   # [T, K, L, s_bits] f32 U(0,1)
+                 plane_approx: jnp.ndarray,  # [T] bool
+                 *, c_dim: int, n_nei: int, p_bins: int, s_bits: int
+                 ) -> jnp.ndarray:
+    """Sample undervolting bit-errors onto an exact iPE output sequence.
+
+    Semantics identical to ``ref.errmodel_ref`` (checked in pytest): scan
+    over the step sequence carrying the previous exact output; per step,
+    walk bits MSB->LSB, look up the flip probability from the 4-D LUT
+    (bit, exact value, previous-value bin, neighbour condition), draw the
+    flip, and XOR the accumulated mask onto the exact value. Guarded steps
+    pass through exactly.
+    """
+
+    def step(prev, inp):
+        exact, u, approx = inp
+        pbin = jnp.minimum((prev * p_bins) // (c_dim + 1), p_bins - 1)
+        bit_err: list[Any] = [None] * s_bits
+        err_mask = jnp.zeros_like(exact)
+        for bit in range(s_bits - 1, -1, -1):
+            cond = jnp.zeros_like(exact)
+            for j in range(1, n_nei + 1):
+                if bit + j < s_bits:
+                    cond = cond | (bit_err[bit + j] << (j - 1))
+            prob = tables[bit][exact, pbin, cond]
+            flip = (u[..., bit] < prob).astype(jnp.int32)
+            bit_err[bit] = flip
+            err_mask = err_mask | (flip << bit)
+        out = jnp.where(approx, exact ^ err_mask, exact)
+        return exact, out
+
+    _, outs = jax.lax.scan(
+        step, jnp.zeros_like(exact_seq[0]),
+        (exact_seq, uniforms, plane_approx))
+    return outs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "b_bits", "c_dim", "n_nei",
+                              "p_bins", "s_bits"))
+def gav_gemm_tile(a_planes: jnp.ndarray, b_planes: jnp.ndarray,
+                  tables: jnp.ndarray, uniforms: jnp.ndarray,
+                  plane_approx: jnp.ndarray, *,
+                  a_bits: int, b_bits: int, c_dim: int, n_nei: int,
+                  p_bins: int, s_bits: int) -> jnp.ndarray:
+    """One GAVINA tile under GAV: bit-plane GEMM steps -> error injection ->
+    L0/L1 shift-accumulate. This is the full approximate tile computation
+    the Rust hot path implements natively; lowered to HLO for cross-checks.
+    """
+    steps = []
+    for bb in range(b_bits):
+        for ba in range(a_bits):
+            steps.append(bitserial.binary_gemm_plane(
+                a_planes[ba], b_planes[bb]))
+    exact_seq = jnp.stack(steps).astype(jnp.int32)  # [T, K, L]
+    approx_seq = errmodel_jax(
+        exact_seq, tables, uniforms, plane_approx,
+        c_dim=c_dim, n_nei=n_nei, p_bins=p_bins, s_bits=s_bits)
+    # Shift-accumulate (L0/L1) with sign rule.
+    t = 0
+    k, l = approx_seq.shape[1], approx_seq.shape[2]
+    p = jnp.zeros((k, l), dtype=jnp.int32)
+    for bb in range(b_bits):
+        for ba in range(a_bits):
+            sign = -1 if (ba == a_bits - 1) != (bb == b_bits - 1) else 1
+            p = p + sign * (approx_seq[t] << (ba + bb))
+            t += 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# (3) Quantization-aware ResNet-18 (CIFAR topology)
+# ---------------------------------------------------------------------------
+
+
+def fake_quant(x: jnp.ndarray, bits: int, amax: jnp.ndarray) -> jnp.ndarray:
+    """Uniform symmetric fake-quantization with straight-through estimator.
+
+    ``amax`` may be a scalar (per-tensor) or broadcastable (per-channel).
+    """
+    hi = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(amax, 1e-8) / hi
+    q = jnp.clip(jnp.round(x / scale), -hi, hi) * scale
+    # STE: forward q, backward identity.
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def weight_amax(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-output-channel |max| for conv weights [kh, kw, cin, cout] —
+    per-channel weight quantization (Brevitas' default for convs). The
+    Rust executor applies the matching per-channel scale after the integer
+    GEMM."""
+    if w.ndim == 4:
+        return jnp.max(jnp.abs(w), axis=(0, 1, 2), keepdims=True)
+    return jnp.max(jnp.abs(w))
+
+
+def act_amax(x: jnp.ndarray) -> jnp.ndarray:
+    """Activation range: a robust cap instead of the raw max — at 2-3 bits
+    a single outlier otherwise wastes the whole grid. `mean+6σ of |x|`,
+    clipped by the true max. (Mirrored exactly by rust/src/dnn's
+    activation quantizer so both executors see the same integers.)"""
+    ax = jnp.abs(x)
+    mu = jnp.mean(ax)
+    sd = jnp.std(ax)
+    return jnp.minimum(jnp.max(ax), mu + 6.0 * sd)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_apply(x, scale, bias, mean, var):
+    return (x - mean) * scale * jax.lax.rsqrt(var + 1e-5) + bias
+
+
+# ResNet-18 CIFAR topology: conv3x3(16w) -> 4 stages x 2 BasicBlocks,
+# channels (16, 32, 64, 128) * width/0.25 ... expressed via width multiplier
+# against the standard (64, 128, 256, 512).
+STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]  # (base_channels, stride)
+BLOCKS_PER_STAGE = 2
+
+
+def resnet18_param_shapes(width_mult: float = 0.25,
+                          num_classes: int = 10) -> dict[str, tuple]:
+    """Shape table for the parameter pytree (flat dict, name -> shape)."""
+    ch = lambda c: max(8, int(c * width_mult))
+    shapes: dict[str, tuple] = {"conv0/w": (3, 3, 3, ch(64))}
+    shapes.update(_bn_shapes("bn0", ch(64)))
+    cin = ch(64)
+    for si, (c, stride) in enumerate(STAGES):
+        cout = ch(c)
+        for bi in range(BLOCKS_PER_STAGE):
+            s = stride if bi == 0 else 1
+            p = f"s{si}b{bi}"
+            shapes[f"{p}/conv1/w"] = (3, 3, cin, cout)
+            shapes.update(_bn_shapes(f"{p}/bn1", cout))
+            shapes[f"{p}/conv2/w"] = (3, 3, cout, cout)
+            shapes.update(_bn_shapes(f"{p}/bn2", cout))
+            if s != 1 or cin != cout:
+                shapes[f"{p}/down/w"] = (1, 1, cin, cout)
+                shapes.update(_bn_shapes(f"{p}/dbn", cout))
+            cin = cout
+    shapes["fc/w"] = (cin, num_classes)
+    shapes["fc/b"] = (num_classes,)
+    return shapes
+
+
+def _bn_shapes(prefix: str, c: int) -> dict[str, tuple]:
+    return {f"{prefix}/scale": (c,), f"{prefix}/bias": (c,),
+            f"{prefix}/mean": (c,), f"{prefix}/var": (c,)}
+
+
+def resnet18_init(key, width_mult: float = 0.25,
+                  num_classes: int = 10) -> dict[str, jnp.ndarray]:
+    """He-init parameters for the QAT ResNet-18."""
+    params = {}
+    for name, shape in resnet18_param_shapes(width_mult, num_classes).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("/w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            params[name] = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / fan_in)
+        elif name == "fc/w":
+            params[name] = jax.random.normal(sub, shape) * jnp.sqrt(1.0 / shape[0])
+        elif name.endswith("/scale") or name.endswith("/var"):
+            params[name] = jnp.ones(shape)
+        else:
+            params[name] = jnp.zeros(shape)
+    return params
+
+
+def _qconv_bn_relu(x, params, conv_name, bn_name, *, stride, a_bits, w_bits,
+                   relu=True, quant_in=True):
+    """Quantized conv + BN + ReLU. Activations and weights are fake-quantized
+    per tensor — this is what maps onto GAVINA's aXwY integer GEMMs."""
+    w = params[f"{conv_name}/w"]
+    if w_bits < 32:
+        w = fake_quant(w, w_bits, weight_amax(w))
+    if quant_in and a_bits < 32:
+        x = fake_quant(x, a_bits, act_amax(x))
+    y = _conv(x, w, stride)
+    y = _bn_apply(y, params[f"{bn_name}/scale"], params[f"{bn_name}/bias"],
+                  params[f"{bn_name}/mean"], params[f"{bn_name}/var"])
+    return jax.nn.relu(y) if relu else y
+
+
+def resnet18_apply(params: dict[str, jnp.ndarray], x: jnp.ndarray, *,
+                   a_bits: int = 32, w_bits: int = 32,
+                   width_mult: float = 0.25) -> jnp.ndarray:
+    """Forward pass. x: [N, 32, 32, 3] in [0,1]. Returns logits [N, classes].
+
+    The first conv quantizes its input (the image) too — on GAVINA every
+    layer, including the input layer, runs as an integer GEMM (the paper's
+    Fig. 8a shows exactly that layer to be the most GAV-sensitive).
+    """
+    ch = lambda c: max(8, int(c * width_mult))
+    x = _qconv_bn_relu(x, params, "conv0", "bn0", stride=1,
+                       a_bits=a_bits, w_bits=w_bits)
+    cin = ch(64)
+    for si, (c, stride) in enumerate(STAGES):
+        cout = ch(c)
+        for bi in range(BLOCKS_PER_STAGE):
+            s = stride if bi == 0 else 1
+            p = f"s{si}b{bi}"
+            y = _qconv_bn_relu(x, params, f"{p}/conv1", f"{p}/bn1", stride=s,
+                               a_bits=a_bits, w_bits=w_bits)
+            y = _qconv_bn_relu(y, params, f"{p}/conv2", f"{p}/bn2", stride=1,
+                               a_bits=a_bits, w_bits=w_bits, relu=False)
+            if f"{p}/down/w" in params:
+                sc = _qconv_bn_relu(x, params, f"{p}/down", f"{p}/dbn",
+                                    stride=s, a_bits=a_bits, w_bits=w_bits,
+                                    relu=False)
+            else:
+                sc = x
+            x = jax.nn.relu(y + sc)
+            cin = cout
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    if a_bits < 32:
+        x = fake_quant(x, a_bits, act_amax(x))
+    return x @ params["fc/w"] + params["fc/b"]

@@ -1,0 +1,54 @@
+"""Tiny binary tensor container shared between the python compile path and
+the Rust runtime (rust/src/dnn/weights.rs implements the reader).
+
+Layout (little-endian):
+    magic   b"GVNT"
+    version u32 (=1)
+    count   u32
+    count * [ name_len u32 | name utf8 | dtype u8 | ndim u32 | dims u32*ndim
+              | raw data ]
+dtype: 0 = f32, 1 = i32, 2 = u8.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GVNT"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def save_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load_tensors(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"bad magic in {path}"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        out = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BI", f.read(5))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dtype = _DTYPES[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype().itemsize), dtype=dtype)
+            out[name] = data.reshape(dims)
+        return out

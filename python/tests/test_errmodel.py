@@ -1,0 +1,96 @@
+"""errmodel_jax (L2, AOT-lowered) vs errmodel_ref (sequential numpy) —
+semantic equivalence of the undervolting error model, plus its invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+S_BITS = 6  # small synthetic config for tests (model is generic in s_bits)
+P_BINS = 4
+N_NEI = 2
+C_DIM = 40  # outputs in 0..40 -> 6 bits
+
+
+def rand_setup(seed, seqlen=6, k=3, l=2, table_scale=0.5):
+    rng = np.random.default_rng(seed)
+    exact = rng.integers(0, C_DIM + 1, size=(seqlen, k, l)).astype(np.int64)
+    tables = (rng.random((S_BITS, C_DIM + 1, P_BINS, 2 ** N_NEI))
+              * table_scale).astype(np.float32)
+    uniforms = rng.random((seqlen, k, l, S_BITS)).astype(np.float32)
+    return exact, tables, uniforms
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       g_frac=st.floats(0.0, 1.0))
+def test_jax_matches_numpy_ref(seed, g_frac):
+    exact, tables, uniforms = rand_setup(seed)
+    seqlen = exact.shape[0]
+    approx = np.asarray(
+        np.random.default_rng(seed + 1).random(seqlen) < g_frac)
+    want = ref.errmodel_ref(exact, tables, uniforms, C_DIM, N_NEI, P_BINS,
+                            plane_approx=approx)
+    got = M.errmodel_jax(
+        jnp.asarray(exact, dtype=jnp.int32), jnp.asarray(tables),
+        jnp.asarray(uniforms), jnp.asarray(approx),
+        c_dim=C_DIM, n_nei=N_NEI, p_bins=P_BINS, s_bits=S_BITS)
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), want)
+
+
+def test_zero_tables_identity():
+    exact, tables, uniforms = rand_setup(3)
+    got = M.errmodel_jax(
+        jnp.asarray(exact, dtype=jnp.int32),
+        jnp.zeros_like(jnp.asarray(tables)), jnp.asarray(uniforms),
+        jnp.ones(exact.shape[0], dtype=bool),
+        c_dim=C_DIM, n_nei=N_NEI, p_bins=P_BINS, s_bits=S_BITS)
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), exact)
+
+
+def test_guarded_steps_exact():
+    """plane_approx=False everywhere -> exact, even with certain-flip tables."""
+    exact, tables, uniforms = rand_setup(4)
+    got = M.errmodel_jax(
+        jnp.asarray(exact, dtype=jnp.int32),
+        jnp.ones_like(jnp.asarray(tables)), jnp.asarray(uniforms),
+        jnp.zeros(exact.shape[0], dtype=bool),
+        c_dim=C_DIM, n_nei=N_NEI, p_bins=P_BINS, s_bits=S_BITS)
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), exact)
+
+
+def test_certain_flip_all_bits():
+    """All-ones tables on approx steps flip every bit of every output."""
+    exact, tables, uniforms = rand_setup(5)
+    got = np.asarray(M.errmodel_jax(
+        jnp.asarray(exact, dtype=jnp.int32),
+        jnp.ones_like(jnp.asarray(tables)), jnp.asarray(uniforms),
+        jnp.ones(exact.shape[0], dtype=bool),
+        c_dim=C_DIM, n_nei=N_NEI, p_bins=P_BINS, s_bits=S_BITS),
+        dtype=np.int64)
+    np.testing.assert_array_equal(got, exact ^ ((1 << S_BITS) - 1))
+
+
+def test_gav_schedule_properties():
+    for ab, wb in [(2, 2), (3, 3), (4, 4), (8, 8), (4, 2)]:
+        smax = ab + wb - 2
+        # G=0: everything undervolted.
+        assert all(M.gav_schedule(ab, wb, 0))
+        # G=max: everything guarded.
+        assert not any(M.gav_schedule(ab, wb, M.max_g(ab, wb)))
+        # Monotone: larger G never unguards a step.
+        prev = M.gav_schedule(ab, wb, 0)
+        for g in range(1, M.max_g(ab, wb) + 1):
+            cur = M.gav_schedule(ab, wb, g)
+            assert all((not c) or p for p, c in zip(prev, cur))
+            prev = cur
+        # Guarded steps are exactly those with significance > smax - G.
+        g = 2 if smax >= 2 else 1
+        mask = M.gav_schedule(ab, wb, g)
+        i = 0
+        for bb in range(wb):
+            for ba in range(ab):
+                assert mask[i] == ((ba + bb) <= smax - g)
+                i += 1

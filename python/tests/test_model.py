@@ -1,0 +1,105 @@
+"""L2 model-level tests: QAT ResNet shapes/grads, fake-quant properties,
+synthetic dataset sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as datagen
+from compile import model as M
+
+
+def test_fake_quant_grid():
+    x = jnp.linspace(-1, 1, 101)
+    q = M.fake_quant(x, 4, jnp.max(jnp.abs(x)))
+    scale = 1.0 / 7
+    codes = np.asarray(q) / scale
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+    assert np.abs(codes).max() <= 7
+
+
+def test_fake_quant_ste_gradient():
+    f = lambda x: jnp.sum(M.fake_quant(x, 4, jnp.max(jnp.abs(x))))
+    g = jax.grad(f)(jnp.asarray([0.3, -0.7, 0.9]))
+    # Straight-through: gradient of identity.
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-5)
+
+
+def test_fake_quant_high_bits_near_identity():
+    x = jnp.asarray([0.123, -0.456, 0.789])
+    q = M.fake_quant(x, 16, jnp.max(jnp.abs(x)))
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return M.resnet18_init(jax.random.PRNGKey(0), width_mult=0.125)
+
+
+def test_resnet_forward_shape(small_params):
+    x = jnp.zeros((2, 32, 32, 3))
+    logits = M.resnet18_apply(small_params, x, width_mult=0.125)
+    assert logits.shape == (2, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_resnet_quantized_forward(small_params):
+    x = jnp.asarray(np.random.default_rng(0).random((2, 32, 32, 3)),
+                    dtype=jnp.float32)
+    for ab, wb in [(8, 8), (4, 4), (2, 2)]:
+        logits = M.resnet18_apply(small_params, x, a_bits=ab, w_bits=wb,
+                                  width_mult=0.125)
+        assert logits.shape == (2, 10)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_resnet_grad_flows(small_params):
+    x = jnp.asarray(np.random.default_rng(1).random((2, 32, 32, 3)),
+                    dtype=jnp.float32)
+    y = jnp.asarray([1, 3])
+
+    def loss(p):
+        logits = M.resnet18_apply(p, x, a_bits=4, w_bits=4, width_mult=0.125)
+        return -jnp.mean(jnp.sum(
+            jax.nn.one_hot(y, 10) * jax.nn.log_softmax(logits), -1))
+
+    grads = jax.grad(loss)(small_params)
+    gnorm = sum(float(jnp.sum(g ** 2)) for k, g in grads.items()
+                if k.endswith("conv1/w"))
+    assert gnorm > 0, "no gradient reached the conv weights through STE"
+
+
+def test_param_count_scales_with_width():
+    n = lambda wm: sum(
+        int(np.prod(s)) for s in M.resnet18_param_shapes(wm).values())
+    assert n(0.25) < n(0.5) < n(1.0)
+    # Full-width CIFAR ResNet-18 is ~11M params.
+    assert 10_000_000 < n(1.0) < 13_000_000
+
+
+def test_dataset_classes_and_range():
+    x, y = datagen.make_dataset(40, seed=0)
+    assert x.shape == (40, 32, 32, 3) and y.shape == (40,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)) == set(range(10))
+
+
+def test_dataset_deterministic():
+    x1, y1 = datagen.make_dataset(16, seed=5)
+    x2, y2 = datagen.make_dataset(16, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dataset_classes_distinguishable():
+    """A trivial nearest-class-mean classifier must beat chance by a lot —
+    otherwise the QAT benchmark can't show accuracy degradation trends."""
+    xtr, ytr = datagen.make_dataset(400, seed=1)
+    xev, yev = datagen.make_dataset(100, seed=2)
+    means = np.stack([xtr[ytr == c].mean(0).ravel() for c in range(10)])
+    feats = xev.reshape(len(xev), -1)
+    pred = np.argmin(
+        ((feats[:, None, :] - means[None]) ** 2).sum(-1), axis=1)
+    acc = (pred == yev).mean()
+    assert acc > 0.5, f"synthetic classes too hard: ncm acc={acc}"

@@ -1,0 +1,86 @@
+"""Oracle self-consistency: the bit-serial decomposition must be *exactly*
+the integer GEMM, for every precision and shape. If these fail nothing else
+in the repo means anything."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def rand_int_matrix(rng, shape, bits):
+    lo, hi = ref.quant_range(bits)
+    return jnp.asarray(rng.integers(lo, hi + 1, size=shape, dtype=np.int64),
+                       dtype=jnp.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    a_bits=st.integers(2, 8),
+    b_bits=st.integers(2, 8),
+    c=st.integers(1, 64),
+    l=st.integers(1, 8),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitserial_equals_exact(a_bits, b_bits, c, l, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_int_matrix(rng, (c, l), a_bits)
+    b = rand_int_matrix(rng, (k, c), b_bits)
+    exact = ref.gemm_exact(a, b)
+    serial = ref.bitserial_gemm_ref(a, b, a_bits, b_bits)
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(serial))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 12), seed=st.integers(0, 2**31 - 1))
+def test_bitplane_roundtrip(bits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    x = jnp.asarray(rng.integers(lo, hi + 1, size=(13, 7), dtype=np.int64),
+                    dtype=jnp.int32)
+    planes = ref.to_bitplanes(x, bits)
+    back = ref.from_bitplanes(planes, bits)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(back))
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a_bits=st.integers(2, 6),
+    b_bits=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sequence_recombination(a_bits, b_bits, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_int_matrix(rng, (24, 4), a_bits)
+    b = rand_int_matrix(rng, (5, 24), b_bits)
+    seq = ref.ipe_sequence(a, b, a_bits, b_bits)
+    assert seq.shape == (a_bits * b_bits, 5, 4)
+    # iPE outputs are unsigned partial popcounts in 0..C.
+    assert int(seq.min()) >= 0 and int(seq.max()) <= 24
+    p = ref.recombine_sequence(seq, a_bits, b_bits)
+    np.testing.assert_array_equal(
+        np.asarray(p), np.asarray(ref.gemm_exact(a, b)))
+
+
+def test_quantize_sym_basic():
+    x = jnp.asarray([[-1.0, -0.5, 0.0, 0.5, 1.0]])
+    q, scale = ref.quantize_sym(x, 4)
+    assert int(q.max()) == 7 and int(q.min()) == -7
+    np.testing.assert_allclose(np.asarray(q) * float(scale),
+                               np.asarray(x), atol=float(scale) / 2 + 1e-7)
+
+
+def test_quantize_sym_zero_input():
+    q, scale = ref.quantize_sym(jnp.zeros((3, 3)), 4)
+    assert float(scale) > 0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_quant_range_symmetric(bits):
+    lo, hi = ref.quant_range(bits)
+    assert lo == -hi and hi == 2 ** (bits - 1) - 1

@@ -1,0 +1,52 @@
+//! Shared bench harness (the vendored crate set has no criterion; each
+//! bench is a `harness = false` binary that prints the paper's table or
+//! figure series, plus wall-clock timing in criterion-like style).
+
+use std::path::{Path, PathBuf};
+
+use gavina::arch::ArchConfig;
+use gavina::errmodel::{self, CalibrationConfig, ErrorTables};
+use gavina::gls::{DelayModel, GlsContext};
+
+pub fn artifacts_dir() -> PathBuf {
+    // Benches run from the workspace root.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// `--quick` flag: smaller workloads for CI-style runs.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// Load the GLS-calibrated tables, calibrating on the spot if absent.
+pub fn load_tables() -> ErrorTables {
+    let path = artifacts_dir().join("caltables_v035.bin");
+    if let Ok((t, _)) = errmodel::io::load(&path) {
+        return t;
+    }
+    eprintln!("[bench] calibrating error tables (first run)…");
+    let arch = ArchConfig::paper();
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        0xBE4C,
+    );
+    let (t, _) = errmodel::calibrate(&ctx, CalibrationConfig::default());
+    let _ = std::fs::create_dir_all(artifacts_dir());
+    let _ = errmodel::io::save(&path, &t, 0.35);
+    t
+}
+
+/// Time a closure, printing a criterion-style line.
+pub fn bench_time<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    println!("[time] {label:40} {:>10.3} ms", t0.elapsed().as_secs_f64() * 1e3);
+    out
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

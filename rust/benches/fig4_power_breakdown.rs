@@ -1,0 +1,45 @@
+//! Regenerates **Fig. 4b**: the power-consumption breakdown of GAVINA per
+//! precision configuration, at V_guard (no undervolting) — and the
+//! undervolted counterpart that Fig. 6b's system-level boost rests on.
+
+mod common;
+
+use gavina::arch::{GavSchedule, Precision};
+use gavina::power::PowerModel;
+
+fn main() {
+    let power = PowerModel::paper_calibrated();
+
+    common::section("Fig. 4b — power distribution per precision (V_guard)");
+    println!("prec | array  | A0/B0  | A1/B1/P+L1 | ctrl+L0 | total  | paper total");
+    let paper_totals = [("a8w8", 31.2), ("a4w4", 35.4), ("a3w3", 40.1), ("a2w2", 38.67)];
+    for (i, prec) in Precision::EVAL_SET.iter().rev().enumerate() {
+        let bd = power.system_breakdown(&GavSchedule::all_guarded(*prec));
+        println!(
+            "{prec} | {:6.2} | {:6.2} | {:10.2} | {:7.2} | {:6.2} | {:.2} mW",
+            bd.array_mw,
+            bd.a0b0_mw,
+            bd.tile_mw,
+            bd.ctrl_mw,
+            bd.total_mw(),
+            paper_totals[i].1
+        );
+    }
+
+    common::section("Same breakdown fully undervolted (the Fig. 6b endpoint)");
+    println!("prec | array  | memories+ctrl | total  | boost vs guarded");
+    for prec in Precision::EVAL_SET.iter().rev() {
+        let bd = power.system_breakdown(&GavSchedule::all_approx(*prec));
+        let rest = bd.a0b0_mw + bd.tile_mw + bd.ctrl_mw;
+        println!(
+            "{prec} | {:6.2} | {:13.2} | {:6.2} | ×{:.2}",
+            bd.array_mw,
+            rest,
+            bd.total_mw(),
+            power.undervolting_boost(*prec)
+        );
+    }
+    println!("\n(shape: memories dominate once the array is undervolted — §IV-B;");
+    println!(" array power span guarded→aggressive ×{:.2}, paper reports up to ×3.5)",
+        power.array_power_mw(0.55) / power.array_power_mw(0.35));
+}

@@ -1,0 +1,92 @@
+//! Regenerates **Fig. 6**: (a) VAR_NED vs G for every precision; (b) error
+//! vs approximate-region power — on the §IV-B uniform-inner-product random
+//! GEMM workload, with calibrated error-model injection plus GLS
+//! ground-truth spot checks.
+
+mod common;
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::gls::{DelayModel, GlsContext, TileGls};
+use gavina::power::PowerModel;
+use gavina::quant::PackedPlanes;
+use gavina::simulator::{GavinaSim, GemmJob};
+use gavina::stats::var_ned;
+use gavina::util::Prng;
+use gavina::workload::{uniform_ip_matrices, ERROR_ANALYSIS_SHAPE};
+
+fn main() {
+    let quick = common::quick();
+    let tables = common::load_tables();
+    let arch = ArchConfig::paper();
+    let power = PowerModel::paper_calibrated();
+
+    let (cf, lf, kf) = ERROR_ANALYSIS_SHAPE;
+    let (c, l, k) = if quick {
+        (cf / 8, lf / 4, kf / 4)
+    } else {
+        (cf / 2, lf, kf)
+    };
+
+    common::section(&format!(
+        "Fig. 6a — VAR_NED vs G per precision ([{c},{l}]x[{k},{c}] uniform-IP workload)"
+    ));
+    println!("prec |  G | VAR_NED      | approx-region power [mW] (Fig. 6b x-axis)");
+    for prec in Precision::EVAL_SET {
+        let mut rng = Prng::new(0x600D + prec.a_bits as u64);
+        let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+        let exact = gavina::gemm::gemm_exact(&a, &b, c, l, k);
+        let mut last = f64::INFINITY;
+        common::bench_time(&format!("G sweep {prec}"), || {
+            for g in 0..=prec.max_g() {
+                let sched = GavSchedule::two_level(prec, g);
+                let mut sim = GavinaSim::new(arch.clone(), Some(&tables), 5 + g as u64);
+                let rep = sim.run_gemm(&GemmJob {
+                    a: &a,
+                    b: &b,
+                    c,
+                    l,
+                    k,
+                    sched: sched.clone(),
+                });
+                let v = var_ned(&exact, &rep.p);
+                println!(
+                    "{prec} | {g:2} | {v:12.5e} | {:8.2}",
+                    power.array_avg_power_mw(&sched)
+                );
+                // Fig. 6a shape: decays (allow small non-monotonic noise).
+                assert!(
+                    v <= last * 3.0 + 1e-12,
+                    "VAR_NED must trend down with G ({v} after {last})"
+                );
+                last = v;
+            }
+        });
+    }
+
+    common::section("GLS ground-truth spot checks (a4w4, single hardware tile)");
+    let prec = Precision::new(4, 4);
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        9,
+    );
+    let mut rng = Prng::new(0x6157);
+    let (a, b) = uniform_ip_matrices(arch.c_dim, arch.l_dim, arch.k_dim, prec, &mut rng);
+    let pa = PackedPlanes::from_a_matrix(&a, arch.c_dim, arch.l_dim, prec.a_bits);
+    let pb = PackedPlanes::from_b_matrix(&b, arch.k_dim, arch.c_dim, prec.b_bits);
+    let exact = gavina::gemm::gemm_exact(&a, &b, arch.c_dim, arch.l_dim, arch.k_dim);
+    let mut tg = TileGls::new(&ctx, arch.clone());
+    println!(" G | GLS VAR_NED  | model VAR_NED");
+    for g in [0u32, 2, 4, 6, prec.max_g()] {
+        let sched = GavSchedule::two_level(prec, g);
+        let trace = common::bench_time(&format!("GLS tile g={g}"), || tg.run_tile(&pa, &pb, &sched));
+        let v_gls = var_ned(&exact, &trace.approx_gemm(prec));
+        let mut seq = gavina::gemm::ipe_sequence(&pa, &pb);
+        tables.inject(&mut seq, &sched, &mut rng);
+        let v_model = var_ned(&exact, &gavina::gemm::recombine(&seq, prec));
+        println!(" {g} | {v_gls:12.5e} | {v_model:12.5e}");
+    }
+    println!("\n(Fig. 6 shape: exponential VAR_NED decay in G; array power ×{:.2} span)",
+        power.array_power_mw(arch.v_guard) / power.array_power_mw(arch.v_aprox));
+}

@@ -1,0 +1,151 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * bit-packed binary-plane GEMM (u64 AND+popcount) — bit-MACs/ms
+//! * full bit-serial tile GEMM (pack + 16 steps + recombine)
+//! * error-model injection throughput — values/ms
+//! * cycle-simulator end-to-end GEMM — MACs/ms
+//! * GLS event throughput — iPE-cycles/s
+//! * ResNet-18 image latency on the Gavina backend (model path)
+
+mod common;
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::gls::{DelayModel, GlsContext};
+use gavina::quant::PackedPlanes;
+use gavina::simulator::{GavinaSim, GemmJob};
+use gavina::util::Prng;
+use gavina::workload::gemm_workload;
+
+fn rate(label: &str, amount: f64, unit: &str, secs: f64) {
+    println!("[perf] {label:44} {:>12.1} {unit}/ms ({:.3} ms total)", amount / secs / 1e3, secs * 1e3);
+}
+
+fn main() {
+    let quick = common::quick();
+    let arch = ArchConfig::paper();
+    let prec = Precision::new(4, 4);
+    let mut rng = Prng::new(0x407);
+
+    // ---- packed binary-plane GEMM --------------------------------------
+    let (a, b) = gemm_workload(arch.c_dim, arch.l_dim, arch.k_dim, prec, &mut rng);
+    let pa = PackedPlanes::from_a_matrix(&a, arch.c_dim, arch.l_dim, prec.a_bits);
+    let pb = PackedPlanes::from_b_matrix(&b, arch.k_dim, arch.c_dim, prec.b_bits);
+    let reps = if quick { 2_000 } else { 20_000 };
+    let mut out = vec![0u16; arch.k_dim * arch.l_dim];
+    let t0 = std::time::Instant::now();
+    for i in 0..reps {
+        gavina::gemm::binary_plane_gemm(&pa, (i % 4) as u8, &pb, ((i / 4) % 4) as u8, &mut out);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let bitmacs = (arch.macs_per_tile() as u64 * reps as u64) as f64;
+    rate("binary plane GEMM (u64 popcount)", bitmacs, "bit-MAC", secs);
+    std::hint::black_box(&out);
+
+    // ---- full tile: pack + steps + recombine ----------------------------
+    let reps = if quick { 200 } else { 2_000 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let pa = PackedPlanes::from_a_matrix(&a, arch.c_dim, arch.l_dim, prec.a_bits);
+        let pb = PackedPlanes::from_b_matrix(&b, arch.k_dim, arch.c_dim, prec.b_bits);
+        std::hint::black_box(gavina::gemm::bitserial_gemm(&pa, &pb));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    rate(
+        "full a4w4 tile (pack+16 steps+recombine)",
+        (arch.macs_per_tile() * reps) as f64,
+        "MAC",
+        secs,
+    );
+
+    // ---- error-model injection ------------------------------------------
+    let tables = common::load_tables();
+    let sched = GavSchedule::all_approx(prec);
+    let seq0 = gavina::gemm::ipe_sequence(&pa, &pb);
+    let reps = if quick { 200 } else { 2_000 };
+    let mut inj_rng = Prng::new(0x13);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let mut seq = seq0.clone();
+        std::hint::black_box(tables.inject(&mut seq, &sched, &mut inj_rng));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let values = (prec.steps() * arch.n_ipes() * reps) as f64;
+    rate("error-model injection", values, "value", secs);
+
+    // ---- cycle simulator end-to-end --------------------------------------
+    let (c, l, k) = (1152, 64, 64);
+    let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
+    let job = GemmJob {
+        a: &a,
+        b: &b,
+        c,
+        l,
+        k,
+        sched: sched.clone(),
+    };
+    let reps = if quick { 2 } else { 10 };
+    let t0 = std::time::Instant::now();
+    for i in 0..reps {
+        let mut sim = GavinaSim::new(arch.clone(), Some(&tables), i as u64);
+        std::hint::black_box(sim.run_gemm(&job));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    rate(
+        "cycle sim a4w4 GEMM 1152x64x64 (+errors)",
+        ((c * l * k) as u64 * reps) as f64,
+        "MAC",
+        secs,
+    );
+
+    // ---- GLS event throughput --------------------------------------------
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        5,
+    );
+    let mut sim = ctx.spawn(0);
+    let n_steps = if quick { 100 } else { 500 };
+    let mut transitions = 0u64;
+    let mut grng = Prng::new(0x615);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_steps {
+        let a: Vec<bool> = (0..arch.c_dim).map(|_| grng.chance(0.5)).collect();
+        let w: Vec<bool> = (0..arch.c_dim).map(|_| grng.chance(0.5)).collect();
+        transitions += sim.step(&a, &w, 0.35).n_transitions;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[perf] {:44} {:>12.1} iPE-cycle/s ({:.1} transitions/cycle)",
+        "GLS event-driven sim (C=576, V_aprox)",
+        n_steps as f64 / secs,
+        transitions as f64 / n_steps as f64
+    );
+
+    // ---- ResNet-18 image latency ------------------------------------------
+    let artifacts = common::artifacts_dir();
+    if let Ok(weights) = gavina::dnn::load_tensors(&artifacts.join("weights_a4w4.bin")) {
+        if let Ok(eval) = gavina::dnn::load_eval_set(&artifacts.join("dataset_eval.bin")) {
+            let n = if quick { 2 } else { 8 };
+            let mut ex = gavina::dnn::Executor::new(
+                &weights,
+                0.25,
+                prec,
+                gavina::dnn::Backend::Gavina {
+                    arch: arch.clone(),
+                    tables: Some(&tables),
+                    seed: 3,
+                },
+            );
+            ex.layer_gs = vec![5; gavina::dnn::conv_layer_names().len()];
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(ex.forward_batched(&eval.images[..n * 3072], n, n));
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "[perf] {:44} {:>12.1} ms/image (paper GPU model: 200 ms/img)",
+                "ResNet-18 a4w4 inference (model path)",
+                secs * 1e3 / n as f64
+            );
+        }
+    }
+}

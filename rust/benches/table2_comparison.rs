@@ -1,0 +1,109 @@
+//! Regenerates **Table II** (comparison with the state of the art) and the
+//! §V claims: GAVINA vs RBE / BitBlade / Shin-TED / X-NVDLA / X-TPU,
+//! including the technology-scaled efficiency comparison and the
+//! behavioural baselines (TED value-drop vs GAV error propagation on the
+//! same workload).
+
+mod common;
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::baseline::{tech_scale_efficiency, FixedLsbTep, TedAccelerator, LITERATURE};
+use gavina::power::PowerModel;
+use gavina::simulator::{GavinaSim, GemmJob};
+use gavina::stats::var_ned;
+use gavina::util::Prng;
+use gavina::workload::uniform_ip_matrices;
+
+fn main() {
+    let power = PowerModel::paper_calibrated();
+    let arch = ArchConfig::paper();
+    let util = 0.96;
+
+    common::section("Table II — energy-efficiency comparison [TOP/sW]");
+    println!("{:22} {:>5} {:>6} {:>10} {:>14}", "accelerator", "tech", "bits", "TOP/sW", "scaled to 12nm");
+    for e in LITERATURE {
+        if e.tops_per_w.is_nan() {
+            println!("{:22} {:>5} {:>6} {:>10} {:>14}", e.name, e.technology_nm, e.precision_bits, "rel-only", "-");
+            continue;
+        }
+        let scaled = e.tops_per_w * tech_scale_efficiency(e.technology_nm, 12);
+        println!(
+            "{:22} {:>5} {:>6} {:>10.1} {:>14.1}",
+            e.name, e.technology_nm, e.precision_bits, e.tops_per_w, scaled
+        );
+    }
+    for prec in Precision::EVAL_SET.iter().rev() {
+        let lo = power.tops_per_watt(&GavSchedule::all_guarded(*prec), util);
+        let hi = power.tops_per_watt(&GavSchedule::all_approx(*prec), util);
+        println!("{:22} {:>5} {:>6} {:>4.1} – {:>4.1} {:>14}", format!("GAVINA {prec}"), 12, prec.a_bits, lo, hi, "(this work)");
+    }
+
+    common::section("§V claims checked against the model");
+    // ×2.08 vs RBE at matching precision (a2w2, guarded).
+    let g22 = power.tops_per_watt(&GavSchedule::all_guarded(Precision::new(2, 2)), util);
+    let rbe = LITERATURE.iter().find(|e| e.name.contains("RBE")).unwrap();
+    println!(
+        "vs RBE (a2w2 guarded):      ×{:.2}   (paper: ×2.08)",
+        g22 / rbe.tops_per_w
+    );
+    // ×3.04 vs Shin et al. most aggressive.
+    let shin = LITERATURE.iter().find(|e| e.name.contains("Shin")).unwrap();
+    println!(
+        "vs Shin-TED best voltage:   ×{:.2}   (paper: ×3.04, unscaled techs)",
+        g22 / shin.tops_per_w
+    );
+    // Undervolting boost ranges.
+    println!(
+        "max system UV boost:        ×{:.2}   (paper: ×1.96; [7] +35%, [8] +57%)",
+        power.undervolting_boost(Precision::new(2, 2))
+    );
+    println!(
+        "8b→2b total boost:          ×{:.1}   (paper: ×18)",
+        power.tops_per_watt(&GavSchedule::all_approx(Precision::new(2, 2)), util)
+            / power.tops_per_watt(&GavSchedule::all_guarded(Precision::new(8, 8)), util)
+    );
+    println!(
+        "compute-only UV reduction:  ×{:.2}   (paper: ×3.5; [2] reports ×2.2)",
+        power.array_power_mw(arch.v_guard) / power.array_power_mw(arch.v_aprox)
+    );
+
+    common::section("Behavioural baselines on one workload (error at matched voltage)");
+    let tables = common::load_tables();
+    let prec8 = Precision::new(8, 8);
+    let (c, l, k) = if common::quick() { (576, 16, 16) } else { (1152, 32, 32) };
+    let mut rng = Prng::new(0x7AB2);
+    let (a, b) = uniform_ip_matrices(c, l, k, prec8, &mut rng);
+    let exact = gavina::gemm::gemm_exact(&a, &b, c, l, k);
+
+    println!("scheme                     | VAR_NED at V≈0.45 | VAR_NED at V≈0.40");
+    let ted = TedAccelerator::default();
+    let tep = FixedLsbTep {
+        n_lsb: 8,
+        ..Default::default()
+    };
+    let v_ted_45 = var_ned(&exact, &ted.gemm(&a, &b, c, l, k, 0.45, &mut rng));
+    let v_ted_40 = var_ned(&exact, &ted.gemm(&a, &b, c, l, k, 0.40, &mut rng));
+    println!("TED value-drop (Shin-like) | {v_ted_45:17.4e} | {v_ted_40:17.4e}");
+    let v_tep_45 = var_ned(&exact, &tep.gemm(&a, &b, c, l, k, 0.45, &mut rng));
+    let v_tep_40 = var_ned(&exact, &tep.gemm(&a, &b, c, l, k, 0.40, &mut rng));
+    println!("fixed-LSB TEP (X-NVDLA)    | {v_tep_45:17.4e} | {v_tep_40:17.4e}");
+    // GAV at two G points for context (its knob is G, not V).
+    for g in [10, 6] {
+        let sched = GavSchedule::two_level(prec8, g);
+        let mut sim = GavinaSim::new(arch.clone(), Some(&tables), 3);
+        let rep = sim.run_gemm(&GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched,
+        });
+        println!(
+            "GAV a8w8 G={g:<2}             | {:17.4e} | (same — V fixed at 0.35, G is the knob)",
+            var_ned(&exact, &rep.p)
+        );
+    }
+    println!("\n(contrast: baselines trade error by *voltage*; GAV holds the aggressive");
+    println!(" voltage and trades error by *significance guarding* at constant throughput)");
+}

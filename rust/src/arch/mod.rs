@@ -1,0 +1,242 @@
+//! Architectural parameters of the GAVINA accelerator (paper §III, §IV-A)
+//! and the GAV voltage schedule (paper Fig. 2).
+//!
+//! Everything downstream — the cycle-level simulator, the power model, the
+//! GLS calibration and the DNN executor — agrees on the conventions fixed
+//! here:
+//!
+//! * Matrices follow Listing 1: `A` is `[C, L]` (activations), `B` is
+//!   `[K, C]` (weights), the product `P = B·A` is `[K, L]`.
+//! * The controller schedules the bit-significance loop with `bb`
+//!   (weight bit) outer and `ba` (activation bit) inner (Fig. 3 example).
+//! * Two's-complement operands: the MSB plane carries negative weight, so
+//!   a step's partial product is negated iff exactly one of `(ba, bb)`
+//!   indexes its operand's MSB.
+
+pub mod schedule;
+
+pub use schedule::{GavSchedule, VoltageMode};
+
+/// Bit precision of one GEMM (activations × weights), the paper's `aXwY`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Precision {
+    /// Activation bits (2..=8 supported by GAVINA).
+    pub a_bits: u8,
+    /// Weight bits (2..=8).
+    pub b_bits: u8,
+}
+
+impl Precision {
+    pub const fn new(a_bits: u8, b_bits: u8) -> Self {
+        Self { a_bits, b_bits }
+    }
+
+    /// The paper's shorthand, e.g. `a4w4`.
+    pub fn tag(&self) -> String {
+        format!("a{}w{}", self.a_bits, self.b_bits)
+    }
+
+    /// Parse `aXwY`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        let rest = s.strip_prefix('a')?;
+        let (a, b) = rest.split_once('w')?;
+        let a: u8 = a.parse().ok()?;
+        let b: u8 = b.parse().ok()?;
+        if (2..=8).contains(&a) && (2..=8).contains(&b) {
+            Some(Self::new(a, b))
+        } else {
+            None
+        }
+    }
+
+    /// Bit-serial steps per tile: `a_bits · b_bits` cycles (§III).
+    pub fn steps(&self) -> usize {
+        self.a_bits as usize * self.b_bits as usize
+    }
+
+    /// Highest partial-product significance, `s_max = a_bits + b_bits − 2`.
+    pub fn s_max(&self) -> u32 {
+        self.a_bits as u32 + self.b_bits as u32 - 2
+    }
+
+    /// Largest meaningful G value (everything guarded): `s_max + 1`.
+    pub fn max_g(&self) -> u32 {
+        self.s_max() + 1
+    }
+
+    /// All `(bb, ba)` steps in controller order (bb outer, ba inner).
+    pub fn step_order(&self) -> impl Iterator<Item = (u8, u8)> + '_ {
+        let (ab, bb) = (self.a_bits, self.b_bits);
+        (0..bb).flat_map(move |wb| (0..ab).map(move |ab_| (ab_, wb)))
+    }
+
+    /// Sign of step `(ba, bb)` under two's complement: −1 iff exactly one
+    /// of the indices is its operand's MSB.
+    pub fn step_sign(&self, ba: u8, bb: u8) -> i64 {
+        if (ba == self.a_bits - 1) != (bb == self.b_bits - 1) {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// The four precisions evaluated throughout the paper.
+    pub const EVAL_SET: [Precision; 4] = [
+        Precision::new(2, 2),
+        Precision::new(3, 3),
+        Precision::new(4, 4),
+        Precision::new(8, 8),
+    ];
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a{}w{}", self.a_bits, self.b_bits)
+    }
+}
+
+/// Static architecture configuration (paper Table I defaults).
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    /// Input-channel (reduction) dimension of the Parallel Array.
+    pub c_dim: usize,
+    /// Activation column dimension.
+    pub l_dim: usize,
+    /// Weight row (output channel) dimension.
+    pub k_dim: usize,
+    /// Clock frequency in Hz (Table I: 50 MHz → 20 ns period).
+    pub freq_hz: f64,
+    /// Guarded supply voltage of the approximate region [V].
+    pub v_guard: f64,
+    /// Aggressive (undervolted) supply of the approximate region [V].
+    pub v_aprox: f64,
+    /// Memory-region supply [V] (no timing violations allowed).
+    pub v_mem: f64,
+    /// Protected-region (controller/accumulator) supply [V].
+    pub v_prot: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl ArchConfig {
+    /// The physical-design point of §IV-A / Table I:
+    /// `[C, L, K] = [576, 8, 16]`, 50 MHz, 0.55 / 0.35 / 0.40 V.
+    pub fn paper() -> Self {
+        Self {
+            c_dim: 576,
+            l_dim: 8,
+            k_dim: 16,
+            freq_hz: 50.0e6,
+            v_guard: 0.55,
+            v_aprox: 0.35,
+            v_mem: 0.40,
+            v_prot: 0.55,
+        }
+    }
+
+    /// A small configuration for fast unit tests ([C,L,K] = [36,4,4]).
+    pub fn tiny() -> Self {
+        Self {
+            c_dim: 36,
+            l_dim: 4,
+            k_dim: 4,
+            ..Self::paper()
+        }
+    }
+
+    /// Clock period in seconds.
+    pub fn clk_period_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    /// Clock period in picoseconds (the GLS time unit).
+    pub fn clk_period_ps(&self) -> u64 {
+        (1.0e12 / self.freq_hz).round() as u64
+    }
+
+    /// Width of one iPE output in bits: `ceil(log2(C+1))` (§III).
+    pub fn sum_bits(&self) -> usize {
+        crate::util::bits_for(self.c_dim as u64) as usize
+    }
+
+    /// MACs retired per tile (`L·C·K`), once every `a_bits·b_bits` cycles.
+    pub fn macs_per_tile(&self) -> usize {
+        self.l_dim * self.c_dim * self.k_dim
+    }
+
+    /// Peak throughput in MAC/s for a precision (§III):
+    /// `L·C·K / (A_bits·B_bits)` MACs per cycle.
+    pub fn peak_macs_per_s(&self, p: Precision) -> f64 {
+        self.macs_per_tile() as f64 / p.steps() as f64 * self.freq_hz
+    }
+
+    /// Peak throughput in TOP/s (1 MAC = 2 OPs, the paper's convention —
+    /// Table I lists 1.84 TOP/s for a2w2 at 50 MHz).
+    pub fn peak_tops(&self, p: Precision) -> f64 {
+        2.0 * self.peak_macs_per_s(p) / 1e12
+    }
+
+    /// Total number of iPEs in the Parallel Array (`K·L`).
+    pub fn n_ipes(&self) -> usize {
+        self.k_dim * self.l_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_tags_roundtrip() {
+        for p in Precision::EVAL_SET {
+            assert_eq!(Precision::parse(&p.tag()), Some(p));
+        }
+        assert_eq!(Precision::parse("a4w2"), Some(Precision::new(4, 2)));
+        assert_eq!(Precision::parse("a1w4"), None);
+        assert_eq!(Precision::parse("a9w4"), None);
+        assert_eq!(Precision::parse("w4a4"), None);
+    }
+
+    #[test]
+    fn step_order_is_bb_outer_ba_inner() {
+        let p = Precision::new(2, 3);
+        let order: Vec<(u8, u8)> = p.step_order().collect();
+        assert_eq!(
+            order,
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]
+        );
+        assert_eq!(order.len(), p.steps());
+    }
+
+    #[test]
+    fn step_sign_twos_complement_rule() {
+        let p = Precision::new(4, 4);
+        assert_eq!(p.step_sign(3, 0), -1); // a MSB only
+        assert_eq!(p.step_sign(0, 3), -1); // b MSB only
+        assert_eq!(p.step_sign(3, 3), 1); // both MSBs: negatives cancel
+        assert_eq!(p.step_sign(1, 2), 1);
+    }
+
+    #[test]
+    fn paper_table1_throughput() {
+        let arch = ArchConfig::paper();
+        // Table I: max throughput (a2w2) = 1.84 TOP/s.
+        let tops = arch.peak_tops(Precision::new(2, 2));
+        assert!((tops - 1.84).abs() < 0.01, "a2w2 peak = {tops}");
+        // Table II: a8w8 0.111, a4w4 0.443, a3w3 0.776 TOP/s.
+        assert!((arch.peak_tops(Precision::new(8, 8)) - 0.115).abs() < 0.005);
+        assert!((arch.peak_tops(Precision::new(4, 4)) - 0.461).abs() < 0.02);
+        assert!((arch.peak_tops(Precision::new(3, 3)) - 0.819).abs() < 0.05);
+    }
+
+    #[test]
+    fn sum_bits_matches_paper() {
+        assert_eq!(ArchConfig::paper().sum_bits(), 10);
+        assert_eq!(ArchConfig::tiny().sum_bits(), 6);
+    }
+}

@@ -1,0 +1,228 @@
+//! The GAV voltage schedule (paper §II, Fig. 2).
+//!
+//! GAV modulates the approximate-region supply per bit-serial step. The
+//! paper's evaluated policy uses two levels — the *guarded* voltage
+//! `V_guard` and the *approximate* voltage `V_aprox` — selected by a single
+//! integer `G`: a step computing partial-product significance
+//! `s = ba + bb` runs guarded iff `s > s_max − G` (the `G` most significant
+//! significance values are protected), and undervolted otherwise.
+//!
+//! `G = 0` undervolts every step; `G = s_max + 1` guards everything.
+//!
+//! [`GavSchedule`] also supports the generalised multi-level policy the
+//! paper mentions ("can be extended to any number of discrete voltage
+//! levels"): an arbitrary map from significance to voltage mode.
+
+use super::Precision;
+
+/// Which supply the DVS module drives onto the approximate region during
+/// one bit-serial step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VoltageMode {
+    /// `V_guard`: timing met, exact computation.
+    Guarded,
+    /// `V_aprox`: aggressive undervolting, timing violations allowed.
+    Approximate,
+    /// An extension level (index into a user voltage table); used by the
+    /// multi-level policy ablation, never by the paper's two-level runs.
+    Level(u8),
+}
+
+/// A per-step voltage schedule for one `(a_bits, b_bits)` GEMM.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GavSchedule {
+    precision: Precision,
+    /// One mode per (bb outer, ba inner) step.
+    modes: Vec<VoltageMode>,
+    /// The G value that generated this schedule (None for custom policies).
+    g: Option<u32>,
+}
+
+impl GavSchedule {
+    /// The paper's two-level policy for a given `G` (Fig. 2).
+    ///
+    /// Panics if `G > s_max + 1`.
+    pub fn two_level(precision: Precision, g: u32) -> Self {
+        assert!(
+            g <= precision.max_g(),
+            "G={g} out of range for {precision} (max {})",
+            precision.max_g()
+        );
+        let s_max = precision.s_max();
+        let modes = precision
+            .step_order()
+            .map(|(ba, bb)| {
+                let s = ba as u32 + bb as u32;
+                // Guard iff s > s_max - G  <=>  s + G > s_max.
+                if s + g > s_max {
+                    VoltageMode::Guarded
+                } else {
+                    VoltageMode::Approximate
+                }
+            })
+            .collect();
+        Self {
+            precision,
+            modes,
+            g: Some(g),
+        }
+    }
+
+    /// Fully guarded operation (no undervolting) — the exact baseline.
+    pub fn all_guarded(precision: Precision) -> Self {
+        Self::two_level(precision, precision.max_g())
+    }
+
+    /// Fully undervolted operation (most aggressive configuration).
+    pub fn all_approx(precision: Precision) -> Self {
+        Self::two_level(precision, 0)
+    }
+
+    /// A custom policy from a significance → mode function (multi-level
+    /// extension).
+    pub fn custom(precision: Precision, f: impl Fn(u32) -> VoltageMode) -> Self {
+        let modes = precision
+            .step_order()
+            .map(|(ba, bb)| f(ba as u32 + bb as u32))
+            .collect();
+        Self {
+            precision,
+            modes,
+            g: None,
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// The G value, if this schedule came from the two-level policy.
+    pub fn g(&self) -> Option<u32> {
+        self.g
+    }
+
+    /// Mode of step `t` in controller order.
+    pub fn mode(&self, t: usize) -> VoltageMode {
+        self.modes[t]
+    }
+
+    /// Per-step mask: `true` where the step is undervolted.
+    pub fn approx_mask(&self) -> Vec<bool> {
+        self.modes
+            .iter()
+            .map(|m| !matches!(m, VoltageMode::Guarded))
+            .collect()
+    }
+
+    /// Number of undervolted steps.
+    pub fn n_approx(&self) -> usize {
+        self.approx_mask().iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of steps that run undervolted (drives the power model).
+    pub fn approx_fraction(&self) -> f64 {
+        self.n_approx() as f64 / self.modes.len() as f64
+    }
+
+    /// Render the schedule as the Fig. 2-style matrix (rows = bb, cols =
+    /// ba; `A` approximate, `G` guarded) for the `gavina schedule` CLI.
+    pub fn render(&self) -> String {
+        let p = self.precision;
+        let mut out = String::new();
+        out.push_str("      ");
+        for ba in 0..p.a_bits {
+            out.push_str(&format!("ba={ba} "));
+        }
+        out.push('\n');
+        for bb in 0..p.b_bits {
+            out.push_str(&format!("bb={bb} |"));
+            for ba in 0..p.a_bits {
+                let t = bb as usize * p.a_bits as usize + ba as usize;
+                let c = match self.modes[t] {
+                    VoltageMode::Guarded => "  G  ",
+                    VoltageMode::Approximate => "  A  ",
+                    VoltageMode::Level(l) => return format!("L{l}"),
+                };
+                out.push_str(c);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g0_all_approx_gmax_all_guarded() {
+        for p in Precision::EVAL_SET {
+            let s0 = GavSchedule::two_level(p, 0);
+            assert_eq!(s0.n_approx(), p.steps());
+            let sg = GavSchedule::two_level(p, p.max_g());
+            assert_eq!(sg.n_approx(), 0);
+        }
+    }
+
+    #[test]
+    fn monotone_in_g() {
+        // Increasing G can only guard more steps.
+        let p = Precision::new(4, 4);
+        let mut prev = p.steps() + 1;
+        for g in 0..=p.max_g() {
+            let n = GavSchedule::two_level(p, g).n_approx();
+            assert!(n < prev, "n_approx must strictly decrease: g={g}");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn guards_highest_significance_first() {
+        // G=1 on a4w4 must guard exactly the (3,3) step (s=6=s_max).
+        let p = Precision::new(4, 4);
+        let s = GavSchedule::two_level(p, 1);
+        for (t, (ba, bb)) in p.step_order().enumerate() {
+            let guarded = matches!(s.mode(t), VoltageMode::Guarded);
+            assert_eq!(guarded, (ba, bb) == (3, 3), "step ({ba},{bb})");
+        }
+    }
+
+    #[test]
+    fn matches_python_gav_schedule_semantics() {
+        // python: undervolted iff (ba+bb) <= s_max - g.
+        for p in [Precision::new(4, 4), Precision::new(2, 3)] {
+            for g in 0..=p.max_g() {
+                let mask = GavSchedule::two_level(p, g).approx_mask();
+                for (t, (ba, bb)) in p.step_order().enumerate() {
+                    let expect = (ba as i64 + bb as i64) <= p.s_max() as i64 - g as i64;
+                    assert_eq!(mask[t], expect, "p={p} g={g} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn g_out_of_range_panics() {
+        let p = Precision::new(2, 2);
+        GavSchedule::two_level(p, p.max_g() + 1);
+    }
+
+    #[test]
+    fn approx_fraction_bounds() {
+        let p = Precision::new(3, 3);
+        for g in 0..=p.max_g() {
+            let f = GavSchedule::two_level(p, g).approx_fraction();
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn render_contains_grid() {
+        let s = GavSchedule::two_level(Precision::new(2, 2), 1);
+        let r = s.render();
+        assert!(r.contains("ba=0") && r.contains("bb=1"));
+        assert!(r.contains('A') && r.contains('G'));
+    }
+}

@@ -1,0 +1,316 @@
+//! Run-configuration system: a TOML-subset parser (the vendored crate set
+//! has no `toml`/`serde` stack) plus the typed [`RunConfig`] the CLI and
+//! the serving coordinator consume.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"…"`), integer, float, boolean and flat array values, `#` comments.
+//! That covers every config this project ships; nested tables are
+//! rejected with a clear error.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if let Some(stripped) = t.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').ok_or(ParseError {
+            line,
+            message: format!("unterminated string: {t}"),
+        })?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError {
+        line,
+        message: format!("cannot parse value: {t}"),
+    })
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Config, ParseError> {
+    let mut cfg = Config::default();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw.find('#') {
+            // Only strip comments outside strings (strings in our configs
+            // never contain '#'; keep the parser simple and strict).
+            Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => {
+                &raw[..pos]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            if name.contains('[') || name.contains('.') {
+                return Err(ParseError {
+                    line: line_no,
+                    message: format!("nested tables not supported: [{name}]"),
+                });
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or(ParseError {
+            line: line_no,
+            message: format!("expected key = value: {line}"),
+        })?;
+        let key = key.trim();
+        let val = val.trim();
+        let parsed = if let Some(stripped) = val.strip_prefix('[') {
+            let inner = stripped.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                message: "unterminated array (arrays must be single-line)".into(),
+            })?;
+            let items: Result<Vec<Value>, ParseError> = inner
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| parse_scalar(s, line_no))
+                .collect();
+            Value::Array(items?)
+        } else {
+            parse_scalar(val, line_no)?
+        };
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        cfg.values.insert(full_key, parsed);
+    }
+    Ok(cfg)
+}
+
+impl Config {
+    pub fn from_file(path: &std::path::Path) -> Result<Self, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+/// Typed run configuration shared by the CLI and the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// `aXwY`.
+    pub precision: crate::arch::Precision,
+    /// Two-level GAV parameter.
+    pub g: u32,
+    /// Artifacts directory (weights, caltables, HLO).
+    pub artifacts_dir: std::path::PathBuf,
+    /// ResNet width multiplier (must match training).
+    pub width_mult: f64,
+    /// Evaluation subset size (0 = all).
+    pub n_eval: usize,
+    /// Coordinator batch size.
+    pub batch: usize,
+    /// Deterministic seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            precision: crate::arch::Precision::new(4, 4),
+            g: 0,
+            artifacts_dir: "artifacts".into(),
+            width_mult: 0.25,
+            n_eval: 128,
+            batch: 16,
+            seed: 2025,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a parsed config (`[run]` section), falling back to
+    /// defaults per key.
+    pub fn from_config(cfg: &Config) -> Self {
+        let d = Self::default();
+        let precision = cfg
+            .get("run.precision")
+            .and_then(Value::as_str)
+            .and_then(crate::arch::Precision::parse)
+            .unwrap_or(d.precision);
+        Self {
+            precision,
+            g: cfg.int_or("run.g", d.g as i64).max(0) as u32,
+            artifacts_dir: cfg.str_or("run.artifacts_dir", "artifacts").into(),
+            width_mult: cfg.float_or("run.width_mult", d.width_mult),
+            n_eval: cfg.int_or("run.n_eval", d.n_eval as i64).max(0) as usize,
+            batch: cfg.int_or("run.batch", d.batch as i64).max(1) as usize,
+            seed: cfg.int_or("run.seed", d.seed as i64) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# GAVINA run config
+[run]
+precision = "a4w4"   # paper reference point
+g = 3
+artifacts_dir = "artifacts"
+width_mult = 0.25
+n_eval = 64
+batch = 8
+seed = 7
+
+[sweep]
+g_values = [0, 2, 4, 6]
+voltages = [0.35, 0.45]
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = parse(SAMPLE).unwrap();
+        assert_eq!(cfg.str_or("run.precision", ""), "a4w4");
+        assert_eq!(cfg.int_or("run.g", -1), 3);
+        assert_eq!(cfg.float_or("run.width_mult", 0.0), 0.25);
+        assert!(cfg.bool_or("sweep.enabled", false));
+        match cfg.get("sweep.g_values").unwrap() {
+            Value::Array(xs) => {
+                assert_eq!(xs.len(), 4);
+                assert_eq!(xs[2].as_int(), Some(4));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        match cfg.get("sweep.voltages").unwrap() {
+            Value::Array(xs) => assert_eq!(xs[0].as_float(), Some(0.35)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_config_from_sample() {
+        let cfg = parse(SAMPLE).unwrap();
+        let rc = RunConfig::from_config(&cfg);
+        assert_eq!(rc.precision, crate::arch::Precision::new(4, 4));
+        assert_eq!(rc.g, 3);
+        assert_eq!(rc.n_eval, 64);
+        assert_eq!(rc.seed, 7);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let rc = RunConfig::from_config(&parse("[run]\ng = 1\n").unwrap());
+        assert_eq!(rc.g, 1);
+        assert_eq!(rc.width_mult, 0.25);
+        assert_eq!(rc.batch, 16);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("[run]\nbad line without equals\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[run\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("[a.b]\n").unwrap_err();
+        assert!(err.message.contains("nested"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let cfg = parse("# top\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(cfg.int_or("x", 0), 1);
+    }
+}

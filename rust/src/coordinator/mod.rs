@@ -1,0 +1,353 @@
+//! Serving coordinator: the Layer-3 request loop that turns the GAVINA
+//! stack into a deployable inference service.
+//!
+//! Architecture (std threads + channels; the vendored crate set has no
+//! async runtime, and the workload is CPU-bound anyway):
+//!
+//! ```text
+//! clients ──▶ batcher thread ──▶ worker pool (N threads) ──▶ responses
+//!              (size/deadline       each owns an Executor
+//!               batching)           over shared weights+tables)
+//! ```
+//!
+//! * The **batcher** groups single-image requests into GAVINA-sized
+//!   batches (bounded by `max_batch` or `batch_timeout`), because the
+//!   accelerator amortizes its A0/B0 plane streams over the `L` dimension.
+//! * **Workers** run the quantized forward pass on the cycle-level
+//!   simulator backend with the service's GAV configuration (per-layer G
+//!   allocation from the ILP, or a uniform G).
+//! * **Metrics** track end-to-end latency percentiles, throughput, and
+//!   the accelerator-side counters (simulated cycles, energy, corrupted
+//!   values) — the numbers the `serve` example reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::{ArchConfig, GavSchedule, Precision};
+use crate::dnn::{Backend, Executor, TensorMap};
+use crate::errmodel::ErrorTables;
+use crate::power::PowerModel;
+
+/// One inference request (a single 32×32×3 image).
+pub struct Request {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: Sender<Response>,
+}
+
+/// The response: class logits plus tracing info.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Service configuration.
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub arch: ArchConfig,
+    pub precision: Precision,
+    /// Per-layer G allocation (length = number of conv layers).
+    pub layer_gs: Vec<u32>,
+    pub width_mult: f64,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn new(precision: Precision, uniform_g: u32) -> Self {
+        Self {
+            arch: ArchConfig::paper(),
+            precision,
+            layer_gs: vec![uniform_g; crate::dnn::conv_layer_names().len()],
+            width_mult: 0.25,
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(20),
+            seed: 7,
+        }
+    }
+}
+
+/// Aggregated service metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub corrupted: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    fn record(&self, n_req: usize, lat: &[Duration], cycles: u64, corrupted: u64) {
+        self.requests.fetch_add(n_req as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.corrupted.fetch_add(corrupted, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        l.extend(lat.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// (p50, p95, max) latency in microseconds.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return (0, 0, 0);
+        }
+        l.sort_unstable();
+        let pick = |q: f64| l[((l.len() - 1) as f64 * q) as usize];
+        (pick(0.50), pick(0.95), *l.last().unwrap())
+    }
+
+    /// Accelerator-side energy for the served traffic [mJ].
+    pub fn energy_mj(&self, power: &PowerModel, sched: &GavSchedule) -> f64 {
+        power.energy_mj(sched, self.sim_cycles.load(Ordering::Relaxed))
+    }
+}
+
+enum BatcherMsg {
+    Req(Request),
+    Shutdown,
+}
+
+/// The running service.
+pub struct Coordinator {
+    tx: Sender<BatcherMsg>,
+    pub metrics: Arc<Metrics>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the batcher + worker pool over shared weights and calibrated
+    /// error tables.
+    pub fn start(
+        cfg: ServeConfig,
+        weights: Arc<TensorMap>,
+        tables: Option<Arc<ErrorTables>>,
+    ) -> Self {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<BatcherMsg>();
+        let (work_tx, work_rx) = channel::<Vec<Request>>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        // Worker pool.
+        let mut workers = Vec::new();
+        for wi in 0..cfg.workers.max(1) {
+            let work_rx = Arc::clone(&work_rx);
+            let weights = Arc::clone(&weights);
+            let tables = tables.clone();
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                loop {
+                    let batch = {
+                        let rx = work_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    if batch.is_empty() {
+                        break;
+                    }
+                    run_batch(&cfg, wi as u64, &weights, tables.as_deref(), &metrics, batch);
+                }
+            }));
+        }
+
+        // Batcher.
+        let batcher_cfg = cfg.clone();
+        let batcher = std::thread::spawn(move || {
+            let mut pending: Vec<Request> = Vec::new();
+            let mut deadline: Option<Instant> = None;
+            loop {
+                let timeout = deadline
+                    .map(|d| d.saturating_duration_since(Instant::now()))
+                    .unwrap_or(Duration::from_secs(3600));
+                match rx.recv_timeout(timeout) {
+                    Ok(BatcherMsg::Req(r)) => {
+                        if pending.is_empty() {
+                            deadline = Some(Instant::now() + batcher_cfg.batch_timeout);
+                        }
+                        pending.push(r);
+                        if pending.len() >= batcher_cfg.max_batch {
+                            let _ = work_tx.send(std::mem::take(&mut pending));
+                            deadline = None;
+                        }
+                    }
+                    Ok(BatcherMsg::Shutdown) => {
+                        if !pending.is_empty() {
+                            let _ = work_tx.send(std::mem::take(&mut pending));
+                        }
+                        // Poison the pool: one empty batch per worker.
+                        for _ in 0..batcher_cfg.workers.max(1) {
+                            let _ = work_tx.send(Vec::new());
+                        }
+                        break;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if !pending.is_empty() {
+                            let _ = work_tx.send(std::mem::take(&mut pending));
+                        }
+                        deadline = None;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        });
+
+        Self {
+            tx,
+            metrics,
+            batcher: Some(batcher),
+            workers,
+        }
+    }
+
+    /// Submit one image; returns the response receiver.
+    pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
+        let (resp_tx, resp_rx) = channel();
+        let _ = self.tx.send(BatcherMsg::Req(Request {
+            image,
+            submitted: Instant::now(),
+            resp: resp_tx,
+        }));
+        resp_rx
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        let _ = self.tx.send(BatcherMsg::Shutdown);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        Arc::clone(&self.metrics)
+    }
+}
+
+fn run_batch(
+    cfg: &ServeConfig,
+    worker_id: u64,
+    weights: &TensorMap,
+    tables: Option<&ErrorTables>,
+    metrics: &Metrics,
+    batch: Vec<Request>,
+) {
+    let n = batch.len();
+    let img_len = 32 * 32 * 3;
+    let mut images = Vec::with_capacity(n * img_len);
+    for r in &batch {
+        assert_eq!(r.image.len(), img_len, "bad image size");
+        images.extend_from_slice(&r.image);
+    }
+    let mut ex = Executor::new(
+        weights,
+        cfg.width_mult,
+        cfg.precision,
+        Backend::Gavina {
+            arch: cfg.arch.clone(),
+            tables,
+            seed: cfg.seed ^ worker_id.wrapping_mul(0xD1F),
+        },
+    );
+    ex.layer_gs = cfg.layer_gs.clone();
+    let result = ex.forward(&images, n);
+    let now = Instant::now();
+    let classes = result.classes;
+    let mut lats = Vec::with_capacity(n);
+    for (i, r) in batch.into_iter().enumerate() {
+        let latency = now.duration_since(r.submitted);
+        lats.push(latency);
+        let _ = r.resp.send(Response {
+            logits: result.logits[i * classes..(i + 1) * classes].to_vec(),
+            latency,
+            batch_size: n,
+        });
+    }
+    metrics.record(n, &lats, result.stats.cycles, result.stats.corrupted);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::exec::synth::synthetic_weights;
+    use crate::util::Prng;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            arch: ArchConfig::tiny(),
+            precision: Precision::new(2, 2),
+            layer_gs: vec![Precision::new(2, 2).max_g(); crate::dnn::conv_layer_names().len()],
+            width_mult: 0.125,
+            workers: 2,
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(5),
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let weights = Arc::new(synthetic_weights(0.125, 1));
+        let coord = Coordinator::start(small_cfg(), Arc::clone(&weights), None);
+        let mut rng = Prng::new(2);
+        let mut rxs = Vec::new();
+        for _ in 0..10 {
+            let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.next_f32()).collect();
+            rxs.push(coord.submit(img));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+            assert_eq!(resp.logits.len(), 10);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 10);
+        assert!(m.batches.load(Ordering::Relaxed) >= 3); // max_batch 4
+        assert!(m.sim_cycles.load(Ordering::Relaxed) > 0);
+        let (p50, p95, max) = m.latency_percentiles();
+        assert!(p50 > 0 && p95 >= p50 && max >= p95);
+    }
+
+    #[test]
+    fn batching_respects_max_batch() {
+        let weights = Arc::new(synthetic_weights(0.125, 3));
+        let mut cfg = small_cfg();
+        cfg.max_batch = 2;
+        let coord = Coordinator::start(cfg, weights, None);
+        let mut rng = Prng::new(4);
+        let rxs: Vec<_> = (0..6)
+            .map(|_| coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect()))
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!(resp.batch_size <= 2);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let weights = Arc::new(synthetic_weights(0.125, 5));
+        let mut cfg = small_cfg();
+        cfg.max_batch = 64; // never reached
+        cfg.batch_timeout = Duration::from_secs(3600); // never fires
+        let coord = Coordinator::start(cfg, weights, None);
+        let mut rng = Prng::new(6);
+        let rx = coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect());
+        // Shutdown must flush the pending (sub-batch) request.
+        let m_handle = std::thread::spawn(move || coord.shutdown());
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("flushed");
+        assert_eq!(resp.logits.len(), 10);
+        m_handle.join().unwrap();
+    }
+}

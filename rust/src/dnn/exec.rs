@@ -1,0 +1,553 @@
+//! Quantized ResNet-18 inference on GAVINA (paper §IV-D).
+//!
+//! Mirrors `python/compile/model.py::resnet18_apply` layer-for-layer: the
+//! same CIFAR topology (conv0 + 4 stages × 2 basic blocks + GAP + fc), the
+//! same uniform symmetric quantization (robust per-tensor activation
+//! range, per-output-channel weight ranges), the same SAME padding and BN
+//! application — so the QAT weights trained at build time produce the same
+//! accuracy here, and every convolution runs as an integer GEMM through
+//! the cycle-level GAVINA simulator with per-layer GAV schedules.
+//!
+//! Two backends:
+//! * [`Backend::Float`] — exact fake-quant reference (integer GEMM in
+//!   i64, no hardware model). Fast; the "exact result" the paper measures
+//!   perturbation against.
+//! * [`Backend::Gavina`] — the cycle-level simulator with optional
+//!   undervolting error injection and per-layer G allocation.
+
+use super::lower::{col2im, im2col, weights_to_b, ConvGeom};
+use super::tensor::Tensor;
+use super::weights::{AnyTensor, TensorMap};
+use crate::arch::{ArchConfig, GavSchedule, Precision};
+use crate::errmodel::ErrorTables;
+use crate::simulator::{GavinaSim, GemmJob};
+
+/// ResNet-18 stage table: (base channels, first-block stride); actual
+/// widths are `max(8, base · width_mult)` (matches the Python model).
+pub const STAGES: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+pub const BLOCKS_PER_STAGE: usize = 2;
+
+/// Channel width at a multiplier.
+pub fn ch(base: usize, width_mult: f64) -> usize {
+    ((base as f64 * width_mult) as usize).max(8)
+}
+
+/// Names of all conv layers in execution order (the per-layer G vector
+/// and the Fig. 8a x-axis index into this).
+pub fn conv_layer_names() -> Vec<String> {
+    let mut names = vec!["conv0".to_string()];
+    let mut cin = 64;
+    for (si, (c, stride)) in STAGES.iter().enumerate() {
+        for bi in 0..BLOCKS_PER_STAGE {
+            let s = if bi == 0 { *stride } else { 1 };
+            let p = format!("s{si}b{bi}");
+            names.push(format!("{p}/conv1"));
+            names.push(format!("{p}/conv2"));
+            if s != 1 || cin != *c {
+                names.push(format!("{p}/down"));
+            }
+            cin = *c;
+        }
+    }
+    names
+}
+
+/// Execution backend.
+pub enum Backend<'a> {
+    /// Exact fake-quant reference (no hardware model).
+    Float,
+    /// Cycle-level GAVINA with optional error model.
+    Gavina {
+        arch: ArchConfig,
+        tables: Option<&'a ErrorTables>,
+        seed: u64,
+    },
+    /// Cycle-level GAVINA with every undervolted tile run through full
+    /// gate-level simulation (the paper's Fig. 5 setup at network scale —
+    /// intractably slow in the paper, merely very slow here).
+    GavinaGls {
+        arch: ArchConfig,
+        ctx: &'a crate::gls::GlsContext,
+        seed: u64,
+    },
+}
+
+/// Aggregated hardware counters of one forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardStats {
+    pub cycles: u64,
+    pub tiles: u64,
+    pub corrupted: u64,
+    pub useful_macs: u64,
+    pub executed_macs: u64,
+    /// Per-conv-layer useful MACs (the ILP operation weights).
+    pub layer_macs: Vec<u64>,
+    /// Per-conv-layer (C, L, K) GEMM dims.
+    pub layer_dims: Vec<(usize, usize, usize)>,
+}
+
+/// One forward pass result.
+pub struct ForwardResult {
+    /// Logits `[N, classes]` row-major.
+    pub logits: Vec<f32>,
+    pub n: usize,
+    pub classes: usize,
+    pub stats: ForwardStats,
+}
+
+/// The executor. `layer_gs[i]` is the GAV `G` for conv layer `i`; use
+/// `prec.max_g()` everywhere for exact operation.
+pub struct Executor<'a> {
+    pub weights: &'a TensorMap,
+    pub width_mult: f64,
+    pub prec: Precision,
+    pub backend: Backend<'a>,
+    pub layer_gs: Vec<u32>,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(
+        weights: &'a TensorMap,
+        width_mult: f64,
+        prec: Precision,
+        backend: Backend<'a>,
+    ) -> Self {
+        let n_layers = conv_layer_names().len();
+        Self {
+            weights,
+            width_mult,
+            prec,
+            backend,
+            layer_gs: vec![prec.max_g(); n_layers],
+        }
+    }
+
+    /// Set a uniform G on every layer.
+    pub fn with_uniform_g(mut self, g: u32) -> Self {
+        for x in &mut self.layer_gs {
+            *x = g;
+        }
+        self
+    }
+
+    fn wf32(&self, name: &str) -> (&[usize], &[f32]) {
+        self.weights
+            .get(name)
+            .and_then(AnyTensor::as_f32)
+            .unwrap_or_else(|| panic!("missing f32 weight '{name}'"))
+    }
+
+    /// Quantize + integer-GEMM one conv; returns the dequantized output
+    /// (pre-BN).
+    fn qconv(&self, x: &Tensor, conv: &str, stride: usize, layer_idx: usize,
+             stats: &mut ForwardStats) -> Tensor {
+        let (wdims, wdata) = self.wf32(&format!("{conv}/w"));
+        let g = ConvGeom::new(x, wdims, stride);
+        let (c_dim, l_dim, k_dim) = (g.c_dim(), g.l_dim(), g.k_dim());
+
+        // --- activation quantization (per tensor, robust range) ---
+        let hi_a = ((1i32 << (self.prec.a_bits - 1)) - 1) as f32;
+        let sa = x.robust_amax().max(1e-8) / hi_a;
+        let a_f = im2col(x, &g);
+        let qa: Vec<i32> = a_f
+            .iter()
+            .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32))
+            .collect();
+
+        // --- weight quantization (per output channel) ---
+        let hi_w = ((1i32 << (self.prec.b_bits - 1)) - 1) as f32;
+        let b_f = weights_to_b(wdims, wdata);
+        let mut sw = vec![0.0f32; k_dim];
+        for k in 0..k_dim {
+            let amax = b_f[k * c_dim..(k + 1) * c_dim]
+                .iter()
+                .fold(0.0f32, |m, v| m.max(v.abs()))
+                .max(1e-8);
+            sw[k] = amax / hi_w;
+        }
+        let qb: Vec<i32> = b_f
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let k = i / c_dim;
+                ((v / sw[k]).round() as i32).clamp(-hi_w as i32, hi_w as i32)
+            })
+            .collect();
+
+        // --- integer GEMM ---
+        let p_int: Vec<i64> = match &self.backend {
+            Backend::Float => crate::gemm::gemm_exact(&qa, &qb, c_dim, l_dim, k_dim),
+            Backend::Gavina { .. } | Backend::GavinaGls { .. } => {
+                let sched = GavSchedule::two_level(self.prec, self.layer_gs[layer_idx]);
+                let job = GemmJob {
+                    a: &qa,
+                    b: &qb,
+                    c: c_dim,
+                    l: l_dim,
+                    k: k_dim,
+                    sched,
+                };
+                let mut sim = match &self.backend {
+                    Backend::Gavina { arch, tables, seed } => GavinaSim::new(
+                        arch.clone(),
+                        *tables,
+                        seed.wrapping_add(layer_idx as u64 * 0x9E37),
+                    ),
+                    Backend::GavinaGls { arch, ctx, seed } => GavinaSim::new_gls(
+                        arch.clone(),
+                        ctx,
+                        seed.wrapping_add(layer_idx as u64 * 0x9E37),
+                    ),
+                    Backend::Float => unreachable!(),
+                };
+                let rep = sim.run_gemm(&job);
+                stats.cycles += rep.cycles;
+                stats.tiles += rep.n_tiles;
+                stats.corrupted += rep.values_corrupted;
+                stats.executed_macs += rep.executed_macs;
+                rep.p
+            }
+        };
+        stats.useful_macs += g.macs();
+        if stats.layer_macs.len() <= layer_idx {
+            stats.layer_macs.resize(layer_idx + 1, 0);
+            stats.layer_dims.resize(layer_idx + 1, (0, 0, 0));
+        }
+        stats.layer_macs[layer_idx] = g.macs();
+        stats.layer_dims[layer_idx] = (c_dim, l_dim, k_dim);
+
+        // --- dequantize ---
+        let mut p = vec![0.0f32; k_dim * l_dim];
+        for k in 0..k_dim {
+            let s = sa * sw[k];
+            for l in 0..l_dim {
+                p[k * l_dim + l] = p_int[k * l_dim + l] as f32 * s;
+            }
+        }
+        col2im(&p, &g)
+    }
+
+    /// BN (inference form) per channel.
+    fn bn(&self, x: &mut Tensor, bn: &str) {
+        let (_, scale) = self.wf32(&format!("{bn}/scale"));
+        let (_, bias) = self.wf32(&format!("{bn}/bias"));
+        let (_, mean) = self.wf32(&format!("{bn}/mean"));
+        let (_, var) = self.wf32(&format!("{bn}/var"));
+        let c = *x.dims.last().unwrap();
+        assert_eq!(scale.len(), c);
+        // Precompute per-channel affine.
+        let mul: Vec<f32> = (0..c)
+            .map(|i| scale[i] / (var[i] + 1e-5).sqrt())
+            .collect();
+        for (i, v) in x.data.iter_mut().enumerate() {
+            let ci = i % c;
+            *v = (*v - mean[ci]) * mul[ci] + bias[ci];
+        }
+    }
+
+    fn qconv_bn(&self, x: &Tensor, conv: &str, bnn: &str, stride: usize, relu: bool,
+                layer: &mut usize, stats: &mut ForwardStats) -> Tensor {
+        let mut y = self.qconv(x, conv, stride, *layer, stats);
+        *layer += 1;
+        self.bn(&mut y, bnn);
+        if relu {
+            y.relu_inplace();
+        }
+        y
+    }
+
+    /// Forward one batch of NHWC images in `[0, 1]`.
+    pub fn forward(&self, images: &[f32], n: usize) -> ForwardResult {
+        assert_eq!(images.len(), n * 32 * 32 * 3);
+        let mut stats = ForwardStats::default();
+        let mut layer = 0usize;
+        let mut x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
+
+        x = self.qconv_bn(&x, "conv0", "bn0", 1, true, &mut layer, &mut stats);
+        let mut cin = ch(64, self.width_mult);
+        for (si, (c, stride)) in STAGES.iter().enumerate() {
+            let cout = ch(*c, self.width_mult);
+            for bi in 0..BLOCKS_PER_STAGE {
+                let s = if bi == 0 { *stride } else { 1 };
+                let p = format!("s{si}b{bi}");
+                let y = self.qconv_bn(&x, &format!("{p}/conv1"), &format!("{p}/bn1"), s,
+                                      true, &mut layer, &mut stats);
+                let mut y = self.qconv_bn(&y, &format!("{p}/conv2"), &format!("{p}/bn2"), 1,
+                                          false, &mut layer, &mut stats);
+                let sc = if self.weights.contains_key(&format!("{p}/down/w")) {
+                    self.qconv_bn(&x, &format!("{p}/down"), &format!("{p}/dbn"), s,
+                                  false, &mut layer, &mut stats)
+                } else {
+                    x.clone()
+                };
+                y.add_inplace(&sc);
+                y.relu_inplace();
+                x = y;
+                cin = cout;
+            }
+        }
+        let _ = cin;
+
+        // GAP -> fake-quant -> fc (fc itself stays in float, as in Python).
+        let mut gap = x.global_avg_pool();
+        let hi_a = ((1i32 << (self.prec.a_bits - 1)) - 1) as f32;
+        let sa = gap.robust_amax().max(1e-8) / hi_a;
+        for v in &mut gap.data {
+            *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
+        }
+        let (fdims, fw) = self.wf32("fc/w");
+        let (_, fb) = self.wf32("fc/b");
+        let (cin_fc, classes) = (fdims[0], fdims[1]);
+        assert_eq!(gap.dims, vec![n, cin_fc]);
+        let mut logits = vec![0.0f32; n * classes];
+        for ni in 0..n {
+            for k in 0..classes {
+                let mut acc = fb[k];
+                for ci in 0..cin_fc {
+                    acc += gap.data[ni * cin_fc + ci] * fw[ci * classes + k];
+                }
+                logits[ni * classes + k] = acc;
+            }
+        }
+        ForwardResult {
+            logits,
+            n,
+            classes,
+            stats,
+        }
+    }
+
+    /// Forward a large set in internal mini-batches (bounds im2col memory).
+    pub fn forward_batched(&self, images: &[f32], n: usize, batch: usize) -> ForwardResult {
+        let mut logits = Vec::new();
+        let mut stats = ForwardStats::default();
+        let mut classes = 0;
+        let img_len = 32 * 32 * 3;
+        let mut i = 0;
+        while i < n {
+            let bn = batch.min(n - i);
+            let r = self.forward(&images[i * img_len..(i + bn) * img_len], bn);
+            logits.extend_from_slice(&r.logits);
+            classes = r.classes;
+            stats.cycles += r.stats.cycles;
+            stats.tiles += r.stats.tiles;
+            stats.corrupted += r.stats.corrupted;
+            stats.useful_macs += r.stats.useful_macs;
+            stats.executed_macs += r.stats.executed_macs;
+            if stats.layer_macs.is_empty() {
+                stats.layer_macs = r.stats.layer_macs.clone();
+                stats.layer_dims = r.stats.layer_dims.clone();
+            }
+            i += bn;
+        }
+        ForwardResult {
+            logits,
+            n,
+            classes,
+            stats,
+        }
+    }
+}
+
+
+/// Synthetic-weight support: a random-but-valid weight map with the exact
+/// key/shape structure of the trained artifacts — lets tests, benches and
+/// the quickstart run without `make artifacts`.
+pub mod synth {
+    use super::*;
+    use crate::util::Prng;
+    use crate::dnn::weights::AnyTensor;
+
+    /// Build a random-but-valid weight map for a narrow model (tests run
+    /// without artifacts).
+    pub fn synthetic_weights(width_mult: f64, seed: u64) -> TensorMap {
+        let mut rng = Prng::new(seed);
+        let mut m = TensorMap::new();
+        let conv = |m: &mut TensorMap, name: &str, kh: usize, cin: usize, cout: usize,
+                        rng: &mut Prng| {
+            let n = kh * kh * cin * cout;
+            let std = (2.0 / (kh * kh * cin) as f64).sqrt();
+            m.insert(
+                format!("{name}/w"),
+                AnyTensor::F32(
+                    vec![kh, kh, cin, cout],
+                    (0..n).map(|_| (rng.normal() * std) as f32).collect(),
+                ),
+            );
+        };
+        let bn = |m: &mut TensorMap, name: &str, c: usize| {
+            m.insert(format!("{name}/scale"), AnyTensor::F32(vec![c], vec![1.0; c]));
+            m.insert(format!("{name}/bias"), AnyTensor::F32(vec![c], vec![0.0; c]));
+            m.insert(format!("{name}/mean"), AnyTensor::F32(vec![c], vec![0.0; c]));
+            m.insert(format!("{name}/var"), AnyTensor::F32(vec![c], vec![1.0; c]));
+        };
+        let c0 = ch(64, width_mult);
+        conv(&mut m, "conv0", 3, 3, c0, &mut rng);
+        bn(&mut m, "bn0", c0);
+        let mut cin = c0;
+        for (si, (c, stride)) in STAGES.iter().enumerate() {
+            let cout = ch(*c, width_mult);
+            for bi in 0..BLOCKS_PER_STAGE {
+                let s = if bi == 0 { *stride } else { 1 };
+                let p = format!("s{si}b{bi}");
+                conv(&mut m, &format!("{p}/conv1"), 3, cin, cout, &mut rng);
+                bn(&mut m, &format!("{p}/bn1"), cout);
+                conv(&mut m, &format!("{p}/conv2"), 3, cout, cout, &mut rng);
+                bn(&mut m, &format!("{p}/bn2"), cout);
+                if s != 1 || cin != cout {
+                    conv(&mut m, &format!("{p}/down"), 1, cin, cout, &mut rng);
+                    bn(&mut m, &format!("{p}/dbn"), cout);
+                }
+                cin = cout;
+            }
+        }
+        let classes = 10;
+        m.insert(
+            "fc/w".into(),
+            AnyTensor::F32(
+                vec![cin, classes],
+                (0..cin * classes)
+                    .map(|_| (rng.normal() * 0.1) as f32)
+                    .collect(),
+            ),
+        );
+        m.insert("fc/b".into(), AnyTensor::F32(vec![classes], vec![0.0; classes]));
+        m
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::synth::synthetic_weights;
+    use crate::util::Prng;
+
+    fn rand_images(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n * 32 * 32 * 3).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn layer_names_count() {
+        // conv0 + 8 blocks × 2 convs + 3 downsamples = 20 conv layers.
+        let names = conv_layer_names();
+        assert_eq!(names.len(), 20, "{names:?}");
+        assert_eq!(names[0], "conv0");
+        assert!(names.contains(&"s1b0/down".to_string()));
+        assert!(!names.contains(&"s0b0/down".to_string())); // stride 1, cin==cout
+    }
+
+    #[test]
+    fn float_and_guarded_gavina_agree() {
+        // The cycle-level integer path with a fully guarded schedule must
+        // produce the same logits as the float fake-quant reference.
+        let wm = 0.125; // narrow: fast
+        let weights = synthetic_weights(wm, 1);
+        let mut rng = Prng::new(2);
+        let imgs = rand_images(&mut rng, 2);
+        let prec = Precision::new(4, 4);
+
+        let ex_f = Executor::new(&weights, wm, prec, Backend::Float);
+        let rf = ex_f.forward(&imgs, 2);
+
+        let ex_g = Executor::new(
+            &weights,
+            wm,
+            prec,
+            Backend::Gavina {
+                arch: ArchConfig::tiny(),
+                tables: None,
+                seed: 3,
+            },
+        );
+        let rg = ex_g.forward(&imgs, 2);
+
+        assert_eq!(rf.logits.len(), rg.logits.len());
+        for (a, b) in rf.logits.iter().zip(&rg.logits) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert!(rg.stats.cycles > 0);
+        assert_eq!(rg.stats.corrupted, 0);
+        assert_eq!(rg.stats.layer_macs.len(), 20);
+    }
+
+    #[test]
+    fn error_injection_perturbs_logits() {
+        use crate::errmodel::{ErrorTables, ModelParams};
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 4);
+        let mut rng = Prng::new(5);
+        let imgs = rand_images(&mut rng, 1);
+        let prec = Precision::new(4, 4);
+        let arch = ArchConfig::tiny();
+
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        for bit in 0..params.s_bits {
+            for e in 0..=params.c_dim as u16 {
+                for pb in 0..params.p_bins {
+                    for cd in 0..params.n_cond(bit) {
+                        tables.set_prob(bit, e, pb, cd, 0.05);
+                    }
+                }
+            }
+        }
+
+        let exact = Executor::new(&weights, wm, prec, Backend::Float).forward(&imgs, 1);
+        let uv = Executor::new(
+            &weights,
+            wm,
+            prec,
+            Backend::Gavina {
+                arch,
+                tables: Some(&tables),
+                seed: 6,
+            },
+        )
+        .with_uniform_g(0)
+        .forward(&imgs, 1);
+        assert!(uv.stats.corrupted > 0);
+        let mse = crate::stats::mse_f32(&exact.logits, &uv.logits);
+        assert!(mse > 0.0, "undervolting must perturb logits");
+    }
+
+    #[test]
+    fn per_layer_g_only_affects_that_layer() {
+        use crate::errmodel::{ErrorTables, ModelParams};
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 7);
+        let mut rng = Prng::new(8);
+        let imgs = rand_images(&mut rng, 1);
+        let prec = Precision::new(2, 2);
+        let arch = ArchConfig::tiny();
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        // Only the MSB flips, always: big perturbation when undervolted.
+        let msb = params.s_bits - 1;
+        for e in 0..=params.c_dim as u16 {
+            for pb in 0..params.p_bins {
+                tables.set_prob(msb, e, pb, 0, 1.0);
+            }
+        }
+        let mk = |gs: Vec<u32>| {
+            let mut ex = Executor::new(
+                &weights,
+                wm,
+                prec,
+                Backend::Gavina {
+                    arch: arch.clone(),
+                    tables: Some(&tables),
+                    seed: 9,
+                },
+            );
+            ex.layer_gs = gs;
+            ex.forward(&imgs, 1)
+        };
+        let all_guard = mk(vec![prec.max_g(); 20]);
+        assert_eq!(all_guard.stats.corrupted, 0);
+        let mut gs = vec![prec.max_g(); 20];
+        gs[5] = 0;
+        let one_uv = mk(gs);
+        assert!(one_uv.stats.corrupted > 0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Conv → GEMM lowering (im2col), mapping every convolution onto the
+//! GAVINA GEMM shape of Listing 1: activations `A[C, L]`, weights
+//! `B[K, C]`, product `P[K, L]` with
+//!
+//! * `C = kh·kw·cin` — the reduction axis (the paper sizes the array with
+//!   `C` a multiple of 9 exactly because of 3×3 kernels, §IV-A),
+//! * `L = n·oh·ow` — output pixels,
+//! * `K = cout`.
+//!
+//! Padding follows jax/TF `SAME` semantics (`lo = total/2`, extra on the
+//! high side) so the Rust executor reproduces the Python QAT graph
+//! bit-for-bit after quantization.
+
+use super::tensor::Tensor;
+
+/// SAME-padding geometry for one spatial axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SamePad {
+    pub out: usize,
+    pub lo: usize,
+}
+
+/// TF/jax `SAME`: `out = ceil(in / stride)`,
+/// `total = max((out-1)·stride + k − in, 0)`, `lo = total / 2`.
+pub fn same_pad(input: usize, k: usize, stride: usize) -> SamePad {
+    let out = input.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(input);
+    SamePad { out, lo: total / 2 }
+}
+
+/// Geometry of one lowered conv.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl ConvGeom {
+    pub fn new(x: &Tensor, wdims: &[usize], stride: usize) -> Self {
+        let (n, h, w, cin) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let (kh, kw, wcin, cout) = (wdims[0], wdims[1], wdims[2], wdims[3]);
+        assert_eq!(cin, wcin, "channel mismatch");
+        let ph = same_pad(h, kh, stride);
+        let pw = same_pad(w, kw, stride);
+        Self {
+            n,
+            h,
+            w,
+            cin,
+            kh,
+            kw,
+            cout,
+            stride,
+            oh: ph.out,
+            ow: pw.out,
+            pad_h: ph.lo,
+            pad_w: pw.lo,
+        }
+    }
+
+    /// GEMM reduction dimension `C`.
+    pub fn c_dim(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// GEMM column dimension `L`.
+    pub fn l_dim(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// GEMM row dimension `K`.
+    pub fn k_dim(&self) -> usize {
+        self.cout
+    }
+
+    /// Useful MACs of this conv.
+    pub fn macs(&self) -> u64 {
+        (self.c_dim() * self.l_dim() * self.k_dim()) as u64
+    }
+}
+
+/// im2col: build the `A[C, L]` patch matrix (row-major `a[c·L + l]`) from
+/// an NHWC input. Out-of-bounds taps read 0 (zero padding).
+pub fn im2col(x: &Tensor, g: &ConvGeom) -> Vec<f32> {
+    let (c_dim, l_dim) = (g.c_dim(), g.l_dim());
+    let mut a = vec![0.0f32; c_dim * l_dim];
+    for ni in 0..g.n {
+        for ohi in 0..g.oh {
+            for owi in 0..g.ow {
+                let l = (ni * g.oh + ohi) * g.ow + owi;
+                for khi in 0..g.kh {
+                    let hi = (ohi * g.stride + khi) as isize - g.pad_h as isize;
+                    if hi < 0 || hi >= g.h as isize {
+                        continue;
+                    }
+                    for kwi in 0..g.kw {
+                        let wi = (owi * g.stride + kwi) as isize - g.pad_w as isize;
+                        if wi < 0 || wi >= g.w as isize {
+                            continue;
+                        }
+                        let xbase = ((ni * g.h + hi as usize) * g.w + wi as usize) * g.cin;
+                        let cbase = (khi * g.kw + kwi) * g.cin;
+                        for ci in 0..g.cin {
+                            a[(cbase + ci) * l_dim + l] = x.data[xbase + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    a
+}
+
+/// Reshape HWIO conv weights into the `B[K, C]` GEMM operand (row-major
+/// `b[k·C + c]`, `c = (kh·kw + kw)·cin + ci` matching [`im2col`]).
+pub fn weights_to_b(wdims: &[usize], wdata: &[f32]) -> Vec<f32> {
+    let (kh, kw, cin, cout) = (wdims[0], wdims[1], wdims[2], wdims[3]);
+    let c_dim = kh * kw * cin;
+    let mut b = vec![0.0f32; cout * c_dim];
+    for khi in 0..kh {
+        for kwi in 0..kw {
+            for ci in 0..cin {
+                let c = (khi * kw + kwi) * cin + ci;
+                for k in 0..cout {
+                    b[k * c_dim + c] = wdata[((khi * kw + kwi) * cin + ci) * cout + k];
+                }
+            }
+        }
+    }
+    b
+}
+
+/// Fold a `P[K, L]` GEMM result back into an NHWC output tensor.
+pub fn col2im(p: &[f32], g: &ConvGeom) -> Tensor {
+    let l_dim = g.l_dim();
+    assert_eq!(p.len(), g.k_dim() * l_dim);
+    let mut out = Tensor::zeros(vec![g.n, g.oh, g.ow, g.cout]);
+    for k in 0..g.cout {
+        for l in 0..l_dim {
+            // l = (n·oh + ohi)·ow + owi ; NHWC index = l·cout + k.
+            out.data[l * g.cout + k] = p[k * l_dim + l];
+        }
+    }
+    out
+}
+
+/// Direct f32 convolution (reference for the lowering tests).
+pub fn conv2d_ref(x: &Tensor, wdims: &[usize], wdata: &[f32], stride: usize) -> Tensor {
+    let g = ConvGeom::new(x, wdims, stride);
+    let mut out = Tensor::zeros(vec![g.n, g.oh, g.ow, g.cout]);
+    for ni in 0..g.n {
+        for ohi in 0..g.oh {
+            for owi in 0..g.ow {
+                for k in 0..g.cout {
+                    let mut acc = 0.0f32;
+                    for khi in 0..g.kh {
+                        let hi = (ohi * g.stride + khi) as isize - g.pad_h as isize;
+                        if hi < 0 || hi >= g.h as isize {
+                            continue;
+                        }
+                        for kwi in 0..g.kw {
+                            let wi = (owi * g.stride + kwi) as isize - g.pad_w as isize;
+                            if wi < 0 || wi >= g.w as isize {
+                                continue;
+                            }
+                            for ci in 0..g.cin {
+                                acc += x.at4(ni, hi as usize, wi as usize, ci)
+                                    * wdata[((khi * g.kw + kwi) * g.cin + ci) * g.cout + k];
+                            }
+                        }
+                    }
+                    out.data[((ni * g.oh + ohi) * g.ow + owi) * g.cout + k] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// f32 GEMM `P[K,L] = B[K,C]·A[C,L]` (the float backend's inner product).
+pub fn gemm_f32(a: &[f32], b: &[f32], c_dim: usize, l_dim: usize, k_dim: usize) -> Vec<f32> {
+    let mut p = vec![0.0f32; k_dim * l_dim];
+    for k in 0..k_dim {
+        for c in 0..c_dim {
+            let bv = b[k * c_dim + c];
+            if bv == 0.0 {
+                continue;
+            }
+            let arow = &a[c * l_dim..(c + 1) * l_dim];
+            let prow = &mut p[k * l_dim..(k + 1) * l_dim];
+            for l in 0..l_dim {
+                prow[l] += bv * arow[l];
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    #[test]
+    fn same_pad_matches_tf_rules() {
+        // 32x32, k3 s1 -> 32 out, pad 1|1 (lo=1).
+        assert_eq!(same_pad(32, 3, 1), SamePad { out: 32, lo: 1 });
+        // 32x32, k3 s2 -> 16 out, total 1, lo 0 (extra on high side).
+        assert_eq!(same_pad(32, 3, 2), SamePad { out: 16, lo: 0 });
+        // 1x1 s1: no padding.
+        assert_eq!(same_pad(16, 1, 1), SamePad { out: 16, lo: 0 });
+        // 1x1 s2 on 16 -> 8 out, total 0.
+        assert_eq!(same_pad(16, 1, 2), SamePad { out: 8, lo: 0 });
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        check("im2col+GEMM == conv2d", 20, |rng| {
+            let n = rng.int_in(1, 2) as usize;
+            let h = rng.int_in(4, 10) as usize;
+            let w = rng.int_in(4, 10) as usize;
+            let cin = rng.int_in(1, 5) as usize;
+            let cout = rng.int_in(1, 6) as usize;
+            let k = *[1usize, 3].get(rng.index(2)).unwrap();
+            let stride = rng.int_in(1, 2) as usize;
+            let x = Tensor::new(
+                vec![n, h, w, cin],
+                (0..n * h * w * cin)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect(),
+            );
+            let wdims = vec![k, k, cin, cout];
+            let wdata: Vec<f32> = (0..k * k * cin * cout)
+                .map(|_| rng.next_f32() * 2.0 - 1.0)
+                .collect();
+
+            let direct = conv2d_ref(&x, &wdims, &wdata, stride);
+
+            let g = ConvGeom::new(&x, &wdims, stride);
+            let a = im2col(&x, &g);
+            let b = weights_to_b(&wdims, &wdata);
+            let p = gemm_f32(&a, &b, g.c_dim(), g.l_dim(), g.k_dim());
+            let folded = col2im(&p, &g);
+
+            assert_eq!(folded.dims, direct.dims);
+            for (i, (x1, x2)) in folded.data.iter().zip(&direct.data).enumerate() {
+                assert!(
+                    (x1 - x2).abs() < 1e-4,
+                    "mismatch at {i}: {x1} vs {x2} (k={k} s={stride})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn resnet_inner_layer_c_is_multiple_of_9() {
+        // The §IV-A design motivation: 3x3 kernels make C divisible by 9.
+        let x = Tensor::zeros(vec![1, 8, 8, 64]);
+        let g = ConvGeom::new(&x, &[3, 3, 64, 64], 1);
+        assert_eq!(g.c_dim(), 576); // exactly the paper's array C!
+        assert_eq!(g.c_dim() % 9, 0);
+    }
+
+    #[test]
+    fn geom_macs() {
+        let x = Tensor::zeros(vec![2, 4, 4, 3]);
+        let g = ConvGeom::new(&x, &[3, 3, 3, 8], 1);
+        assert_eq!(g.macs(), (27 * 2 * 16 * 8) as u64);
+    }
+}

@@ -1,0 +1,12 @@
+//! DNN substrate: tensors, GVNT weight loading, conv→GEMM lowering and
+//! the quantized ResNet-18 executor that maps every convolution onto the
+//! GAVINA accelerator (paper §IV-D).
+
+pub mod exec;
+pub mod lower;
+pub mod tensor;
+pub mod weights;
+
+pub use exec::{conv_layer_names, Backend, Executor, ForwardResult, ForwardStats};
+pub use tensor::Tensor;
+pub use weights::{load_eval_set, load_tensors, EvalSet, TensorMap};

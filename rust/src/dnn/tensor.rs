@@ -1,0 +1,139 @@
+//! Minimal dense NHWC tensor for the DNN substrate. No autograd, no
+//! broadcasting zoo — inference only, shaped exactly for the quantized
+//! ResNet path (`exec.rs`).
+
+/// Dense f32 tensor, row-major over its dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self {
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// NHWC accessor (debug/test use; hot paths index `data` directly).
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 4);
+        let (dh, dw, dc) = (self.dims[1], self.dims[2], self.dims[3]);
+        self.data[((n * dh + h) * dw + w) * dc + c]
+    }
+
+    /// Robust activation range: `min(max|x|, mean|x| + 6·std|x|)` —
+    /// mirrors `python/compile/model.py::act_amax` exactly so both
+    /// executors quantize to the same integers.
+    pub fn robust_amax(&self) -> f32 {
+        if self.data.is_empty() {
+            return 1e-8;
+        }
+        let n = self.data.len() as f64;
+        let mut maxa = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for &v in &self.data {
+            let a = v.abs() as f64;
+            maxa = maxa.max(a);
+            sum += a;
+            sum2 += a * a;
+        }
+        let mu = sum / n;
+        let var = (sum2 / n - mu * mu).max(0.0);
+        (maxa.min(mu + 6.0 * var.sqrt())) as f32
+    }
+
+    /// Element-wise ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Element-wise add (residual connections).
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Global average pool NHWC → `[N, C]`.
+    pub fn global_avg_pool(&self) -> Tensor {
+        let (n, h, w, c) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        let mut out = vec![0.0f32; n * c];
+        let inv = 1.0 / (h * w) as f32;
+        for ni in 0..n {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let base = ((ni * h + hi) * w + wi) * c;
+                    for ci in 0..c {
+                        out[ni * c + ci] += self.data[base + ci] * inv;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![n, c], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn robust_amax_caps_outliers() {
+        // 1000 small values + one huge outlier: the cap must bite.
+        let mut data = vec![0.1f32; 1000];
+        data.push(100.0);
+        let t = Tensor::new(vec![1001], data);
+        let amax = t.robust_amax();
+        assert!(amax < 50.0, "outlier must be capped: {amax}");
+        assert!(amax > 0.1);
+    }
+
+    #[test]
+    fn robust_amax_equals_max_for_tame_data() {
+        let t = Tensor::new(vec![4], vec![0.5, -1.0, 0.75, 0.25]);
+        // std is large relative to the spread: cap doesn't bite.
+        assert!((t.robust_amax() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gap_means() {
+        // [1, 2, 2, 1] with values 1,2,3,4 -> mean 2.5.
+        let t = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let g = t.global_avg_pool();
+        assert_eq!(g.dims, vec![1, 1]);
+        assert!((g.data[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut t = Tensor::new(vec![3], vec![-1.0, 0.5, 2.0]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 0.5, 2.0]);
+        t.add_inplace(&Tensor::new(vec![3], vec![1.0, 1.0, 1.0]));
+        assert_eq!(t.data, vec![1.0, 1.5, 3.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! GVNT tensor-container reader — the Rust side of
+//! `python/compile/tensorio.py`. Loads the QAT-trained ResNet weights and
+//! the exported evaluation dataset from `artifacts/`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic b"GVNT" | version u32 (=1) | count u32
+//! count × [ name_len u32 | name utf8 | dtype u8 | ndim u32 | dims u32×ndim
+//!           | raw data ]
+//! dtype: 0 = f32, 1 = i32, 2 = u8.
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+/// A loaded tensor of any supported dtype.
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U8(Vec<usize>, Vec<u8>),
+}
+
+impl AnyTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(d, _) | AnyTensor::I32(d, _) | AnyTensor::U8(d, _) => d,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<(&[usize], &[f32])> {
+        match self {
+            AnyTensor::F32(d, v) => Some((d, v)),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<(&[usize], &[i32])> {
+        match self {
+            AnyTensor::I32(d, v) => Some((d, v)),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(&self) -> Option<(&[usize], &[u8])> {
+        match self {
+            AnyTensor::U8(d, v) => Some((d, v)),
+            _ => None,
+        }
+    }
+}
+
+/// Ordered name → tensor map.
+pub type TensorMap = BTreeMap<String, AnyTensor>;
+
+fn bad(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Load a GVNT container.
+pub fn load_tensors(path: &Path) -> std::io::Result<TensorMap> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"GVNT" {
+        return Err(bad(format!("bad magic in {}", path.display())));
+    }
+    let mut b4 = [0u8; 4];
+    let mut read_u32 = |f: &mut dyn Read| -> std::io::Result<u32> {
+        f.read_exact(&mut b4)?;
+        Ok(u32::from_le_bytes(b4))
+    };
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        return Err(bad(format!("unsupported GVNT version {version}")));
+    }
+    let count = read_u32(&mut f)?;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|e| bad(e.to_string()))?;
+        let mut b1 = [0u8; 1];
+        f.read_exact(&mut b1)?;
+        let dtype = b1[0];
+        let ndim = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let t = match dtype {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                AnyTensor::F32(
+                    dims,
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                AnyTensor::I32(
+                    dims,
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            2 => {
+                let mut buf = vec![0u8; n];
+                f.read_exact(&mut buf)?;
+                AnyTensor::U8(dims, buf)
+            }
+            d => return Err(bad(format!("unknown dtype code {d} for '{name}'"))),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// The evaluation dataset exported by `compile.train`.
+pub struct EvalSet {
+    /// `[N, 32, 32, 3]` images in `[0, 1]`.
+    pub images: Vec<f32>,
+    pub n: usize,
+    pub labels: Vec<i32>,
+}
+
+/// Load `artifacts/dataset_eval.bin`.
+pub fn load_eval_set(path: &Path) -> std::io::Result<EvalSet> {
+    let m = load_tensors(path)?;
+    let (idims, img) = m
+        .get("images")
+        .and_then(AnyTensor::as_u8)
+        .ok_or_else(|| bad("missing u8 'images'".into()))?;
+    let (_, labels) = m
+        .get("labels")
+        .and_then(AnyTensor::as_i32)
+        .ok_or_else(|| bad("missing i32 'labels'".into()))?;
+    if idims.len() != 4 || idims[1] != 32 || idims[2] != 32 || idims[3] != 3 {
+        return Err(bad(format!("unexpected image dims {idims:?}")));
+    }
+    Ok(EvalSet {
+        images: img.iter().map(|&b| b as f32 / 255.0).collect(),
+        n: idims[0],
+        labels: labels.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_container(path: &Path) {
+        // Hand-roll a tiny GVNT file: one f32 [2,2], one i32 [3], one u8 [2].
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"GVNT").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        let mut tensor = |name: &str, dtype: u8, dims: &[u32], raw: &[u8]| {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[dtype]).unwrap();
+            f.write_all(&(dims.len() as u32).to_le_bytes()).unwrap();
+            for d in dims {
+                f.write_all(&d.to_le_bytes()).unwrap();
+            }
+            f.write_all(raw).unwrap();
+        };
+        let fdata: Vec<u8> = [1.0f32, 2.0, -3.0, 0.5]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        tensor("w", 0, &[2, 2], &fdata);
+        let idata: Vec<u8> = [7i32, -1, 0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        tensor("labels", 1, &[3], &idata);
+        tensor("bytes", 2, &[2], &[200u8, 5]);
+    }
+
+    #[test]
+    fn roundtrip_handwritten_container() {
+        let dir = std::env::temp_dir().join("gavina_gvnt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_container(&path);
+        let m = load_tensors(&path).unwrap();
+        let (d, v) = m["w"].as_f32().unwrap();
+        assert_eq!(d, &[2, 2]);
+        assert_eq!(v, &[1.0, 2.0, -3.0, 0.5]);
+        let (_, l) = m["labels"].as_i32().unwrap();
+        assert_eq!(l, &[7, -1, 0]);
+        let (_, b) = m["bytes"].as_u8().unwrap();
+        assert_eq!(b, &[200, 5]);
+    }
+
+    #[test]
+    fn reads_python_written_artifacts_if_present() {
+        // Integration hook: when `make artifacts` has run, verify the real
+        // weight container parses and has the expected key structure.
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights_a4w4.bin");
+        if !path.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = load_tensors(&path).unwrap();
+        assert!(m.contains_key("conv0/w"));
+        assert!(m.contains_key("fc/w"));
+        let (d, _) = m["conv0/w"].as_f32().unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0], 3); // 3x3 kernel
+    }
+}

@@ -1,0 +1,391 @@
+//! Calibration of the error-model probability tables from GLS traces
+//! ("The probability tables of the GAVINA model are calibrated by filling
+//! the look-up tables with empirical error frequencies obtained from
+//! running GLS", §IV-C).
+//!
+//! Coverage strategy: the 4-D index space `(bit, exact, prev_bin, cond)`
+//! has ~370 k cells for the paper configuration, most of which real
+//! operand streams never visit. We drive the GLS with random bit-planes of
+//! *swept density* so the exact outputs cover the whole `0..=C` range (the
+//! same reason the paper forces its calibration GEMMs to a uniform
+//! inner-product distribution), and finalize sparse cells with
+//! hierarchical back-off:
+//!
+//! ```text
+//! (bit, exact, pbin, cond) → (bit, exact, cond) → (bit, ebin, cond)
+//!                          → (bit, cond) → (bit) → 0
+//! ```
+//!
+//! where `ebin` coarsens the exact value into `p_bins` ranges.
+
+use super::{ErrorTables, ModelParams};
+use crate::gls::GlsContext;
+use crate::util::Prng;
+
+/// Calibration run parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationConfig {
+    /// Independent iPE streams (fresh circuit state each).
+    pub n_streams: usize,
+    /// Steps per stream (consecutive, so previous-value dependencies are
+    /// exercised).
+    pub seq_len: usize,
+    /// The undervolted supply the tables describe.
+    pub v_aprox: f64,
+    /// Minimum observations for a cell to use its own frequency.
+    pub min_count: u32,
+    pub seed: u64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        Self {
+            n_streams: 2048,
+            seq_len: 64,
+            v_aprox: 0.35,
+            min_count: 12,
+            seed: 0xCA11B,
+        }
+    }
+}
+
+/// Calibration diagnostics.
+#[derive(Clone, Debug)]
+pub struct CalibrationStats {
+    /// Total (step × iPE) samples ingested.
+    pub samples: u64,
+    /// Fraction of table cells resolved at each back-off level
+    /// (0 = full 4-D index … 4 = per-bit marginal).
+    pub level_fractions: [f64; 5],
+    /// Empirical flip rate per output bit over the whole run.
+    pub flip_rate_per_bit: Vec<f64>,
+    /// Wall-clock seconds spent in GLS.
+    pub gls_seconds: f64,
+}
+
+/// Raw observation counters, full-resolution only; coarser levels are
+/// derived at finalize time.
+struct Counts {
+    params: ModelParams,
+    /// Per bit: flat `[exact][pbin][cond]` pairs.
+    count: Vec<Vec<u32>>,
+    flip: Vec<Vec<u32>>,
+}
+
+impl Counts {
+    fn new(params: ModelParams) -> Self {
+        let count = (0..params.s_bits)
+            .map(|b| vec![0u32; (params.c_dim + 1) * params.p_bins * params.n_cond(b)])
+            .collect::<Vec<_>>();
+        let flip = count.clone();
+        Self {
+            params,
+            count,
+            flip,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, bit: usize, exact: u16, pbin: usize, cond: usize) -> usize {
+        ((exact as usize) * self.params.p_bins + pbin) * self.params.n_cond(bit) + cond
+    }
+
+    /// Ingest one (exact, sampled, prev) observation.
+    #[inline]
+    fn observe(&mut self, exact: u16, sampled: u16, prev: u16) {
+        let p = self.params;
+        let pbin = p.prev_bin(prev);
+        let flips = (exact ^ sampled) as u32;
+        for bit in (0..p.s_bits).rev() {
+            let nei = p.s_bits - 1 - bit;
+            let cond = if nei == 0 {
+                0
+            } else {
+                let take = p.n_nei.min(nei);
+                ((flips >> (bit + 1)) & ((1 << take) - 1)) as usize
+            };
+            let i = self.idx(bit, exact, pbin, cond);
+            self.count[bit][i] += 1;
+            self.flip[bit][i] += ((flips >> bit) & 1) as u32;
+        }
+    }
+}
+
+/// Run GLS and calibrate probability tables for the given context, with
+/// the paper's model hyper-parameters (`[n_nei, p_bins] = [2, 16]`).
+pub fn calibrate(
+    ctx: &GlsContext,
+    cfg: CalibrationConfig,
+) -> (ErrorTables, CalibrationStats) {
+    calibrate_with_params(ctx, cfg, ModelParams::paper(ctx.nl.c_dim))
+}
+
+/// [`calibrate`] with explicit model hyper-parameters (the n_nei/p_bins
+/// ablation of the model-design choices).
+pub fn calibrate_with_params(
+    ctx: &GlsContext,
+    cfg: CalibrationConfig,
+    params: ModelParams,
+) -> (ErrorTables, CalibrationStats) {
+    assert_eq!(params.c_dim, ctx.nl.c_dim);
+    let mut counts = Counts::new(params);
+    let mut rng = Prng::new(cfg.seed);
+    let c = ctx.nl.c_dim;
+
+    let t0 = std::time::Instant::now();
+    let mut flip_totals = vec![0u64; params.s_bits];
+    let mut samples = 0u64;
+    for stream in 0..cfg.n_streams {
+        let mut sim = ctx.spawn(stream as u64);
+        let mut prev_exact: u16 = 0;
+        // Per-stream base densities, re-jittered per step so consecutive
+        // exact values are correlated (realistic) but the run as a whole
+        // sweeps the range.
+        let pa0 = 0.03 + 0.94 * (stream as f64 / cfg.n_streams.max(1) as f64);
+        for _ in 0..cfg.seq_len {
+            let pa = (pa0 + 0.25 * (rng.next_f64() - 0.5)).clamp(0.01, 0.99);
+            let pb = (0.3 + 0.7 * rng.next_f64()).clamp(0.01, 0.99);
+            let a: Vec<bool> = (0..c).map(|_| rng.chance(pa)).collect();
+            let w: Vec<bool> = (0..c).map(|_| rng.chance(pb)).collect();
+            let r = sim.step(&a, &w, cfg.v_aprox);
+            counts.observe(r.exact, r.sampled, prev_exact);
+            let x = r.exact ^ r.sampled;
+            for (bit, ft) in flip_totals.iter_mut().enumerate() {
+                *ft += ((x >> bit) & 1) as u64;
+            }
+            samples += 1;
+            prev_exact = r.exact;
+        }
+    }
+    let gls_seconds = t0.elapsed().as_secs_f64();
+
+    let (tables, level_fractions) = finalize(&counts, cfg.min_count);
+    let stats = CalibrationStats {
+        samples,
+        level_fractions,
+        flip_rate_per_bit: flip_totals
+            .iter()
+            .map(|&f| f as f64 / samples.max(1) as f64)
+            .collect(),
+        gls_seconds,
+    };
+    (tables, stats)
+}
+
+/// Build tables directly from externally-collected (exact, sampled, prev)
+/// triples — used by the tile-trace calibration path and tests.
+pub fn calibrate_from_observations(
+    params: ModelParams,
+    observations: impl Iterator<Item = (u16, u16, u16)>,
+    min_count: u32,
+) -> (ErrorTables, [f64; 5]) {
+    let mut counts = Counts::new(params);
+    for (exact, sampled, prev) in observations {
+        counts.observe(exact, sampled, prev);
+    }
+    finalize(&counts, min_count)
+}
+
+/// Resolve each cell with hierarchical back-off; returns per-level
+/// resolution fractions.
+fn finalize(counts: &Counts, min_count: u32) -> (ErrorTables, [f64; 5]) {
+    let p = counts.params;
+    let mut tables = ErrorTables::zeroed(p);
+    let mut resolved = [0u64; 5];
+    let mut total_cells = 0u64;
+
+    // ebin: coarse exact bins, reuse p_bins granularity.
+    let ebin_of = |e: usize| (e * p.p_bins / (p.c_dim + 1)).min(p.p_bins - 1);
+
+    for bit in 0..p.s_bits {
+        let nc = p.n_cond(bit);
+        let cnt = &counts.count[bit];
+        let flp = &counts.flip[bit];
+
+        // Level-1 aggregates: (exact, cond) over pbin.
+        let mut c1 = vec![0u64; (p.c_dim + 1) * nc];
+        let mut f1 = vec![0u64; (p.c_dim + 1) * nc];
+        // Level-2: (ebin, cond).
+        let mut c2 = vec![0u64; p.p_bins * nc];
+        let mut f2 = vec![0u64; p.p_bins * nc];
+        // Level-3: (cond,). Level-4: scalar.
+        let mut c3 = vec![0u64; nc];
+        let mut f3 = vec![0u64; nc];
+        let (mut c4, mut f4) = (0u64, 0u64);
+
+        for e in 0..=p.c_dim {
+            for pb in 0..p.p_bins {
+                for cd in 0..nc {
+                    let i = (e * p.p_bins + pb) * nc + cd;
+                    let (cc, ff) = (cnt[i] as u64, flp[i] as u64);
+                    c1[e * nc + cd] += cc;
+                    f1[e * nc + cd] += ff;
+                    c2[ebin_of(e) * nc + cd] += cc;
+                    f2[ebin_of(e) * nc + cd] += ff;
+                    c3[cd] += cc;
+                    f3[cd] += ff;
+                    c4 += cc;
+                    f4 += ff;
+                }
+            }
+        }
+
+        let mc = min_count as u64;
+        for e in 0..=p.c_dim {
+            for pb in 0..p.p_bins {
+                for cd in 0..nc {
+                    let i = (e * p.p_bins + pb) * nc + cd;
+                    total_cells += 1;
+                    let (prob, level) = if cnt[i] as u64 >= mc {
+                        (flp[i] as f64 / cnt[i] as f64, 0)
+                    } else if c1[e * nc + cd] >= mc {
+                        (f1[e * nc + cd] as f64 / c1[e * nc + cd] as f64, 1)
+                    } else if c2[ebin_of(e) * nc + cd] >= mc {
+                        (
+                            f2[ebin_of(e) * nc + cd] as f64 / c2[ebin_of(e) * nc + cd] as f64,
+                            2,
+                        )
+                    } else if c3[cd] >= mc {
+                        (f3[cd] as f64 / c3[cd] as f64, 3)
+                    } else if c4 >= mc {
+                        (f4 as f64 / c4 as f64, 4)
+                    } else {
+                        (0.0, 4)
+                    };
+                    resolved[level] += 1;
+                    tables.set_prob(bit, e as u16, pb, cd, prob as f32);
+                }
+            }
+        }
+    }
+
+    let fractions = [
+        resolved[0] as f64 / total_cells as f64,
+        resolved[1] as f64 / total_cells as f64,
+        resolved[2] as f64 / total_cells as f64,
+        resolved[3] as f64 / total_cells as f64,
+        resolved[4] as f64 / total_cells as f64,
+    ];
+    (tables, fractions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, GavSchedule, Precision};
+    use crate::gls::DelayModel;
+
+    fn tiny_ctx() -> GlsContext {
+        let arch = ArchConfig::tiny();
+        GlsContext::new(
+            arch.c_dim,
+            arch.clk_period_ps() as f64,
+            DelayModel::default(),
+            3,
+        )
+    }
+
+    #[test]
+    fn synthetic_observation_calibration_recovers_rate() {
+        // Feed observations where bit 1 flips iff exact >= 18: the table
+        // must learn a high prob there and ~0 elsewhere.
+        let params = ModelParams {
+            s_bits: 6,
+            c_dim: 36,
+            p_bins: 4,
+            n_nei: 2,
+        };
+        let obs = (0..36u16).cycle().take(72_00).map(|e| {
+            let sampled = if e >= 18 { e ^ 2 } else { e };
+            (e, sampled, e.saturating_sub(1))
+        });
+        let (tables, fractions) = calibrate_from_observations(params, obs, 10);
+        assert!(fractions[0] > 0.0);
+        // Bit-1 prob high for a large exact, low for a small one.
+        let pbin_hi = params.prev_bin(25);
+        let pbin_lo = params.prev_bin(4);
+        assert!(tables.prob(1, 30, pbin_hi, 0) > 0.9);
+        assert!(tables.prob(1, 5, pbin_lo, 0) < 0.1);
+    }
+
+    #[test]
+    fn gls_calibration_smoke() {
+        let ctx = tiny_ctx();
+        let cfg = CalibrationConfig {
+            n_streams: 40,
+            seq_len: 24,
+            v_aprox: 0.35,
+            min_count: 8,
+            seed: 5,
+        };
+        let (tables, stats) = calibrate(&ctx, cfg);
+        assert_eq!(stats.samples, 40 * 24);
+        // The tiny circuit under aggressive undervolting must show errors.
+        let total_rate: f64 = stats.flip_rate_per_bit.iter().sum();
+        assert!(total_rate > 0.01, "flip rates {:?}", stats.flip_rate_per_bit);
+        // Tables must carry nonzero probabilities.
+        let mean = tables.mean_prob_per_bit();
+        assert!(mean.iter().any(|&m| m > 0.0), "{mean:?}");
+        // Back-off fractions sum to 1.
+        let s: f64 = stats.level_fractions.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_reproduces_gls_error_level() {
+        // End-to-end sanity: calibrate on the tiny circuit, then compare
+        // model-injected VAR_NED against a fresh GLS run on the same
+        // operands — they should be within a loose band (paper: within 8%
+        // on average for the real config; the tiny config is noisier).
+        let ctx = tiny_ctx();
+        let arch = ArchConfig::tiny();
+        let (tables, _) = calibrate(
+            &ctx,
+            CalibrationConfig {
+                n_streams: 220,
+                seq_len: 32,
+                v_aprox: 0.35,
+                min_count: 10,
+                seed: 6,
+            },
+        );
+
+        let prec = Precision::new(4, 4);
+        let sched = GavSchedule::all_approx(prec);
+        let mut rng = Prng::new(77);
+        let hi = 7i64;
+        let mut gls_vars = Vec::new();
+        let mut model_vars = Vec::new();
+        let mut tg = crate::gls::TileGls::new(&ctx, arch.clone());
+        for _ in 0..6 {
+            let a: Vec<i32> = (0..arch.c_dim * arch.l_dim)
+                .map(|_| rng.int_in(-hi - 1, hi) as i32)
+                .collect();
+            let b: Vec<i32> = (0..arch.k_dim * arch.c_dim)
+                .map(|_| rng.int_in(-hi - 1, hi) as i32)
+                .collect();
+            let pa = crate::quant::PackedPlanes::from_a_matrix(&a, arch.c_dim, arch.l_dim, 4);
+            let pb = crate::quant::PackedPlanes::from_b_matrix(&b, arch.k_dim, arch.c_dim, 4);
+            let exact = crate::gemm::gemm_exact(&a, &b, arch.c_dim, arch.l_dim, arch.k_dim);
+
+            let trace = tg.run_tile(&pa, &pb, &sched);
+            gls_vars.push(crate::stats::var_ned(&exact, &trace.approx_gemm(prec)));
+
+            let mut seq = crate::gemm::ipe_sequence(&pa, &pb);
+            tables.inject(&mut seq, &sched, &mut rng);
+            model_vars.push(crate::stats::var_ned(
+                &exact,
+                &crate::gemm::recombine(&seq, prec),
+            ));
+        }
+        let g = crate::stats::mean(&gls_vars);
+        let m = crate::stats::mean(&model_vars);
+        assert!(g > 0.0, "GLS must show errors");
+        assert!(m > 0.0, "model must inject errors");
+        let ratio = m / g;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "model VAR_NED {m:.3e} vs GLS {g:.3e} (ratio {ratio:.2})"
+        );
+    }
+}

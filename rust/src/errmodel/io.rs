@@ -1,0 +1,135 @@
+//! Serialization of calibrated error tables (`artifacts/caltables_*.bin`)
+//! so the expensive GLS calibration runs once and every downstream tool
+//! (benches, examples, the serving coordinator) loads the same tables.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  b"GVCT"  | version u32 (=1)
+//! s_bits u32 | c_dim u32 | p_bins u32 | n_nei u32 | v_aprox f64
+//! per bit: len u32 | len * f32
+//! ```
+
+use super::{ErrorTables, ModelParams};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GVCT";
+
+/// Save tables (+ the voltage they were calibrated at).
+pub fn save(path: &Path, tables: &ErrorTables, v_aprox: f64) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    let p = tables.params;
+    for v in [p.s_bits as u32, p.c_dim as u32, p.p_bins as u32, p.n_nei as u32] {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.write_all(&v_aprox.to_le_bytes())?;
+    for bit in 0..p.s_bits {
+        let t = tables.bit_table(bit);
+        f.write_all(&(t.len() as u32).to_le_bytes())?;
+        for &x in t {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load tables; returns `(tables, v_aprox)`.
+pub fn load(path: &Path) -> std::io::Result<(ErrorTables, f64)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad magic in {}", path.display()),
+        ));
+    }
+    let mut u32buf = [0u8; 4];
+    let mut read_u32 = |f: &mut dyn Read| -> std::io::Result<u32> {
+        f.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unsupported caltable version {version}"),
+        ));
+    }
+    let s_bits = read_u32(&mut f)? as usize;
+    let c_dim = read_u32(&mut f)? as usize;
+    let p_bins = read_u32(&mut f)? as usize;
+    let n_nei = read_u32(&mut f)? as usize;
+    let mut f64buf = [0u8; 8];
+    f.read_exact(&mut f64buf)?;
+    let v_aprox = f64::from_le_bytes(f64buf);
+
+    let params = ModelParams {
+        s_bits,
+        c_dim,
+        p_bins,
+        n_nei,
+    };
+    let mut tables = ErrorTables::zeroed(params);
+    for bit in 0..s_bits {
+        let len = read_u32(&mut f)? as usize;
+        let expect = tables.bit_table(bit).len();
+        if len != expect {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bit {bit}: table length {len} != expected {expect}"),
+            ));
+        }
+        let dst = tables.bit_table_mut(bit);
+        let mut buf = vec![0u8; len * 4];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            dst[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+    Ok((tables, v_aprox))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip() {
+        let params = ModelParams {
+            s_bits: 6,
+            c_dim: 36,
+            p_bins: 4,
+            n_nei: 2,
+        };
+        let mut t = ErrorTables::zeroed(params);
+        let mut rng = Prng::new(1);
+        for bit in 0..params.s_bits {
+            for v in t.bit_table_mut(bit) {
+                *v = rng.next_f32();
+            }
+        }
+        let dir = std::env::temp_dir().join("gavina_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tables.bin");
+        save(&path, &t, 0.35).unwrap();
+        let (t2, v) = load(&path).unwrap();
+        assert_eq!(v, 0.35);
+        assert_eq!(t2.params, params);
+        for bit in 0..params.s_bits {
+            assert_eq!(t.bit_table(bit), t2.bit_table(bit));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("gavina_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPE1234").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,453 @@
+//! The GAVINA undervolting error model (paper §IV-C).
+//!
+//! GLS is the ground truth but is far too slow for DNN-scale evaluation
+//! (the paper: ~2 h per CIFAR-10 image; here: ~seconds per tile vs ~µs).
+//! The model replaces it with a 4-D probability look-up table sampled per
+//! iPE output bit:
+//!
+//! ```text
+//! P(flip bit b) = TABLES[b][exact_value][prev_value_bin][neighbour_cond]
+//! ```
+//!
+//! indexed by the four empirically-observed dependencies (§IV-C): bit
+//! significance, the exact output value, the previous output value
+//! (binned into `p_bins`), and the error state of the `n_nei` more
+//! significant neighbour bits. Bits are sampled MSB → LSB so neighbour
+//! conditions are available when a bit is drawn (Listing 2).
+//!
+//! [`calibrate`] fills the tables with flip frequencies measured from GLS
+//! traces, with hierarchical back-off for sparsely-observed index
+//! combinations; [`ErrorTables::inject`] is the fast sampling hot path.
+
+pub mod calibrate;
+pub mod io;
+pub mod multi;
+
+pub use calibrate::{calibrate, calibrate_with_params, CalibrationConfig, CalibrationStats};
+pub use multi::MultiLevelTables;
+
+use crate::arch::GavSchedule;
+use crate::util::Prng;
+use once_cell::sync::OnceCell;
+
+/// Model hyper-parameters (paper: `[n_nei, p_bins] = [2, 16]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelParams {
+    /// iPE output width (10 for C = 576).
+    pub s_bits: usize,
+    /// Reduction dimension C (tables index exact values `0..=C`).
+    pub c_dim: usize,
+    /// Number of previous-value bins.
+    pub p_bins: usize,
+    /// Number of more-significant neighbour bits conditioned on.
+    pub n_nei: usize,
+}
+
+impl ModelParams {
+    pub fn paper(c_dim: usize) -> Self {
+        Self {
+            s_bits: crate::util::bits_for(c_dim as u64) as usize,
+            c_dim,
+            p_bins: 16,
+            n_nei: 2,
+        }
+    }
+
+    /// Conditions for bit `b`: `2^min(n_nei, s_bits-1-b)` (ragged tables —
+    /// the MSB has no more-significant neighbours).
+    pub fn n_cond(&self, bit: usize) -> usize {
+        1 << self.n_nei.min(self.s_bits - 1 - bit)
+    }
+
+    /// Flat table size for one bit.
+    fn bit_table_len(&self, bit: usize) -> usize {
+        (self.c_dim + 1) * self.p_bins * self.n_cond(bit)
+    }
+
+    /// Map a previous output value to its bin.
+    #[inline]
+    pub fn prev_bin(&self, prev: u16) -> usize {
+        (((prev as usize) * self.p_bins) / (self.c_dim + 1)).min(self.p_bins - 1)
+    }
+}
+
+/// The calibrated probability tables (ragged per bit).
+#[derive(Clone, Debug)]
+pub struct ErrorTables {
+    pub params: ModelParams,
+    /// `tables[bit][ (exact · p_bins + prev_bin) · n_cond(bit) + cond ]`.
+    tables: Vec<Vec<f32>>,
+    /// Sampling-optimized layout, built lazily (§Perf): one contiguous
+    /// block per `(exact, prev_bin)` holding every `(bit, cond)` prob, so
+    /// sampling one value touches 1–2 cache lines instead of `s_bits`
+    /// scattered tables, plus a per-block max for a zero-probability fast
+    /// path.
+    sampler: OnceCell<Sampler>,
+}
+
+/// See [`ErrorTables::sampler`].
+#[derive(Clone, Debug, Default)]
+struct Sampler {
+    /// `[exact][pbin][bit_off(bit) + cond]`, bits ordered MSB→LSB.
+    flat: Vec<f32>,
+    /// Max probability within each `(exact, pbin)` block.
+    block_max: Vec<f32>,
+    /// Offset of each bit's cond slots within a block (indexed by bit).
+    bit_off: Vec<usize>,
+    block: usize,
+}
+
+impl ErrorTables {
+    /// All-zero tables (no errors — the guarded model).
+    pub fn zeroed(params: ModelParams) -> Self {
+        let tables = (0..params.s_bits)
+            .map(|b| vec![0.0f32; params.bit_table_len(b)])
+            .collect();
+        Self {
+            params,
+            tables,
+            sampler: OnceCell::new(),
+        }
+    }
+
+    fn build_sampler(&self) -> Sampler {
+        let p = self.params;
+        let mut bit_off = vec![0usize; p.s_bits];
+        let mut block = 0usize;
+        for bit in (0..p.s_bits).rev() {
+            bit_off[bit] = block;
+            block += p.n_cond(bit);
+        }
+        let n_blocks = (p.c_dim + 1) * p.p_bins;
+        let mut flat = vec![0.0f32; n_blocks * block];
+        let mut block_max = vec![0.0f32; n_blocks];
+        for e in 0..=p.c_dim as u16 {
+            for pb in 0..p.p_bins {
+                let b = e as usize * p.p_bins + pb;
+                for bit in 0..p.s_bits {
+                    for cond in 0..p.n_cond(bit) {
+                        let v = self.prob(bit, e, pb, cond);
+                        flat[b * block + bit_off[bit] + cond] = v;
+                        block_max[b] = block_max[b].max(v);
+                    }
+                }
+            }
+        }
+        Sampler {
+            flat,
+            block_max,
+            bit_off,
+            block,
+        }
+    }
+
+    fn sampler(&self) -> &Sampler {
+        self.sampler.get_or_init(|| self.build_sampler())
+    }
+
+    #[inline]
+    fn index(&self, bit: usize, exact: u16, pbin: usize, cond: usize) -> usize {
+        let nc = self.params.n_cond(bit);
+        debug_assert!(cond < nc);
+        ((exact as usize) * self.params.p_bins + pbin) * nc + cond
+    }
+
+    /// Flip probability of `bit` under the given conditions.
+    #[inline]
+    pub fn prob(&self, bit: usize, exact: u16, pbin: usize, cond: usize) -> f32 {
+        self.tables[bit][self.index(bit, exact, pbin, cond)]
+    }
+
+    pub fn set_prob(&mut self, bit: usize, exact: u16, pbin: usize, cond: usize, p: f32) {
+        let i = self.index(bit, exact, pbin, cond);
+        self.tables[bit][i] = p;
+        self.sampler = OnceCell::new(); // invalidate the sampling layout
+    }
+
+    /// Raw table slice for bit `b` (serialization, PJRT cross-checks).
+    pub fn bit_table(&self, bit: usize) -> &[f32] {
+        &self.tables[bit]
+    }
+
+    pub fn bit_table_mut(&mut self, bit: usize) -> &mut [f32] {
+        self.sampler = OnceCell::new(); // invalidate the sampling layout
+        &mut self.tables[bit]
+    }
+
+    /// Dense export `[s_bits, C+1, p_bins, 2^n_nei]` (fixed n_cond; ragged
+    /// bits broadcast over the missing condition axis) — the layout the
+    /// AOT `errinject` artifact takes as input.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let p = &self.params;
+        let nc_full = 1 << p.n_nei;
+        let mut out = vec![0.0f32; p.s_bits * (p.c_dim + 1) * p.p_bins * nc_full];
+        for bit in 0..p.s_bits {
+            let nc = p.n_cond(bit);
+            for exact in 0..=p.c_dim as u16 {
+                for pbin in 0..p.p_bins {
+                    for cond in 0..nc_full {
+                        let v = self.prob(bit, exact, pbin, cond % nc);
+                        let idx = ((bit * (p.c_dim + 1) + exact as usize) * p.p_bins + pbin)
+                            * nc_full
+                            + cond;
+                        out[idx] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean flip probability per bit (diagnostics / Fig. 7 maps).
+    pub fn mean_prob_per_bit(&self) -> Vec<f64> {
+        self.tables
+            .iter()
+            .map(|t| t.iter().map(|&p| p as f64).sum::<f64>() / t.len() as f64)
+            .collect()
+    }
+
+    /// Inject sampled errors onto an exact iPE output sequence
+    /// (`seq[t][i]`, iPE-major within step), in place, under a GAV
+    /// schedule. Guarded steps pass through. Returns the number of
+    /// modified values.
+    ///
+    /// This mirrors `python/compile/kernels/ref.py::errmodel_ref`
+    /// semantics exactly: prev starts at 0 (registers reset), bits sampled
+    /// MSB → LSB, neighbour condition built from already-sampled flips of
+    /// the `n_nei` more significant bits.
+    pub fn inject(&self, seq: &mut [Vec<u16>], sched: &GavSchedule, rng: &mut Prng) -> u64 {
+        let approx = sched.approx_mask();
+        assert_eq!(seq.len(), approx.len());
+        self.inject_masked(seq, &approx, rng)
+    }
+
+    /// [`Self::inject`] with an explicit per-step undervolt mask.
+    pub fn inject_masked(&self, seq: &mut [Vec<u16>], approx: &[bool], rng: &mut Prng) -> u64 {
+        let p = self.params;
+        let s = self.sampler();
+        let n = seq.first().map_or(0, Vec::len);
+        let mut prev: Vec<u16> = vec![0; n];
+        let mut modified = 0u64;
+        for (t, step) in seq.iter_mut().enumerate() {
+            debug_assert_eq!(step.len(), n);
+            if !approx[t] {
+                prev.copy_from_slice(step);
+                continue;
+            }
+            for (i, v) in step.iter_mut().enumerate() {
+                let exact = *v;
+                let pbin = p.prev_bin(prev[i]);
+                prev[i] = exact;
+                let flips = sample_flips(p, s, exact, pbin, rng);
+                if flips != 0 {
+                    *v = exact ^ flips as u16;
+                    modified += 1;
+                }
+            }
+        }
+        modified
+    }
+}
+
+/// Sample the flip mask for one value: bits MSB→LSB within one contiguous
+/// `(exact, pbin)` sampler block; returns 0 immediately when the block is
+/// all-zero (the common case for guarded-quality voltages).
+#[inline]
+fn sample_flips(
+    p: ModelParams,
+    s: &Sampler,
+    exact: u16,
+    pbin: usize,
+    rng: &mut Prng,
+) -> u32 {
+    let b = exact as usize * p.p_bins + pbin;
+    if s.block_max[b] <= 0.0 {
+        return 0;
+    }
+    let blk = &s.flat[b * s.block..(b + 1) * s.block];
+    let mut flips: u32 = 0;
+    for bit in (0..p.s_bits).rev() {
+        let nei = p.s_bits - 1 - bit;
+        let cond = if nei == 0 {
+            0
+        } else {
+            let take = p.n_nei.min(nei);
+            ((flips >> (bit + 1)) & ((1 << take) - 1)) as usize
+        };
+        let prob = blk[s.bit_off[bit] + cond];
+        if prob > 0.0 && rng.next_f32() < prob {
+            flips |= 1 << bit;
+        }
+    }
+    flips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+
+    fn params() -> ModelParams {
+        ModelParams {
+            s_bits: 6,
+            c_dim: 36,
+            p_bins: 4,
+            n_nei: 2,
+        }
+    }
+
+    #[test]
+    fn ragged_cond_sizes() {
+        let p = ModelParams::paper(576);
+        assert_eq!(p.s_bits, 10);
+        assert_eq!(p.n_cond(9), 1); // MSB: no neighbours
+        assert_eq!(p.n_cond(8), 2); // one neighbour
+        assert_eq!(p.n_cond(7), 4); // two
+        assert_eq!(p.n_cond(0), 4);
+    }
+
+    #[test]
+    fn prev_bin_ranges() {
+        let p = ModelParams::paper(576);
+        assert_eq!(p.prev_bin(0), 0);
+        assert_eq!(p.prev_bin(576), 15);
+        assert!(p.prev_bin(288) < 16);
+        // Bins are monotone in prev.
+        let mut last = 0;
+        for v in 0..=576u16 {
+            let b = p.prev_bin(v);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn zero_tables_inject_nothing() {
+        let t = ErrorTables::zeroed(params());
+        let prec = Precision::new(3, 3);
+        let mut seq: Vec<Vec<u16>> = (0..prec.steps()).map(|s| vec![s as u16; 8]).collect();
+        let orig = seq.clone();
+        let mut rng = Prng::new(1);
+        let n = t.inject(&mut seq, &GavSchedule::all_approx(prec), &mut rng);
+        assert_eq!(n, 0);
+        assert_eq!(seq, orig);
+    }
+
+    #[test]
+    fn certain_flip_applies_everywhere() {
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        // Bit 2 always flips regardless of conditions.
+        for exact in 0..=p.c_dim as u16 {
+            for pbin in 0..p.p_bins {
+                for cond in 0..p.n_cond(2) {
+                    t.set_prob(2, exact, pbin, cond, 1.0);
+                }
+            }
+        }
+        let prec = Precision::new(2, 2);
+        let mut seq: Vec<Vec<u16>> = (0..prec.steps()).map(|_| vec![0u16; 4]).collect();
+        let mut rng = Prng::new(2);
+        t.inject(&mut seq, &GavSchedule::all_approx(prec), &mut rng);
+        for step in &seq {
+            assert!(step.iter().all(|&v| v == 4), "bit 2 must be flipped: {step:?}");
+        }
+    }
+
+    #[test]
+    fn guarded_steps_pass_through() {
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        for bit in 0..p.s_bits {
+            for exact in 0..=p.c_dim as u16 {
+                for pbin in 0..p.p_bins {
+                    for cond in 0..p.n_cond(bit) {
+                        t.set_prob(bit, exact, pbin, cond, 0.9);
+                    }
+                }
+            }
+        }
+        let prec = Precision::new(4, 4);
+        let sched = GavSchedule::two_level(prec, 3);
+        let approx = sched.approx_mask();
+        let mut seq: Vec<Vec<u16>> = (0..prec.steps()).map(|_| vec![5u16; 4]).collect();
+        let orig = seq.clone();
+        let mut rng = Prng::new(3);
+        t.inject(&mut seq, &sched, &mut rng);
+        for (s, (step, o)) in seq.iter().zip(&orig).enumerate() {
+            if !approx[s] {
+                assert_eq!(step, o, "guarded step {s} modified");
+            } else {
+                assert_ne!(step, o, "approx step {s} should be hit at p=0.9");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbour_condition_couples_bits() {
+        // P(flip b4) = 1 given b5 flipped, 0 otherwise; P(flip b5) = 0.5.
+        // Then b4 flips exactly when b5 does — their empirical rates match.
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        for exact in 0..=p.c_dim as u16 {
+            for pbin in 0..p.p_bins {
+                t.set_prob(5, exact, pbin, 0, 0.5);
+                // bit 4 has 1 neighbour (bit 5): cond bit 0 = b5 flip.
+                t.set_prob(4, exact, pbin, 1, 1.0);
+                t.set_prob(4, exact, pbin, 0, 0.0);
+            }
+        }
+        let prec = Precision::new(8, 8);
+        let mut seq: Vec<Vec<u16>> = (0..prec.steps()).map(|_| vec![0u16; 64]).collect();
+        let mut rng = Prng::new(4);
+        t.inject(&mut seq, &GavSchedule::all_approx(prec), &mut rng);
+        let mut n5 = 0;
+        let mut n45 = 0;
+        let mut n4_only = 0;
+        for step in &seq {
+            for &v in step {
+                let b5 = (v >> 5) & 1 == 1;
+                let b4 = (v >> 4) & 1 == 1;
+                n5 += b5 as u32;
+                n45 += (b4 && b5) as u32;
+                n4_only += (b4 && !b5) as u32;
+            }
+        }
+        assert!(n5 > 500, "b5 should flip about half the time: {n5}");
+        assert_eq!(n45, n5, "b4 must flip whenever b5 does");
+        assert_eq!(n4_only, 0, "b4 must never flip alone");
+    }
+
+    #[test]
+    fn prev_value_dependency_observed() {
+        // Flip prob 1.0 only for prev bin 0: only steps whose previous
+        // output fell in bin 0 get errors.
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        for exact in 0..=p.c_dim as u16 {
+            t.set_prob(0, exact, 0, 0, 1.0);
+        }
+        let prec = Precision::new(2, 2);
+        // Sequence of outputs: 0 (prev=0 -> bin0: flip), 30 (prev=0 -> bin0:
+        // flip), 30 (prev=30 -> bin3: exact), 0 (prev=30: exact).
+        let mut seq = vec![vec![0u16], vec![30u16], vec![30u16], vec![0u16]];
+        let mut rng = Prng::new(5);
+        t.inject(&mut seq, &GavSchedule::all_approx(prec), &mut rng);
+        assert_eq!(seq, vec![vec![1], vec![31], vec![30], vec![0]]);
+    }
+
+    #[test]
+    fn dense_export_shape_and_broadcast() {
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        t.set_prob(p.s_bits - 1, 3, 1, 0, 0.25); // MSB, single condition
+        let dense = t.to_dense();
+        let nc_full = 1 << p.n_nei;
+        assert_eq!(dense.len(), p.s_bits * (p.c_dim + 1) * p.p_bins * nc_full);
+        // MSB's single condition is broadcast over all 4 dense slots.
+        for cond in 0..nc_full {
+            let idx = (((p.s_bits - 1) * (p.c_dim + 1) + 3) * p.p_bins + 1) * nc_full + cond;
+            assert_eq!(dense[idx], 0.25);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Multi-level GAV (paper §II/§III extension: *"this approach can be
+//! extended to more sophisticated policies with several voltage values
+//! instead of two"*).
+//!
+//! Each discrete voltage level gets its own GLS-calibrated [`ErrorTables`]
+//! (milder undervolting → sparser tables); a [`GavSchedule`] built with
+//! [`GavSchedule::custom`] assigns [`VoltageMode::Level`] indices per
+//! significance, and [`MultiLevelTables::inject`] samples each step from
+//! the tables of its level. `Guarded` steps stay exact; plain
+//! `Approximate` steps use level 0 (the most aggressive voltage), so
+//! two-level schedules behave identically to [`ErrorTables::inject`].
+
+use super::ErrorTables;
+use crate::arch::{GavSchedule, VoltageMode};
+use crate::util::Prng;
+
+/// Per-level calibrated tables, most aggressive first.
+pub struct MultiLevelTables {
+    /// `(supply voltage, tables calibrated at that voltage)`; index = the
+    /// `VoltageMode::Level` id. Entry 0 doubles as the `Approximate`
+    /// voltage.
+    pub levels: Vec<(f64, ErrorTables)>,
+}
+
+impl MultiLevelTables {
+    pub fn new(levels: Vec<(f64, ErrorTables)>) -> Self {
+        assert!(!levels.is_empty());
+        // Most aggressive (lowest voltage) first, by convention.
+        for w in levels.windows(2) {
+            assert!(
+                w[0].0 <= w[1].0,
+                "levels must be ordered aggressive -> mild"
+            );
+        }
+        Self { levels }
+    }
+
+    /// Voltage of a mode (guarded voltage must come from the ArchConfig).
+    pub fn level_voltage(&self, mode: VoltageMode) -> Option<f64> {
+        match mode {
+            VoltageMode::Guarded => None,
+            VoltageMode::Approximate => Some(self.levels[0].0),
+            VoltageMode::Level(i) => Some(self.levels[i as usize].0),
+        }
+    }
+
+    /// Inject errors step by step, each from its level's tables. Returns
+    /// the number of modified values. Semantics per step are identical to
+    /// [`ErrorTables::inject_masked`] (prev carried across all steps,
+    /// guarded steps exact).
+    pub fn inject(&self, seq: &mut [Vec<u16>], sched: &GavSchedule, rng: &mut Prng) -> u64 {
+        let n = seq.first().map_or(0, Vec::len);
+        let mut prev: Vec<u16> = vec![0; n];
+        let mut modified = 0u64;
+        for (t, step) in seq.iter_mut().enumerate() {
+            let tables = match sched.mode(t) {
+                VoltageMode::Guarded => None,
+                VoltageMode::Approximate => Some(&self.levels[0].1),
+                VoltageMode::Level(i) => Some(&self.levels[i as usize].1),
+            };
+            // The previous-value dependency is on the *exact* output
+            // (what the iPE registers launched), not the corrupted sample
+            // — snapshot before injection.
+            let exact_snapshot = step.clone();
+            if let Some(tables) = tables {
+                modified += tables.inject_step(step, &prev, rng);
+            }
+            prev = exact_snapshot;
+        }
+        modified
+    }
+}
+
+impl ErrorTables {
+    /// Inject one step given the previous *exact* outputs (building block
+    /// for the multi-level injector). Returns modified count.
+    pub(crate) fn inject_step(&self, step: &mut [u16], prev: &[u16], rng: &mut Prng) -> u64 {
+        let p = self.params;
+        let s = self.sampler();
+        let mut modified = 0;
+        for (i, v) in step.iter_mut().enumerate() {
+            let exact = *v;
+            let pbin = p.prev_bin(prev[i]);
+            let flips = super::sample_flips(p, s, exact, pbin, rng);
+            if flips != 0 {
+                *v = exact ^ flips as u16;
+                modified += 1;
+            }
+        }
+        modified
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::errmodel::ModelParams;
+
+    fn const_tables(p: ModelParams, prob: f32, bit: usize) -> ErrorTables {
+        let mut t = ErrorTables::zeroed(p);
+        for e in 0..=p.c_dim as u16 {
+            for pb in 0..p.p_bins {
+                for cd in 0..p.n_cond(bit) {
+                    t.set_prob(bit, e, pb, cd, prob);
+                }
+            }
+        }
+        t
+    }
+
+    fn params() -> ModelParams {
+        ModelParams {
+            s_bits: 6,
+            c_dim: 36,
+            p_bins: 4,
+            n_nei: 2,
+        }
+    }
+
+    #[test]
+    fn levels_apply_their_own_tables() {
+        let p = params();
+        // Level 0 (aggressive): bit 0 always flips. Level 1 (mild): never.
+        let ml = MultiLevelTables::new(vec![
+            (0.35, const_tables(p, 1.0, 0)),
+            (0.45, const_tables(p, 0.0, 0)),
+        ]);
+        let prec = Precision::new(2, 2); // s_max = 2
+        // Custom: s=0 -> level 0, s=1 -> level 1, s=2 -> guarded.
+        let sched = GavSchedule::custom(prec, |s| match s {
+            0 => VoltageMode::Level(0),
+            1 => VoltageMode::Level(1),
+            _ => VoltageMode::Guarded,
+        });
+        // Step order (ba,bb): (0,0)s=0, (1,0)s=1, (0,1)s=1, (1,1)s=2.
+        let mut seq = vec![vec![4u16; 8], vec![4; 8], vec![4; 8], vec![4; 8]];
+        let mut rng = Prng::new(1);
+        let n = ml.inject(&mut seq, &sched, &mut rng);
+        assert_eq!(n, 8, "only the s=0 step flips");
+        assert!(seq[0].iter().all(|&v| v == 5));
+        assert!(seq[1].iter().all(|&v| v == 4));
+        assert!(seq[2].iter().all(|&v| v == 4));
+        assert!(seq[3].iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn two_level_equivalence_with_plain_inject() {
+        // A multi-level injector with a single level must match
+        // ErrorTables::inject on an Approximate-only schedule, given the
+        // same RNG stream.
+        let p = params();
+        let tables = const_tables(p, 0.3, 2);
+        let prec = Precision::new(3, 3);
+        let sched = GavSchedule::all_approx(prec);
+        let base: Vec<Vec<u16>> = (0..prec.steps()).map(|s| vec![s as u16 * 3; 16]).collect();
+
+        let mut seq_a = base.clone();
+        let mut rng_a = Prng::new(9);
+        let na = tables.inject(&mut seq_a, &sched, &mut rng_a);
+
+        let ml = MultiLevelTables::new(vec![(0.35, tables)]);
+        let mut seq_b = base;
+        let mut rng_b = Prng::new(9);
+        let nb = ml.inject(&mut seq_b, &sched, &mut rng_b);
+
+        assert_eq!(na, nb);
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    #[should_panic(expected = "aggressive -> mild")]
+    fn rejects_misordered_levels() {
+        let p = params();
+        MultiLevelTables::new(vec![
+            (0.45, ErrorTables::zeroed(p)),
+            (0.35, ErrorTables::zeroed(p)),
+        ]);
+    }
+}

@@ -1,0 +1,221 @@
+//! The bit-serial GEMM compute path (paper Listing 1) and its bit-packed
+//! hot-path implementation.
+//!
+//! One Parallel-Array cycle computes, for every iPE `(k, l)`:
+//!
+//! ```text
+//! iPE[k, l] = popcount_c( A_plane[c, l] & B_plane[k, c] )   ∈ 0..=C
+//! ```
+//!
+//! With the packed layout of [`crate::quant::PackedPlanes`] this is a
+//! straight `u64` AND+`count_ones` loop — the L3 hot path that the
+//! [`hotpath`](../../benches) bench profiles and that the whole evaluation
+//! pipeline (error model, DNN executor) runs on.
+//!
+//! `recombine` implements the L0/L1 shift-accumulate with the
+//! two's-complement sign rule; `bitserial_gemm` composes the two and must
+//! equal the plain integer GEMM (property-tested below — the same identity
+//! `pytest` checks for the Pallas kernel).
+
+use crate::arch::Precision;
+use crate::quant::PackedPlanes;
+
+/// Plain integer GEMM reference: `P[K,L] = B[K,C] · A[C,L]` in i64.
+pub fn gemm_exact(a: &[i32], b: &[i32], c_dim: usize, l_dim: usize, k_dim: usize) -> Vec<i64> {
+    assert_eq!(a.len(), c_dim * l_dim);
+    assert_eq!(b.len(), k_dim * c_dim);
+    let mut p = vec![0i64; k_dim * l_dim];
+    for k in 0..k_dim {
+        for c in 0..c_dim {
+            let bv = b[k * c_dim + c] as i64;
+            if bv == 0 {
+                continue;
+            }
+            let arow = &a[c * l_dim..(c + 1) * l_dim];
+            let prow = &mut p[k * l_dim..(k + 1) * l_dim];
+            for l in 0..l_dim {
+                prow[l] += bv * arow[l] as i64;
+            }
+        }
+    }
+    p
+}
+
+/// One Parallel-Array cycle on packed planes: writes the `[K, L]`
+/// (row-major) iPE outputs into `out`. Values are in `0..=C`.
+#[inline]
+pub fn binary_plane_gemm(
+    a: &PackedPlanes,
+    a_plane: u8,
+    b: &PackedPlanes,
+    b_plane: u8,
+    out: &mut [u16],
+) {
+    let (k_dim, l_dim) = (b.n_vecs, a.n_vecs);
+    debug_assert_eq!(a.c_dim, b.c_dim);
+    debug_assert_eq!(out.len(), k_dim * l_dim);
+    for k in 0..k_dim {
+        let bw = b.vec_words(b_plane, k);
+        let orow = &mut out[k * l_dim..(k + 1) * l_dim];
+        for (l, o) in orow.iter_mut().enumerate() {
+            let aw = a.vec_words(a_plane, l);
+            let mut acc = 0u32;
+            for (x, y) in aw.iter().zip(bw) {
+                acc += (x & y).count_ones();
+            }
+            *o = acc as u16;
+        }
+    }
+}
+
+/// The exact iPE output sequence of one tile in controller order
+/// (bb outer, ba inner): `seq[t][k·L + l]`, `t = bb·a_bits + ba`.
+pub fn ipe_sequence(a: &PackedPlanes, b: &PackedPlanes) -> Vec<Vec<u16>> {
+    let prec = Precision::new(a.bits, b.bits);
+    let mut seq = Vec::with_capacity(prec.steps());
+    for (ba, bb) in prec.step_order() {
+        let mut out = vec![0u16; b.n_vecs * a.n_vecs];
+        binary_plane_gemm(a, ba, b, bb, &mut out);
+        seq.push(out);
+    }
+    seq
+}
+
+/// L0/L1 shift-accumulate: recombine an iPE output sequence (possibly with
+/// injected undervolting errors) into the `[K, L]` integer GEMM result.
+pub fn recombine(seq: &[Vec<u16>], prec: Precision) -> Vec<i64> {
+    assert_eq!(seq.len(), prec.steps());
+    let n = seq[0].len();
+    let mut p = vec![0i64; n];
+    for (t, (ba, bb)) in prec.step_order().enumerate() {
+        let sign = prec.step_sign(ba, bb);
+        let shift = ba as u32 + bb as u32;
+        let step = &seq[t];
+        debug_assert_eq!(step.len(), n);
+        for (pi, &s) in p.iter_mut().zip(step) {
+            *pi += sign * ((s as i64) << shift);
+        }
+    }
+    p
+}
+
+/// Full exact bit-serial GEMM over packed planes; must equal
+/// [`gemm_exact`] on the operands the planes encode.
+pub fn bitserial_gemm(a: &PackedPlanes, b: &PackedPlanes) -> Vec<i64> {
+    let prec = Precision::new(a.bits, b.bits);
+    let mut p = vec![0i64; b.n_vecs * a.n_vecs];
+    let mut step = vec![0u16; p.len()];
+    for (ba, bb) in prec.step_order() {
+        binary_plane_gemm(a, ba, b, bb, &mut step);
+        let sign = prec.step_sign(ba, bb);
+        let shift = ba as u32 + bb as u32;
+        for (pi, &s) in p.iter_mut().zip(&step) {
+            *pi += sign * ((s as i64) << shift);
+        }
+    }
+    p
+}
+
+/// Number of bit-MACs one tile executes (`L·C·K·a_bits·b_bits` AND ops) —
+/// the unit the hot-path bench reports throughput in.
+pub fn bit_macs(c_dim: usize, l_dim: usize, k_dim: usize, prec: Precision) -> u64 {
+    (c_dim * l_dim * k_dim) as u64 * prec.steps() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    fn rand_mat(rng: &mut Prng, n: usize, bits: u8) -> Vec<i32> {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(-hi - 1, hi) as i32).collect()
+    }
+
+    #[test]
+    fn bitserial_equals_exact_gemm() {
+        check("bitserial == exact GEMM", 60, |rng| {
+            let a_bits = rng.int_in(2, 8) as u8;
+            let b_bits = rng.int_in(2, 8) as u8;
+            let c = rng.int_in(1, 130) as usize;
+            let l = rng.int_in(1, 9) as usize;
+            let k = rng.int_in(1, 17) as usize;
+            let a = rand_mat(rng, c * l, a_bits);
+            let b = rand_mat(rng, k * c, b_bits);
+            let pa = PackedPlanes::from_a_matrix(&a, c, l, a_bits);
+            let pb = PackedPlanes::from_b_matrix(&b, k, c, b_bits);
+            assert_eq!(
+                bitserial_gemm(&pa, &pb),
+                gemm_exact(&a, &b, c, l, k),
+                "a{a_bits}w{b_bits} c={c} l={l} k={k}"
+            );
+        });
+    }
+
+    #[test]
+    fn sequence_recombines_to_exact() {
+        check("ipe seq recombine == exact", 40, |rng| {
+            let a_bits = rng.int_in(2, 6) as u8;
+            let b_bits = rng.int_in(2, 6) as u8;
+            let c = rng.int_in(1, 80) as usize;
+            let l = rng.int_in(1, 5) as usize;
+            let k = rng.int_in(1, 9) as usize;
+            let a = rand_mat(rng, c * l, a_bits);
+            let b = rand_mat(rng, k * c, b_bits);
+            let pa = PackedPlanes::from_a_matrix(&a, c, l, a_bits);
+            let pb = PackedPlanes::from_b_matrix(&b, k, c, b_bits);
+            let seq = ipe_sequence(&pa, &pb);
+            assert_eq!(
+                recombine(&seq, Precision::new(a_bits, b_bits)),
+                gemm_exact(&a, &b, c, l, k)
+            );
+        });
+    }
+
+    #[test]
+    fn ipe_outputs_bounded_by_c() {
+        check("iPE outputs in 0..=C", 30, |rng| {
+            let c = rng.int_in(1, 200) as usize;
+            let a = rand_mat(rng, c * 2, 3);
+            let b = rand_mat(rng, 4 * c, 3);
+            let pa = PackedPlanes::from_a_matrix(&a, c, 2, 3);
+            let pb = PackedPlanes::from_b_matrix(&b, 4, c, 3);
+            for step in ipe_sequence(&pa, &pb) {
+                for &v in &step {
+                    assert!((v as usize) <= c);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn all_ones_saturates_popcount() {
+        // A = all -1 (all bits set), B = all -1: every iPE output = C.
+        let (c, l, k) = (576, 8, 16);
+        let a = vec![-1i32; c * l];
+        let b = vec![-1i32; k * c];
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, 2);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, 2);
+        let seq = ipe_sequence(&pa, &pb);
+        for step in &seq {
+            assert!(step.iter().all(|&v| v as usize == c));
+        }
+        // And the recombined GEMM is B·A = C (product of -1·-1 summed).
+        let p = recombine(&seq, Precision::new(2, 2));
+        assert!(p.iter().all(|&v| v == c as i64));
+    }
+
+    #[test]
+    fn paper_tile_shape_exactness() {
+        // The paper's full hardware tile at a8w8 — the widest case the
+        // accumulators must carry.
+        let mut rng = Prng::new(31);
+        let (c, l, k) = (576, 8, 16);
+        let a = rand_mat(&mut rng, c * l, 8);
+        let b = rand_mat(&mut rng, k * c, 8);
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, 8);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, 8);
+        assert_eq!(bitserial_gemm(&pa, &pb), gemm_exact(&a, &b, c, l, k));
+    }
+}

@@ -1,0 +1,249 @@
+//! Full-tile GLS: run one `[C,L] × [K,C]` bit-serial GEMM through `K·L`
+//! independent iPE simulators under a GAV schedule — the Rust equivalent of
+//! the paper's Fig. 5 experimental setup (exact + approximate GLS runs).
+
+use super::{GlsContext, GlsSim};
+use crate::arch::{ArchConfig, GavSchedule, VoltageMode};
+use crate::quant::PackedPlanes;
+
+/// Trace of one tile: per-step exact and sampled iPE outputs, plus energy
+/// accounting.
+#[derive(Clone, Debug)]
+pub struct TileTrace {
+    /// Exact iPE outputs per step, `[T][K·L]` (row-major over k then l).
+    pub exact: Vec<Vec<u16>>,
+    /// GLS-sampled (possibly erroneous) outputs, same layout.
+    pub sampled: Vec<Vec<u16>>,
+    /// Per-step undervolted flag (copied from the schedule).
+    pub approx: Vec<bool>,
+    /// Switched capacitance × V² summed over the tile (arbitrary units) —
+    /// the Parallel Array's dynamic energy for this tile.
+    pub energy: f64,
+    /// Same, but evaluated as if every step ran at `V_guard` (the exact
+    /// baseline for the Fig. 6b power ratio).
+    pub switched_cap_per_step: Vec<f64>,
+}
+
+/// Tile-level simulator: spawns fresh iPE instances per tile (registers
+/// reset at context load, matching the error model's `prev = 0` start).
+pub struct TileGls<'a> {
+    ctx: &'a GlsContext,
+    arch: ArchConfig,
+    /// One long-lived simulator per iPE (reset per tile, not reallocated
+    /// — §Perf).
+    sims: Vec<GlsSim<'a>>,
+    /// Base RNG stream so repeated tiles draw fresh metastability
+    /// resolutions.
+    tile_counter: u64,
+}
+
+impl<'a> TileGls<'a> {
+    pub fn new(ctx: &'a GlsContext, arch: ArchConfig) -> Self {
+        assert_eq!(ctx.nl.c_dim, arch.c_dim);
+        let sims = (0..arch.k_dim * arch.l_dim)
+            .map(|i| ctx.spawn(i as u64))
+            .collect();
+        Self {
+            ctx,
+            arch,
+            sims,
+            tile_counter: 0,
+        }
+    }
+
+    /// Run one tile under the given schedule. `a`/`b` are the packed
+    /// operands (their precisions define the step sequence).
+    pub fn run_tile(&mut self, a: &PackedPlanes, b: &PackedPlanes, sched: &GavSchedule) -> TileTrace {
+        let prec = sched.precision();
+        assert_eq!((a.bits, b.bits), (prec.a_bits, prec.b_bits));
+        let (c, l_dim, k_dim) = (self.arch.c_dim, a.n_vecs, b.n_vecs);
+        assert!(l_dim <= self.arch.l_dim && k_dim <= self.arch.k_dim);
+        let t_steps = prec.steps();
+        self.tile_counter += 1;
+
+        // Reset state per tile (registers reset at context load), reusing
+        // the long-lived simulators.
+        for sim in &mut self.sims {
+            sim.reset();
+        }
+        let _ = &self.ctx;
+
+        let mut exact = Vec::with_capacity(t_steps);
+        let mut sampled = Vec::with_capacity(t_steps);
+        let mut cap_per_step = Vec::with_capacity(t_steps);
+        let mut energy = 0.0;
+        let approx = sched.approx_mask();
+
+        // Pre-extract per-plane bit vectors once per step.
+        let mut a_cols: Vec<Vec<bool>> = vec![vec![false; c]; l_dim];
+        let mut b_rows: Vec<Vec<bool>> = vec![vec![false; c]; k_dim];
+
+        for (t, (ba, bb)) in prec.step_order().enumerate() {
+            for (l, col) in a_cols.iter_mut().enumerate() {
+                for (ci, bit) in col.iter_mut().enumerate() {
+                    *bit = a.bit(ba, l, ci) == 1;
+                }
+            }
+            for (k, row) in b_rows.iter_mut().enumerate() {
+                for (ci, bit) in row.iter_mut().enumerate() {
+                    *bit = b.bit(bb, k, ci) == 1;
+                }
+            }
+
+            let v_dd = match sched.mode(t) {
+                VoltageMode::Guarded => self.arch.v_guard,
+                VoltageMode::Approximate => self.arch.v_aprox,
+                VoltageMode::Level(_) => self.arch.v_aprox,
+            };
+
+            let mut ex = vec![0u16; k_dim * l_dim];
+            let mut sa = vec![0u16; k_dim * l_dim];
+            let mut cap = 0.0;
+            for k in 0..k_dim {
+                for l in 0..l_dim {
+                    let idx = k * l_dim + l;
+                    let r = self.sims[k * self.arch.l_dim + l].step(&a_cols[l], &b_rows[k], v_dd);
+                    ex[idx] = r.exact;
+                    sa[idx] = r.sampled;
+                    cap += r.switched_cap;
+                }
+            }
+            energy += cap * v_dd * v_dd;
+            cap_per_step.push(cap);
+            exact.push(ex);
+            sampled.push(sa);
+        }
+
+        TileTrace {
+            exact,
+            sampled,
+            approx,
+            energy,
+            switched_cap_per_step: cap_per_step,
+        }
+    }
+}
+
+impl TileTrace {
+    /// Recombine the sampled sequence into the approximate GEMM result.
+    pub fn approx_gemm(&self, prec: crate::arch::Precision) -> Vec<i64> {
+        crate::gemm::recombine(&self.sampled, prec)
+    }
+
+    /// Recombine the exact sequence (must equal the integer GEMM).
+    pub fn exact_gemm(&self, prec: crate::arch::Precision) -> Vec<i64> {
+        crate::gemm::recombine(&self.exact, prec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::gls::DelayModel;
+    use crate::util::Prng;
+
+    fn small_setup() -> (GlsContext, ArchConfig) {
+        let arch = ArchConfig::tiny(); // [36, 4, 4]
+        let ctx = GlsContext::new(
+            arch.c_dim,
+            arch.clk_period_ps() as f64,
+            DelayModel::default(),
+            11,
+        );
+        (ctx, arch)
+    }
+
+    fn rand_operands(
+        rng: &mut Prng,
+        arch: &ArchConfig,
+        prec: Precision,
+    ) -> (Vec<i32>, Vec<i32>, PackedPlanes, PackedPlanes) {
+        let hi_a = (1i64 << (prec.a_bits - 1)) - 1;
+        let hi_b = (1i64 << (prec.b_bits - 1)) - 1;
+        let a: Vec<i32> = (0..arch.c_dim * arch.l_dim)
+            .map(|_| rng.int_in(-hi_a - 1, hi_a) as i32)
+            .collect();
+        let b: Vec<i32> = (0..arch.k_dim * arch.c_dim)
+            .map(|_| rng.int_in(-hi_b - 1, hi_b) as i32)
+            .collect();
+        let pa = PackedPlanes::from_a_matrix(&a, arch.c_dim, arch.l_dim, prec.a_bits);
+        let pb = PackedPlanes::from_b_matrix(&b, arch.k_dim, arch.c_dim, prec.b_bits);
+        (a, b, pa, pb)
+    }
+
+    #[test]
+    fn fully_guarded_tile_is_exact() {
+        let (ctx, arch) = small_setup();
+        let prec = Precision::new(3, 3);
+        let mut rng = Prng::new(5);
+        let (a, b, pa, pb) = rand_operands(&mut rng, &arch, prec);
+        let mut tg = TileGls::new(&ctx, arch.clone());
+        let trace = tg.run_tile(&pa, &pb, &GavSchedule::all_guarded(prec));
+        assert_eq!(trace.exact, trace.sampled);
+        // And the recombined result equals the plain integer GEMM.
+        let expect = crate::gemm::gemm_exact(&a, &b, arch.c_dim, arch.l_dim, arch.k_dim);
+        assert_eq!(trace.approx_gemm(prec), expect);
+        assert_eq!(trace.exact_gemm(prec), expect);
+    }
+
+    #[test]
+    fn guarded_steps_within_mixed_schedule_are_exact() {
+        let (ctx, arch) = small_setup();
+        let prec = Precision::new(4, 4);
+        let g = 3; // guard the top significances
+        let sched = GavSchedule::two_level(prec, g);
+        let mut rng = Prng::new(6);
+        let (_, _, pa, pb) = rand_operands(&mut rng, &arch, prec);
+        let mut tg = TileGls::new(&ctx, arch);
+        let trace = tg.run_tile(&pa, &pb, &sched);
+        for (t, &is_approx) in trace.approx.iter().enumerate() {
+            if !is_approx {
+                assert_eq!(
+                    trace.exact[t], trace.sampled[t],
+                    "guarded step {t} must be exact"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_g() {
+        // VAR_NED of the recombined GEMM must shrink as G grows (Fig. 6a
+        // shape) — checked on the tiny config with a modest sample.
+        let (ctx, arch) = small_setup();
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(7);
+        let (a, b, pa, pb) = rand_operands(&mut rng, &arch, prec);
+        let exact = crate::gemm::gemm_exact(&a, &b, arch.c_dim, arch.l_dim, arch.k_dim);
+        let mut tg = TileGls::new(&ctx, arch);
+        let var_at = |tg: &mut TileGls, g: u32| {
+            let trace = tg.run_tile(&pa, &pb, &GavSchedule::two_level(prec, g));
+            crate::stats::var_ned(&exact, &trace.approx_gemm(prec))
+        };
+        let v0 = var_at(&mut tg, 0);
+        let v_mid = var_at(&mut tg, 4);
+        let v_max = var_at(&mut tg, prec.max_g());
+        assert_eq!(v_max, 0.0, "fully guarded must be exact");
+        assert!(
+            v0 >= v_mid,
+            "error must not grow with G: g0={v0} g4={v_mid}"
+        );
+        assert!(v0 > 0.0, "fully undervolted tiny tile should show errors");
+    }
+
+    #[test]
+    fn undervolted_tile_consumes_less_energy() {
+        let (ctx, arch) = small_setup();
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(8);
+        let (_, _, pa, pb) = rand_operands(&mut rng, &arch, prec);
+        let mut tg = TileGls::new(&ctx, arch);
+        let e_guard = tg.run_tile(&pa, &pb, &GavSchedule::all_guarded(prec)).energy;
+        let e_aprox = tg.run_tile(&pa, &pb, &GavSchedule::all_approx(prec)).energy;
+        assert!(
+            e_aprox < e_guard * 0.6,
+            "undervolting must cut array energy: {e_aprox} vs {e_guard}"
+        );
+    }
+}

@@ -1,0 +1,374 @@
+//! Per-layer GAV allocation by exact branch-and-bound ILP (paper §IV-D).
+//!
+//! The paper: *"we develop an optimization algorithm that finds the
+//! optimal per-layer allocation of G based on an integer linear
+//! programming (ILP) approach … we choose to minimize the perturbation of
+//! the network outputs … We constrain the problem by setting a target
+//! average G_tar such that weigh_avg([G_0, …, G_{L−1}]) < G_tar"*.
+//!
+//! Formally a **multiple-choice knapsack**: per layer `l` choose one
+//! option `g ∈ 0..=G_max` with cost `mse[l][g]` (output perturbation when
+//! only layer `l` runs at G = g) and weight `w_l · g` (`w_l` = the layer's
+//! operation count); minimize total cost subject to
+//! `Σ w_l·g_l ≤ G_tar · Σ w_l`.
+//!
+//! Solved exactly with depth-first branch-and-bound using the classic
+//! LP-relaxation bound: per layer, keep the lower convex hull of
+//! (weight, cost) options; the greedy fractional completion over hull
+//! segments lower-bounds any integer completion. The instance is small
+//! (≤ ~21 layers × ≤ 17 options), so exact search is instant — no
+//! commercial solver needed (DESIGN.md §Substitutions).
+
+/// One layer's menu of options.
+#[derive(Clone, Debug)]
+pub struct LayerChoices {
+    /// Weight units per unit of G (the layer's op count).
+    pub ops: f64,
+    /// `cost[g]` = perturbation when this layer runs at G = g.
+    pub cost: Vec<f64>,
+}
+
+/// Allocation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// Chosen G per layer.
+    pub gs: Vec<u32>,
+    /// Total cost Σ mse.
+    pub cost: f64,
+    /// Achieved op-weighted average G.
+    pub avg_g: f64,
+}
+
+/// Per-layer lower convex hull of (g, cost): candidate option indices in
+/// increasing g with strictly decreasing cost and decreasing
+/// |Δcost|/Δg slopes.
+fn convex_hull(cost: &[f64]) -> Vec<usize> {
+    // Start from g=0 and keep points that improve cost; then enforce
+    // convexity (slopes of cost decrease must be non-increasing in
+    // magnitude as g grows).
+    let mut pts: Vec<usize> = Vec::new();
+    let mut best = f64::INFINITY;
+    for (g, &c) in cost.iter().enumerate() {
+        if c < best - 1e-18 || pts.is_empty() {
+            pts.push(g);
+            best = c;
+        }
+    }
+    // Convexify.
+    let mut hull: Vec<usize> = Vec::new();
+    for &g in &pts {
+        while hull.len() >= 2 {
+            let a = hull[hull.len() - 2];
+            let b = hull[hull.len() - 1];
+            let s1 = (cost[b] - cost[a]) / (b - a) as f64;
+            let s2 = (cost[g] - cost[b]) / (g - b) as f64;
+            if s1 >= s2 {
+                // b is above the segment a—g: drop it.
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(g);
+    }
+    hull
+}
+
+/// Exact branch-and-bound solver.
+pub struct GavAllocator {
+    layers: Vec<LayerChoices>,
+    hulls: Vec<Vec<usize>>,
+}
+
+impl GavAllocator {
+    pub fn new(layers: Vec<LayerChoices>) -> Self {
+        assert!(!layers.is_empty());
+        let hulls = layers.iter().map(|l| convex_hull(&l.cost)).collect();
+        Self { layers, hulls }
+    }
+
+    /// LP lower bound for layers `from..` with remaining weight budget:
+    /// start every remaining layer at its cheapest-weight hull point
+    /// (g = hull[0]) and greedily buy the best Δcost/Δweight hull segments
+    /// until the budget runs out (fractional last purchase).
+    fn lp_bound(&self, from: usize, budget: f64) -> f64 {
+        let mut base_cost = 0.0;
+        let mut base_weight = 0.0;
+        // Candidate segments: (Δcost (<0), Δweight, ratio).
+        let mut segs: Vec<(f64, f64)> = Vec::new(); // (gain per weight, weight)
+        for l in from..self.layers.len() {
+            let hull = &self.hulls[l];
+            let ops = self.layers[l].ops;
+            base_cost += self.layers[l].cost[hull[0]];
+            base_weight += ops * hull[0] as f64;
+            for w in hull.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                let dcost = self.layers[l].cost[a] - self.layers[l].cost[b]; // ≥ 0
+                let dweight = ops * (b - a) as f64;
+                if dweight > 0.0 && dcost > 0.0 {
+                    segs.push((dcost / dweight, dweight));
+                }
+            }
+        }
+        let mut remaining = budget - base_weight;
+        if remaining < -1e-9 {
+            return f64::INFINITY; // even the cheapest completion infeasible
+        }
+        // Convexity makes per-layer segments already sorted by decreasing
+        // gain; globally we must sort.
+        segs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut cost = base_cost;
+        for (gain, w) in segs {
+            if remaining <= 0.0 {
+                break;
+            }
+            let take = w.min(remaining);
+            cost -= gain * take;
+            remaining -= take;
+        }
+        cost
+    }
+
+    /// Solve: minimize Σ cost s.t. op-weighted average G ≤ `g_target`.
+    pub fn solve(&self, g_target: f64) -> Allocation {
+        let n = self.layers.len();
+        let total_ops: f64 = self.layers.iter().map(|l| l.ops).sum();
+        let budget = g_target * total_ops;
+
+        let mut best_cost = f64::INFINITY;
+        let mut best: Vec<u32> = vec![0; n];
+        let mut cur: Vec<u32> = vec![0; n];
+
+        // DFS with the LP bound. Options per layer restricted to the hull
+        // is NOT valid for exactness (an interior point could be optimal
+        // when budgets are tight), so branch over all options but bound
+        // with the hull LP.
+        fn dfs(
+            s: &GavAllocator,
+            l: usize,
+            used: f64,
+            cost: f64,
+            budget: f64,
+            cur: &mut Vec<u32>,
+            best_cost: &mut f64,
+            best: &mut Vec<u32>,
+        ) {
+            if cost >= *best_cost {
+                return;
+            }
+            if l == s.layers.len() {
+                *best_cost = cost;
+                best.copy_from_slice(cur);
+                return;
+            }
+            if cost + s.lp_bound(l, budget - used) >= *best_cost {
+                return;
+            }
+            // Try options cheapest-cost-first (larger g first since cost
+            // is ~decreasing) to find good incumbents early.
+            let layer = &s.layers[l];
+            let mut order: Vec<usize> = (0..layer.cost.len()).collect();
+            order.sort_by(|&a, &b| layer.cost[a].partial_cmp(&layer.cost[b]).unwrap());
+            for g in order {
+                let w = layer.ops * g as f64;
+                if used + w > budget + 1e-9 {
+                    continue;
+                }
+                cur[l] = g as u32;
+                dfs(s, l + 1, used + w, cost + layer.cost[g], budget, cur, best_cost, best);
+            }
+        }
+
+        dfs(self, 0, 0.0, 0.0, budget, &mut cur, &mut best_cost, &mut best);
+        assert!(
+            best_cost.is_finite(),
+            "no feasible allocation (g=0 must always be feasible)"
+        );
+        let used: f64 = best
+            .iter()
+            .enumerate()
+            .map(|(l, &g)| self.layers[l].ops * g as f64)
+            .sum();
+        Allocation {
+            gs: best,
+            cost: best_cost,
+            avg_g: used / total_ops,
+        }
+    }
+}
+
+/// Brute-force reference (tests only; exponential).
+pub fn solve_brute(layers: &[LayerChoices], g_target: f64) -> Allocation {
+    let total_ops: f64 = layers.iter().map(|l| l.ops).sum();
+    let budget = g_target * total_ops;
+    let mut best_cost = f64::INFINITY;
+    let mut best = vec![0u32; layers.len()];
+    let mut cur = vec![0u32; layers.len()];
+    fn rec(
+        layers: &[LayerChoices],
+        l: usize,
+        used: f64,
+        cost: f64,
+        budget: f64,
+        cur: &mut Vec<u32>,
+        best_cost: &mut f64,
+        best: &mut Vec<u32>,
+    ) {
+        if l == layers.len() {
+            if cost < *best_cost {
+                *best_cost = cost;
+                best.copy_from_slice(cur);
+            }
+            return;
+        }
+        for g in 0..layers[l].cost.len() {
+            let w = layers[l].ops * g as f64;
+            if used + w > budget + 1e-9 {
+                continue;
+            }
+            cur[l] = g as u32;
+            rec(layers, l + 1, used + w, cost + layers[l].cost[g], budget, cur, best_cost, best);
+        }
+    }
+    rec(layers, 0, 0.0, 0.0, budget, &mut cur, &mut best_cost, &mut best);
+    let used: f64 = best
+        .iter()
+        .enumerate()
+        .map(|(l, &g)| layers[l].ops * g as f64)
+        .sum();
+    Allocation {
+        gs: best,
+        cost: best_cost,
+        avg_g: used / total_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn rand_instance(rng: &mut crate::util::Prng, n_layers: usize, n_g: usize) -> Vec<LayerChoices> {
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            // Decreasing, roughly exponential cost in g (like Fig. 8a).
+            let scale = rng.next_f64() * 10.0 + 0.1;
+            let rate = rng.next_f64() * 1.5 + 0.3;
+            let noise = 0.05;
+            let mut cost = Vec::with_capacity(n_g);
+            for g in 0..n_g {
+                cost.push(
+                    scale * (-(g as f64) * rate).exp() * (1.0 + noise * (rng.next_f64() - 0.5)),
+                );
+            }
+            layers.push(LayerChoices {
+                ops: rng.next_f64() * 100.0 + 1.0,
+                cost,
+            });
+        }
+        layers
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        check("B&B == brute force", 40, |rng| {
+            let n_layers = rng.int_in(1, 6) as usize;
+            let n_g = rng.int_in(2, 6) as usize;
+            let layers = rand_instance(rng, n_layers, n_g);
+            let g_target = rng.next_f64() * (n_g - 1) as f64;
+            let bb = GavAllocator::new(layers.clone()).solve(g_target);
+            let bf = solve_brute(&layers, g_target);
+            assert!(
+                (bb.cost - bf.cost).abs() < 1e-9,
+                "B&B {:.6} vs brute {:.6} (target {g_target})",
+                bb.cost,
+                bf.cost
+            );
+        });
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        check("avg G within target", 30, |rng| {
+            let n_layers = rng.int_in(2, 10) as usize;
+            let layers = rand_instance(rng, n_layers, 9);
+            let g_target = rng.next_f64() * 8.0;
+            let a = GavAllocator::new(layers).solve(g_target);
+            assert!(a.avg_g <= g_target + 1e-9, "avg {} > target {g_target}", a.avg_g);
+        });
+    }
+
+    #[test]
+    fn zero_budget_forces_all_zero() {
+        let layers = vec![
+            LayerChoices {
+                ops: 5.0,
+                cost: vec![3.0, 1.0, 0.1],
+            },
+            LayerChoices {
+                ops: 1.0,
+                cost: vec![2.0, 0.5, 0.0],
+            },
+        ];
+        let a = GavAllocator::new(layers).solve(0.0);
+        assert_eq!(a.gs, vec![0, 0]);
+        assert!((a.cost - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn big_budget_takes_best_everywhere() {
+        let layers = vec![
+            LayerChoices {
+                ops: 5.0,
+                cost: vec![3.0, 1.0, 0.1],
+            },
+            LayerChoices {
+                ops: 1.0,
+                cost: vec![2.0, 0.5, 0.0],
+            },
+        ];
+        let a = GavAllocator::new(layers).solve(2.0);
+        assert_eq!(a.gs, vec![2, 2]);
+        assert!((a.cost - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sensitive_layers_get_more_guarding() {
+        // Layer 0 is hugely sensitive (cost drops steeply with G), layer 1
+        // barely cares: at a tight average budget the allocator must give
+        // layer 0 the larger G (the Fig. 8a insight: the input layer gets
+        // guarded first).
+        let layers = vec![
+            LayerChoices {
+                ops: 10.0,
+                cost: vec![100.0, 10.0, 0.1, 0.0],
+            },
+            LayerChoices {
+                ops: 10.0,
+                cost: vec![0.2, 0.19, 0.18, 0.17],
+            },
+        ];
+        let a = GavAllocator::new(layers).solve(1.0);
+        assert!(
+            a.gs[0] > a.gs[1],
+            "sensitive layer must get more guarding: {:?}",
+            a.gs
+        );
+    }
+
+    #[test]
+    fn paper_scale_instance_is_fast_and_exact_vs_dp_spotcheck() {
+        // 20 layers × 17 options — solve a sweep of targets; must finish
+        // quickly and produce monotone cost in the target.
+        let mut rng = crate::util::Prng::new(42);
+        let layers = rand_instance(&mut rng, 20, 17);
+        let solver = GavAllocator::new(layers);
+        let mut last_cost = f64::INFINITY;
+        for i in 0..8 {
+            let t = 2.0 * i as f64;
+            let a = solver.solve(t);
+            assert!(a.cost <= last_cost + 1e-9, "cost must fall as budget grows");
+            last_cost = a.cost;
+        }
+    }
+}

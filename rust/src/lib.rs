@@ -1,0 +1,62 @@
+//! # GAVINA — Guarded Aggressive underVolting mixed-precision accelerator
+//!
+//! Full-system reproduction of *"GAVINA: flexible aggressive undervolting
+//! for bit-serial mixed-precision DNN acceleration"* (Fornt et al., 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`arch`] — architectural parameters, precision configs and the GAV
+//!   voltage schedule (paper Fig. 2).
+//! * [`quant`] — uniform symmetric quantization and bit-plane packing
+//!   (the bit-serial data layout of A0/B0 Mem).
+//! * [`netlist`] — gate-level elaboration of an inner-product element
+//!   (AND array + adder tree), substituting the paper's 12 nm netlist.
+//! * [`gls`] — event-driven delay-annotated simulation ("gate-level
+//!   simulation") with an alpha-power-law voltage/delay model; the
+//!   ground truth for undervolting errors.
+//! * [`errmodel`] — the paper's heuristic LUT error model (§IV-C):
+//!   calibration against [`gls`] traces and fast sampling.
+//! * [`power`] — CV²f power/energy model calibrated on Table I / Fig. 4b.
+//! * [`simulator`] — cycle-level GAVINA simulator (controller, memories,
+//!   Parallel Array, L0/L1 accumulators, DVS).
+//! * [`gemm`] — the bit-packed binary-GEMM hot path (u64 AND+popcount).
+//! * [`dnn`] — DNN substrate: tensors, conv-to-GEMM lowering, the
+//!   quantized ResNet-18 benchmark graph.
+//! * [`ilp`] — branch-and-bound ILP for per-layer G allocation (§IV-D).
+//! * [`stats`] — VAR_NED (Eq. 1), MSE, accuracy metrics.
+//! * [`workload`] — synthetic GEMM/DNN workload generators (§IV-B
+//!   uniform-inner-product distribution).
+//! * [`baseline`] — state-of-the-art comparison data + simplified TED /
+//!   fixed-LSB TEP baseline accelerator models (Table II, Fig. 1).
+//! * [`runtime`] — PJRT runtime loading the AOT `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — the serving layer: request queue, batcher, DVS
+//!   mode accounting, metrics.
+//! * [`config`] — TOML-subset run-configuration parser (no external deps).
+//! * [`util`] — deterministic PRNG and small shared helpers.
+//!
+//! Python (JAX + Pallas) exists only on the compile path: `make artifacts`
+//! AOT-lowers the L1/L2 kernels to HLO text and trains the benchmark
+//! weights; the binary in `rust/src/main.rs` is self-contained afterwards.
+
+pub mod arch;
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod errmodel;
+pub mod gemm;
+pub mod gls;
+pub mod ilp;
+pub mod netlist;
+pub mod power;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+pub use arch::{ArchConfig, GavSchedule, Precision};
+pub use errmodel::ErrorTables;
+pub use power::PowerModel;

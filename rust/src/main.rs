@@ -1,0 +1,477 @@
+//! `gavina` — the leader binary: CLI over the full GAVINA stack.
+//!
+//! Subcommands (all self-contained after `make artifacts`):
+//!
+//! ```text
+//! gavina table1                      print the Table I specification sheet
+//! gavina schedule  -p a4w4 -g 3      render the Fig. 2 GAV schedule + DVS trace
+//! gavina calibrate [--quick]         GLS-calibrate error tables -> artifacts/
+//! gavina eval      -p a4w4 -g 3      ResNet-18 accuracy under GAV
+//! gavina allocate  -p a4w4 --gtar 4  ILP per-layer G allocation (§IV-D)
+//! gavina serve     -n 64             run the serving coordinator demo
+//! gavina selfcheck                   PJRT artifacts vs native cross-check
+//! ```
+//!
+//! `--config run.toml` pre-loads defaults from a `[run]` section.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::config::{Config, RunConfig};
+use gavina::coordinator::{Coordinator, ServeConfig};
+use gavina::dnn;
+use gavina::errmodel::{self, CalibrationConfig};
+use gavina::gls::{DelayModel, GlsContext};
+use gavina::power::PowerModel;
+use gavina::simulator::dvs_trace;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: gavina [--config FILE] <table1|schedule|calibrate|eval|allocate|serve|selfcheck> \
+         [-p aXwY] [-g G] [--gtar G] [--quick] [-n N] [--artifacts DIR]"
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    cmd: String,
+    run: RunConfig,
+    gtar: f64,
+    quick: bool,
+    n: usize,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut run = RunConfig::default();
+    let mut cmd = String::new();
+    let mut gtar = 4.0;
+    let mut quick = false;
+    let mut n = 64;
+    let mut g_set = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--config" => {
+                i += 1;
+                let cfg = Config::from_file(Path::new(argv.get(i).unwrap_or_else(|| usage())))
+                    .unwrap_or_else(|e| {
+                        eprintln!("config error: {e}");
+                        std::process::exit(2)
+                    });
+                run = RunConfig::from_config(&cfg);
+            }
+            "-p" | "--precision" => {
+                i += 1;
+                run.precision = Precision::parse(argv.get(i).map(String::as_str).unwrap_or(""))
+                    .unwrap_or_else(|| usage());
+            }
+            "-g" => {
+                i += 1;
+                run.g = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+                g_set = true;
+            }
+            "--gtar" => {
+                i += 1;
+                gtar = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--quick" => quick = true,
+            "-n" => {
+                i += 1;
+                n = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--artifacts" => {
+                i += 1;
+                run.artifacts_dir = PathBuf::from(argv.get(i).unwrap_or_else(|| usage()));
+            }
+            s if cmd.is_empty() && !s.starts_with('-') => cmd = s.to_string(),
+            _ => usage(),
+        }
+        i += 1;
+    }
+    if cmd.is_empty() {
+        usage();
+    }
+    if !g_set {
+        run.g = run.precision.max_g();
+    }
+    Args {
+        cmd,
+        run,
+        gtar,
+        quick,
+        n,
+    }
+}
+
+fn caltables_path(run: &RunConfig) -> PathBuf {
+    run.artifacts_dir.join("caltables_v035.bin")
+}
+
+fn load_or_calibrate_tables(run: &RunConfig, quick: bool) -> errmodel::ErrorTables {
+    let path = caltables_path(run);
+    if let Ok((tables, v)) = errmodel::io::load(&path) {
+        eprintln!("loaded error tables from {} (V_aprox={v} V)", path.display());
+        return tables;
+    }
+    eprintln!(
+        "no calibrated tables at {}; running GLS calibration…",
+        path.display()
+    );
+    calibrate(run, quick)
+}
+
+fn calibrate(run: &RunConfig, quick: bool) -> errmodel::ErrorTables {
+    let arch = ArchConfig::paper();
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        run.seed,
+    );
+    let cfg = if quick {
+        CalibrationConfig {
+            n_streams: 96,
+            seq_len: 32,
+            ..Default::default()
+        }
+    } else {
+        CalibrationConfig::default()
+    };
+    let (tables, stats) = errmodel::calibrate(&ctx, cfg);
+    eprintln!(
+        "calibration: {} samples in {:.1}s GLS; per-bit flip rates {:?}",
+        stats.samples,
+        stats.gls_seconds,
+        stats
+            .flip_rate_per_bit
+            .iter()
+            .map(|r| format!("{r:.3}"))
+            .collect::<Vec<_>>()
+    );
+    eprintln!(
+        "back-off level fractions (full→marginal): {:?}",
+        stats
+            .level_fractions
+            .iter()
+            .map(|f| format!("{f:.3}"))
+            .collect::<Vec<_>>()
+    );
+    std::fs::create_dir_all(&run.artifacts_dir).ok();
+    errmodel::io::save(&caltables_path(run), &tables, cfg.v_aprox).expect("saving tables");
+    eprintln!("saved {}", caltables_path(run).display());
+    tables
+}
+
+fn cmd_table1() {
+    let arch = ArchConfig::paper();
+    let power = PowerModel::paper_calibrated();
+    let p22 = Precision::new(2, 2);
+    println!("GAVINA specifications (post-layout model; paper Table I)");
+    println!("---------------------------------------------------------");
+    println!(
+        "Parallel Array Size (CxLxK)  {} ({}x{}x{})",
+        arch.macs_per_tile(),
+        arch.c_dim,
+        arch.l_dim,
+        arch.k_dim
+    );
+    println!(
+        "Clock Period / Frequency     {:.1} ns / {:.0} MHz",
+        1e9 / arch.freq_hz,
+        arch.freq_hz / 1e6
+    );
+    println!("Max. Throughput (a2w2)       {:.2} TOP/s", arch.peak_tops(p22));
+    println!("V_mem                        {:.2} V", arch.v_mem);
+    println!(
+        "V_guard | V_aprox            {:.2} V | {:.2} V",
+        arch.v_guard, arch.v_aprox
+    );
+    println!(
+        "Avg. Power @ Peak TOP/s      {:.2} mW (guarded) | {:.2} mW (aggressive)",
+        power.system_power_mw(&GavSchedule::all_guarded(p22)),
+        power.system_power_mw(&GavSchedule::all_approx(p22))
+    );
+    println!();
+    println!("TOP/s and TOP/sW per precision (util 0.96; Table II rows):");
+    for prec in Precision::EVAL_SET {
+        let lo = power.tops_per_watt(&GavSchedule::all_guarded(prec), 0.96);
+        let hi = power.tops_per_watt(&GavSchedule::all_approx(prec), 0.96);
+        println!(
+            "  {prec}: {:.3} TOP/s   {:.2} – {:.2} TOP/sW",
+            arch.peak_tops(prec) * 0.96,
+            lo,
+            hi
+        );
+    }
+}
+
+fn cmd_schedule(run: &RunConfig) {
+    let prec = run.precision;
+    let sched = GavSchedule::two_level(prec, run.g);
+    let arch = ArchConfig::paper();
+    println!(
+        "GAV schedule for {prec}, G = {} (A = V_aprox, G = V_guard):",
+        run.g
+    );
+    print!("{}", sched.render());
+    println!(
+        "undervolted steps: {}/{} ({:.0}% of compute cycles)",
+        sched.n_approx(),
+        prec.steps(),
+        100.0 * sched.approx_fraction()
+    );
+    let trace = dvs_trace(&arch, &sched);
+    println!(
+        "DVS trace [V]: {}",
+        trace
+            .iter()
+            .map(|v| format!("{v:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    let power = PowerModel::paper_calibrated();
+    println!(
+        "approx-region power {:.2} mW; system {:.2} mW; {:.2} TOP/sW",
+        power.array_avg_power_mw(&sched),
+        power.system_power_mw(&sched),
+        power.tops_per_watt(&sched, 0.96)
+    );
+}
+
+fn load_weights(run: &RunConfig) -> dnn::TensorMap {
+    let path = run
+        .artifacts_dir
+        .join(format!("weights_{}.bin", run.precision.tag()));
+    let fallback = run.artifacts_dir.join("weights_a4w4.bin");
+    let p = if path.exists() { path } else { fallback };
+    dnn::load_tensors(&p).unwrap_or_else(|e| {
+        eprintln!("cannot load weights ({e}); run `make artifacts` first — using synthetic weights");
+        dnn::exec::synth::synthetic_weights(run.width_mult, run.seed)
+    })
+}
+
+fn load_images(run: &RunConfig, n: usize) -> (Vec<f32>, Vec<i32>, usize) {
+    match dnn::load_eval_set(&run.artifacts_dir.join("dataset_eval.bin")) {
+        Ok(es) => {
+            let take = if n == 0 { es.n } else { n.min(es.n) };
+            (
+                es.images[..take * 32 * 32 * 3].to_vec(),
+                es.labels[..take].to_vec(),
+                take,
+            )
+        }
+        Err(e) => {
+            eprintln!("no eval set ({e}); generating random images");
+            let mut rng = gavina::util::Prng::new(run.seed);
+            let take = if n == 0 { 32 } else { n };
+            (
+                (0..take * 32 * 32 * 3).map(|_| rng.next_f32()).collect(),
+                vec![0; take],
+                take,
+            )
+        }
+    }
+}
+
+fn cmd_eval(run: &RunConfig, quick: bool) {
+    let weights = load_weights(run);
+    let (images, labels, n) = load_images(run, run.n_eval);
+    let tables = load_or_calibrate_tables(run, quick);
+    let arch = ArchConfig::paper();
+    let mut ex = dnn::Executor::new(
+        &weights,
+        run.width_mult,
+        run.precision,
+        dnn::Backend::Gavina {
+            arch: arch.clone(),
+            tables: Some(&tables),
+            seed: run.seed,
+        },
+    );
+    ex.layer_gs = vec![run.g; dnn::conv_layer_names().len()];
+    let (res, secs) = gavina::util::timeit(|| ex.forward_batched(&images, n, run.batch));
+    let acc = gavina::stats::accuracy(&res.logits, &labels, res.classes);
+    let sched = GavSchedule::two_level(run.precision, run.g);
+    let power = PowerModel::paper_calibrated();
+    println!(
+        "eval {} G={} on {} images: accuracy {:.4}",
+        run.precision, run.g, n, acc
+    );
+    println!(
+        "  sim: {} cycles ({} tiles, {} corrupted values), hw time {:.3} ms, energy {:.3} mJ",
+        res.stats.cycles,
+        res.stats.tiles,
+        res.stats.corrupted,
+        res.stats.cycles as f64 / arch.freq_hz * 1e3,
+        power.energy_mj(&sched, res.stats.cycles)
+    );
+    println!(
+        "  host: {:.2} s ({:.1} ms/image) — paper's GPU model: 200 ms/image (a4w4)",
+        secs,
+        secs * 1e3 / n as f64
+    );
+}
+
+fn cmd_allocate(run: &RunConfig, gtar: f64, quick: bool) {
+    let weights = load_weights(run);
+    let (images, _, n) = load_images(run, if quick { 8 } else { 24 });
+    let tables = load_or_calibrate_tables(run, quick);
+    let arch = ArchConfig::paper();
+    let prec = run.precision;
+    let names = dnn::conv_layer_names();
+
+    // Exact reference logits.
+    let ex = dnn::Executor::new(&weights, run.width_mult, prec, dnn::Backend::Float);
+    let ref_out = ex.forward_batched(&images, n, run.batch);
+
+    // Per-layer MSE profile (Fig. 8a): undervolt one layer at a time.
+    let g_values: Vec<u32> = (0..=prec.max_g()).collect();
+    let mut layers = Vec::new();
+    let mut macs = vec![0u64; names.len()];
+    for (li, name) in names.iter().enumerate() {
+        let mut cost = Vec::new();
+        for &g in &g_values {
+            if g == prec.max_g() {
+                cost.push(0.0);
+                continue;
+            }
+            let mut exg = dnn::Executor::new(
+                &weights,
+                run.width_mult,
+                prec,
+                dnn::Backend::Gavina {
+                    arch: arch.clone(),
+                    tables: Some(&tables),
+                    seed: run.seed + li as u64,
+                },
+            );
+            exg.layer_gs = vec![prec.max_g(); names.len()];
+            exg.layer_gs[li] = g;
+            let out = exg.forward_batched(&images, n, run.batch);
+            if macs[li] == 0 {
+                macs[li] = out.stats.layer_macs[li];
+            }
+            cost.push(gavina::stats::mse_f32(&ref_out.logits, &out.logits));
+        }
+        eprintln!(
+            "layer {li:2} {name:12} MSE(G): {:?}",
+            cost.iter().map(|c| format!("{c:.2e}")).collect::<Vec<_>>()
+        );
+        layers.push(gavina::ilp::LayerChoices {
+            ops: macs[li] as f64,
+            cost,
+        });
+    }
+
+    let alloc = gavina::ilp::GavAllocator::new(layers).solve(gtar);
+    println!("ILP allocation for {prec}, G_tar = {gtar}:");
+    for (li, name) in names.iter().enumerate() {
+        println!("  {name:12} G = {}", alloc.gs[li]);
+    }
+    println!(
+        "  op-weighted avg G = {:.3}, total output MSE bound = {:.3e}",
+        alloc.avg_g, alloc.cost
+    );
+}
+
+fn cmd_serve(run: &RunConfig, n: usize) {
+    let weights = Arc::new(load_weights(run));
+    let tables = Arc::new(load_or_calibrate_tables(run, true));
+    let mut cfg = ServeConfig::new(run.precision, run.g);
+    cfg.width_mult = run.width_mult;
+    cfg.max_batch = run.batch;
+    let sched = GavSchedule::two_level(run.precision, run.g);
+    let coord = Coordinator::start(cfg, Arc::clone(&weights), Some(tables));
+    let (images, _, n_imgs) = load_images(run, n);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_imgs)
+        .map(|i| coord.submit(images[i * 3072..(i + 1) * 3072].to_vec()))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv_timeout(std::time::Duration::from_secs(600)).is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    let (p50, p95, max) = m.latency_percentiles();
+    let power = PowerModel::paper_calibrated();
+    println!(
+        "served {ok}/{n_imgs} requests in {wall:.2}s ({:.1} img/s host)",
+        ok as f64 / wall
+    );
+    println!(
+        "  latency p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+        p50 as f64 / 1e3,
+        p95 as f64 / 1e3,
+        max as f64 / 1e3
+    );
+    println!(
+        "  accelerator: {} cycles, {:.3} mJ, {} corrupted values",
+        m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed),
+        m.energy_mj(&power, &sched),
+        m.corrupted.load(std::sync::atomic::Ordering::Relaxed),
+    );
+}
+
+fn cmd_selfcheck(run: &RunConfig) {
+    use gavina::quant::PackedPlanes;
+    let dir = &run.artifacts_dir;
+    let mut rt = match gavina::runtime::Runtime::new(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT runtime unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "PJRT platform: {}; {} artifacts in manifest",
+        rt.platform(),
+        rt.manifest.len()
+    );
+    let (c, l, k) = (576, 8, 16);
+    let prec = Precision::new(4, 4);
+    let mut rng = gavina::util::Prng::new(run.seed);
+    let (a, b) = gavina::workload::gemm_workload(c, l, k, prec, &mut rng);
+    let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+    let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+    let mut a_planes = Vec::new();
+    for plane in 0..prec.a_bits {
+        let dense = pa.unpack_plane(plane); // [l, c]
+        for ci in 0..c {
+            for li in 0..l {
+                a_planes.push(dense[li * c + ci]);
+            }
+        }
+    }
+    let mut b_planes = Vec::new();
+    for plane in 0..prec.b_bits {
+        b_planes.extend_from_slice(&pb.unpack_plane(plane));
+    }
+    let hlo = rt
+        .bitserial_gemm_tile(prec, &a_planes, &b_planes, c, l, k)
+        .expect("executing artifact");
+    let native = gavina::gemm::bitserial_gemm(&pa, &pb);
+    let ok = hlo.iter().zip(&native).all(|(h, n)| *h as i64 == *n);
+    assert!(ok, "PJRT artifact and native bit-serial GEMM disagree");
+    println!("selfcheck OK: AOT artifact ≡ native bit-serial GEMM on a random {c}x{l}x{k} tile");
+}
+
+fn main() {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "table1" => cmd_table1(),
+        "schedule" => cmd_schedule(&args.run),
+        "calibrate" => {
+            calibrate(&args.run, args.quick);
+        }
+        "eval" => cmd_eval(&args.run, args.quick),
+        "allocate" => cmd_allocate(&args.run, args.gtar, args.quick),
+        "serve" => cmd_serve(&args.run, args.n),
+        "selfcheck" => cmd_selfcheck(&args.run),
+        _ => usage(),
+    }
+}

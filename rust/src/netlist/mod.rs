@@ -1,0 +1,469 @@
+//! Gate-level elaboration of one GAVINA inner-product element (iPE).
+//!
+//! The paper evaluates undervolting errors with gate-level simulations of
+//! the post-layout 12 nm netlist. We cannot ship that netlist, so this
+//! module *builds* the equivalent circuit structure from scratch (see
+//! DESIGN.md §Substitutions):
+//!
+//! ```text
+//!   p[c]   = a[c] AND w[c]                 (C AND gates)
+//!   sum    = Σ_c p[c]                      (3:2 carry-save compressor
+//!                                           tree + final ripple-carry
+//!                                           adder — the standard
+//!                                           population-count datapath)
+//! ```
+//!
+//! The CSA-tree + CPA structure is what gives the error model the paper's
+//! physics: the compressor levels have near-uniform depth across bits,
+//! while the final carry-propagate adder adds one ripple stage per bit of
+//! significance — so the *MSB-side carry chains* are the deepest paths
+//! and break first under undervolting, and they only switch when the sum
+//! crosses a power-of-two boundary. Both §IV-C observations ("bit
+//! dependency", "some locations near power-of-two values have larger
+//! error rates") fall out of the structure.
+//!
+//! Gates are 1- or 2-input primitives (`AND/OR/XOR/NOT`) created in
+//! topological order, so zero-delay functional evaluation is a single
+//! forward pass and the event-driven simulator in [`crate::gls`] can attach
+//! per-gate delays without re-sorting.
+
+use crate::util::Prng;
+
+/// Net identifier (index into the simulator's value array).
+pub type NetId = u32;
+
+/// Gate primitive kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateKind {
+    And2,
+    Or2,
+    Xor2,
+    Not,
+}
+
+impl GateKind {
+    /// Relative intrinsic delay of the gate (unitless; scaled globally by
+    /// the GLS calibration). XOR cells are ~1.6x slower than NAND-class
+    /// cells in standard libraries; inverters faster.
+    pub fn base_delay(self) -> f64 {
+        match self {
+            GateKind::And2 | GateKind::Or2 => 1.0,
+            GateKind::Xor2 => 1.6,
+            GateKind::Not => 0.6,
+        }
+    }
+
+    /// Relative switched capacitance (drives the GLS dynamic-energy
+    /// accounting; XOR cells are heavier).
+    pub fn cap(self) -> f64 {
+        match self {
+            GateKind::And2 | GateKind::Or2 => 1.0,
+            GateKind::Xor2 => 1.5,
+            GateKind::Not => 0.5,
+        }
+    }
+
+    pub fn n_inputs(self) -> usize {
+        match self {
+            GateKind::Not => 1,
+            _ => 2,
+        }
+    }
+
+    /// Evaluate the gate function.
+    #[inline]
+    pub fn eval(self, a: bool, b: bool) -> bool {
+        match self {
+            GateKind::And2 => a && b,
+            GateKind::Or2 => a || b,
+            GateKind::Xor2 => a ^ b,
+            GateKind::Not => !a,
+        }
+    }
+}
+
+/// One gate instance. `inputs[1]` is ignored for 1-input kinds.
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub inputs: [NetId; 2],
+    pub out: NetId,
+}
+
+/// A combinational netlist with designated input and output nets.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    /// Gates in topological order (inputs of gate i are either primary
+    /// inputs or outputs of gates < i).
+    pub gates: Vec<Gate>,
+    /// Total nets: primary inputs first, then one per gate output.
+    pub n_nets: usize,
+    /// Activation input nets `a[0..C]`.
+    pub a_inputs: Vec<NetId>,
+    /// Weight input nets `w[0..C]`.
+    pub w_inputs: Vec<NetId>,
+    /// Sum output nets, LSB first (`ceil(log2(C+1))` of them).
+    pub outputs: Vec<NetId>,
+    /// Reduction width C.
+    pub c_dim: usize,
+}
+
+/// Builder state for [`build_ipe`].
+struct Builder {
+    gates: Vec<Gate>,
+    n_nets: usize,
+    /// A constant-0 net (never driven; simulators initialise nets low).
+    zero: NetId,
+}
+
+impl Builder {
+    fn gate(&mut self, kind: GateKind, a: NetId, b: NetId) -> NetId {
+        let out = self.n_nets as NetId;
+        self.n_nets += 1;
+        self.gates.push(Gate {
+            kind,
+            inputs: [a, b],
+            out,
+        });
+        out
+    }
+
+    /// One 3:2 carry-save compressor level over three bit vectors: per
+    /// bit position a full adder produces a sum bit (same weight) and a
+    /// carry bit (next weight) — no ripple, constant depth. Returns
+    /// `(sum_vec, carry_vec)` whose values add to `u + v + w`.
+    ///
+    /// Input vectors are dense little-endian (all positions `< len`
+    /// populated), so positions with 2–3 bits form a prefix: the carry
+    /// vector is dense after a constant-zero bit 0.
+    fn csa(&mut self, u: &[NetId], v: &[NetId], w: &[NetId]) -> (Vec<NetId>, Vec<NetId>) {
+        let width = u.len().max(v.len()).max(w.len());
+        let mut s_out: Vec<NetId> = Vec::with_capacity(width);
+        let mut c_out: Vec<NetId> = vec![self.zero]; // carry weight starts at bit 1
+        for i in 0..width {
+            let bits: Vec<NetId> = [u.get(i), v.get(i), w.get(i)]
+                .into_iter()
+                .flatten()
+                .copied()
+                .collect();
+            match bits.as_slice() {
+                [a, b, c] => {
+                    let t = self.gate(GateKind::Xor2, *a, *b);
+                    let s = self.gate(GateKind::Xor2, t, *c);
+                    let g1 = self.gate(GateKind::And2, *a, *b);
+                    let g2 = self.gate(GateKind::And2, t, *c);
+                    let co = self.gate(GateKind::Or2, g1, g2);
+                    s_out.push(s);
+                    c_out.push(co);
+                }
+                [a, b] => {
+                    let s = self.gate(GateKind::Xor2, *a, *b);
+                    let co = self.gate(GateKind::And2, *a, *b);
+                    s_out.push(s);
+                    c_out.push(co);
+                }
+                [a] => s_out.push(*a),
+                _ => {}
+            }
+        }
+        // Trim a useless all-zero carry vector (possible for tiny widths).
+        while c_out.len() > 1 && *c_out.last().unwrap() == self.zero {
+            c_out.pop();
+        }
+        (s_out, c_out)
+    }
+
+    /// Ripple-carry add two little-endian bit vectors whose *values* are
+    /// bounded by `max_u` and `max_v`; output has exactly
+    /// `bits_for(max_u + max_v)` bits (the top carry is dropped when the
+    /// value bound proves it zero).
+    fn add_vectors(&mut self, u: &[NetId], v: &[NetId], max_u: u64, max_v: u64) -> Vec<NetId> {
+        let out_w = crate::util::bits_for(max_u + max_v) as usize;
+        let mut out = Vec::with_capacity(out_w);
+        let mut carry: Option<NetId> = None;
+        for i in 0..out_w {
+            let a = u.get(i).copied();
+            let b = v.get(i).copied();
+            let (s, c) = match (a, b, carry) {
+                (Some(a), Some(b), Some(cin)) => {
+                    // Full adder: t = a^b; s = t^cin; cout = (a&b)|(t&cin)
+                    let t = self.gate(GateKind::Xor2, a, b);
+                    let s = self.gate(GateKind::Xor2, t, cin);
+                    let g1 = self.gate(GateKind::And2, a, b);
+                    let g2 = self.gate(GateKind::And2, t, cin);
+                    let c = self.gate(GateKind::Or2, g1, g2);
+                    (s, Some(c))
+                }
+                (Some(a), Some(b), None) => {
+                    // Half adder.
+                    let s = self.gate(GateKind::Xor2, a, b);
+                    let c = self.gate(GateKind::And2, a, b);
+                    (s, Some(c))
+                }
+                (Some(a), None, Some(cin)) | (None, Some(a), Some(cin)) => {
+                    // Half adder with carry-in only.
+                    let s = self.gate(GateKind::Xor2, a, cin);
+                    let c = self.gate(GateKind::And2, a, cin);
+                    (s, Some(c))
+                }
+                (Some(a), None, None) | (None, Some(a), None) => (a, None),
+                (None, None, Some(cin)) => (cin, None),
+                (None, None, None) => break,
+            };
+            out.push(s);
+            carry = if i + 1 < out_w { c } else { None };
+        }
+        out
+    }
+}
+
+/// Elaborate one iPE: `C` AND gates feeding a balanced ripple-carry adder
+/// tree, outputs `ceil(log2(C+1))` sum bits.
+pub fn build_ipe(c_dim: usize) -> Netlist {
+    assert!(c_dim >= 1);
+    let mut b = Builder {
+        gates: Vec::new(),
+        n_nets: 2 * c_dim + 1, // a[0..C], w[0..C], constant-0
+        zero: (2 * c_dim) as NetId,
+    };
+    let a_inputs: Vec<NetId> = (0..c_dim as NetId).collect();
+    let w_inputs: Vec<NetId> = (c_dim as NetId..2 * c_dim as NetId).collect();
+
+    // AND array: C one-bit operands.
+    let mut operands: Vec<Vec<NetId>> = (0..c_dim)
+        .map(|c| vec![b.gate(GateKind::And2, a_inputs[c], w_inputs[c])])
+        .collect();
+
+    // 3:2 carry-save compressor tree: each level turns 3 operands into 2
+    // with constant (carry-save) depth, until two remain.
+    while operands.len() > 2 {
+        let mut next = Vec::with_capacity(2 * operands.len() / 3 + 2);
+        let mut it = operands.chunks_exact(3);
+        for trio in it.by_ref() {
+            let (s, c) = b.csa(&trio[0], &trio[1], &trio[2]);
+            next.push(s);
+            next.push(c);
+        }
+        next.extend(it.remainder().iter().cloned());
+        operands = next;
+    }
+
+    // Final carry-propagate (ripple) adder: the only long carry chain —
+    // one ripple stage per bit of significance, which is where the
+    // MSB-deepest paths come from. The combined value is exactly the
+    // popcount ≤ C, so the output width is bits_for(C) and the top carry
+    // is structurally zero.
+    let outputs = if operands.len() == 1 {
+        operands.pop().unwrap()
+    } else {
+        let v = operands.pop().unwrap();
+        let u = operands.pop().unwrap();
+        b.add_vectors(&u, &v, c_dim as u64, 0)
+    };
+    debug_assert_eq!(outputs.len(), crate::util::bits_for(c_dim as u64) as usize);
+    Netlist {
+        gates: b.gates,
+        n_nets: b.n_nets,
+        a_inputs,
+        w_inputs,
+        outputs,
+        c_dim,
+    }
+}
+
+impl Netlist {
+    /// Zero-delay functional evaluation: returns the sum for the given
+    /// input bits (ground truth for the timing simulator and tests).
+    pub fn eval(&self, a_bits: &[bool], w_bits: &[bool]) -> u64 {
+        assert_eq!(a_bits.len(), self.c_dim);
+        assert_eq!(w_bits.len(), self.c_dim);
+        let mut values = vec![false; self.n_nets];
+        values[..self.c_dim].copy_from_slice(a_bits);
+        values[self.c_dim..2 * self.c_dim].copy_from_slice(w_bits);
+        for g in &self.gates {
+            let a = values[g.inputs[0] as usize];
+            let b = if g.kind.n_inputs() == 2 {
+                values[g.inputs[1] as usize]
+            } else {
+                false
+            };
+            values[g.out as usize] = g.kind.eval(a, b);
+        }
+        self.outputs
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (values[n as usize] as u64) << i)
+            .sum()
+    }
+
+    /// Per-gate nominal delays: `base_delay · (1 + σ·N(0,1))` process
+    /// variation, in arbitrary units (the GLS calibrates the global scale
+    /// against the clock period).
+    pub fn gate_delays(&self, sigma: f64, rng: &mut Prng) -> Vec<f64> {
+        self.gates
+            .iter()
+            .map(|g| {
+                let var = (1.0 + sigma * rng.normal()).clamp(0.6, 1.6);
+                g.kind.base_delay() * var
+            })
+            .collect()
+    }
+
+    /// Static longest path (in delay units) from any primary input to each
+    /// net; `arrival[out]` for outputs is the critical path used to
+    /// calibrate the GLS clock.
+    pub fn arrival_times(&self, delays: &[f64]) -> Vec<f64> {
+        let mut arr = vec![0.0f64; self.n_nets];
+        for (gi, g) in self.gates.iter().enumerate() {
+            let mut t = arr[g.inputs[0] as usize];
+            if g.kind.n_inputs() == 2 {
+                t = t.max(arr[g.inputs[1] as usize]);
+            }
+            arr[g.out as usize] = t + delays[gi];
+        }
+        arr
+    }
+
+    /// Critical path delay over all sum outputs.
+    pub fn critical_path(&self, delays: &[f64]) -> f64 {
+        let arr = self.arrival_times(delays);
+        self.outputs
+            .iter()
+            .map(|&n| arr[n as usize])
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-output-bit structural depth (max gate count to that bit) —
+    /// exposes the carry-chain asymmetry the error model exploits.
+    pub fn output_depths(&self) -> Vec<usize> {
+        let unit = vec![1.0f64; self.gates.len()];
+        let arr = self.arrival_times(&unit);
+        self.outputs
+            .iter()
+            .map(|&n| arr[n as usize] as usize)
+            .collect()
+    }
+
+    /// Fan-out adjacency: for each net, the gate indices it drives (used
+    /// by the event-driven simulator).
+    pub fn fanout(&self) -> Vec<Vec<u32>> {
+        let mut fo = vec![Vec::new(); self.n_nets];
+        for (gi, g) in self.gates.iter().enumerate() {
+            fo[g.inputs[0] as usize].push(gi as u32);
+            if g.kind.n_inputs() == 2 && g.inputs[1] != g.inputs[0] {
+                fo[g.inputs[1] as usize].push(gi as u32);
+            }
+        }
+        fo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn popcount_and(a: &[bool], w: &[bool]) -> u64 {
+        a.iter().zip(w).filter(|(&x, &y)| x && y).count() as u64
+    }
+
+    #[test]
+    fn ipe_computes_popcount_small_exhaustive() {
+        // C=4: all 256 input combinations.
+        let nl = build_ipe(4);
+        for aw in 0u32..256 {
+            let a: Vec<bool> = (0..4).map(|i| (aw >> i) & 1 == 1).collect();
+            let w: Vec<bool> = (0..4).map(|i| (aw >> (4 + i)) & 1 == 1).collect();
+            assert_eq!(nl.eval(&a, &w), popcount_and(&a, &w));
+        }
+    }
+
+    #[test]
+    fn ipe_computes_popcount_random() {
+        check("ipe == popcount(AND)", 40, |rng| {
+            let c = rng.int_in(1, 600) as usize;
+            let nl = build_ipe(c);
+            let a: Vec<bool> = (0..c).map(|_| rng.chance(0.5)).collect();
+            let w: Vec<bool> = (0..c).map(|_| rng.chance(0.5)).collect();
+            assert_eq!(nl.eval(&a, &w), popcount_and(&a, &w));
+        });
+    }
+
+    #[test]
+    fn output_width_matches_paper() {
+        // C=576 -> 10-bit iPE outputs (paper §III).
+        let nl = build_ipe(576);
+        assert_eq!(nl.outputs.len(), 10);
+        assert_eq!(build_ipe(36).outputs.len(), 6);
+    }
+
+    #[test]
+    fn all_ones_saturates() {
+        let c = 576;
+        let nl = build_ipe(c);
+        let ones = vec![true; c];
+        assert_eq!(nl.eval(&ones, &ones), c as u64);
+        let zeros = vec![false; c];
+        assert_eq!(nl.eval(&ones, &zeros), 0);
+    }
+
+    #[test]
+    fn msbs_are_structurally_deeper() {
+        // The carry-chain asymmetry: depth must be non-decreasing-ish with
+        // significance, and the MSB strictly deeper than the LSB.
+        let nl = build_ipe(576);
+        let d = nl.output_depths();
+        assert!(
+            d[9] > d[0] + 10,
+            "MSB depth {} vs LSB depth {}",
+            d[9],
+            d[0]
+        );
+        // Monotone over the top half.
+        for i in 5..9 {
+            assert!(d[i + 1] >= d[i], "depth dip at bit {i}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn gate_count_scales_linearly() {
+        // ~11 gates per leaf for the AND + FA-tree structure.
+        let n576 = build_ipe(576).gates.len();
+        assert!(n576 > 4000 && n576 < 9000, "gate count {n576}");
+        let n72 = build_ipe(72).gates.len();
+        assert!((n576 as f64 / n72 as f64 - 8.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn critical_path_positive_and_msb_dominated() {
+        let nl = build_ipe(576);
+        let delays: Vec<f64> = nl.gates.iter().map(|g| g.kind.base_delay()).collect();
+        let arr = nl.arrival_times(&delays);
+        let out_arr: Vec<f64> = nl.outputs.iter().map(|&n| arr[n as usize]).collect();
+        let cp = nl.critical_path(&delays);
+        assert!(cp > 0.0);
+        assert_eq!(cp, out_arr.iter().cloned().fold(0.0, f64::max));
+        // The critical path terminates at one of the top 2 bits.
+        let imax = out_arr
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(imax >= 8, "critical output bit {imax}");
+    }
+
+    #[test]
+    fn fanout_consistent() {
+        let nl = build_ipe(36);
+        let fo = nl.fanout();
+        // Every gate appears in the fanout of each of its inputs.
+        for (gi, g) in nl.gates.iter().enumerate() {
+            assert!(fo[g.inputs[0] as usize].contains(&(gi as u32)));
+        }
+        // Output nets drive nothing.
+        for &o in &nl.outputs {
+            assert!(fo[o as usize].is_empty());
+        }
+    }
+}

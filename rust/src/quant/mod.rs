@@ -1,0 +1,155 @@
+//! Quantization substrate: uniform symmetric quantization (§IV-B, ref.
+//! [27]) and the bit-serial data layout of GAVINA's A0/B0 memories —
+//! two's-complement bit-plane slicing and bit-packed planes for the u64
+//! popcount hot path.
+//!
+//! Conventions (shared with `python/compile/kernels/ref.py`):
+//! * Symmetric signed range for `bits`: `[-(2^(b-1)-1), 2^(b-1)-1]`
+//!   (narrow range — the most negative code is dropped).
+//! * Bit-plane `i` holds bit `i` of the two's-complement encoding over
+//!   `bits` bits (LSB first); the MSB plane carries weight `-2^(bits-1)`.
+
+pub mod packed;
+
+pub use packed::PackedPlanes;
+
+/// Symmetric signed integer range for `bits` bits.
+pub fn quant_range(bits: u8) -> (i32, i32) {
+    let hi = (1i32 << (bits - 1)) - 1;
+    (-hi, hi)
+}
+
+/// Uniform symmetric per-tensor quantization. Returns `(q, scale)` with
+/// `x ≈ q · scale` and `q` clamped to the symmetric range.
+pub fn quantize_sym(x: &[f32], bits: u8) -> (Vec<i32>, f32) {
+    let (lo, hi) = quant_range(bits);
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+    let scale = amax / hi as f32;
+    let q = x
+        .iter()
+        .map(|&v| ((v / scale).round() as i32).clamp(lo, hi))
+        .collect();
+    (q, scale)
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &[i32], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Extract bit `i` of the two's-complement encoding of `v` over `bits`
+/// bits. `v` must be representable in `bits` bits.
+#[inline]
+pub fn tc_bit(v: i32, bits: u8, i: u8) -> u32 {
+    debug_assert!(fits(v, bits), "{v} does not fit in {bits} bits");
+    let mask = if bits >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << bits) - 1
+    };
+    ((v as u32) & mask) >> i & 1
+}
+
+/// Does `v` fit in `bits` two's-complement bits?
+#[inline]
+pub fn fits(v: i32, bits: u8) -> bool {
+    if bits >= 32 {
+        return true;
+    }
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    (v as i64) >= lo && (v as i64) <= hi
+}
+
+/// Reassemble a signed value from its two's-complement bits (LSB first).
+pub fn from_bits(bits_lsb_first: &[u32]) -> i32 {
+    let b = bits_lsb_first.len();
+    let mut v: i64 = 0;
+    for (i, &bit) in bits_lsb_first.iter().enumerate() {
+        debug_assert!(bit <= 1);
+        let w = if i == b - 1 {
+            -(1i64 << i)
+        } else {
+            1i64 << i
+        };
+        v += w * bit as i64;
+    }
+    v as i32
+}
+
+/// The per-step weight of bit-plane `i` of a `bits`-bit operand
+/// (`-2^(bits-1)` for the MSB, `2^i` otherwise).
+#[inline]
+pub fn plane_weight(i: u8, bits: u8) -> i64 {
+    if i == bits - 1 {
+        -(1i64 << i)
+    } else {
+        1i64 << i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn quant_range_symmetric() {
+        assert_eq!(quant_range(2), (-1, 1));
+        assert_eq!(quant_range(4), (-7, 7));
+        assert_eq!(quant_range(8), (-127, 127));
+    }
+
+    #[test]
+    fn quantize_hits_extremes() {
+        let x = [1.0f32, -1.0, 0.5, 0.0];
+        let (q, s) = quantize_sym(&x, 4);
+        assert_eq!(q[0], 7);
+        assert_eq!(q[1], -7);
+        assert_eq!(q[3], 0);
+        assert!((s - 1.0 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bound() {
+        check("quant roundtrip bounded", 50, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let n = rng.int_in(1, 64) as usize;
+            let x: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+            let (q, s) = quantize_sym(&x, bits);
+            let xd = dequantize(&q, s);
+            // Max quantization error is scale/2 (plus clamp at amax which
+            // cannot occur for symmetric quantization of the max element).
+            for (a, b) in x.iter().zip(&xd) {
+                assert!((a - b).abs() <= s * 0.5 + 1e-6, "bits={bits} {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn twos_complement_roundtrip() {
+        check("tc bits roundtrip", 200, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let (lo, hi) = quant_range(bits);
+            let v = rng.int_in(lo as i64 - 1, hi as i64) as i32; // incl. -2^(b-1)
+            let planes: Vec<u32> = (0..bits).map(|i| tc_bit(v, bits, i)).collect();
+            assert_eq!(from_bits(&planes), v, "v={v} bits={bits}");
+        });
+    }
+
+    #[test]
+    fn plane_weights_sum_to_value() {
+        // v = sum_i weight(i) * bit_i — the identity the bit-serial GEMM
+        // relies on.
+        for bits in 2u8..=8 {
+            let (lo, hi) = quant_range(bits);
+            for v in lo - 1..=hi {
+                let mut acc = 0i64;
+                for i in 0..bits {
+                    acc += plane_weight(i, bits) * tc_bit(v, bits, i) as i64;
+                }
+                assert_eq!(acc, v as i64);
+            }
+        }
+    }
+}

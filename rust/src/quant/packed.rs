@@ -1,0 +1,231 @@
+//! Bit-packed bit-plane storage — the software image of GAVINA's A0/B0
+//! memories.
+//!
+//! The ASIC stores operands "bit-serial": one binary `[C, L]` (or `[K, C]`)
+//! matrix per significance, fetched per cycle. Here each plane packs its C
+//! (reduction) axis into `u64` words so one iPE inner product becomes a
+//! word-wise `AND` + `popcount` loop — the L3 hot path (see
+//! [`crate::gemm`]).
+//!
+//! Layout: `data[plane][vec][word]`, flattened row-major; `vec` is the
+//! non-reduced index (a column `l` of A, or a row `k` of B); `word` packs
+//! 64 consecutive `c` positions, LSB = lowest `c`. Trailing bits of the
+//! last word are zero (AND with zeros contributes nothing to popcount).
+
+use super::fits;
+
+/// Bit-planes of one integer matrix, packed along the reduction axis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedPlanes {
+    /// Number of bit-planes (the operand precision).
+    pub bits: u8,
+    /// Number of packed vectors (L for activations, K for weights).
+    pub n_vecs: usize,
+    /// Logical length of the reduction axis (C).
+    pub c_dim: usize,
+    /// u64 words per packed vector: `ceil(C / 64)`.
+    pub words: usize,
+    data: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Pack an activation matrix `A[C, L]` (row-major, C rows) into
+    /// per-column planes.
+    pub fn from_a_matrix(a: &[i32], c_dim: usize, l_dim: usize, bits: u8) -> Self {
+        assert_eq!(a.len(), c_dim * l_dim);
+        let mut p = Self::zeroed(bits, l_dim, c_dim);
+        // Word-wise pack: accumulate 64 consecutive c positions per column
+        // into local words before a single store per (plane, vec, word) —
+        // ~10x faster than per-bit read-modify-write (§Perf).
+        let mask = if bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << bits) - 1
+        };
+        for l in 0..l_dim {
+            for w in 0..p.words {
+                let c0 = w * 64;
+                let cn = 64.min(c_dim - c0);
+                let mut acc = [0u64; 8]; // bits ≤ 8
+                for dc in 0..cn {
+                    let v = (a[(c0 + dc) * l_dim + l] as u32) & mask;
+                    debug_assert!(fits(a[(c0 + dc) * l_dim + l], bits));
+                    for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
+                        *word |= (((v >> plane) & 1) as u64) << dc;
+                    }
+                }
+                for plane in 0..bits {
+                    let idx = p.word_index(plane, l, w);
+                    p.data[idx] = acc[plane as usize];
+                }
+            }
+        }
+        p
+    }
+
+    /// Pack a weight matrix `B[K, C]` (row-major, K rows) into per-row
+    /// planes.
+    pub fn from_b_matrix(b: &[i32], k_dim: usize, c_dim: usize, bits: u8) -> Self {
+        assert_eq!(b.len(), k_dim * c_dim);
+        let mut p = Self::zeroed(bits, k_dim, c_dim);
+        let mask = if bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << bits) - 1
+        };
+        for k in 0..k_dim {
+            let row = &b[k * c_dim..(k + 1) * c_dim];
+            for w in 0..p.words {
+                let c0 = w * 64;
+                let cn = 64.min(c_dim - c0);
+                let mut acc = [0u64; 8];
+                for (dc, &bv) in row[c0..c0 + cn].iter().enumerate() {
+                    debug_assert!(fits(bv, bits));
+                    let v = (bv as u32) & mask;
+                    for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
+                        *word |= (((v >> plane) & 1) as u64) << dc;
+                    }
+                }
+                for plane in 0..bits {
+                    let idx = p.word_index(plane, k, w);
+                    p.data[idx] = acc[plane as usize];
+                }
+            }
+        }
+        p
+    }
+
+    /// All-zero planes.
+    pub fn zeroed(bits: u8, n_vecs: usize, c_dim: usize) -> Self {
+        let words = c_dim.div_ceil(64);
+        Self {
+            bits,
+            n_vecs,
+            c_dim,
+            words,
+            data: vec![0u64; bits as usize * n_vecs * words],
+        }
+    }
+
+    #[inline]
+    fn word_index(&self, plane: u8, vec: usize, word: usize) -> usize {
+        (plane as usize * self.n_vecs + vec) * self.words + word
+    }
+
+    /// The packed words of one vector of one plane (length [`Self::words`]).
+    #[inline]
+    pub fn vec_words(&self, plane: u8, vec: usize) -> &[u64] {
+        let start = self.word_index(plane, vec, 0);
+        &self.data[start..start + self.words]
+    }
+
+    /// The packed words of one whole plane (`n_vecs · words`), vec-major.
+    #[inline]
+    pub fn plane_words(&self, plane: u8) -> &[u64] {
+        let start = self.word_index(plane, 0, 0);
+        &self.data[start..start + self.n_vecs * self.words]
+    }
+
+    /// Read back a single logical bit (for tests / the cycle simulator).
+    #[inline]
+    pub fn bit(&self, plane: u8, vec: usize, c: usize) -> u32 {
+        let w = self.data[self.word_index(plane, vec, c / 64)];
+        ((w >> (c % 64)) & 1) as u32
+    }
+
+    /// Reassemble the signed integer at `(vec, c)` from its planes.
+    pub fn value(&self, vec: usize, c: usize) -> i32 {
+        let bits: Vec<u32> = (0..self.bits).map(|p| self.bit(p, vec, c)).collect();
+        super::from_bits(&bits)
+    }
+
+    /// Unpack one plane into a dense `{0,1}` matrix, `[n_vecs, c_dim]`
+    /// row-major (used to feed the PJRT artifacts and the GLS).
+    pub fn unpack_plane(&self, plane: u8) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_vecs * self.c_dim];
+        for v in 0..self.n_vecs {
+            for c in 0..self.c_dim {
+                out[v * self.c_dim + c] = self.bit(plane, v, c) as f32;
+            }
+        }
+        out
+    }
+
+    /// Total memory footprint of the packed planes in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    fn rand_mat(rng: &mut Prng, n: usize, bits: u8) -> Vec<i32> {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(-hi - 1, hi) as i32).collect()
+    }
+
+    #[test]
+    fn pack_roundtrip_a() {
+        check("packed A roundtrip", 50, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let (c, l) = (rng.int_in(1, 140) as usize, rng.int_in(1, 9) as usize);
+            let a = rand_mat(rng, c * l, bits);
+            let p = PackedPlanes::from_a_matrix(&a, c, l, bits);
+            for ci in 0..c {
+                for li in 0..l {
+                    assert_eq!(p.value(li, ci), a[ci * l + li]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pack_roundtrip_b() {
+        check("packed B roundtrip", 50, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let (k, c) = (rng.int_in(1, 17) as usize, rng.int_in(1, 140) as usize);
+            let b = rand_mat(rng, k * c, bits);
+            let p = PackedPlanes::from_b_matrix(&b, k, c, bits);
+            for ki in 0..k {
+                for ci in 0..c {
+                    assert_eq!(p.value(ki, ci), b[ki * c + ci]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn trailing_bits_are_zero() {
+        // C not a multiple of 64: padding must be zero so popcount is safe.
+        let c = 70;
+        let a = vec![-1i32; c]; // all bits set in 2-bit two's complement
+        let p = PackedPlanes::from_a_matrix(&a, c, 1, 2);
+        for plane in 0..2 {
+            let w = p.vec_words(plane, 0);
+            assert_eq!(w.len(), 2);
+            // bits 6..64 of the last word must be clear
+            assert_eq!(w[1] >> (c - 64), 0);
+            assert_eq!(w[0].count_ones() + w[1].count_ones(), c as u32);
+        }
+    }
+
+    #[test]
+    fn unpack_plane_matches_bits() {
+        let mut rng = Prng::new(9);
+        let (c, k, bits) = (100, 3, 4);
+        let b = rand_mat(&mut rng, k * c, bits);
+        let p = PackedPlanes::from_b_matrix(&b, k, c, bits);
+        for plane in 0..bits {
+            let dense = p.unpack_plane(plane);
+            for ki in 0..k {
+                for ci in 0..c {
+                    assert_eq!(dense[ki * c + ci] as u32, p.bit(plane, ki, ci));
+                }
+            }
+        }
+    }
+}

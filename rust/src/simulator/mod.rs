@@ -1,0 +1,496 @@
+//! Cycle-level simulator of the GAVINA accelerator (paper §III, Fig. 3).
+//!
+//! Models the controller FSM, the double-buffered A0/B0 plane memories,
+//! the Parallel Array, the L0/L1 two-stage shift-accumulate, the P-memory
+//! partial-sum accumulation across C-chunks, and the DVS module driving
+//! the GAV schedule — at one-cycle granularity, with access counting for
+//! the power model and an optional error-model hook for undervolted steps.
+//!
+//! ## Timing model
+//!
+//! * One bit-plane GEMM per cycle (the Parallel Array).
+//! * A tile (context) takes `a_bits·b_bits` compute cycles; the next
+//!   context's planes load into the shadow A0/B0 buffers concurrently
+//!   (`max(a_bits, b_bits)` cycles ≤ steps, so loads are always hidden —
+//!   "double-buffered to avoid stalls during context switches").
+//! * `FILL` cycles at the start (first context load) and one `DRAIN`
+//!   cycle at the end (final L0→L1 flush) are the only overheads, plus
+//!   padding waste when the workload dimensions don't divide the array
+//!   shape — this is what puts sustained throughput a few % under the
+//!   Table I peak (Table II reports 1.774 of 1.84 TOP/s at a2w2).
+
+use crate::arch::{ArchConfig, GavSchedule, VoltageMode};
+use crate::errmodel::ErrorTables;
+use crate::gemm;
+use crate::power::PowerModel;
+use crate::quant::PackedPlanes;
+use crate::util::{ceil_div, Prng};
+
+/// A GEMM job: `P[K,L] = B[K,C] · A[C,L]` at a precision/schedule.
+#[derive(Clone, Debug)]
+pub struct GemmJob<'a> {
+    /// Activations `[C, L]` row-major.
+    pub a: &'a [i32],
+    /// Weights `[K, C]` row-major.
+    pub b: &'a [i32],
+    pub c: usize,
+    pub l: usize,
+    pub k: usize,
+    pub sched: GavSchedule,
+}
+
+/// Cycle/energy/throughput report of one simulated job.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Result `[K, L]` row-major.
+    pub p: Vec<i64>,
+    /// Total cycles including fill/drain.
+    pub cycles: u64,
+    /// Hardware tiles executed (including padded ones).
+    pub n_tiles: u64,
+    /// Undervolted / guarded compute steps.
+    pub steps_approx: u64,
+    pub steps_guarded: u64,
+    /// A0/B0 plane reads (two per compute cycle).
+    pub a0b0_reads: u64,
+    /// Tile bursts (L1 flush + A1/B1/P traffic).
+    pub tile_bursts: u64,
+    /// iPE outputs modified by the error model.
+    pub values_corrupted: u64,
+    /// Useful MACs (the logical GEMM).
+    pub useful_macs: u64,
+    /// Executed MACs (including padding).
+    pub executed_macs: u64,
+}
+
+impl SimReport {
+    /// Sustained-throughput utilization vs the array peak: useful MACs per
+    /// cycle over the peak MACs per cycle.
+    pub fn utilization(&self, arch: &ArchConfig, sched: &GavSchedule) -> f64 {
+        let peak_per_cycle = arch.macs_per_tile() as f64 / sched.precision().steps() as f64;
+        (self.useful_macs as f64 / self.cycles as f64) / peak_per_cycle
+    }
+
+    /// Sustained TOP/s at the architecture clock.
+    pub fn sustained_tops(&self, arch: &ArchConfig) -> f64 {
+        2.0 * self.useful_macs as f64 / (self.cycles as f64 / arch.freq_hz) / 1e12
+    }
+
+    /// Energy for this job under a power model [mJ].
+    pub fn energy_mj(&self, power: &PowerModel, sched: &GavSchedule) -> f64 {
+        power.energy_mj(sched, self.cycles)
+    }
+}
+
+/// Where undervolting errors come from during approximate steps.
+pub enum ErrorSource<'t> {
+    /// Ideal (error-free) hardware even on approximate steps — used for
+    /// throughput studies.
+    None,
+    /// The calibrated LUT error model (§IV-C) — the fast path.
+    Tables(&'t ErrorTables),
+    /// Full gate-level simulation of every tile (§IV-B, Fig. 5) — the
+    /// ground truth, orders of magnitude slower.
+    Gls(&'t crate::gls::GlsContext),
+}
+
+/// The cycle-level machine.
+pub struct GavinaSim<'t> {
+    pub arch: ArchConfig,
+    errors: ErrorSource<'t>,
+    rng: Prng,
+}
+
+/// Pipeline fill: first context load cannot be hidden.
+fn fill_cycles(sched: &GavSchedule) -> u64 {
+    let p = sched.precision();
+    p.a_bits.max(p.b_bits) as u64
+}
+
+/// Final L0→L1 flush.
+const DRAIN_CYCLES: u64 = 1;
+
+impl<'t> GavinaSim<'t> {
+    pub fn new(arch: ArchConfig, tables: Option<&'t ErrorTables>, seed: u64) -> Self {
+        let errors = match tables {
+            Some(t) => ErrorSource::Tables(t),
+            None => ErrorSource::None,
+        };
+        Self {
+            arch,
+            errors,
+            rng: Prng::new(seed ^ 0x9A51_A001),
+        }
+    }
+
+    /// A machine whose undervolted steps are simulated by the gate-level
+    /// timing simulator itself (the Fig. 5 exact+approximate-GLS setup).
+    pub fn new_gls(arch: ArchConfig, ctx: &'t crate::gls::GlsContext, seed: u64) -> Self {
+        assert_eq!(ctx.nl.c_dim, arch.c_dim, "GLS netlist must match the array C");
+        Self {
+            arch,
+            errors: ErrorSource::Gls(ctx),
+            rng: Prng::new(seed ^ 0x9A51_A001),
+        }
+    }
+
+    /// Run one GEMM job through the tiled bit-serial pipeline.
+    pub fn run_gemm(&mut self, job: &GemmJob) -> SimReport {
+        let arch = &self.arch;
+        let prec = job.sched.precision();
+        assert_eq!(job.a.len(), job.c * job.l);
+        assert_eq!(job.b.len(), job.k * job.c);
+
+        let (ct, lt, kt) = (
+            ceil_div(job.c, arch.c_dim),
+            ceil_div(job.l, arch.l_dim),
+            ceil_div(job.k, arch.k_dim),
+        );
+        let steps = prec.steps() as u64;
+        let approx_mask = job.sched.approx_mask();
+        let n_approx_per_tile = approx_mask.iter().filter(|&&x| x).count() as u64;
+
+        let mut p = vec![0i64; job.k * job.l];
+        let mut n_tiles = 0u64;
+        let mut corrupted = 0u64;
+
+        // Controller loop: output tile (ko, lo) outer, C-chunk inner (the
+        // P memory accumulates partial sums across C-chunks).
+        for ko in 0..kt {
+            for lo in 0..lt {
+                for co in 0..ct {
+                    n_tiles += 1;
+                    let (pa, pb) = self.load_tile(job, prec, co, lo, ko);
+                    // Parallel Array + L0: one bit-plane GEMM per cycle.
+                    let seq = match &self.errors {
+                        // A fully guarded schedule is exact by definition —
+                        // skip the (possibly very expensive) error source.
+                        _ if n_approx_per_tile == 0 => gemm::ipe_sequence(&pa, &pb),
+                        ErrorSource::None => gemm::ipe_sequence(&pa, &pb),
+                        ErrorSource::Tables(tables) => {
+                            let mut seq = gemm::ipe_sequence(&pa, &pb);
+                            let mut tile_rng = self.rng.fork(n_tiles);
+                            corrupted +=
+                                tables.inject_masked(&mut seq, &approx_mask, &mut tile_rng);
+                            seq
+                        }
+                        ErrorSource::Gls(ctx) => {
+                            let mut tg = crate::gls::TileGls::new(ctx, self.arch.clone());
+                            let trace = tg.run_tile(&pa, &pb, &job.sched);
+                            corrupted += trace
+                                .exact
+                                .iter()
+                                .zip(&trace.sampled)
+                                .flat_map(|(e, s)| e.iter().zip(s))
+                                .filter(|(e, s)| e != s)
+                                .count() as u64;
+                            trace.sampled
+                        }
+                    };
+                    // L1 shift-accumulate into the P memory region.
+                    let tile_p = gemm::recombine(&seq, prec);
+                    self.accumulate(&mut p, &tile_p, job, lo, ko);
+                }
+            }
+        }
+
+        let compute_cycles = n_tiles * steps;
+        let cycles = fill_cycles(&job.sched) + compute_cycles + DRAIN_CYCLES;
+        SimReport {
+            p,
+            cycles,
+            n_tiles,
+            steps_approx: n_tiles * n_approx_per_tile,
+            steps_guarded: n_tiles * (steps - n_approx_per_tile),
+            a0b0_reads: 2 * compute_cycles,
+            tile_bursts: n_tiles,
+            values_corrupted: corrupted,
+            useful_macs: (job.c * job.l * job.k) as u64,
+            executed_macs: n_tiles * arch.macs_per_tile() as u64,
+        }
+    }
+
+    /// Fetch one hardware tile from the job operands, zero-padded to the
+    /// array shape (what the A1→A0 / B1→B0 loaders do).
+    fn load_tile(
+        &self,
+        job: &GemmJob,
+        prec: crate::arch::Precision,
+        co: usize,
+        lo: usize,
+        ko: usize,
+    ) -> (PackedPlanes, PackedPlanes) {
+        let arch = &self.arch;
+        let (c0, l0, k0) = (co * arch.c_dim, lo * arch.l_dim, ko * arch.k_dim);
+        let mut a_tile = vec![0i32; arch.c_dim * arch.l_dim];
+        for c in 0..arch.c_dim.min(job.c - c0) {
+            for l in 0..arch.l_dim.min(job.l - l0) {
+                a_tile[c * arch.l_dim + l] = job.a[(c0 + c) * job.l + (l0 + l)];
+            }
+        }
+        let mut b_tile = vec![0i32; arch.k_dim * arch.c_dim];
+        for k in 0..arch.k_dim.min(job.k - k0) {
+            for c in 0..arch.c_dim.min(job.c - c0) {
+                b_tile[k * arch.c_dim + c] = job.b[(k0 + k) * job.c + (c0 + c)];
+            }
+        }
+        (
+            PackedPlanes::from_a_matrix(&a_tile, arch.c_dim, arch.l_dim, prec.a_bits),
+            PackedPlanes::from_b_matrix(&b_tile, arch.k_dim, arch.c_dim, prec.b_bits),
+        )
+    }
+
+    /// P-memory accumulation of one tile's partial result.
+    fn accumulate(&self, p: &mut [i64], tile_p: &[i64], job: &GemmJob, lo: usize, ko: usize) {
+        let arch = &self.arch;
+        let (l0, k0) = (lo * arch.l_dim, ko * arch.k_dim);
+        for k in 0..arch.k_dim.min(job.k - k0) {
+            for l in 0..arch.l_dim.min(job.l - l0) {
+                p[(k0 + k) * job.l + (l0 + l)] += tile_p[k * arch.l_dim + l];
+            }
+        }
+    }
+}
+
+/// The DVS module's voltage trace for one tile (diagnostics / the Fig. 3
+/// control-sequence rendering in the CLI).
+pub fn dvs_trace(arch: &ArchConfig, sched: &GavSchedule) -> Vec<f64> {
+    (0..sched.precision().steps())
+        .map(|t| match sched.mode(t) {
+            VoltageMode::Guarded => arch.v_guard,
+            VoltageMode::Approximate => arch.v_aprox,
+            VoltageMode::Level(_) => arch.v_aprox,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::util::proptest::check;
+
+    fn rand_mat(rng: &mut Prng, n: usize, bits: u8) -> Vec<i32> {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(-hi - 1, hi) as i32).collect()
+    }
+
+    #[test]
+    fn exact_mode_matches_reference_gemm() {
+        check("cycle sim == exact GEMM (tiled)", 25, |rng| {
+            let arch = ArchConfig::tiny(); // [36, 4, 4]
+            let prec = Precision::new(rng.int_in(2, 5) as u8, rng.int_in(2, 5) as u8);
+            // Dimensions deliberately NOT multiples of the array shape.
+            let (c, l, k) = (
+                rng.int_in(1, 90) as usize,
+                rng.int_in(1, 11) as usize,
+                rng.int_in(1, 11) as usize,
+            );
+            let a = rand_mat(rng, c * l, prec.a_bits);
+            let b = rand_mat(rng, k * c, prec.b_bits);
+            let job = GemmJob {
+                a: &a,
+                b: &b,
+                c,
+                l,
+                k,
+                sched: GavSchedule::all_guarded(prec),
+            };
+            let mut sim = GavinaSim::new(arch, None, 1);
+            let rep = sim.run_gemm(&job);
+            assert_eq!(rep.p, gemm::gemm_exact(&a, &b, c, l, k));
+            assert_eq!(rep.values_corrupted, 0);
+        });
+    }
+
+    #[test]
+    fn approx_schedule_without_tables_is_still_exact() {
+        let arch = ArchConfig::tiny();
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(2);
+        let a = rand_mat(&mut rng, 36 * 4, 4);
+        let b = rand_mat(&mut rng, 4 * 36, 4);
+        let job = GemmJob {
+            a: &a,
+            b: &b,
+            c: 36,
+            l: 4,
+            k: 4,
+            sched: GavSchedule::all_approx(prec),
+        };
+        let mut sim = GavinaSim::new(arch, None, 3);
+        let rep = sim.run_gemm(&job);
+        assert_eq!(rep.p, gemm::gemm_exact(&a, &b, 36, 4, 4));
+    }
+
+    #[test]
+    fn cycle_count_formula() {
+        let arch = ArchConfig::tiny();
+        let prec = Precision::new(3, 4);
+        let sched = GavSchedule::all_guarded(prec);
+        let mut rng = Prng::new(4);
+        // 2x2x3 tiles exactly.
+        let (c, l, k) = (72, 8, 12);
+        let a = rand_mat(&mut rng, c * l, 3);
+        let b = rand_mat(&mut rng, k * c, 4);
+        let job = GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched,
+        };
+        let mut sim = GavinaSim::new(arch, None, 5);
+        let rep = sim.run_gemm(&job);
+        assert_eq!(rep.n_tiles, 2 * 2 * 3);
+        assert_eq!(rep.cycles, 4 + 12 * 12 + 1); // fill + tiles*steps + drain
+        assert_eq!(rep.a0b0_reads, 2 * 12 * 12);
+        assert_eq!(rep.tile_bursts, 12);
+    }
+
+    #[test]
+    fn utilization_near_one_for_aligned_dims() {
+        let arch = ArchConfig::tiny();
+        let prec = Precision::new(2, 2);
+        let sched = GavSchedule::all_guarded(prec);
+        let mut rng = Prng::new(6);
+        let (c, l, k) = (36 * 8, 4 * 8, 4 * 8); // large & aligned
+        let a = rand_mat(&mut rng, c * l, 2);
+        let b = rand_mat(&mut rng, k * c, 2);
+        let job = GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched: sched.clone(),
+        };
+        let mut sim = GavinaSim::new(arch.clone(), None, 7);
+        let rep = sim.run_gemm(&job);
+        let u = rep.utilization(&arch, &sched);
+        assert!(u > 0.97 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn utilization_drops_with_padding() {
+        let arch = ArchConfig::tiny();
+        let prec = Precision::new(2, 2);
+        let sched = GavSchedule::all_guarded(prec);
+        let mut rng = Prng::new(8);
+        let (c, l, k) = (37, 5, 5); // just over one tile everywhere
+        let a = rand_mat(&mut rng, c * l, 2);
+        let b = rand_mat(&mut rng, k * c, 2);
+        let job = GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched: sched.clone(),
+        };
+        let mut sim = GavinaSim::new(arch.clone(), None, 9);
+        let rep = sim.run_gemm(&job);
+        let u = rep.utilization(&arch, &sched);
+        assert!(u < 0.5, "padding waste must show: {u}");
+        assert!(rep.executed_macs > rep.useful_macs);
+    }
+
+    #[test]
+    fn error_injection_corrupts_only_approx_steps() {
+        use crate::errmodel::{ErrorTables, ModelParams};
+        let arch = ArchConfig::tiny();
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        // Heavy flips on bit 0 everywhere.
+        for e in 0..=params.c_dim as u16 {
+            for pb in 0..params.p_bins {
+                for cd in 0..params.n_cond(0) {
+                    tables.set_prob(0, e, pb, cd, 1.0);
+                }
+            }
+        }
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(10);
+        let a = rand_mat(&mut rng, 36 * 4, 4);
+        let b = rand_mat(&mut rng, 4 * 36, 4);
+        let exact = gemm::gemm_exact(&a, &b, 36, 4, 4);
+
+        // Fully guarded: exact despite hot tables.
+        let job_g = GemmJob {
+            a: &a,
+            b: &b,
+            c: 36,
+            l: 4,
+            k: 4,
+            sched: GavSchedule::all_guarded(prec),
+        };
+        let mut sim = GavinaSim::new(arch.clone(), Some(&tables), 11);
+        assert_eq!(sim.run_gemm(&job_g).p, exact);
+
+        // Fully undervolted: corrupted.
+        let job_a = GemmJob {
+            a: &a,
+            b: &b,
+            c: 36,
+            l: 4,
+            k: 4,
+            sched: GavSchedule::all_approx(prec),
+        };
+        let rep = sim.run_gemm(&job_a);
+        assert!(rep.values_corrupted > 0);
+        assert_ne!(rep.p, exact);
+    }
+
+    #[test]
+    fn error_magnitude_decreases_with_g() {
+        use crate::errmodel::{ErrorTables, ModelParams};
+        let arch = ArchConfig::tiny();
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        for bit in 0..params.s_bits {
+            for e in 0..=params.c_dim as u16 {
+                for pb in 0..params.p_bins {
+                    for cd in 0..params.n_cond(bit) {
+                        tables.set_prob(bit, e, pb, cd, 0.08);
+                    }
+                }
+            }
+        }
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(12);
+        let (c, l, k) = (72, 8, 8);
+        let a = rand_mat(&mut rng, c * l, 4);
+        let b = rand_mat(&mut rng, k * c, 4);
+        let exact = gemm::gemm_exact(&a, &b, c, l, k);
+        let var_at = |g: u32, seed: u64| {
+            let job = GemmJob {
+                a: &a,
+                b: &b,
+                c,
+                l,
+                k,
+                sched: GavSchedule::two_level(prec, g),
+            };
+            let mut sim = GavinaSim::new(arch.clone(), Some(&tables), seed);
+            crate::stats::var_ned(&exact, &sim.run_gemm(&job).p)
+        };
+        let v0: f64 = (0..4).map(|s| var_at(0, 20 + s)).sum::<f64>() / 4.0;
+        let v4: f64 = (0..4).map(|s| var_at(4, 30 + s)).sum::<f64>() / 4.0;
+        let vmax = var_at(prec.max_g(), 40);
+        assert!(v0 > v4, "VAR_NED must fall with G: {v0} vs {v4}");
+        assert_eq!(vmax, 0.0);
+    }
+
+    #[test]
+    fn dvs_trace_follows_schedule() {
+        let arch = ArchConfig::paper();
+        let prec = Precision::new(2, 2);
+        let sched = GavSchedule::two_level(prec, 1);
+        let trace = dvs_trace(&arch, &sched);
+        assert_eq!(trace.len(), 4);
+        // Step order (ba,bb): (0,0),(1,0),(0,1),(1,1); s_max=2, G=1 guards
+        // s=2, i.e. only the (1,1) step.
+        assert_eq!(trace, vec![0.35, 0.35, 0.35, 0.55]);
+    }
+}

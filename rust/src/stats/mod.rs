@@ -1,0 +1,198 @@
+//! Evaluation metrics: the paper's VAR_NED (Eq. 1), MSE, classification
+//! accuracy and small histogram helpers used by the benches.
+
+/// Normalized error distances of a batch: `NED_i = (E_i − A_i) / E_max`
+/// with `E_max = max |E_i|` (paper Eq. 1 text).
+pub fn ned(exact: &[i64], approx: &[i64]) -> Vec<f64> {
+    assert_eq!(exact.len(), approx.len());
+    let e_max = exact
+        .iter()
+        .map(|&v| (v as f64).abs())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    exact
+        .iter()
+        .zip(approx)
+        .map(|(&e, &a)| (e - a) as f64 / e_max)
+        .collect()
+}
+
+/// The paper's error metric (Eq. 1): variance of the normalized error
+/// distance. Zero iff the computation is exact (constant-offset errors do
+/// not occur in this setting).
+pub fn var_ned(exact: &[i64], approx: &[i64]) -> f64 {
+    let neds = ned(exact, approx);
+    variance(&neds)
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Mean squared error between two f32 vectors (the §IV-D perturbation
+/// metric on network outputs).
+pub fn mse_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Top-1 classification accuracy from logits (`[n, classes]` row-major).
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|&(i, &y)| {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            argmax == y as usize
+        })
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Fraction of positions that differ (raw error rate, used by the
+/// model-vs-GLS comparison in Fig. 7).
+pub fn mismatch_rate(a: &[u16], b: &[u16]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).filter(|(x, y)| x != y).count() as f64 / a.len() as f64
+}
+
+/// Per-bit flip rates between exact and approximate iPE outputs
+/// (`s_bits` long, LSB first) — the Fig. 7b/c error maps.
+pub fn bit_flip_rates(exact: &[u16], approx: &[u16], s_bits: usize) -> Vec<f64> {
+    assert_eq!(exact.len(), approx.len());
+    let mut flips = vec![0usize; s_bits];
+    for (&e, &a) in exact.iter().zip(approx) {
+        let x = e ^ a;
+        for (bit, f) in flips.iter_mut().enumerate() {
+            *f += ((x >> bit) & 1) as usize;
+        }
+    }
+    flips
+        .into_iter()
+        .map(|f| f as f64 / exact.len().max(1) as f64)
+        .collect()
+}
+
+/// A fixed-width histogram over `[lo, hi)` used by the workload generator
+/// tests and the bench reports.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn var_ned_zero_for_exact() {
+        let e = vec![5, -3, 100, 0];
+        assert_eq!(var_ned(&e, &e), 0.0);
+    }
+
+    #[test]
+    fn var_ned_scale_invariant() {
+        // VAR_NED normalizes by E_max: scaling both vectors by 2 in the
+        // integer domain keeps it identical.
+        let e = vec![10, -20, 30, 5];
+        let a = vec![11, -20, 28, 5];
+        let e2: Vec<i64> = e.iter().map(|v| v * 2).collect();
+        let a2: Vec<i64> = a.iter().map(|v| v * 2).collect();
+        assert!((var_ned(&e, &a) - var_ned(&e2, &a2)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn var_ned_grows_with_error_magnitude() {
+        let e = vec![100i64; 64];
+        let small: Vec<i64> = e.iter().enumerate().map(|(i, v)| v + (i % 2) as i64).collect();
+        let big: Vec<i64> = e.iter().enumerate().map(|(i, v)| v + 10 * (i % 2) as i64).collect();
+        assert!(var_ned(&e, &big) > var_ned(&e, &small));
+    }
+
+    #[test]
+    fn variance_matches_definition() {
+        check("variance non-negative & shift-invariant", 50, |rng| {
+            let n = rng.int_in(1, 100) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0).collect();
+            let v = variance(&xs);
+            assert!(v >= 0.0);
+            let shifted: Vec<f64> = xs.iter().map(|x| x + 5.0).collect();
+            assert!((variance(&shifted) - v).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        // 2 samples, 3 classes.
+        let logits = vec![0.1, 0.9, 0.0, /* -> 1 */ 0.5, 0.2, 0.3 /* -> 0 */];
+        assert_eq!(accuracy(&logits, &[1, 0], 3), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0], 3), 0.5);
+        assert_eq!(accuracy(&logits, &[0, 1], 3), 0.0);
+    }
+
+    #[test]
+    fn bit_flip_rates_localized() {
+        let exact = vec![0u16; 100];
+        let approx: Vec<u16> = (0..100).map(|i| if i < 50 { 4 } else { 0 }).collect();
+        let rates = bit_flip_rates(&exact, &approx, 4);
+        assert_eq!(rates, vec![0.0, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = vec![0.1, 0.2, 0.5, 0.9, 1.5];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]); // 1.5 outside
+    }
+
+    #[test]
+    fn mse_zero_iff_equal() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(mse_f32(&a, &a), 0.0);
+        let b = vec![1.0f32, 2.0, 4.0];
+        assert!((mse_f32(&a, &b) - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

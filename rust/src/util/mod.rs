@@ -1,0 +1,47 @@
+//! Small shared utilities: deterministic PRNG, timing helpers, and a
+//! minimal property-testing harness (the vendored crate set has no
+//! `rand`/`proptest`, so we carry our own — see DESIGN.md §Substitutions).
+
+pub mod prng;
+pub mod proptest;
+
+pub use prng::Prng;
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// ceil(a / b) for positive integers.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Number of bits needed to represent `v` (ceil(log2(v+1))).
+pub fn bits_for(v: u64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 576), 1);
+    }
+
+    #[test]
+    fn bits_for_matches_paper_sum_width() {
+        // ceil(log2(C+1)) for C=576 -> 10-bit iPE outputs (Sec. III).
+        assert_eq!(bits_for(576), 10);
+        assert_eq!(bits_for(0), 0);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(1023), 10);
+        assert_eq!(bits_for(1024), 11);
+    }
+}

@@ -1,0 +1,62 @@
+//! Minimal property-testing harness (the vendored crate set has no
+//! `proptest`). Runs a property over many PRNG-generated cases and reports
+//! the failing seed so a failure is reproducible by construction.
+//!
+//! Usage:
+//! ```
+//! use gavina::util::proptest::check;
+//! check("add commutes", 100, |rng| {
+//!     let (a, b) = (rng.int_in(-100, 100), rng.int_in(-100, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Run `cases` random test cases of `prop`, panicking with the failing
+/// seed if any case fails an assertion.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Prng) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        // Derive the case seed from the property name so independent
+        // properties explore independent sequences.
+        let seed = name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x100000001b3)
+            })
+            .wrapping_add(case);
+        let mut rng = Prng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.int_in(0, 10);
+            assert!((0..=10).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_reports_seed() {
+        check("falsum", 50, |rng| {
+            assert!(rng.int_in(0, 10) > 10);
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Workload generators for the evaluation pipeline.
+//!
+//! * [`uniform_ip_matrices`] — the §IV-B error-characterization workload:
+//!   *"random matrices … generated using a probability distribution that
+//!   forces both the inner-products computed by the GEMM and one of the
+//!   input operands to follow an approximately uniform distribution"* —
+//!   i.e. the GEMM outputs sweep the full dynamic range instead of
+//!   concentrating around 0 like iid operands would.
+//! * [`gemm_workload`] — sized random GEMMs for throughput benches.
+//! * Synthetic-CIFAR evaluation images come from
+//!   `artifacts/dataset_eval.bin` ([`crate::dnn::load_eval_set`]), exported
+//!   by the Python build so both executors score identical pixels.
+
+use crate::arch::Precision;
+use crate::quant::quant_range;
+use crate::util::Prng;
+
+/// The paper's error-analysis operand pair: `A[C_total, L]`,
+/// `B[K, C_total]` quantized to the given precision, with per-column
+/// amplitude modulation of `A` so inner products spread ~uniformly over
+/// the representable range, and `B` itself ~uniform.
+pub fn uniform_ip_matrices(
+    c_total: usize,
+    l: usize,
+    k: usize,
+    prec: Precision,
+    rng: &mut Prng,
+) -> (Vec<i32>, Vec<i32>) {
+    let (lo_a, hi_a) = quant_range(prec.a_bits);
+    let (lo_b, hi_b) = quant_range(prec.b_bits);
+    // B: iid uniform over the full range (the "one of the input operands"
+    // clause).
+    let b: Vec<i32> = (0..k * c_total)
+        .map(|_| rng.int_in(lo_b as i64, hi_b as i64) as i32)
+        .collect();
+    // A: correlated with B so inner products sweep the range. Any A drawn
+    // independently of a zero-mean B gives E[P] = 0 with concentration
+    // around it, so uniform outputs *require* operand correlation: column
+    // l aligns with row `l mod K` of B at strength u_l ∈ [-1, 1]. The
+    // aligned output is ≈ u_l·0.7·hi_a·hi_b·C/3 — uniform in u_l over the
+    // full dynamic range — while unaligned outputs stay small, together
+    // spreading the output distribution (the paper's stated goal: observe
+    // the full dynamic range of a GEMM).
+    let mut a = vec![0i32; c_total * l];
+    for col in 0..l {
+        // Stratified alignment strength: columns sweep u ∈ (-1, 1)
+        // deterministically (plus jitter) so every output-range octile is
+        // guaranteed coverage regardless of L.
+        let u = -1.0 + 2.0 * (col as f64 + 0.2 + 0.6 * rng.next_f64()) / l as f64;
+        let k0 = col % k;
+        for row in 0..c_total {
+            let base = b[k0 * c_total + row] as f64 / hi_b.max(1) as f64;
+            let noise = 2.0 * rng.next_f64() - 1.0;
+            let val = u * (0.7 * base + 0.3 * noise) * hi_a as f64;
+            a[row * l + col] = (val.round() as i64).clamp(lo_a as i64, hi_a as i64) as i32;
+        }
+    }
+    (a, b)
+}
+
+/// Random fully-iid GEMM operands (throughput benches; value statistics
+/// don't matter there).
+pub fn gemm_workload(
+    c_total: usize,
+    l: usize,
+    k: usize,
+    prec: Precision,
+    rng: &mut Prng,
+) -> (Vec<i32>, Vec<i32>) {
+    let (lo_a, hi_a) = quant_range(prec.a_bits);
+    let (lo_b, hi_b) = quant_range(prec.b_bits);
+    let a = (0..c_total * l)
+        .map(|_| rng.int_in(lo_a as i64, hi_a as i64) as i32)
+        .collect();
+    let b = (0..k * c_total)
+        .map(|_| rng.int_in(lo_b as i64, hi_b as i64) as i32)
+        .collect();
+    (a, b)
+}
+
+/// The paper's Fig. 5 / §IV-B characterization shape: `[4608, 64] ×
+/// [64, 4608]` (8 C-tiles × 8 L-tiles × 4 K-tiles of the hardware array).
+pub const ERROR_ANALYSIS_SHAPE: (usize, usize, usize) = (4608, 64, 64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_exact;
+    use crate::stats::histogram;
+
+    #[test]
+    fn uniform_ip_spreads_the_output_range() {
+        // Inner products must cover the dynamic range much more uniformly
+        // than iid operands (which concentrate around 0).
+        let mut rng = Prng::new(1);
+        let prec = Precision::new(4, 4);
+        let (c, l, k) = (576, 64, 16);
+
+        let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+        let p = gemm_exact(&a, &b, c, l, k);
+        let maxabs = p.iter().map(|&v| (v as f64).abs()).fold(0.0, f64::max);
+        let vals: Vec<f64> = p.iter().map(|&v| v as f64 / maxabs).collect();
+        let h = histogram(&vals, -1.0, 1.0001, 8);
+        // Every octile of the normalized output range is populated with at
+        // least ~1% of the outputs (iid operands leave the tails empty).
+        let min_bin = *h.iter().min().unwrap();
+        assert!(
+            min_bin as f64 > p.len() as f64 * 0.004,
+            "output histogram too concentrated: {h:?}"
+        );
+
+        // Contrast: iid operands never reach the representable extremes —
+        // their max inner product stays far below the uniform-ip one
+        // relative to the theoretical bound C·hi_a·hi_b.
+        let bound = (c as f64) * 7.0 * 7.0;
+        let (a2, b2) = gemm_workload(c, l, k, prec, &mut rng);
+        let p2 = gemm_exact(&a2, &b2, c, l, k);
+        let maxabs2 = p2.iter().map(|&v| (v as f64).abs()).fold(0.0, f64::max);
+        assert!(
+            maxabs / bound > 2.0 * maxabs2 / bound,
+            "uniform-ip must reach further into the dynamic range: \
+             {maxabs:.0} vs iid {maxabs2:.0} of bound {bound:.0}"
+        );
+    }
+
+    #[test]
+    fn operands_respect_quant_range() {
+        let mut rng = Prng::new(2);
+        for prec in Precision::EVAL_SET {
+            let (a, b) = uniform_ip_matrices(100, 8, 4, prec, &mut rng);
+            let (lo_a, hi_a) = quant_range(prec.a_bits);
+            let (lo_b, hi_b) = quant_range(prec.b_bits);
+            assert!(a.iter().all(|&v| v >= lo_a && v <= hi_a));
+            assert!(b.iter().all(|&v| v >= lo_b && v <= hi_b));
+        }
+    }
+
+    #[test]
+    fn b_operand_is_roughly_uniform() {
+        let mut rng = Prng::new(3);
+        let prec = Precision::new(8, 8);
+        let (_, b) = uniform_ip_matrices(500, 4, 8, prec, &mut rng);
+        let vals: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        let h = histogram(&vals, -127.0, 128.0, 8);
+        let n = b.len() as f64;
+        for (i, &count) in h.iter().enumerate() {
+            let frac = count as f64 / n;
+            assert!(
+                (frac - 0.125).abs() < 0.04,
+                "B bin {i} fraction {frac} not uniform ({h:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn error_analysis_shape_tiles_the_array() {
+        let arch = crate::arch::ArchConfig::paper();
+        let (c, l, k) = ERROR_ANALYSIS_SHAPE;
+        assert_eq!(c % arch.c_dim, 0);
+        assert_eq!(l % arch.l_dim, 0);
+        assert_eq!(k % arch.k_dim, 0);
+    }
+}

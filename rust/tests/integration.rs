@@ -1,0 +1,469 @@
+//! Cross-module integration tests: the full pipeline (workload →
+//! quantization → cycle simulator → error model → metrics → power) wired
+//! together the way the benches and the CLI use it, plus artifact-backed
+//! checks that run when `make artifacts` has been executed.
+
+use std::path::{Path, PathBuf};
+
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::errmodel::{calibrate, CalibrationConfig, ErrorTables, ModelParams};
+use gavina::gls::{DelayModel, GlsContext};
+use gavina::power::PowerModel;
+use gavina::simulator::{GavinaSim, GemmJob};
+use gavina::stats::var_ned;
+use gavina::util::Prng;
+use gavina::workload::uniform_ip_matrices;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Calibrate once on the tiny array and reuse (GLS is the slow part).
+fn tiny_tables() -> (ArchConfig, ErrorTables) {
+    let arch = ArchConfig::tiny();
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        0xA11,
+    );
+    let (t, stats) = calibrate(
+        &ctx,
+        CalibrationConfig {
+            n_streams: 160,
+            seq_len: 32,
+            ..Default::default()
+        },
+    );
+    assert!(stats.samples > 0);
+    (arch, t)
+}
+
+#[test]
+fn pipeline_error_decays_exponentially_with_g() {
+    // The Fig. 6a headline on the full pipeline: VAR_NED at G=0 must
+    // exceed VAR_NED at mid G, which must exceed ~0 at G_max.
+    let (arch, tables) = tiny_tables();
+    let prec = Precision::new(4, 4);
+    let mut rng = Prng::new(1);
+    let (c, l, k) = (arch.c_dim * 3, arch.l_dim * 2, arch.k_dim * 2);
+    let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+    let exact = gavina::gemm::gemm_exact(&a, &b, c, l, k);
+
+    let var_at = |g: u32| {
+        let mut sim = GavinaSim::new(arch.clone(), Some(&tables), 7 + g as u64);
+        let rep = sim.run_gemm(&GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched: GavSchedule::two_level(prec, g),
+        });
+        var_ned(&exact, &rep.p)
+    };
+    let v0 = var_at(0);
+    let v_max = var_at(prec.max_g());
+    assert_eq!(v_max, 0.0);
+    assert!(v0 > 0.0, "fully undervolted run must show errors");
+    // Monotone trend over the sweep (tolerate sampling noise ×3).
+    let mut last = f64::INFINITY;
+    for g in 0..=prec.max_g() {
+        let v = var_at(g);
+        assert!(v <= last * 3.0 + 1e-12, "VAR_NED trend broken at g={g}");
+        last = v;
+    }
+}
+
+#[test]
+fn model_tracks_gls_on_the_pipeline() {
+    // §IV-C acceptance on the tiny array: cycle-sim with LUT injection vs
+    // cycle-sim with full GLS, same operands and schedule — VAR_NED within
+    // an order of magnitude (the paper reports 8% on the big array with a
+    // much larger calibration run).
+    let (arch, tables) = tiny_tables();
+    let ctx = GlsContext::new(
+        arch.c_dim,
+        arch.clk_period_ps() as f64,
+        DelayModel::default(),
+        0xA11, // same context family as calibration
+    );
+    let prec = Precision::new(4, 4);
+    let sched = GavSchedule::all_approx(prec);
+    let mut rng = Prng::new(3);
+    let (c, l, k) = (arch.c_dim, arch.l_dim, arch.k_dim);
+    let mut v_model_acc = 0.0;
+    let mut v_gls_acc = 0.0;
+    for trial in 0..8 {
+        let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+        let exact = gavina::gemm::gemm_exact(&a, &b, c, l, k);
+        let job = GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched: sched.clone(),
+        };
+        let mut sim_m = GavinaSim::new(arch.clone(), Some(&tables), 100 + trial);
+        v_model_acc += var_ned(&exact, &sim_m.run_gemm(&job).p);
+        let mut sim_g = GavinaSim::new_gls(arch.clone(), &ctx, 200 + trial);
+        v_gls_acc += var_ned(&exact, &sim_g.run_gemm(&job).p);
+    }
+    assert!(v_gls_acc > 0.0, "GLS backend must produce errors");
+    assert!(v_model_acc > 0.0, "model backend must produce errors");
+    let ratio = v_model_acc / v_gls_acc;
+    assert!(
+        (0.1..10.0).contains(&ratio),
+        "model/GLS VAR_NED ratio {ratio:.2} out of band"
+    );
+}
+
+#[test]
+fn power_and_error_tradeoff_is_consistent() {
+    // More guarding => less error AND more power. Both monotone.
+    let (arch, tables) = tiny_tables();
+    let power = PowerModel::paper_calibrated();
+    let prec = Precision::new(3, 3);
+    let mut rng = Prng::new(5);
+    let (c, l, k) = (arch.c_dim * 2, arch.l_dim, arch.k_dim);
+    let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+    let exact = gavina::gemm::gemm_exact(&a, &b, c, l, k);
+    let mut last_power = -1.0;
+    let mut first_err = None;
+    let mut last_err = None;
+    for g in 0..=prec.max_g() {
+        let sched = GavSchedule::two_level(prec, g);
+        let p = power.system_power_mw(&sched);
+        assert!(p >= last_power, "power must grow with G");
+        last_power = p;
+        let mut sim = GavinaSim::new(arch.clone(), Some(&tables), 11);
+        let rep = sim.run_gemm(&GemmJob {
+            a: &a,
+            b: &b,
+            c,
+            l,
+            k,
+            sched,
+        });
+        let v = var_ned(&exact, &rep.p);
+        if g == 0 {
+            first_err = Some(v);
+        }
+        last_err = Some(v);
+    }
+    assert!(first_err.unwrap() >= last_err.unwrap());
+    assert_eq!(last_err.unwrap(), 0.0);
+}
+
+#[test]
+fn errmodel_io_roundtrip_through_pipeline() {
+    let (arch, tables) = tiny_tables();
+    let dir = std::env::temp_dir().join("gavina_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tables.bin");
+    gavina::errmodel::io::save(&path, &tables, 0.35).unwrap();
+    let (loaded, v) = gavina::errmodel::io::load(&path).unwrap();
+    assert_eq!(v, 0.35);
+
+    // Same seed + same tables => identical corrupted results.
+    let prec = Precision::new(2, 2);
+    let mut rng = Prng::new(9);
+    let (c, l, k) = (arch.c_dim, arch.l_dim, arch.k_dim);
+    let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+    let job = GemmJob {
+        a: &a,
+        b: &b,
+        c,
+        l,
+        k,
+        sched: GavSchedule::all_approx(prec),
+    };
+    let run = |t: &ErrorTables| {
+        let mut sim = GavinaSim::new(arch.clone(), Some(t), 42);
+        sim.run_gemm(&job).p
+    };
+    assert_eq!(run(&tables), run(&loaded));
+}
+
+#[test]
+fn ilp_allocation_beats_uniform_on_synthetic_profile() {
+    // A skewed sensitivity profile (like Fig. 8a): ILP must achieve lower
+    // total MSE than uniform G at the same average budget.
+    let mut rng = Prng::new(13);
+    let n_layers = 12;
+    let n_g = 9;
+    let mut layers = Vec::new();
+    for li in 0..n_layers {
+        let scale = if li == 0 { 50.0 } else { rng.next_f64() * 2.0 };
+        let cost: Vec<f64> = (0..n_g)
+            .map(|g| scale * (-(g as f64) * 0.9).exp())
+            .collect();
+        layers.push(gavina::ilp::LayerChoices {
+            ops: 1.0 + rng.next_f64() * 10.0,
+            cost,
+        });
+    }
+    let uniform_g = 4u32;
+    let uniform_cost: f64 = layers.iter().map(|l| l.cost[uniform_g as usize]).sum();
+    let alloc = gavina::ilp::GavAllocator::new(layers).solve(uniform_g as f64);
+    assert!(
+        alloc.cost <= uniform_cost + 1e-12,
+        "ILP {:.4} must beat uniform {:.4}",
+        alloc.cost,
+        uniform_cost
+    );
+}
+
+#[test]
+fn dense_table_export_matches_ragged_probs() {
+    let params = ModelParams::paper(36);
+    let (_, tables) = tiny_tables();
+    assert_eq!(tables.params, params);
+    let dense = tables.to_dense();
+    let nc_full = 1 << params.n_nei;
+    for bit in 0..params.s_bits {
+        for e in (0..=params.c_dim as u16).step_by(7) {
+            for pb in 0..params.p_bins {
+                for cond in 0..params.n_cond(bit) {
+                    let idx = ((bit * (params.c_dim + 1) + e as usize) * params.p_bins + pb)
+                        * nc_full
+                        + cond;
+                    assert_eq!(dense[idx], tables.prob(bit, e, pb, cond));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact-backed integration (skipped when `make artifacts` hasn't run).
+// ---------------------------------------------------------------------
+
+#[test]
+fn trained_weights_reach_usable_accuracy() {
+    let wpath = artifacts_dir().join("weights_a8w8.bin");
+    let dpath = artifacts_dir().join("dataset_eval.bin");
+    if !wpath.exists() || !dpath.exists() {
+        eprintln!("skipping (no artifacts)");
+        return;
+    }
+    let weights = gavina::dnn::load_tensors(&wpath).unwrap();
+    let eval = gavina::dnn::load_eval_set(&dpath).unwrap();
+    let n = 64.min(eval.n);
+    let ex = gavina::dnn::Executor::new(
+        &weights,
+        0.25,
+        Precision::new(8, 8),
+        gavina::dnn::Backend::Float,
+    );
+    let out = ex.forward_batched(&eval.images[..n * 3072], n, 16);
+    let acc = gavina::stats::accuracy(&out.logits, &eval.labels[..n], out.classes);
+    assert!(
+        acc > 0.6,
+        "a8w8 QAT weights should classify well above chance: {acc}"
+    );
+}
+
+#[test]
+fn precision_ladder_accuracy_is_monotone_ish() {
+    // Paper trend: accuracy degrades as precision drops (quantization
+    // noise), a8w8 ≥ a4w4 ≥ a3w3 (a2w2 can be noisy; allow slack).
+    let dpath = artifacts_dir().join("dataset_eval.bin");
+    if !dpath.exists() {
+        return;
+    }
+    let eval = gavina::dnn::load_eval_set(&dpath).unwrap();
+    let n = 96.min(eval.n);
+    let mut accs = Vec::new();
+    for prec in [Precision::new(8, 8), Precision::new(4, 4), Precision::new(3, 3)] {
+        let wpath = artifacts_dir().join(format!("weights_{}.bin", prec.tag()));
+        if !wpath.exists() {
+            return;
+        }
+        let weights = gavina::dnn::load_tensors(&wpath).unwrap();
+        let ex = gavina::dnn::Executor::new(&weights, 0.25, prec, gavina::dnn::Backend::Float);
+        let out = ex.forward_batched(&eval.images[..n * 3072], n, 16);
+        accs.push(gavina::stats::accuracy(
+            &out.logits,
+            &eval.labels[..n],
+            out.classes,
+        ));
+    }
+    assert!(
+        accs[0] + 0.05 >= accs[1] && accs[1] + 0.08 >= accs[2],
+        "precision ladder accuracy not trending down: {accs:?}"
+    );
+}
+
+#[test]
+fn pjrt_artifact_cross_check_all_precisions() {
+    use gavina::quant::PackedPlanes;
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let mut rt = gavina::runtime::Runtime::new(&dir).unwrap();
+    let (c, l, k) = (576, 8, 16);
+    let mut rng = Prng::new(21);
+    for prec in Precision::EVAL_SET {
+        let (a, b) = gavina::workload::gemm_workload(c, l, k, prec, &mut rng);
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+        let mut a_planes = Vec::new();
+        for plane in 0..prec.a_bits {
+            let dense = pa.unpack_plane(plane); // [l, c]
+            for ci in 0..c {
+                for li in 0..l {
+                    a_planes.push(dense[li * c + ci]);
+                }
+            }
+        }
+        let mut b_planes = Vec::new();
+        for plane in 0..prec.b_bits {
+            b_planes.extend_from_slice(&pb.unpack_plane(plane));
+        }
+        let hlo = rt
+            .bitserial_gemm_tile(prec, &a_planes, &b_planes, c, l, k)
+            .unwrap();
+        let native = gavina::gemm::bitserial_gemm(&pa, &pb);
+        assert!(
+            hlo.iter().zip(&native).all(|(h, n)| *h as i64 == *n),
+            "{prec}: PJRT artifact disagrees with native GEMM"
+        );
+    }
+}
+
+#[test]
+fn errinject_artifact_matches_native_model() {
+    // The L2 JAX port of Listing 2 (AOT-lowered to errinject_a4w4) and
+    // the native Rust sampler must agree *exactly* when fed the same
+    // pre-drawn uniforms — this pins the two implementations of the
+    // paper's error model against each other across the language boundary.
+    let dir = artifacts_dir();
+    if !dir.join("errinject_a4w4.hlo.txt").exists() {
+        return;
+    }
+    let arch = ArchConfig::paper();
+    let prec = Precision::new(4, 4);
+    let params = ModelParams::paper(arch.c_dim);
+    let (s_bits, p_bins, n_nei) = (params.s_bits, params.p_bins, params.n_nei);
+    let (k, l) = (arch.k_dim, arch.l_dim);
+    let seqlen = prec.steps();
+
+    // Random-ish tables with structure.
+    let mut rng = Prng::new(77);
+    let mut tables = ErrorTables::zeroed(params);
+    for bit in 3..s_bits {
+        for e in 0..=params.c_dim as u16 {
+            for pb in 0..p_bins {
+                for cd in 0..params.n_cond(bit) {
+                    if rng.chance(0.3) {
+                        tables.set_prob(bit, e, pb, cd, rng.next_f32() * 0.4);
+                    }
+                }
+            }
+        }
+    }
+
+    // Exact sequence + uniforms + schedule.
+    let (a, b) = uniform_ip_matrices(arch.c_dim, l, k, prec, &mut rng);
+    let pa = gavina::quant::PackedPlanes::from_a_matrix(&a, arch.c_dim, l, prec.a_bits);
+    let pb = gavina::quant::PackedPlanes::from_b_matrix(&b, k, arch.c_dim, prec.b_bits);
+    let seq = gavina::gemm::ipe_sequence(&pa, &pb);
+    let uniforms: Vec<f32> = (0..seqlen * k * l * s_bits)
+        .map(|_| rng.next_f32())
+        .collect();
+    let sched = GavSchedule::two_level(prec, 3);
+    let approx_mask = sched.approx_mask();
+
+    // --- native evaluation with the *given* uniforms (ref.py semantics:
+    // uniform index [t, kl, bit]) ---
+    let mut native: Vec<Vec<u16>> = seq.clone();
+    {
+        let mut prev = vec![0u16; k * l];
+        for t in 0..seqlen {
+            let exact_step = seq[t].clone();
+            if approx_mask[t] {
+                for i in 0..k * l {
+                    let exact = exact_step[i];
+                    let pbin = params.prev_bin(prev[i]);
+                    let mut flips = 0u32;
+                    for bit in (0..s_bits).rev() {
+                        let nei = s_bits - 1 - bit;
+                        let cond = if nei == 0 {
+                            0
+                        } else {
+                            let take = n_nei.min(nei);
+                            ((flips >> (bit + 1)) & ((1 << take) - 1)) as usize
+                        };
+                        let u = uniforms[(t * k * l + i) * s_bits + bit];
+                        if u < tables.prob(bit, exact, pbin, cond) {
+                            flips |= 1 << bit;
+                        }
+                    }
+                    native[t][i] = exact ^ flips as u16;
+                }
+            }
+            prev = exact_step;
+        }
+    }
+
+    // --- artifact evaluation ---
+    // Inputs: exact i32[T,K,L], tables f32[s,C+1,pb,4], uniforms
+    // f32[T,K,L,s], approx pred[T]. The artifact's [K,L] layout is
+    // iPE-major (k, l) like ours.
+    let mut rt = gavina::runtime::Runtime::new(&dir).unwrap();
+    let exact_f: Vec<f32> = seq.iter().flat_map(|s| s.iter().map(|&v| v as f32)).collect();
+    // execute_f32 only feeds f32 literals; errinject takes i32+pred inputs,
+    // so drive it through the raw literal API here.
+    let exe = rt.load("errinject_a4w4.hlo.txt").unwrap();
+    let exact_i: Vec<i32> = exact_f.iter().map(|&v| v as i32).collect();
+    let lit_exact = xla::Literal::vec1(&exact_i)
+        .reshape(&[seqlen as i64, k as i64, l as i64])
+        .unwrap();
+    let dense = tables.to_dense();
+    let lit_tables = xla::Literal::vec1(&dense)
+        .reshape(&[
+            s_bits as i64,
+            (params.c_dim + 1) as i64,
+            p_bins as i64,
+            (1 << n_nei) as i64,
+        ])
+        .unwrap();
+    let lit_uni = xla::Literal::vec1(&uniforms)
+        .reshape(&[seqlen as i64, k as i64, l as i64, s_bits as i64])
+        .unwrap();
+    let mask_i32: Vec<i32> = approx_mask.iter().map(|&b| b as i32).collect();
+    let lit_mask = xla::Literal::vec1(&mask_i32)
+        .reshape(&[seqlen as i64])
+        .unwrap()
+        .convert(xla::PrimitiveType::Pred)
+        .unwrap();
+    let result = exe
+        .execute::<xla::Literal>(&[lit_exact, lit_tables, lit_uni, lit_mask])
+        .unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let out = result.to_tuple1().unwrap();
+    let artifact: Vec<i32> = out.to_vec::<i32>().unwrap();
+
+    let native_flat: Vec<i32> = native
+        .iter()
+        .flat_map(|s| s.iter().map(|&v| v as i32))
+        .collect();
+    assert_eq!(artifact.len(), native_flat.len());
+    let diffs = artifact
+        .iter()
+        .zip(&native_flat)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert_eq!(
+        diffs, 0,
+        "L2 artifact and native Listing-2 model disagree on {diffs} of {} values",
+        native_flat.len()
+    );
+    // Sanity: the test actually injected something.
+    let exact_flat: Vec<i32> = exact_f.iter().map(|&v| v as i32).collect();
+    assert_ne!(artifact, exact_flat, "test vacuous: no errors injected");
+}
