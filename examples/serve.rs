@@ -4,8 +4,12 @@
 //! accelerator-side energy.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve [n_requests] [g]
+//! make artifacts && cargo run --release --example serve [n_requests] [g] [threads]
 //! ```
+//!
+//! `threads` sets the intra-batch worker threads per batch executor
+//! (1 = serial, 0 = one per core) — run with 1 and then your core count
+//! to see single-thread vs multi-thread serving throughput.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -28,6 +32,10 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(prec.max_g());
+    let threads: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
     let artifacts = Path::new("artifacts");
     let weights = Arc::new(
@@ -40,11 +48,14 @@ fn main() {
 
     let mut cfg = ServeConfig::new(prec, g);
     cfg.workers = 4;
+    cfg.threads = threads;
     cfg.max_batch = 8;
     cfg.batch_timeout = Duration::from_millis(10);
     println!(
-        "starting coordinator: {} workers, max batch {}, {prec} G={g}",
-        cfg.workers, cfg.max_batch
+        "starting coordinator: {} workers × {} intra-batch threads, max batch {}, {prec} G={g}",
+        cfg.workers,
+        gavina::util::parallel::resolve_threads(cfg.threads),
+        cfg.max_batch
     );
     let coord = Coordinator::start(cfg, Arc::clone(&weights), tables.clone());
 

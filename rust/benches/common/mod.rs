@@ -2,6 +2,10 @@
 //! bench is a `harness = false` binary that prints the paper's table or
 //! figure series, plus wall-clock timing in criterion-like style).
 
+// Each bench binary compiles this module separately and uses a different
+// subset of it; unused-helper warnings are per-target noise.
+#![allow(dead_code)]
+
 use std::path::{Path, PathBuf};
 
 use gavina::arch::ArchConfig;
@@ -19,6 +23,8 @@ pub fn quick() -> bool {
 }
 
 /// Load the GLS-calibrated tables, calibrating on the spot if absent.
+/// Under `--quick` the fallback calibration is CI-sized (sparser tables,
+/// same format) and is not cached, so full runs are never polluted.
 pub fn load_tables() -> ErrorTables {
     let path = artifacts_dir().join("caltables_v035.bin");
     if let Ok((t, _)) = errmodel::io::load(&path) {
@@ -32,6 +38,15 @@ pub fn load_tables() -> ErrorTables {
         DelayModel::default(),
         0xBE4C,
     );
+    if quick() {
+        let cfg = CalibrationConfig {
+            n_streams: 192,
+            seq_len: 32,
+            ..Default::default()
+        };
+        let (t, _) = errmodel::calibrate(&ctx, cfg);
+        return t;
+    }
     let (t, _) = errmodel::calibrate(&ctx, CalibrationConfig::default());
     let _ = std::fs::create_dir_all(artifacts_dir());
     let _ = errmodel::io::save(&path, &t, 0.35);

@@ -1,11 +1,15 @@
 //! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
 //!
 //! * bit-packed binary-plane GEMM (u64 AND+popcount) — bit-MACs/ms
+//! * multithreaded bit-serial GEMM, single vs `--threads N` — bit-MACs/ms
 //! * full bit-serial tile GEMM (pack + 16 steps + recombine)
 //! * error-model injection throughput — values/ms
 //! * cycle-simulator end-to-end GEMM — MACs/ms
 //! * GLS event throughput — iPE-cycles/s
 //! * ResNet-18 image latency on the Gavina backend (model path)
+//!
+//! Flags: `--quick` (CI-sized runs), `--threads N` (worker threads for
+//! the multithreaded section; 0/absent = one per core).
 
 mod common;
 
@@ -20,8 +24,22 @@ fn rate(label: &str, amount: f64, unit: &str, secs: f64) {
     println!("[perf] {label:44} {:>12.1} {unit}/ms ({:.3} ms total)", amount / secs / 1e3, secs * 1e3);
 }
 
+/// `--threads N` flag (absent or 0 = auto). A present flag with a
+/// missing/garbled value is an error, not a silent fallback.
+fn arg_threads() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    match args.iter().position(|a| a == "--threads") {
+        None => 0,
+        Some(i) => args.get(i + 1).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+            eprintln!("--threads requires a non-negative integer value");
+            std::process::exit(2)
+        }),
+    }
+}
+
 fn main() {
     let quick = common::quick();
+    let threads = gavina::util::parallel::resolve_threads(arg_threads());
     let arch = ArchConfig::paper();
     let prec = Precision::new(4, 4);
     let mut rng = Prng::new(0x407);
@@ -40,6 +58,52 @@ fn main() {
     let bitmacs = (arch.macs_per_tile() as u64 * reps as u64) as f64;
     rate("binary plane GEMM (u64 popcount)", bitmacs, "bit-MAC", secs);
     std::hint::black_box(&out);
+
+    // ---- multithreaded bit-serial GEMM (row-block tiling) ---------------
+    {
+        let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 128) };
+        let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+        let reps = if quick { 3 } else { 10 };
+        let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
+
+        let t0 = std::time::Instant::now();
+        let mut serial = Vec::new();
+        for _ in 0..reps {
+            serial = gavina::gemm::bitserial_gemm(&pa, &pb);
+        }
+        let secs_1 = t0.elapsed().as_secs_f64();
+        rate(
+            &format!("bit-serial GEMM {c}x{l}x{k} (1 thread)"),
+            bitmacs,
+            "bit-MAC",
+            secs_1,
+        );
+
+        let t0 = std::time::Instant::now();
+        let mut tiled = Vec::new();
+        for _ in 0..reps {
+            tiled = gavina::gemm::bitserial_gemm_mt(&pa, &pb, threads);
+        }
+        let secs_t = t0.elapsed().as_secs_f64();
+        rate(
+            &format!("bit-serial GEMM {c}x{l}x{k} ({threads} threads)"),
+            bitmacs,
+            "bit-MAC",
+            secs_t,
+        );
+        println!(
+            "[perf] {:44} {:>11.2}x ({} threads vs 1)",
+            "multithreaded GEMM speedup",
+            secs_1 / secs_t.max(1e-12),
+            threads
+        );
+        assert_eq!(
+            serial, tiled,
+            "multithreaded GEMM must be bit-exact with the serial kernel"
+        );
+    }
 
     // ---- full tile: pack + steps + recombine ----------------------------
     let reps = if quick { 200 } else { 2_000 };

@@ -1,0 +1,80 @@
+//! Thread-scaling sweep of the bit-serial GEMM hot path: throughput of
+//! [`gavina::gemm::bitserial_gemm_mt`] at 1/2/4/… workers against the
+//! serial kernel, with a bit-exactness check at every point.
+//!
+//! ```bash
+//! cargo bench --bench scaling -- [--quick]
+//! ```
+
+mod common;
+
+use gavina::arch::Precision;
+use gavina::quant::PackedPlanes;
+use gavina::util::parallel::resolve_threads;
+use gavina::util::Prng;
+use gavina::workload::gemm_workload;
+
+fn main() {
+    let quick = common::quick();
+    let prec = Precision::new(4, 4);
+    let mut rng = Prng::new(0x5CA1);
+    let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 256) };
+    let reps = if quick { 3 } else { 8 };
+
+    common::section(&format!(
+        "bit-serial GEMM thread scaling ({c}x{l}x{k}, {}, {} reps)",
+        prec.tag(),
+        reps
+    ));
+    let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
+    let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+    let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+    let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
+
+    let t0 = std::time::Instant::now();
+    let mut reference = Vec::new();
+    for _ in 0..reps {
+        reference = gavina::gemm::bitserial_gemm(&pa, &pb);
+    }
+    let secs_serial = t0.elapsed().as_secs_f64();
+    println!(
+        "serial kernel: {:>10.1} bit-MAC/ms",
+        bitmacs / secs_serial / 1e3
+    );
+
+    let cores = resolve_threads(0);
+    let mut counts = vec![1usize, 2, 4, 8];
+    if !counts.contains(&cores) {
+        counts.push(cores);
+    }
+    counts.sort_unstable();
+    counts.dedup();
+
+    println!("\nthreads | bit-MAC/ms | speedup vs 1 thread | bit-exact");
+    println!("--------+------------+---------------------+----------");
+    let mut secs_1thread: Option<f64> = None;
+    for &t in &counts {
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..reps {
+            out = gavina::gemm::bitserial_gemm_mt(&pa, &pb, t);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if t == 1 {
+            secs_1thread = Some(secs);
+        }
+        let base = secs_1thread.expect("counts must start at 1 thread");
+        let exact = out == reference;
+        println!(
+            "{t:>7} | {:>10.1} | {:>19.2}x | {}",
+            bitmacs / secs / 1e3,
+            base / secs.max(1e-12),
+            if exact { "yes" } else { "NO" }
+        );
+        assert!(exact, "threads={t}: tiled kernel diverged from serial");
+    }
+    println!(
+        "\n(machine reports {cores} available cores; row-block tiling has no cross-thread\n\
+         reduction, so scaling is limited only by memory bandwidth)"
+    );
+}

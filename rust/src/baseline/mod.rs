@@ -157,6 +157,7 @@ impl Default for TedAccelerator {
 impl TedAccelerator {
     /// Run an 8-bit GEMM at supply `v`: per scalar MAC, with probability
     /// `p_err` the product is dropped (TED value-drop recovery).
+    #[allow(clippy::too_many_arguments)]
     pub fn gemm(
         &self,
         a: &[i32],
@@ -209,6 +210,7 @@ impl Default for FixedLsbTep {
 
 impl FixedLsbTep {
     /// 8-bit GEMM with undervolting on the LSB part of each product.
+    #[allow(clippy::too_many_arguments)]
     pub fn gemm(
         &self,
         a: &[i32],

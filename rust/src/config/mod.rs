@@ -199,6 +199,10 @@ pub struct RunConfig {
     pub n_eval: usize,
     /// Coordinator batch size.
     pub batch: usize,
+    /// Intra-batch worker threads for the serving coordinator (`serve`
+    /// subcommand; `0` = one per available core, `1` = serial). The
+    /// GEMM benches take their own `--threads` flag.
+    pub threads: usize,
     /// Deterministic seed.
     pub seed: u64,
 }
@@ -212,6 +216,7 @@ impl Default for RunConfig {
             width_mult: 0.25,
             n_eval: 128,
             batch: 16,
+            threads: 1,
             seed: 2025,
         }
     }
@@ -234,6 +239,11 @@ impl RunConfig {
             width_mult: cfg.float_or("run.width_mult", d.width_mult),
             n_eval: cfg.int_or("run.n_eval", d.n_eval as i64).max(0) as usize,
             batch: cfg.int_or("run.batch", d.batch as i64).max(1) as usize,
+            // Negative = invalid -> serial (1); explicit 0 stays "auto".
+            threads: cfg
+                .int_or("run.threads", d.threads as i64)
+                .try_into()
+                .unwrap_or(1),
             seed: cfg.int_or("run.seed", d.seed as i64) as u64,
         }
     }
@@ -252,6 +262,7 @@ artifacts_dir = "artifacts"
 width_mult = 0.25
 n_eval = 64
 batch = 8
+threads = 2
 seed = 7
 
 [sweep]
@@ -287,6 +298,7 @@ enabled = true
         assert_eq!(rc.precision, crate::arch::Precision::new(4, 4));
         assert_eq!(rc.g, 3);
         assert_eq!(rc.n_eval, 64);
+        assert_eq!(rc.threads, 2);
         assert_eq!(rc.seed, 7);
     }
 
@@ -296,6 +308,7 @@ enabled = true
         assert_eq!(rc.g, 1);
         assert_eq!(rc.width_mult, 0.25);
         assert_eq!(rc.batch, 16);
+        assert_eq!(rc.threads, 1);
     }
 
     #[test]

@@ -26,9 +26,10 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::{ArchConfig, GavSchedule, Precision};
-use crate::dnn::{Backend, Executor, TensorMap};
+use crate::dnn::{Backend, Executor, ForwardResult, ForwardStats, TensorMap};
 use crate::errmodel::ErrorTables;
 use crate::power::PowerModel;
+use crate::util::parallel;
 
 /// One inference request (a single 32×32×3 image).
 pub struct Request {
@@ -54,6 +55,11 @@ pub struct ServeConfig {
     pub layer_gs: Vec<u32>,
     pub width_mult: f64,
     pub workers: usize,
+    /// Intra-batch worker threads: a batch of independent requests is
+    /// split into contiguous sub-batches executed on scoped threads
+    /// (`1` = serial, `0` = one per available core). Composes with
+    /// `workers`, which parallelizes *across* batches.
+    pub threads: usize,
     pub max_batch: usize,
     pub batch_timeout: Duration,
     pub seed: u64,
@@ -67,6 +73,7 @@ impl ServeConfig {
             layer_gs: vec![uniform_g; crate::dnn::conv_layer_names().len()],
             width_mult: 0.25,
             workers: 2,
+            threads: 1,
             max_batch: 8,
             batch_timeout: Duration::from_millis(20),
             seed: 7,
@@ -248,18 +255,7 @@ fn run_batch(
         assert_eq!(r.image.len(), img_len, "bad image size");
         images.extend_from_slice(&r.image);
     }
-    let mut ex = Executor::new(
-        weights,
-        cfg.width_mult,
-        cfg.precision,
-        Backend::Gavina {
-            arch: cfg.arch.clone(),
-            tables,
-            seed: cfg.seed ^ worker_id.wrapping_mul(0xD1F),
-        },
-    );
-    ex.layer_gs = cfg.layer_gs.clone();
-    let result = ex.forward(&images, n);
+    let result = run_images(cfg, worker_id, weights, tables, &images, n);
     let now = Instant::now();
     let classes = result.classes;
     let mut lats = Vec::with_capacity(n);
@@ -275,6 +271,65 @@ fn run_batch(
     metrics.record(n, &lats, result.stats.cycles, result.stats.corrupted);
 }
 
+/// Execute `n` independent images of one batch, splitting them into
+/// contiguous sub-batches across `cfg.threads` scoped workers (each with
+/// its own deterministic `Executor`), and merge the results in request
+/// order.
+fn run_images(
+    cfg: &ServeConfig,
+    worker_id: u64,
+    weights: &TensorMap,
+    tables: Option<&ErrorTables>,
+    images: &[f32],
+    n: usize,
+) -> ForwardResult {
+    let img_len = 32 * 32 * 3;
+    let run_chunk = |chunk_id: u64, imgs: &[f32], bn: usize| {
+        let mut ex = Executor::new(
+            weights,
+            cfg.width_mult,
+            cfg.precision,
+            Backend::Gavina {
+                arch: cfg.arch.clone(),
+                tables,
+                seed: cfg.seed
+                    ^ worker_id.wrapping_mul(0xD1F)
+                    ^ chunk_id.wrapping_mul(0x9E37_79B9),
+            },
+        );
+        ex.layer_gs = cfg.layer_gs.clone();
+        ex.forward(imgs, bn)
+    };
+
+    let threads = parallel::resolve_threads(cfg.threads);
+    if threads <= 1 || n <= 1 {
+        return run_chunk(0, images, n);
+    }
+
+    // Contiguous sub-batches, one per thread, merged in request order.
+    let chunk = n.div_ceil(threads.min(n));
+    let starts: Vec<usize> = (0..n).step_by(chunk).collect();
+    let parts = parallel::parallel_map(&starts, starts.len(), |ci, &i0| {
+        let bn = chunk.min(n - i0);
+        run_chunk(ci as u64, &images[i0 * img_len..(i0 + bn) * img_len], bn)
+    });
+
+    let mut logits = Vec::with_capacity(n * 10);
+    let mut stats = ForwardStats::default();
+    let mut classes = 0;
+    for part in parts {
+        logits.extend_from_slice(&part.logits);
+        classes = part.classes;
+        stats.absorb(&part.stats);
+    }
+    ForwardResult {
+        logits,
+        n,
+        classes,
+        stats,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +343,7 @@ mod tests {
             layer_gs: vec![Precision::new(2, 2).max_g(); crate::dnn::conv_layer_names().len()],
             width_mult: 0.125,
             workers: 2,
+            threads: 1,
             max_batch: 4,
             batch_timeout: Duration::from_millis(5),
             seed: 1,
@@ -333,6 +389,68 @@ mod tests {
             assert!(resp.batch_size <= 2);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn run_images_parallel_matches_same_partition_serial() {
+        // The threaded batch executor must produce exactly the logits of
+        // serially running each sub-batch with the same per-chunk seeds —
+        // parallelism moves work to other threads, never changes it.
+        let weights = synthetic_weights(0.125, 9);
+        let mut cfg = small_cfg();
+        cfg.threads = 2;
+        let n = 5; // odd: chunks of 3 + 2
+        let img_len = 32 * 32 * 3;
+        let mut rng = Prng::new(10);
+        let images: Vec<f32> = (0..n * img_len).map(|_| rng.next_f32()).collect();
+
+        let parallel = run_images(&cfg, 0, &weights, None, &images, n);
+        assert_eq!(parallel.logits.len(), n * parallel.classes);
+
+        let chunk = n.div_ceil(cfg.threads);
+        let mut expect = Vec::new();
+        for (ci, i0) in (0..n).step_by(chunk).enumerate() {
+            let bn = chunk.min(n - i0);
+            let mut ex = Executor::new(
+                &weights,
+                cfg.width_mult,
+                cfg.precision,
+                Backend::Gavina {
+                    arch: cfg.arch.clone(),
+                    tables: None,
+                    seed: cfg.seed ^ (ci as u64).wrapping_mul(0x9E37_79B9),
+                },
+            );
+            ex.layer_gs = cfg.layer_gs.clone();
+            let out = ex.forward(&images[i0 * img_len..(i0 + bn) * img_len], bn);
+            expect.extend_from_slice(&out.logits);
+        }
+        assert_eq!(parallel.logits, expect);
+
+        // And a second identical call is bit-identical (deterministic).
+        let again = run_images(&cfg, 0, &weights, None, &images, n);
+        assert_eq!(parallel.logits, again.logits);
+        assert_eq!(parallel.stats.cycles, again.stats.cycles);
+    }
+
+    #[test]
+    fn intra_batch_threads_serve_end_to_end() {
+        let weights = Arc::new(synthetic_weights(0.125, 11));
+        let mut cfg = small_cfg();
+        cfg.threads = 2;
+        cfg.max_batch = 6;
+        let coord = Coordinator::start(cfg, Arc::clone(&weights), None);
+        let mut rng = Prng::new(12);
+        let rxs: Vec<_> = (0..9)
+            .map(|_| coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect()))
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+            assert_eq!(resp.logits.len(), 10);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 9);
     }
 
     #[test]

@@ -86,6 +86,24 @@ pub struct ForwardStats {
     pub layer_dims: Vec<(usize, usize, usize)>,
 }
 
+impl ForwardStats {
+    /// Accumulate another pass's counters. The per-layer tables are
+    /// copied from the first non-empty source only: they describe that
+    /// pass's per-layer shape (layer MACs scale with its batch size), so
+    /// treat them as representative geometry, not accumulated totals.
+    pub fn absorb(&mut self, other: &ForwardStats) {
+        self.cycles += other.cycles;
+        self.tiles += other.tiles;
+        self.corrupted += other.corrupted;
+        self.useful_macs += other.useful_macs;
+        self.executed_macs += other.executed_macs;
+        if self.layer_macs.is_empty() {
+            self.layer_macs = other.layer_macs.clone();
+            self.layer_dims = other.layer_dims.clone();
+        }
+    }
+}
+
 /// One forward pass result.
 pub struct ForwardResult {
     /// Logits `[N, classes]` row-major.
@@ -139,8 +157,14 @@ impl<'a> Executor<'a> {
 
     /// Quantize + integer-GEMM one conv; returns the dequantized output
     /// (pre-BN).
-    fn qconv(&self, x: &Tensor, conv: &str, stride: usize, layer_idx: usize,
-             stats: &mut ForwardStats) -> Tensor {
+    fn qconv(
+        &self,
+        x: &Tensor,
+        conv: &str,
+        stride: usize,
+        layer_idx: usize,
+        stats: &mut ForwardStats,
+    ) -> Tensor {
         let (wdims, wdata) = self.wf32(&format!("{conv}/w"));
         let g = ConvGeom::new(x, wdims, stride);
         let (c_dim, l_dim, k_dim) = (g.c_dim(), g.l_dim(), g.k_dim());
@@ -245,8 +269,17 @@ impl<'a> Executor<'a> {
         }
     }
 
-    fn qconv_bn(&self, x: &Tensor, conv: &str, bnn: &str, stride: usize, relu: bool,
-                layer: &mut usize, stats: &mut ForwardStats) -> Tensor {
+    #[allow(clippy::too_many_arguments)]
+    fn qconv_bn(
+        &self,
+        x: &Tensor,
+        conv: &str,
+        bnn: &str,
+        stride: usize,
+        relu: bool,
+        layer: &mut usize,
+        stats: &mut ForwardStats,
+    ) -> Tensor {
         let mut y = self.qconv(x, conv, stride, *layer, stats);
         *layer += 1;
         self.bn(&mut y, bnn);
@@ -270,13 +303,34 @@ impl<'a> Executor<'a> {
             for bi in 0..BLOCKS_PER_STAGE {
                 let s = if bi == 0 { *stride } else { 1 };
                 let p = format!("s{si}b{bi}");
-                let y = self.qconv_bn(&x, &format!("{p}/conv1"), &format!("{p}/bn1"), s,
-                                      true, &mut layer, &mut stats);
-                let mut y = self.qconv_bn(&y, &format!("{p}/conv2"), &format!("{p}/bn2"), 1,
-                                          false, &mut layer, &mut stats);
+                let y = self.qconv_bn(
+                    &x,
+                    &format!("{p}/conv1"),
+                    &format!("{p}/bn1"),
+                    s,
+                    true,
+                    &mut layer,
+                    &mut stats,
+                );
+                let mut y = self.qconv_bn(
+                    &y,
+                    &format!("{p}/conv2"),
+                    &format!("{p}/bn2"),
+                    1,
+                    false,
+                    &mut layer,
+                    &mut stats,
+                );
                 let sc = if self.weights.contains_key(&format!("{p}/down/w")) {
-                    self.qconv_bn(&x, &format!("{p}/down"), &format!("{p}/dbn"), s,
-                                  false, &mut layer, &mut stats)
+                    self.qconv_bn(
+                        &x,
+                        &format!("{p}/down"),
+                        &format!("{p}/dbn"),
+                        s,
+                        false,
+                        &mut layer,
+                        &mut stats,
+                    )
                 } else {
                     x.clone()
                 };
@@ -329,15 +383,7 @@ impl<'a> Executor<'a> {
             let r = self.forward(&images[i * img_len..(i + bn) * img_len], bn);
             logits.extend_from_slice(&r.logits);
             classes = r.classes;
-            stats.cycles += r.stats.cycles;
-            stats.tiles += r.stats.tiles;
-            stats.corrupted += r.stats.corrupted;
-            stats.useful_macs += r.stats.useful_macs;
-            stats.executed_macs += r.stats.executed_macs;
-            if stats.layer_macs.is_empty() {
-                stats.layer_macs = r.stats.layer_macs.clone();
-                stats.layer_dims = r.stats.layer_dims.clone();
-            }
+            stats.absorb(&r.stats);
             i += bn;
         }
         ForwardResult {
@@ -363,8 +409,12 @@ pub mod synth {
     pub fn synthetic_weights(width_mult: f64, seed: u64) -> TensorMap {
         let mut rng = Prng::new(seed);
         let mut m = TensorMap::new();
-        let conv = |m: &mut TensorMap, name: &str, kh: usize, cin: usize, cout: usize,
-                        rng: &mut Prng| {
+        let conv = |m: &mut TensorMap,
+                    name: &str,
+                    kh: usize,
+                    cin: usize,
+                    cout: usize,
+                    rng: &mut Prng| {
             let n = kh * kh * cin * cout;
             let std = (2.0 / (kh * kh * cin) as f64).sqrt();
             m.insert(

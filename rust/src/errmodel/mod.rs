@@ -28,7 +28,7 @@ pub use multi::MultiLevelTables;
 
 use crate::arch::GavSchedule;
 use crate::util::Prng;
-use once_cell::sync::OnceCell;
+use std::sync::OnceLock;
 
 /// Model hyper-parameters (paper: `[n_nei, p_bins] = [2, 16]`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,7 +82,7 @@ pub struct ErrorTables {
     /// sampling one value touches 1–2 cache lines instead of `s_bits`
     /// scattered tables, plus a per-block max for a zero-probability fast
     /// path.
-    sampler: OnceCell<Sampler>,
+    sampler: OnceLock<Sampler>,
 }
 
 /// See [`ErrorTables::sampler`].
@@ -106,7 +106,7 @@ impl ErrorTables {
         Self {
             params,
             tables,
-            sampler: OnceCell::new(),
+            sampler: OnceLock::new(),
         }
     }
 
@@ -161,7 +161,7 @@ impl ErrorTables {
     pub fn set_prob(&mut self, bit: usize, exact: u16, pbin: usize, cond: usize, p: f32) {
         let i = self.index(bit, exact, pbin, cond);
         self.tables[bit][i] = p;
-        self.sampler = OnceCell::new(); // invalidate the sampling layout
+        self.sampler = OnceLock::new(); // invalidate the sampling layout
     }
 
     /// Raw table slice for bit `b` (serialization, PJRT cross-checks).
@@ -170,7 +170,7 @@ impl ErrorTables {
     }
 
     pub fn bit_table_mut(&mut self, bit: usize) -> &mut [f32] {
-        self.sampler = OnceCell::new(); // invalidate the sampling layout
+        self.sampler = OnceLock::new(); // invalidate the sampling layout
         &mut self.tables[bit]
     }
 

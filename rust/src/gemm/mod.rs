@@ -19,6 +19,7 @@
 
 use crate::arch::Precision;
 use crate::quant::PackedPlanes;
+use crate::util::parallel;
 
 /// Plain integer GEMM reference: `P[K,L] = B[K,C] · A[C,L]` in i64.
 pub fn gemm_exact(a: &[i32], b: &[i32], c_dim: usize, l_dim: usize, k_dim: usize) -> Vec<i64> {
@@ -41,6 +42,35 @@ pub fn gemm_exact(a: &[i32], b: &[i32], c_dim: usize, l_dim: usize, k_dim: usize
     p
 }
 
+/// Row-block worker shared by the serial and tiled kernels: computes
+/// output rows `k0..k0 + out_block.len() / L` of one binary-plane GEMM
+/// into `out_block` (a `[rows, L]` row-major slice of the full output).
+#[inline]
+fn binary_plane_gemm_rows(
+    a: &PackedPlanes,
+    a_plane: u8,
+    b: &PackedPlanes,
+    b_plane: u8,
+    k0: usize,
+    out_block: &mut [u16],
+) {
+    let l_dim = a.n_vecs;
+    if l_dim == 0 || out_block.is_empty() {
+        return;
+    }
+    for (dk, orow) in out_block.chunks_mut(l_dim).enumerate() {
+        let bw = b.vec_words(b_plane, k0 + dk);
+        for (l, o) in orow.iter_mut().enumerate() {
+            let aw = a.vec_words(a_plane, l);
+            let mut acc = 0u32;
+            for (x, y) in aw.iter().zip(bw) {
+                acc += (x & y).count_ones();
+            }
+            *o = acc as u16;
+        }
+    }
+}
+
 /// One Parallel-Array cycle on packed planes: writes the `[K, L]`
 /// (row-major) iPE outputs into `out`. Values are in `0..=C`.
 #[inline]
@@ -51,21 +81,32 @@ pub fn binary_plane_gemm(
     b_plane: u8,
     out: &mut [u16],
 ) {
-    let (k_dim, l_dim) = (b.n_vecs, a.n_vecs);
     debug_assert_eq!(a.c_dim, b.c_dim);
-    debug_assert_eq!(out.len(), k_dim * l_dim);
-    for k in 0..k_dim {
-        let bw = b.vec_words(b_plane, k);
-        let orow = &mut out[k * l_dim..(k + 1) * l_dim];
-        for (l, o) in orow.iter_mut().enumerate() {
-            let aw = a.vec_words(a_plane, l);
-            let mut acc = 0u32;
-            for (x, y) in aw.iter().zip(bw) {
-                acc += (x & y).count_ones();
-            }
-            *o = acc as u16;
-        }
+    debug_assert_eq!(out.len(), b.n_vecs * a.n_vecs);
+    binary_plane_gemm_rows(a, a_plane, b, b_plane, 0, out);
+}
+
+/// [`binary_plane_gemm`] tiled across K-row blocks on up to `threads`
+/// scoped workers. Bit-exact with the serial kernel by construction:
+/// every output row runs the identical row worker, just on a different
+/// thread.
+pub fn binary_plane_gemm_mt(
+    a: &PackedPlanes,
+    a_plane: u8,
+    b: &PackedPlanes,
+    b_plane: u8,
+    out: &mut [u16],
+    threads: usize,
+) {
+    let l_dim = a.n_vecs;
+    debug_assert_eq!(a.c_dim, b.c_dim);
+    debug_assert_eq!(out.len(), b.n_vecs * l_dim);
+    if out.is_empty() {
+        return;
     }
+    parallel::parallel_spans_mut(out, l_dim, threads, |start, block| {
+        binary_plane_gemm_rows(a, a_plane, b, b_plane, start / l_dim, block);
+    });
 }
 
 /// The exact iPE output sequence of one tile in controller order
@@ -113,6 +154,33 @@ pub fn bitserial_gemm(a: &PackedPlanes, b: &PackedPlanes) -> Vec<i64> {
             *pi += sign * ((s as i64) << shift);
         }
     }
+    p
+}
+
+/// [`bitserial_gemm`] tiled across K-row blocks on up to `threads` scoped
+/// workers — the L3 hot path at serving scale. Each worker runs the full
+/// bit-significance loop over its own rows of `B` and writes its own rows
+/// of `P`, so there is no cross-thread reduction and the result is
+/// bit-exact with the serial path (property-tested below).
+pub fn bitserial_gemm_mt(a: &PackedPlanes, b: &PackedPlanes, threads: usize) -> Vec<i64> {
+    let prec = Precision::new(a.bits, b.bits);
+    let l_dim = a.n_vecs;
+    let mut p = vec![0i64; b.n_vecs * l_dim];
+    if p.is_empty() {
+        return p;
+    }
+    parallel::parallel_spans_mut(&mut p, l_dim, threads, |start, block| {
+        let k0 = start / l_dim;
+        let mut step = vec![0u16; block.len()];
+        for (ba, bb) in prec.step_order() {
+            binary_plane_gemm_rows(a, ba, b, bb, k0, &mut step);
+            let sign = prec.step_sign(ba, bb);
+            let shift = ba as u32 + bb as u32;
+            for (pi, &s) in block.iter_mut().zip(&step) {
+                *pi += sign * ((s as i64) << shift);
+            }
+        }
+    });
     p
 }
 
@@ -204,6 +272,48 @@ mod tests {
         // And the recombined GEMM is B·A = C (product of -1·-1 summed).
         let p = recombine(&seq, Precision::new(2, 2));
         assert!(p.iter().all(|&v| v == c as i64));
+    }
+
+    #[test]
+    fn tiled_mt_kernels_bitexact_with_serial() {
+        // The multithreaded row-block kernels must match the serial path
+        // bit for bit on random packed matrices, for thread counts below,
+        // at, and above the row count.
+        check("MT GEMM == serial GEMM", 25, |rng| {
+            let a_bits = rng.int_in(2, 8) as u8;
+            let b_bits = rng.int_in(2, 8) as u8;
+            let c = rng.int_in(1, 200) as usize;
+            let l = rng.int_in(1, 9) as usize;
+            let k = rng.int_in(1, 33) as usize;
+            let a = rand_mat(rng, c * l, a_bits);
+            let b = rand_mat(rng, k * c, b_bits);
+            let pa = PackedPlanes::from_a_matrix(&a, c, l, a_bits);
+            let pb = PackedPlanes::from_b_matrix(&b, k, c, b_bits);
+            let serial = bitserial_gemm(&pa, &pb);
+            for threads in [1usize, 2, 3, 64] {
+                assert_eq!(
+                    bitserial_gemm_mt(&pa, &pb, threads),
+                    serial,
+                    "bitserial_gemm_mt threads={threads} c={c} l={l} k={k}"
+                );
+            }
+            let mut out_s = vec![0u16; k * l];
+            let mut out_p = vec![0u16; k * l];
+            binary_plane_gemm(&pa, 0, &pb, b_bits - 1, &mut out_s);
+            binary_plane_gemm_mt(&pa, 0, &pb, b_bits - 1, &mut out_p, 4);
+            assert_eq!(out_s, out_p, "binary_plane_gemm_mt c={c} l={l} k={k}");
+        });
+    }
+
+    #[test]
+    fn mt_gemm_matches_exact_integer_gemm() {
+        let mut rng = Prng::new(77);
+        let (c, l, k) = (576, 8, 64);
+        let a = rand_mat(&mut rng, c * l, 4);
+        let b = rand_mat(&mut rng, k * c, 4);
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, 4);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, 4);
+        assert_eq!(bitserial_gemm_mt(&pa, &pb, 4), gemm_exact(&a, &b, c, l, k));
     }
 
     #[test]

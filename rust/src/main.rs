@@ -29,7 +29,7 @@ use gavina::simulator::dvs_trace;
 fn usage() -> ! {
     eprintln!(
         "usage: gavina [--config FILE] <table1|schedule|calibrate|eval|allocate|serve|selfcheck> \
-         [-p aXwY] [-g G] [--gtar G] [--quick] [-n N] [--artifacts DIR]"
+         [-p aXwY] [-g G] [--gtar G] [--quick] [-n N] [--threads N] [--artifacts DIR]"
     );
     std::process::exit(2)
 }
@@ -80,6 +80,13 @@ fn parse_args() -> Args {
             "-n" => {
                 i += 1;
                 n = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--threads" => {
+                i += 1;
+                run.threads = argv
+                    .get(i)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or_else(|| usage());
             }
             "--artifacts" => {
                 i += 1;
@@ -382,6 +389,12 @@ fn cmd_serve(run: &RunConfig, n: usize) {
     let mut cfg = ServeConfig::new(run.precision, run.g);
     cfg.width_mult = run.width_mult;
     cfg.max_batch = run.batch;
+    cfg.threads = run.threads;
+    eprintln!(
+        "coordinator: {} batch workers × {} intra-batch threads",
+        cfg.workers,
+        gavina::util::parallel::resolve_threads(cfg.threads)
+    );
     let sched = GavSchedule::two_level(run.precision, run.g);
     let coord = Coordinator::start(cfg, Arc::clone(&weights), Some(tables));
     let (images, _, n_imgs) = load_images(run, n);

@@ -1,0 +1,212 @@
+//! The real PJRT runtime (feature `pjrt`): compiles `artifacts/*.hlo.txt`
+//! on the `xla` crate's CPU client, with a per-artifact executable cache.
+//! Requires the `xla` and `anyhow` crates to be vendored into the build.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::arch::Precision;
+
+/// A loaded artifact manifest entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub signature: String,
+}
+
+/// PJRT runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Vec<ManifestEntry>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_path = artifacts_dir.join("manifest.txt");
+        let manifest = if manifest_path.exists() {
+            std::fs::read_to_string(&manifest_path)?
+                .lines()
+                .filter_map(|l| {
+                    let (name, sig) = l.split_once('\t')?;
+                    Some(ManifestEntry {
+                        name: name.to_string(),
+                        signature: sig.to_string(),
+                    })
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: HashMap::new(),
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 inputs (each `(data, dims)`), returning
+    /// the flattened f32 output (AOT functions are lowered with
+    /// `return_tuple=True`, so the result is unwrapped from a 1-tuple).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims_i64)
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run the AOT bit-serial GEMM of one hardware tile: bit-planes in
+    /// (`{0,1}` f32, shapes `[a_bits, C, L]` / `[b_bits, K, C]`), integer
+    /// GEMM out (`[K, L]`, i32 carried as f32 by the artifact wrapper).
+    pub fn bitserial_gemm_tile(
+        &mut self,
+        prec: Precision,
+        a_planes: &[f32],
+        b_planes: &[f32],
+        c_dim: usize,
+        l_dim: usize,
+        k_dim: usize,
+    ) -> Result<Vec<i32>> {
+        let name = format!("bitserial_gemm_a{}w{}.hlo.txt", prec.a_bits, prec.b_bits);
+        let a_dims = [prec.a_bits as usize, c_dim, l_dim];
+        let b_dims = [prec.b_bits as usize, k_dim, c_dim];
+        let lit_a = {
+            let d: Vec<i64> = a_dims.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(a_planes).reshape(&d)?
+        };
+        let lit_b = {
+            let d: Vec<i64> = b_dims.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(b_planes).reshape(&d)?
+        };
+        let exe = self.load(&name)?;
+        let result = exe.execute::<xla::Literal>(&[lit_a, lit_b])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PackedPlanes;
+    use crate::util::Prng;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_loads() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        assert!(rt.manifest.len() >= 9, "manifest: {:?}", rt.manifest.len());
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn binary_plane_artifact_matches_rust_gemm() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let (c, l, k) = (576, 8, 16);
+        let mut rng = Prng::new(3);
+        let a: Vec<f32> = (0..c * l).map(|_| (rng.chance(0.5) as u32) as f32).collect();
+        let b: Vec<f32> = (0..k * c).map(|_| (rng.chance(0.5) as u32) as f32).collect();
+        let out = rt
+            .execute_f32("binary_plane.hlo.txt", &[(&a, &[c, l]), (&b, &[k, c])])
+            .unwrap();
+        assert_eq!(out.len(), k * l);
+        // Reference: popcount(AND) == {0,1} matmul.
+        for ki in 0..k {
+            for li in 0..l {
+                let mut acc = 0.0f32;
+                for ci in 0..c {
+                    acc += a[ci * l + li] * b[ki * c + ci];
+                }
+                assert_eq!(out[ki * l + li], acc, "({ki},{li})");
+            }
+        }
+    }
+
+    #[test]
+    fn bitserial_tile_artifact_matches_rust_bitserial() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let (c, l, k) = (576, 8, 16);
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(4);
+        let a: Vec<i32> = (0..c * l).map(|_| rng.int_in(-8, 7) as i32).collect();
+        let b: Vec<i32> = (0..k * c).map(|_| rng.int_in(-8, 7) as i32).collect();
+        let pa = PackedPlanes::from_a_matrix(&a, c, l, 4);
+        let pb = PackedPlanes::from_b_matrix(&b, k, c, 4);
+
+        // Unpack planes to the artifact's dense {0,1} layout.
+        let mut a_planes = Vec::with_capacity(4 * c * l);
+        for plane in 0..4 {
+            // artifact wants [C, L]: transpose of unpack_plane's [L, C].
+            let dense = pa.unpack_plane(plane); // [l, c]
+            for ci in 0..c {
+                for li in 0..l {
+                    a_planes.push(dense[li * c + ci]);
+                }
+            }
+        }
+        let mut b_planes = Vec::with_capacity(4 * k * c);
+        for plane in 0..4 {
+            b_planes.extend_from_slice(&pb.unpack_plane(plane)); // [k, c]
+        }
+
+        let out = rt
+            .bitserial_gemm_tile(prec, &a_planes, &b_planes, c, l, k)
+            .unwrap();
+        let expect = crate::gemm::bitserial_gemm(&pa, &pb);
+        assert_eq!(out.len(), expect.len());
+        for (o, e) in out.iter().zip(&expect) {
+            assert_eq!(*o as i64, *e);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Std-only stand-in for the PJRT runtime: same API surface as
+//! [`super::pjrt`], but every entry point reports that the `pjrt` feature
+//! is disabled. Keeps `gavina selfcheck` and the artifact cross-check
+//! tests compiling (they skip when the runtime is unavailable).
+
+use std::path::Path;
+
+use crate::arch::Precision;
+
+/// Error carried by every stub entry point.
+#[derive(Clone, Debug)]
+pub struct RuntimeError(String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+fn unavailable() -> RuntimeError {
+    RuntimeError(
+        "PJRT runtime disabled: rebuild with `--features pjrt` (requires vendored `xla` + \
+         `anyhow` crates)"
+            .to_string(),
+    )
+}
+
+/// A loaded artifact manifest entry (mirrors the `pjrt` build).
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub signature: String,
+}
+
+/// Stub runtime: construction always fails with a clear message.
+pub struct Runtime {
+    pub manifest: Vec<ManifestEntry>,
+}
+
+impl Runtime {
+    /// Always returns `Err`: the std-only build cannot execute artifacts.
+    pub fn new(_artifacts_dir: &Path) -> Result<Self, RuntimeError> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Mirrors `pjrt::Runtime::execute_f32`; always `Err` here.
+    pub fn execute_f32(
+        &mut self,
+        _name: &str,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        Err(unavailable())
+    }
+
+    /// Mirrors `pjrt::Runtime::bitserial_gemm_tile`; always `Err` here.
+    pub fn bitserial_gemm_tile(
+        &mut self,
+        _prec: Precision,
+        _a_planes: &[f32],
+        _b_planes: &[f32],
+        _c_dim: usize,
+        _l_dim: usize,
+        _k_dim: usize,
+    ) -> Result<Vec<i32>, RuntimeError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::new(Path::new("artifacts")).err().expect("stub");
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

@@ -1,7 +1,9 @@
-//! Small shared utilities: deterministic PRNG, timing helpers, and a
-//! minimal property-testing harness (the vendored crate set has no
-//! `rand`/`proptest`, so we carry our own — see DESIGN.md §Substitutions).
+//! Small shared utilities: deterministic PRNG, timing helpers, a scoped
+//! worker pool, and a minimal property-testing harness (the vendored
+//! crate set has no `rand`/`proptest`/`rayon`, so we carry our own — see
+//! DESIGN.md §Substitutions).
 
+pub mod parallel;
 pub mod prng;
 pub mod proptest;
 
@@ -16,7 +18,7 @@ pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 /// ceil(a / b) for positive integers.
 pub fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Number of bits needed to represent `v` (ceil(log2(v+1))).

@@ -1,0 +1,206 @@
+//! Scoped worker-pool helpers over `std::thread::scope` (the vendored
+//! crate set has no `rayon`; the hot paths here are embarrassingly
+//! parallel and need nothing fancier).
+//!
+//! Design rules, shared by every consumer:
+//!
+//! * **Core-count aware**: a request of `0` threads resolves to
+//!   [`std::thread::available_parallelism`].
+//! * **Deterministic reduction order**: work is split into *contiguous*
+//!   chunks in input order and results are joined in spawn order, so the
+//!   output of a parallel run is byte-identical to the serial run — the
+//!   property the bit-exactness tests in [`crate::gemm`] pin down.
+//! * **No shared mutable state**: workers either return owned results
+//!   ([`parallel_map`]) or own disjoint `&mut` spans of the output buffer
+//!   ([`parallel_spans_mut`]).
+
+use std::num::NonZeroUsize;
+
+/// Resolve a thread-count request: `0` means one worker per available
+/// core, anything else is taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(NonZeroUsize::get)
+            .unwrap_or(1)
+    }
+}
+
+/// Map `f(index, item)` over `items` on up to `threads` scoped workers.
+///
+/// Items are split into contiguous chunks (one per worker) and results are
+/// concatenated in input order, so the output equals the serial
+/// `items.iter().enumerate().map(f)` exactly. Panics in `f` propagate.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = resolve_threads(threads).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out = Vec::with_capacity(items.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .enumerate()
+            .map(|(ci, slab)| {
+                let f = &f;
+                s.spawn(move || {
+                    slab.iter()
+                        .enumerate()
+                        .map(|(i, t)| f(ci * chunk + i, t))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
+    out
+}
+
+/// Split `data` into at most `threads` contiguous spans whose lengths are
+/// multiples of `align` and run `f(span_start, span)` on scoped workers.
+///
+/// `align` is the row stride: spans never split a row, so a worker that
+/// owns `span` owns output rows `span_start / align ..` exclusively. The
+/// partition depends only on `(data.len(), align, threads)` — determinism
+/// comes from each element being written by exactly one worker with the
+/// same values as the serial code would produce.
+///
+/// Panics if `data.len()` is not a multiple of `align`.
+pub fn parallel_spans_mut<T, F>(data: &mut [T], align: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(align > 0, "align must be positive");
+    assert_eq!(
+        data.len() % align,
+        0,
+        "data length {} not a multiple of align {align}",
+        data.len()
+    );
+    let n_units = data.len() / align;
+    let threads = resolve_threads(threads).min(n_units);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let span_units = n_units.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = (span_units * align).min(rest.len());
+            let (span, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            let f = &f;
+            let begin = start;
+            s.spawn(move || f(begin, span));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn resolve_threads_auto_and_literal() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+    }
+
+    #[test]
+    fn map_empty_input() {
+        let out: Vec<u64> = parallel_map(&[] as &[u64], 4, |_, &x| x * 2);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_single_item() {
+        let out = parallel_map(&[21u64], 8, |i, &x| x * 2 + i as u64);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn map_fewer_items_than_threads() {
+        let items = [1u64, 2, 3];
+        let out = parallel_map(&items, 16, |i, &x| (i, x * x));
+        assert_eq!(out, vec![(0, 1), (1, 4), (2, 9)]);
+    }
+
+    #[test]
+    fn map_matches_serial_deterministically() {
+        let mut rng = Prng::new(0x9A9);
+        let items: Vec<i64> = (0..257).map(|_| rng.int_in(-1000, 1000)).collect();
+        let serial: Vec<i64> = items
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| x * 3 - i as i64)
+            .collect();
+        for threads in [1, 2, 3, 4, 7, 64] {
+            let par = parallel_map(&items, threads, |i, &x| x * 3 - i as i64);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // Two identical runs agree bit-for-bit (deterministic order).
+        let a = parallel_map(&items, 4, |i, &x| x.wrapping_mul(i as i64));
+        let b = parallel_map(&items, 4, |i, &x| x.wrapping_mul(i as i64));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spans_cover_disjointly_and_match_serial() {
+        // Each worker writes start+offset into its span; the result must
+        // equal the serial fill regardless of thread count.
+        let n_rows = 37;
+        let align = 5;
+        let expect: Vec<usize> = (0..n_rows * align).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let mut data = vec![0usize; n_rows * align];
+            parallel_spans_mut(&mut data, align, threads, |start, span| {
+                for (i, v) in span.iter_mut().enumerate() {
+                    *v = start + i;
+                }
+            });
+            assert_eq!(data, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn spans_empty_and_single_row() {
+        let mut empty: Vec<u32> = Vec::new();
+        parallel_spans_mut(&mut empty, 4, 8, |_, _| panic!("must not run"));
+        let mut one = vec![0u32; 6];
+        parallel_spans_mut(&mut one, 6, 8, |start, span| {
+            assert_eq!(start, 0);
+            span.fill(7);
+        });
+        assert_eq!(one, vec![7; 6]);
+    }
+
+    #[test]
+    fn spans_start_is_row_aligned() {
+        let mut data = vec![0usize; 12 * 4];
+        parallel_spans_mut(&mut data, 4, 5, |start, span| {
+            assert_eq!(start % 4, 0, "span start must sit on a row boundary");
+            assert_eq!(span.len() % 4, 0, "span length must be whole rows");
+            span.fill(1);
+        });
+        assert!(data.iter().all(|&v| v == 1), "every cell written once");
+    }
+}

@@ -296,6 +296,10 @@ fn precision_ladder_accuracy_is_monotone_ish() {
     );
 }
 
+// Requires the real PJRT runtime: in the default build `Runtime::new`
+// is the stub that always errors, and the manifest-exists guard below
+// would not save us once `make artifacts` has run.
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_artifact_cross_check_all_precisions() {
     use gavina::quant::PackedPlanes;
@@ -334,6 +338,9 @@ fn pjrt_artifact_cross_check_all_precisions() {
     }
 }
 
+// Drives the artifact through the raw `xla` literal API, so it only
+// compiles when the real PJRT runtime (feature `pjrt`) is built.
+#[cfg(feature = "pjrt")]
 #[test]
 fn errinject_artifact_matches_native_model() {
     // The L2 JAX port of Listing 2 (AOT-lowered to errinject_a4w4) and
