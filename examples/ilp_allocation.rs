@@ -1,19 +1,22 @@
 //! Per-layer GAV allocation with the branch-and-bound ILP (paper §IV-D,
 //! Fig. 8): profile each conv layer's output perturbation under isolated
-//! undervolting, then allocate per-layer G values optimally for a sweep of
-//! average-G targets and compare against naive uniform allocation.
+//! undervolting through `Engine::profile_layers`, then allocate per-layer
+//! G values optimally for a sweep of average-G targets and compare
+//! against naive uniform allocation.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example ilp_allocation [n_images]
 //! ```
 
 use std::path::Path;
+use std::sync::Arc;
 
-use gavina::arch::{ArchConfig, Precision};
-use gavina::dnn::{self, Backend, Executor};
+use gavina::arch::Precision;
+use gavina::dnn;
+use gavina::engine::{EngineBuilder, GavPolicy};
 use gavina::errmodel;
-use gavina::ilp::{GavAllocator, LayerChoices};
-use gavina::stats::{accuracy, mse_f32};
+use gavina::ilp::GavAllocator;
+use gavina::stats::accuracy;
 
 fn main() {
     let n_images: usize = std::env::args()
@@ -22,83 +25,66 @@ fn main() {
         .unwrap_or(16);
     let prec = Precision::new(4, 4);
     let artifacts = Path::new("artifacts");
-    let weights = dnn::load_tensors(&artifacts.join("weights_a4w4.bin"))
-        .expect("run `make artifacts` first");
     let eval = dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
     let n = n_images.min(eval.n);
     let images = &eval.images[..n * 32 * 32 * 3];
     let labels = &eval.labels[..n];
     let (tables, _) = errmodel::io::load(&artifacts.join("caltables_v035.bin"))
         .expect("run `gavina calibrate` first");
-    let arch = ArchConfig::paper();
     let names = dnn::conv_layer_names();
 
+    // One validated builder: the profiling engine seeds layer `li` at
+    // `seed + li` (23 + li, the historical profile seeds), the accuracy
+    // sweep engines run at seed 31.
+    let builder = EngineBuilder::new()
+        .weights_from_file(&artifacts.join("weights_a4w4.bin"))
+        .expect("run `make artifacts` first")
+        .precision(prec)
+        .tables(Arc::new(tables));
+
     // Exact reference.
-    let ref_out =
-        Executor::new(&weights, 0.25, prec, Backend::Float).forward_batched(images, n, 16);
+    let engine_ref = builder
+        .clone()
+        .backend_float()
+        .build()
+        .expect("engine config");
+    let ref_out = engine_ref.infer_batched(images, n, 16).expect("reference");
     let ref_acc = accuracy(&ref_out.logits, labels, ref_out.classes);
     println!("exact a4w4 accuracy: {ref_acc:.4} ({n} images)\n");
 
     // --- Fig. 8a: per-layer perturbation profile -----------------------
+    let profiler = builder.clone().seed(23).build().expect("engine config");
+    let layers = profiler
+        .profile_layers(images, n, 16)
+        .expect("layer profiling");
     println!("per-layer output MSE when ONLY that layer is undervolted (Fig. 8a):");
     println!("{:>2} {:12} | G=0        G=2        G=4        G=6", "#", "layer");
-    let mut layers = Vec::new();
     for (li, name) in names.iter().enumerate() {
-        let mut cost = vec![0.0; (prec.max_g() + 1) as usize];
-        let mut macs = 0u64;
-        for g in 0..=prec.max_g() {
-            if g == prec.max_g() {
-                continue; // exact: cost 0
-            }
-            let mut ex = Executor::new(
-                &weights,
-                0.25,
-                prec,
-                Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 23 + li as u64,
-                },
-            );
-            ex.layer_gs = vec![prec.max_g(); names.len()];
-            ex.layer_gs[li] = g;
-            let out = ex.forward_batched(images, n, 16);
-            macs = out.stats.layer_macs[li];
-            cost[g as usize] = mse_f32(&ref_out.logits, &out.logits);
-        }
+        let cost = &layers[li].cost;
         println!(
             "{li:>2} {name:12} | {:9.3e}  {:9.3e}  {:9.3e}  {:9.3e}",
             cost[0], cost[2], cost[4], cost[6]
         );
-        layers.push(LayerChoices {
-            ops: macs as f64,
-            cost,
-        });
     }
 
     // --- Fig. 8b: ILP allocation vs uniform G across G_tar -------------
     let allocator = GavAllocator::new(layers);
+    let eval_builder = builder.seed(31);
     println!("\nG_tar | ILP accuracy | uniform-G accuracy | ILP allocation");
     println!("------+--------------+--------------------+----------------");
     for g_tar in [2.0, 3.0, 4.0, 5.0, 6.0] {
         let alloc = allocator.solve(g_tar);
-        let run = |gs: Vec<u32>| {
-            let mut ex = Executor::new(
-                &weights,
-                0.25,
-                prec,
-                Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 31,
-                },
-            );
-            ex.layer_gs = gs;
-            let out = ex.forward_batched(images, n, 16);
+        let run = |policy: GavPolicy| {
+            let engine = eval_builder
+                .clone()
+                .policy(policy)
+                .build()
+                .expect("engine config");
+            let out = engine.infer_batched(images, n, 16).expect("forward pass");
             accuracy(&out.logits, labels, out.classes)
         };
-        let ilp_acc = run(alloc.gs.clone());
-        let uni_acc = run(vec![g_tar.floor() as u32; names.len()]);
+        let ilp_acc = run(GavPolicy::PerLayer(alloc.gs.clone()));
+        let uni_acc = run(GavPolicy::Uniform(g_tar.floor() as u32));
         println!(
             " {g_tar:4.1} | {ilp_acc:12.4} | {uni_acc:18.4} | {:?}",
             alloc.gs

@@ -9,8 +9,11 @@
 //!    (a small array so it runs in seconds).
 //! 3. Re-run the GEMM under an aggressive GAV schedule and measure the
 //!    error (VAR_NED) and the modelled power saving.
+//! 4. Wrap the whole stack in the `Engine` facade: build once, infer a
+//!    quantized ResNet-18 batch exactly and under aggressive GAV.
 
 use gavina::arch::{ArchConfig, GavSchedule, Precision};
+use gavina::engine::{EngineBuilder, GavPolicy};
 use gavina::errmodel::{calibrate, CalibrationConfig};
 use gavina::gls::{DelayModel, GlsContext};
 use gavina::power::PowerModel;
@@ -89,4 +92,41 @@ fn main() {
         "\nundervolting boost at a2w2 (throughput unchanged): ×{:.2}",
         power.undervolting_boost(Precision::new(2, 2))
     );
+
+    // --- 4. the Engine facade: network-level inference -----------------
+    // Everything above, packaged: EngineBuilder validates weights, arch,
+    // policy and tables once; the resulting Engine is immutable and
+    // Arc-shareable (see `engine.serve(...)` for the serving layer).
+    let tables = std::sync::Arc::new(tables);
+    let builder = EngineBuilder::new()
+        .synthetic_weights(0.125, 42) // narrow ResNet-18, no artifacts needed
+        .precision(prec)
+        .arch(arch)
+        .tables(tables)
+        .seed(9);
+    let exact_engine = builder
+        .clone()
+        .policy(GavPolicy::Exact)
+        .build()
+        .expect("engine config");
+    let uv_engine = builder
+        .policy(GavPolicy::Uniform(0)) // fully undervolted
+        .build()
+        .expect("engine config");
+    let mut rng2 = Prng::new(1);
+    let images: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| rng2.next_f32()).collect();
+    let exact_net = exact_engine.infer(&images, 2).expect("exact inference");
+    let uv_net = uv_engine.infer(&images, 2).expect("undervolted inference");
+    println!(
+        "\nEngine facade: ResNet-18 logits for 2 images, exact vs fully undervolted:"
+    );
+    println!(
+        "  {} corrupted values, logit MSE {:.3e}, {} sim cycles",
+        uv_net.stats.corrupted,
+        gavina::stats::mse_f32(&exact_net.logits, &uv_net.logits),
+        uv_net.stats.cycles
+    );
+    // Malformed input is a typed error, not a panic:
+    let err = uv_engine.infer(&images[..100], 1).unwrap_err();
+    println!("  bad request -> {err}");
 }

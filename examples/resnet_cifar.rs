@@ -12,9 +12,10 @@
 //! uniform per-layer G.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use gavina::arch::{ArchConfig, GavSchedule, Precision};
-use gavina::dnn::{self, Backend, Executor};
+use gavina::arch::{GavSchedule, Precision};
+use gavina::engine::{EngineBuilder, GavPolicy};
 use gavina::errmodel;
 use gavina::power::PowerModel;
 use gavina::stats::accuracy;
@@ -29,9 +30,7 @@ fn main() {
     let artifacts = Path::new("artifacts");
 
     // Trained weights + eval set from `make artifacts`.
-    let weights = dnn::load_tensors(&artifacts.join(format!("weights_{}.bin", prec.tag())))
-        .expect("run `make artifacts` first (trains weights)");
-    let eval = dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
+    let eval = gavina::dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
     let n = n_images.min(eval.n);
     let images = &eval.images[..n * 32 * 32 * 3];
     let labels = &eval.labels[..n];
@@ -42,12 +41,23 @@ fn main() {
         .expect("run `gavina calibrate` first (GLS error-model calibration)");
     println!("error tables calibrated at V_aprox = {v_aprox} V");
 
-    let arch = ArchConfig::paper();
+    // One validated builder; each sweep point clones it with a new policy.
+    let builder = EngineBuilder::new()
+        .weights_from_file(&artifacts.join(format!("weights_{}.bin", prec.tag())))
+        .expect("run `make artifacts` first (trains weights)")
+        .precision(prec)
+        .tables(Arc::new(tables))
+        .seed(11);
     let power = PowerModel::paper_calibrated();
 
     // Float reference accuracy (quantization only, no undervolting).
-    let ex_ref = Executor::new(&weights, 0.25, prec, Backend::Float);
-    let ref_out = ex_ref.forward_batched(images, n, 16);
+    let engine_ref = builder
+        .clone()
+        .backend_float()
+        .policy(GavPolicy::Exact)
+        .build()
+        .expect("engine config");
+    let ref_out = engine_ref.infer_batched(images, n, 16).expect("reference pass");
     let ref_acc = accuracy(&ref_out.logits, labels, ref_out.classes);
     println!("\n{prec} exact (quantization-only) accuracy on {n} images: {ref_acc:.4}\n");
 
@@ -55,18 +65,12 @@ fn main() {
     println!("----+----------+---------+--------+-----------------+----------");
     for g in (0..=prec.max_g()).rev() {
         let sched = GavSchedule::two_level(prec, g);
-        let mut ex = Executor::new(
-            &weights,
-            0.25,
-            prec,
-            Backend::Gavina {
-                arch: arch.clone(),
-                tables: Some(&tables),
-                seed: 11,
-            },
-        );
-        ex.layer_gs = vec![g; dnn::conv_layer_names().len()];
-        let out = ex.forward_batched(images, n, 16);
+        let engine = builder
+            .clone()
+            .policy(GavPolicy::Uniform(g))
+            .build()
+            .expect("engine config");
+        let out = engine.infer_batched(images, n, 16).expect("forward pass");
         let acc = accuracy(&out.logits, labels, out.classes);
         let tops_w = power.tops_per_watt(&sched, 0.96);
         let energy = power.energy_mj(&sched, out.stats.cycles) / n as f64;

@@ -1,6 +1,6 @@
 //! Serving demo: the Layer-3 coordinator batching inference requests onto
-//! the GAVINA simulator — load the trained model, replay the evaluation
-//! set as a request stream, report latency percentiles, throughput and
+//! the GAVINA simulator — build an `Engine`, replay the evaluation set
+//! as a request stream, report latency percentiles, throughput and
 //! accelerator-side energy.
 //!
 //! ```bash
@@ -16,8 +16,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use gavina::arch::{GavSchedule, Precision};
-use gavina::coordinator::{Coordinator, ServeConfig};
+use gavina::coordinator::ServeOptions;
 use gavina::dnn;
+use gavina::engine::{EngineBuilder, GavPolicy};
 use gavina::errmodel;
 use gavina::power::PowerModel;
 use gavina::stats::accuracy;
@@ -38,26 +39,36 @@ fn main() {
         .unwrap_or(1);
 
     let artifacts = Path::new("artifacts");
-    let weights = Arc::new(
-        dnn::load_tensors(&artifacts.join("weights_a4w4.bin")).expect("run `make artifacts`"),
-    );
     let eval = dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
     let tables = errmodel::io::load(&artifacts.join("caltables_v035.bin"))
         .map(|(t, _)| Arc::new(t))
         .ok();
 
-    let mut cfg = ServeConfig::new(prec, g);
-    cfg.workers = 4;
-    cfg.threads = threads;
-    cfg.max_batch = 8;
-    cfg.batch_timeout = Duration::from_millis(10);
-    println!(
-        "starting coordinator: {} workers × {} intra-batch threads, max batch {}, {prec} G={g}",
-        cfg.workers,
-        gavina::util::parallel::resolve_threads(cfg.threads),
-        cfg.max_batch
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .weights_from_file(&artifacts.join("weights_a4w4.bin"))
+            .expect("run `make artifacts`")
+            .precision(prec)
+            .tables_opt(tables)
+            .policy(GavPolicy::Uniform(g))
+            .threads(threads)
+            .seed(7)
+            .build()
+            .expect("engine config"),
     );
-    let coord = Coordinator::start(cfg, Arc::clone(&weights), tables.clone());
+    let opts = ServeOptions {
+        workers: 4,
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(10),
+    };
+    println!(
+        "starting coordinator: {} workers × {} intra-batch threads, max batch {}, {prec} ({})",
+        opts.workers,
+        gavina::util::parallel::resolve_threads(engine.threads()),
+        opts.max_batch,
+        engine.policy().describe(),
+    );
+    let coord = engine.serve(opts);
 
     let n = n_req.min(eval.n);
     let t0 = Instant::now();
@@ -70,7 +81,7 @@ fn main() {
         let resp = rx
             .recv_timeout(Duration::from_secs(600))
             .expect("response");
-        logits.extend_from_slice(&resp.logits);
+        logits.extend_from_slice(&resp.expect_logits("request failed"));
     }
     let wall = t0.elapsed().as_secs_f64();
     let acc = accuracy(&logits, &eval.labels[..n], 10);
@@ -81,7 +92,10 @@ fn main() {
     let sched = GavSchedule::two_level(prec, g);
     let cycles = m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed);
 
-    println!("\nserved {n} requests in {wall:.2} s  ({:.1} img/s host)", n as f64 / wall);
+    println!(
+        "\nserved {n} requests in {wall:.2} s  ({:.1} req/s service-side)",
+        m.requests_per_sec()
+    );
     println!("accuracy under service config: {acc:.4}");
     println!(
         "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",

@@ -6,8 +6,11 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use gavina::arch::{ArchConfig, GavSchedule, Precision};
-use gavina::dnn::{self, Backend, Executor};
+use gavina::dnn;
+use gavina::engine::{EngineBuilder, GavPolicy};
 use gavina::gls::{DelayModel, GlsContext, TileGls};
 use gavina::quant::PackedPlanes;
 use gavina::stats::{accuracy, bit_flip_rates, mean, var_ned};
@@ -16,16 +19,16 @@ use gavina::workload::uniform_ip_matrices;
 
 fn main() {
     let quick = common::quick();
-    let tables = common::load_tables();
+    let tables = Arc::new(common::load_tables());
     let arch = ArchConfig::paper();
     let prec = Precision::new(4, 4);
     let sched = GavSchedule::all_approx(prec);
-    let ctx = GlsContext::new(
+    let ctx = Arc::new(GlsContext::new(
         arch.c_dim,
         arch.clk_period_ps() as f64,
         DelayModel::default(),
         17,
-    );
+    ));
 
     // ---- Fig. 7b/c: per-bit error maps, GLS vs model -------------------
     common::section("Fig. 7b/c — per-bit flip rates on iPE outputs (GLS vs model)");
@@ -117,54 +120,42 @@ fn main() {
         layer_gs[li] = g;
     }
 
-    let mut ex_model = Executor::new(
-        &weights,
-        0.25,
-        prec,
-        Backend::Gavina {
-            arch: arch.clone(),
-            tables: Some(&tables),
-            seed: 33,
-        },
-    );
-    ex_model.layer_gs = layer_gs.clone();
-    let (out_model, model_s) =
-        gavina::util::timeit(|| ex_model.forward_batched(images, n_img, n_img));
+    // One weight map shared by both engines; the GLS engine swaps only
+    // the backend — that is the whole point of the ExecBackend seam.
+    let builder = EngineBuilder::new()
+        .weights(weights)
+        .precision(prec)
+        .arch(arch.clone())
+        .policy(GavPolicy::PerLayer(layer_gs.clone()));
+    let model_engine = builder
+        .clone()
+        .tables(Arc::clone(&tables))
+        .seed(33)
+        .build()
+        .expect("engine config");
+    let gls_engine = builder
+        .backend_gls(Arc::clone(&ctx))
+        .seed(91)
+        .build()
+        .expect("engine config");
+
+    let (out_model, model_s) = gavina::util::timeit(|| {
+        model_engine
+            .infer_batched(images, n_img, n_img)
+            .expect("model-backed pass")
+    });
     let acc_model = accuracy(&out_model.logits, labels, out_model.classes);
 
-    let (acc_gls, gls_s) = gavina::util::timeit(|| {
-        gls_backed_accuracy(&weights, &ctx, &arch, prec, &layer_gs, images, labels, n_img)
+    // The *GLS itself* injects errors on every undervolted conv GEMM step
+    // — the Fig. 5 methodology at network scale (what took the paper
+    // ~2 h/image on Cadence GLS).
+    let (out_gls, gls_s) = gavina::util::timeit(|| {
+        gls_engine
+            .infer_batched(images, n_img, n_img.max(1))
+            .expect("GLS-backed pass")
     });
+    let acc_gls = accuracy(&out_gls.logits, labels, out_gls.classes);
     println!("model-based accuracy: {acc_model:.3} ({:.2} s/img)", model_s / n_img as f64);
     println!("GLS-backed accuracy:  {acc_gls:.3} ({:.2} s/img)", gls_s / n_img as f64);
     println!("(paper Fig. 7d: the two runs track closely, model slightly pessimistic)");
-}
-
-/// Run the network with the *GLS itself* injecting errors on every
-/// undervolted conv GEMM step — the Fig. 5 methodology at network scale
-/// (what took the paper ~2 h/image on Cadence GLS).
-#[allow(clippy::too_many_arguments)]
-fn gls_backed_accuracy(
-    weights: &dnn::TensorMap,
-    ctx: &GlsContext,
-    arch: &ArchConfig,
-    prec: Precision,
-    layer_gs: &[u32],
-    images: &[f32],
-    labels: &[i32],
-    n: usize,
-) -> f64 {
-    let mut ex = Executor::new(
-        weights,
-        0.25,
-        prec,
-        Backend::GavinaGls {
-            arch: arch.clone(),
-            ctx,
-            seed: 91,
-        },
-    );
-    ex.layer_gs = layer_gs.to_vec();
-    let out = ex.forward_batched(images, n, n.max(1));
-    accuracy(&out.logits, labels, out.classes)
 }

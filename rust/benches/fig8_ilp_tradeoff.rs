@@ -6,16 +6,18 @@
 
 mod common;
 
-use gavina::arch::{ArchConfig, GavSchedule, Precision};
-use gavina::dnn::{self, Backend, Executor};
-use gavina::ilp::{GavAllocator, LayerChoices};
+use std::sync::Arc;
+
+use gavina::arch::{GavSchedule, Precision};
+use gavina::dnn;
+use gavina::engine::{EngineBuilder, GavPolicy};
+use gavina::ilp::GavAllocator;
 use gavina::power::PowerModel;
-use gavina::stats::{accuracy, mse_f32};
+use gavina::stats::accuracy;
 
 fn main() {
     let quick = common::quick();
-    let tables = common::load_tables();
-    let arch = ArchConfig::paper();
+    let tables = Arc::new(common::load_tables());
     let power = PowerModel::paper_calibrated();
     let artifacts = common::artifacts_dir();
     let names = dnn::conv_layer_names();
@@ -33,41 +35,25 @@ fn main() {
     // ---- Fig. 8a: per-layer MSE profile at a4w4 -------------------------
     common::section("Fig. 8a — per-layer output MSE vs G (a4w4)");
     let prec = Precision::new(4, 4);
-    let weights = dnn::load_tensors(&artifacts.join("weights_a4w4.bin")).expect("weights");
+    let builder = EngineBuilder::new()
+        .weights_from_file(&artifacts.join("weights_a4w4.bin"))
+        .expect("weights")
+        .precision(prec)
+        .tables(Arc::clone(&tables));
     let images = &eval.images[..n_prof * 3072];
-    let ref_out =
-        Executor::new(&weights, 0.25, prec, Backend::Float).forward_batched(images, n_prof, 16);
 
-    let mut layer_choices = Vec::new();
+    // Profiling engine: layer `li` profiles at seed 71 + li (historical).
+    let profiler = builder.clone().seed(71).build().expect("engine config");
+    let layer_choices = profiler
+        .profile_layers(images, n_prof, 16)
+        .expect("layer profiling");
     println!("{:>2} {:12} | MSE at G = 0, 2, 4, 6 (0 at G_max by construction)", "#", "layer");
     for (li, name) in names.iter().enumerate() {
-        let mut cost = vec![0.0f64; (prec.max_g() + 1) as usize];
-        let mut macs = 1u64;
-        for g in 0..prec.max_g() {
-            let mut ex = Executor::new(
-                &weights,
-                0.25,
-                prec,
-                Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 71 + li as u64,
-                },
-            );
-            ex.layer_gs = vec![prec.max_g(); names.len()];
-            ex.layer_gs[li] = g;
-            let out = ex.forward_batched(images, n_prof, 16);
-            macs = out.stats.layer_macs[li].max(1);
-            cost[g as usize] = mse_f32(&ref_out.logits, &out.logits);
-        }
+        let cost = &layer_choices[li].cost;
         println!(
             "{li:>2} {name:12} | {:9.3e} {:9.3e} {:9.3e} {:9.3e}",
             cost[0], cost[2], cost[4], cost[6]
         );
-        layer_choices.push(LayerChoices {
-            ops: macs as f64,
-            cost,
-        });
     }
     // Shape check: the input layer is among the most sensitive (paper).
     let sens: Vec<f64> = layer_choices.iter().map(|l| l.cost[0] / l.ops).collect();
@@ -80,27 +66,30 @@ fn main() {
     let allocator = GavAllocator::new(layer_choices);
     let eval_images = &eval.images[..n_eval * 3072];
     let eval_labels = &eval.labels[..n_eval];
-    let exact_out = Executor::new(&weights, 0.25, prec, Backend::Float)
-        .forward_batched(eval_images, n_eval, 16);
+    let exact_engine = builder
+        .clone()
+        .backend_float()
+        .build()
+        .expect("engine config");
+    let exact_out = exact_engine
+        .infer_batched(eval_images, n_eval, 16)
+        .expect("reference");
     let exact_acc = accuracy(&exact_out.logits, eval_labels, exact_out.classes);
     println!("a4w4 exact accuracy: {exact_acc:.4} ({n_eval} images)");
     println!("\nG_tar | avg G | accuracy | Δacc    | TOP/sW | eff. boost vs guarded");
     let max_g = prec.max_g();
     let guarded_eff = power.tops_per_watt(&GavSchedule::all_guarded(prec), 0.96);
+    let sweep_builder = builder.seed(83);
     for g_tar in [3.0, 4.0, 5.0, 6.0, 7.0] {
         let alloc = allocator.solve(g_tar);
-        let mut ex = Executor::new(
-            &weights,
-            0.25,
-            prec,
-            Backend::Gavina {
-                arch: arch.clone(),
-                tables: Some(&tables),
-                seed: 83,
-            },
-        );
-        ex.layer_gs = alloc.gs.clone();
-        let out = ex.forward_batched(eval_images, n_eval, 16);
+        let engine = sweep_builder
+            .clone()
+            .policy(GavPolicy::PerLayer(alloc.gs.clone()))
+            .build()
+            .expect("engine config");
+        let out = engine
+            .infer_batched(eval_images, n_eval, 16)
+            .expect("forward pass");
         let acc = accuracy(&out.logits, eval_labels, out.classes);
         // Energy: per-layer schedules weighted by per-layer cycles — use
         // the op-weighted average G as the effective uniform schedule.
@@ -119,24 +108,31 @@ fn main() {
     // ---- Fig. 8b low-precision contrast ---------------------------------
     common::section("Fig. 8b contrast — a2w2 under the same treatment");
     let prec2 = Precision::new(2, 2);
-    if let Ok(w2) = dnn::load_tensors(&artifacts.join("weights_a2w2.bin")) {
-        let exact2 = Executor::new(&w2, 0.25, prec2, Backend::Float)
-            .forward_batched(eval_images, n_eval, 16);
+    // Missing/unreadable a2w2 weights skip this contrast section (as the
+    // pre-engine bench did) instead of killing the run after Fig. 8a.
+    if let Ok(b2) = EngineBuilder::new().weights_from_file(&artifacts.join("weights_a2w2.bin")) {
+        let builder2 = b2
+            .precision(prec2)
+            .tables(Arc::clone(&tables))
+            .seed(97);
+        let exact2 = builder2
+            .clone()
+            .backend_float()
+            .build()
+            .expect("engine config")
+            .infer_batched(eval_images, n_eval, 16)
+            .expect("reference");
         let acc2 = accuracy(&exact2.logits, eval_labels, exact2.classes);
         println!("a2w2 exact accuracy: {acc2:.4}");
         for g in (0..=prec2.max_g()).rev() {
-            let mut ex = Executor::new(
-                &w2,
-                0.25,
-                prec2,
-                Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 97,
-                },
-            );
-            ex.layer_gs = vec![g; names.len()];
-            let out = ex.forward_batched(eval_images, n_eval, 16);
+            let engine = builder2
+                .clone()
+                .policy(GavPolicy::Uniform(g))
+                .build()
+                .expect("engine config");
+            let out = engine
+                .infer_batched(eval_images, n_eval, 16)
+                .expect("forward pass");
             let acc = accuracy(&out.logits, eval_labels, out.classes);
             println!(
                 "  uniform G={g}: accuracy {acc:.4} (Δ {:+.4})",

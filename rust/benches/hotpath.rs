@@ -191,19 +191,21 @@ fn main() {
     if let Ok(weights) = gavina::dnn::load_tensors(&artifacts.join("weights_a4w4.bin")) {
         if let Ok(eval) = gavina::dnn::load_eval_set(&artifacts.join("dataset_eval.bin")) {
             let n = if quick { 2 } else { 8 };
-            let mut ex = gavina::dnn::Executor::new(
-                &weights,
-                0.25,
-                prec,
-                gavina::dnn::Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 3,
-                },
-            );
-            ex.layer_gs = vec![5; gavina::dnn::conv_layer_names().len()];
+            let engine = gavina::engine::EngineBuilder::new()
+                .weights(weights)
+                .precision(prec)
+                .arch(arch.clone())
+                .tables(std::sync::Arc::new(tables))
+                .seed(3)
+                .policy(gavina::engine::GavPolicy::Uniform(5))
+                .build()
+                .expect("engine config");
             let t0 = std::time::Instant::now();
-            std::hint::black_box(ex.forward_batched(&eval.images[..n * 3072], n, n));
+            std::hint::black_box(
+                engine
+                    .infer_batched(&eval.images[..n * 3072], n, n)
+                    .expect("forward pass"),
+            );
             let secs = t0.elapsed().as_secs_f64();
             println!(
                 "[perf] {:44} {:>12.1} ms/image (paper GPU model: 200 ms/img)",

@@ -1,6 +1,9 @@
 //! Run-configuration system: a TOML-subset parser (the vendored crate set
-//! has no `toml`/`serde` stack) plus the typed [`RunConfig`] the CLI and
-//! the serving coordinator consume.
+//! has no `toml`/`serde` stack) plus the typed [`RunConfig`] the CLI
+//! consumes. The `[engine]` and `[serve]` sections feed the typed loaders
+//! [`crate::engine::EngineBuilder::apply_config`] and
+//! [`crate::coordinator::ServeOptions::from_config`]; duplicate keys are
+//! parse errors, and unknown keys in those sections are config errors.
 //!
 //! Supported syntax: `[section]` headers, `key = value` with string
 //! (`"…"`), integer, float, boolean and flat array values, `#` comments.
@@ -152,7 +155,14 @@ pub fn parse(text: &str) -> Result<Config, ParseError> {
         } else {
             format!("{section}.{key}")
         };
-        cfg.values.insert(full_key, parsed);
+        if cfg.values.insert(full_key.clone(), parsed).is_some() {
+            // Silent last-write-wins hides typos and merge accidents;
+            // duplicates are a hard parse error with the offending line.
+            return Err(ParseError {
+                line: line_no,
+                message: format!("duplicate key '{full_key}'"),
+            });
+        }
     }
     Ok(cfg)
 }
@@ -165,6 +175,19 @@ impl Config {
 
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
+    }
+
+    /// Iterate `(suffix, value)` over every key starting with `prefix`
+    /// (e.g. `keys_with_prefix("engine.")` yields `("g", …)` for
+    /// `engine.g`). Section loaders use this to reject unknown keys
+    /// instead of silently defaulting on typos.
+    pub fn keys_with_prefix<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a Value)> {
+        self.values
+            .iter()
+            .filter_map(move |(k, v)| k.strip_prefix(prefix).map(|s| (s, v)))
     }
 
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -223,28 +246,39 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Load from a parsed config (`[run]` section), falling back to
-    /// defaults per key.
+    /// Load from a parsed config. The canonical section for
+    /// model/accelerator knobs is `[engine]` (the same surface
+    /// [`crate::engine::EngineBuilder::apply_config`] consumes); legacy
+    /// `[run]` keys are honored as a fallback so existing configs keep
+    /// working. CLI-only keys (`artifacts_dir`, `n_eval`, `batch`) live
+    /// under `[run]`.
     pub fn from_config(cfg: &Config) -> Self {
         let d = Self::default();
-        let precision = cfg
-            .get("run.precision")
+        // `engine.key` wins over legacy `run.key`.
+        let pick = |key: &str| {
+            cfg.get(&format!("engine.{key}"))
+                .or_else(|| cfg.get(&format!("run.{key}")))
+        };
+        let precision = pick("precision")
             .and_then(Value::as_str)
             .and_then(crate::arch::Precision::parse)
             .unwrap_or(d.precision);
         Self {
             precision,
-            g: cfg.int_or("run.g", d.g as i64).max(0) as u32,
+            g: pick("g").and_then(Value::as_int).unwrap_or(d.g as i64).max(0) as u32,
             artifacts_dir: cfg.str_or("run.artifacts_dir", "artifacts").into(),
-            width_mult: cfg.float_or("run.width_mult", d.width_mult),
+            width_mult: pick("width_mult")
+                .and_then(Value::as_float)
+                .unwrap_or(d.width_mult),
             n_eval: cfg.int_or("run.n_eval", d.n_eval as i64).max(0) as usize,
             batch: cfg.int_or("run.batch", d.batch as i64).max(1) as usize,
             // Negative = invalid -> serial (1); explicit 0 stays "auto".
-            threads: cfg
-                .int_or("run.threads", d.threads as i64)
+            threads: pick("threads")
+                .and_then(Value::as_int)
+                .unwrap_or(d.threads as i64)
                 .try_into()
                 .unwrap_or(1),
-            seed: cfg.int_or("run.seed", d.seed as i64) as u64,
+            seed: pick("seed").and_then(Value::as_int).unwrap_or(d.seed as i64) as u64,
         }
     }
 }
@@ -325,5 +359,46 @@ enabled = true
     fn comments_and_blank_lines_ignored() {
         let cfg = parse("# top\n\nx = 1 # trailing\n").unwrap();
         assert_eq!(cfg.int_or("x", 0), 1);
+    }
+
+    #[test]
+    fn duplicate_keys_are_line_numbered_errors() {
+        // Same key twice in one section: the old parser silently kept the
+        // last write; now it is a hard error naming the line.
+        let err = parse("[run]\ng = 1\nseed = 2\ng = 3\n").unwrap_err();
+        assert_eq!(err.line, 4);
+        assert!(err.message.contains("duplicate key 'run.g'"), "{}", err.message);
+        // Same key reached through a re-opened section header.
+        let err = parse("[a]\nx = 1\n[b]\ny = 2\n[a]\nx = 9\n").unwrap_err();
+        assert_eq!(err.line, 6);
+        // Same bare key outside any section.
+        let err = parse("x = 1\nx = 2\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("duplicate key 'x'"));
+    }
+
+    #[test]
+    fn keys_with_prefix_strips_and_filters() {
+        let cfg = parse(SAMPLE).unwrap();
+        let sweep: Vec<&str> = cfg.keys_with_prefix("sweep.").map(|(k, _)| k).collect();
+        assert_eq!(sweep, vec!["enabled", "g_values", "voltages"]);
+        let none: Vec<_> = cfg.keys_with_prefix("nosuch.").collect();
+        assert!(none.is_empty());
+        // Values come through with the suffix key.
+        let (k, v) = cfg
+            .keys_with_prefix("sweep.")
+            .find(|(k, _)| *k == "enabled")
+            .unwrap();
+        assert_eq!(k, "enabled");
+        assert_eq!(v.as_bool(), Some(true));
+    }
+
+    #[test]
+    fn engine_section_overrides_legacy_run_keys() {
+        let cfg = parse("[run]\ng = 1\nseed = 2\n[engine]\ng = 5\nthreads = 4\n").unwrap();
+        let rc = RunConfig::from_config(&cfg);
+        assert_eq!(rc.g, 5); // engine.* wins
+        assert_eq!(rc.seed, 2); // run.* fallback still honored
+        assert_eq!(rc.threads, 4);
     }
 }

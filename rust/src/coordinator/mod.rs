@@ -6,30 +6,36 @@
 //!
 //! ```text
 //! clients ──▶ batcher thread ──▶ worker pool (N threads) ──▶ responses
-//!              (size/deadline       each owns an Executor
-//!               batching)           over shared weights+tables)
+//!              (size/deadline       each shares one Arc<Engine>
+//!               batching)           over weights+tables)
 //! ```
 //!
 //! * The **batcher** groups single-image requests into GAVINA-sized
 //!   batches (bounded by `max_batch` or `batch_timeout`), because the
 //!   accelerator amortizes its A0/B0 plane streams over the `L` dimension.
-//! * **Workers** run the quantized forward pass on the cycle-level
-//!   simulator backend with the service's GAV configuration (per-layer G
-//!   allocation from the ILP, or a uniform G).
-//! * **Metrics** track end-to-end latency percentiles, throughput, and
-//!   the accelerator-side counters (simulated cycles, energy, corrupted
-//!   values) — the numbers the `serve` example reports.
+//! * **Workers** run the quantized forward pass through a shared
+//!   [`Engine`] (its [`GavPolicy`](crate::engine::GavPolicy) decides the
+//!   per-layer G allocation; its `threads` knob parallelizes *inside* a
+//!   batch, while `workers` parallelizes *across* batches). A malformed
+//!   request gets a per-request error [`Response`] — workers never die on
+//!   bad input.
+//! * **Metrics** track end-to-end latency percentiles (bounded
+//!   reservoir), throughput, and the accelerator-side counters (simulated
+//!   cycles, energy, corrupted values) — the numbers the `serve` example
+//!   reports.
+//!
+//! Start a service with [`Engine::serve`] and [`ServeOptions`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::arch::{ArchConfig, GavSchedule, Precision};
-use crate::dnn::{Backend, Executor, ForwardResult, ForwardStats, TensorMap};
-use crate::errmodel::ErrorTables;
+use crate::arch::GavSchedule;
+use crate::config::Config;
+use crate::dnn::IMAGE_LEN;
+use crate::engine::{Engine, GavinaError};
 use crate::power::PowerModel;
-use crate::util::parallel;
 
 /// One inference request (a single 32×32×3 image).
 pub struct Request {
@@ -38,78 +44,211 @@ pub struct Request {
     pub resp: Sender<Response>,
 }
 
-/// The response: class logits plus tracing info.
+/// The response: class logits (or a typed error) plus tracing info.
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub logits: Vec<f32>,
+    /// Logits on success; a [`GavinaError`] when this request (or its
+    /// batch) could not be executed. The service stays up either way.
+    pub result: Result<Vec<f32>, GavinaError>,
     pub latency: Duration,
     pub batch_size: usize,
 }
 
-/// Service configuration.
-#[derive(Clone)]
-pub struct ServeConfig {
-    pub arch: ArchConfig,
-    pub precision: Precision,
-    /// Per-layer G allocation (length = number of conv layers).
-    pub layer_gs: Vec<u32>,
-    pub width_mult: f64,
-    pub workers: usize,
-    /// Intra-batch worker threads: a batch of independent requests is
-    /// split into contiguous sub-batches executed on scoped threads
-    /// (`1` = serial, `0` = one per available core). Composes with
-    /// `workers`, which parallelizes *across* batches.
-    pub threads: usize,
-    pub max_batch: usize,
-    pub batch_timeout: Duration,
-    pub seed: u64,
+impl Response {
+    /// The logits, or a panic with the typed error (tests / demos).
+    pub fn expect_logits(self, msg: &str) -> Vec<f32> {
+        match self.result {
+            Ok(l) => l,
+            Err(e) => panic!("{msg}: {e}"),
+        }
+    }
 }
 
-impl ServeConfig {
-    pub fn new(precision: Precision, uniform_g: u32) -> Self {
+/// Service configuration: the knobs of the batching layer. Everything
+/// model/accelerator-side (precision, G policy, error tables, intra-batch
+/// threads) lives on the [`Engine`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Batch worker threads (each drains whole batches).
+    pub workers: usize,
+    /// Largest batch handed to one worker.
+    pub max_batch: usize,
+    /// Deadline after which a partial batch is flushed.
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
         Self {
-            arch: ArchConfig::paper(),
-            precision,
-            layer_gs: vec![uniform_g; crate::dnn::conv_layer_names().len()],
-            width_mult: 0.25,
             workers: 2,
-            threads: 1,
             max_batch: 8,
             batch_timeout: Duration::from_millis(20),
-            seed: 7,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Load from the `[serve]` section of a parsed config. Recognized
+    /// keys: `workers`, `max_batch`, `batch_timeout_ms`; unknown
+    /// `serve.*` keys are a [`GavinaError::Config`].
+    pub fn from_config(cfg: &Config) -> Result<Self, GavinaError> {
+        const KNOWN: &[&str] = &["workers", "max_batch", "batch_timeout_ms"];
+        for (key, _) in cfg.keys_with_prefix("serve.") {
+            if !KNOWN.contains(&key) {
+                return Err(GavinaError::Config(format!(
+                    "unknown [serve] key '{key}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let d = Self::default();
+        let int = |key: &str, default: i64| -> Result<i64, GavinaError> {
+            match cfg.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_int()
+                    .filter(|&i| i >= 1)
+                    .ok_or_else(|| GavinaError::Config(format!("{key} must be an integer ≥ 1"))),
+            }
+        };
+        Ok(Self {
+            workers: int("serve.workers", d.workers as i64)? as usize,
+            max_batch: int("serve.max_batch", d.max_batch as i64)? as usize,
+            batch_timeout: Duration::from_millis(int(
+                "serve.batch_timeout_ms",
+                d.batch_timeout.as_millis() as i64,
+            )? as u64),
+        })
+    }
+}
+
+/// Latency reservoir capacity: percentiles are computed over a uniform
+/// sample of at most this many observations, so a long-running service
+/// holds O(1) memory instead of one `u64` per request ever served.
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// Uniform reservoir sample of latency observations (Vitter's Algorithm
+/// R with a cheap xorshift index source — metrics, not cryptography).
+struct Reservoir {
+    buf: Vec<u64>,
+    seen: u64,
+    rng: u64,
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            seen: 0,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.buf.len() < LATENCY_RESERVOIR {
+            self.buf.push(v);
+            return;
+        }
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        let j = self.rng % self.seen;
+        if (j as usize) < LATENCY_RESERVOIR {
+            self.buf[j as usize] = v;
         }
     }
 }
 
 /// Aggregated service metrics.
-#[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Requests rejected with an error [`Response`] (bad shape, backend
+    /// failure).
+    pub errors: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub corrupted: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<Reservoir>,
+    /// Running true maximum — the one statistic a uniform reservoir
+    /// systematically loses once eviction starts.
+    max_latency_us: AtomicU64,
+    started: Instant,
+    last_record: Mutex<Option<Instant>>,
 }
 
 impl Metrics {
+    fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+            latencies_us: Mutex::new(Reservoir::new()),
+            max_latency_us: AtomicU64::new(0),
+            started: Instant::now(),
+            last_record: Mutex::new(None),
+        }
+    }
+
     fn record(&self, n_req: usize, lat: &[Duration], cycles: u64, corrupted: u64) {
         self.requests.fetch_add(n_req as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         self.corrupted.fetch_add(corrupted, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
-        l.extend(lat.iter().map(|d| d.as_micros() as u64));
+        {
+            let mut l = self.latencies_us.lock().unwrap();
+            for d in lat {
+                let us = d.as_micros() as u64;
+                self.max_latency_us.fetch_max(us, Ordering::Relaxed);
+                l.push(us);
+            }
+        }
+        *self.last_record.lock().unwrap() = Some(Instant::now());
     }
 
-    /// (p50, p95, max) latency in microseconds.
+    fn record_errors(&self, n: usize) {
+        self.errors.fetch_add(n as u64, Ordering::Relaxed);
+        *self.last_record.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// (p50, p95, max) latency in microseconds. The percentiles come
+    /// from the bounded reservoir sample; the max is the exact running
+    /// maximum over every recorded request.
     pub fn latency_percentiles(&self) -> (u64, u64, u64) {
-        let mut l = self.latencies_us.lock().unwrap().clone();
+        let mut l = {
+            // Copy only the bounded reservoir (≤ LATENCY_RESERVOIR), never
+            // an unbounded history.
+            self.latencies_us.lock().unwrap().buf.clone()
+        };
         if l.is_empty() {
             return (0, 0, 0);
         }
         l.sort_unstable();
         let pick = |q: f64| l[((l.len() - 1) as f64 * q) as usize];
-        (pick(0.50), pick(0.95), *l.last().unwrap())
+        (
+            pick(0.50),
+            pick(0.95),
+            self.max_latency_us.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Served requests per second, from coordinator start to the last
+    /// recorded batch (0.0 before anything completes).
+    pub fn requests_per_sec(&self) -> f64 {
+        let last = *self.last_record.lock().unwrap();
+        match last {
+            Some(t) => {
+                let secs = t.duration_since(self.started).as_secs_f64();
+                if secs > 0.0 {
+                    self.requests.load(Ordering::Relaxed) as f64 / secs
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        }
     }
 
     /// Accelerator-side energy for the served traffic [mJ].
@@ -132,26 +271,20 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the batcher + worker pool over shared weights and calibrated
-    /// error tables.
-    pub fn start(
-        cfg: ServeConfig,
-        weights: Arc<TensorMap>,
-        tables: Option<Arc<ErrorTables>>,
-    ) -> Self {
-        let metrics = Arc::new(Metrics::default());
+    /// Start the batcher + worker pool over a shared engine (also
+    /// reachable as [`Engine::serve`]).
+    pub fn start(engine: Arc<Engine>, opts: ServeOptions) -> Self {
+        let metrics = Arc::new(Metrics::new());
         let (tx, rx) = channel::<BatcherMsg>();
         let (work_tx, work_rx) = channel::<Vec<Request>>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
         // Worker pool.
         let mut workers = Vec::new();
-        for wi in 0..cfg.workers.max(1) {
+        for wi in 0..opts.workers.max(1) {
             let work_rx = Arc::clone(&work_rx);
-            let weights = Arc::clone(&weights);
-            let tables = tables.clone();
+            let engine = Arc::clone(&engine);
             let metrics = Arc::clone(&metrics);
-            let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
                 loop {
                     let batch = {
@@ -162,13 +295,13 @@ impl Coordinator {
                     if batch.is_empty() {
                         break;
                     }
-                    run_batch(&cfg, wi as u64, &weights, tables.as_deref(), &metrics, batch);
+                    run_batch(&engine, wi as u64, &metrics, batch);
                 }
             }));
         }
 
         // Batcher.
-        let batcher_cfg = cfg.clone();
+        let batcher_opts = opts.clone();
         let batcher = std::thread::spawn(move || {
             let mut pending: Vec<Request> = Vec::new();
             let mut deadline: Option<Instant> = None;
@@ -179,10 +312,10 @@ impl Coordinator {
                 match rx.recv_timeout(timeout) {
                     Ok(BatcherMsg::Req(r)) => {
                         if pending.is_empty() {
-                            deadline = Some(Instant::now() + batcher_cfg.batch_timeout);
+                            deadline = Some(Instant::now() + batcher_opts.batch_timeout);
                         }
                         pending.push(r);
-                        if pending.len() >= batcher_cfg.max_batch {
+                        if pending.len() >= batcher_opts.max_batch {
                             let _ = work_tx.send(std::mem::take(&mut pending));
                             deadline = None;
                         }
@@ -192,7 +325,7 @@ impl Coordinator {
                             let _ = work_tx.send(std::mem::take(&mut pending));
                         }
                         // Poison the pool: one empty batch per worker.
-                        for _ in 0..batcher_cfg.workers.max(1) {
+                        for _ in 0..batcher_opts.workers.max(1) {
                             let _ = work_tx.send(Vec::new());
                         }
                         break;
@@ -240,150 +373,169 @@ impl Coordinator {
     }
 }
 
-fn run_batch(
-    cfg: &ServeConfig,
-    worker_id: u64,
-    weights: &TensorMap,
-    tables: Option<&ErrorTables>,
-    metrics: &Metrics,
-    batch: Vec<Request>,
-) {
-    let n = batch.len();
-    let img_len = 32 * 32 * 3;
-    let mut images = Vec::with_capacity(n * img_len);
-    for r in &batch {
-        assert_eq!(r.image.len(), img_len, "bad image size");
+fn run_batch(engine: &Engine, worker_id: u64, metrics: &Metrics, batch: Vec<Request>) {
+    // Malformed requests get an error Response and never reach the
+    // executor; the rest of the batch proceeds normally. Worker threads
+    // must survive arbitrary client input.
+    let (good, bad): (Vec<Request>, Vec<Request>) = batch
+        .into_iter()
+        .partition(|r| r.image.len() == IMAGE_LEN);
+    // Every response from one physical batch reports the same
+    // batch_size: the number of requests that actually executed.
+    let n = good.len();
+    if !bad.is_empty() {
+        metrics.record_errors(bad.len());
+        for r in bad {
+            let latency = r.submitted.elapsed();
+            let _ = r.resp.send(Response {
+                result: Err(GavinaError::Shape {
+                    what: "request image".into(),
+                    expected: IMAGE_LEN,
+                    got: r.image.len(),
+                }),
+                latency,
+                batch_size: n,
+            });
+        }
+    }
+    if good.is_empty() {
+        return;
+    }
+    let mut images = Vec::with_capacity(n * IMAGE_LEN);
+    for r in &good {
         images.extend_from_slice(&r.image);
     }
-    let result = run_images(cfg, worker_id, weights, tables, &images, n);
-    let now = Instant::now();
-    let classes = result.classes;
-    let mut lats = Vec::with_capacity(n);
-    for (i, r) in batch.into_iter().enumerate() {
-        let latency = now.duration_since(r.submitted);
-        lats.push(latency);
-        let _ = r.resp.send(Response {
-            logits: result.logits[i * classes..(i + 1) * classes].to_vec(),
-            latency,
-            batch_size: n,
-        });
-    }
-    metrics.record(n, &lats, result.stats.cycles, result.stats.corrupted);
-}
-
-/// Execute `n` independent images of one batch, splitting them into
-/// contiguous sub-batches across `cfg.threads` scoped workers (each with
-/// its own deterministic `Executor`), and merge the results in request
-/// order.
-fn run_images(
-    cfg: &ServeConfig,
-    worker_id: u64,
-    weights: &TensorMap,
-    tables: Option<&ErrorTables>,
-    images: &[f32],
-    n: usize,
-) -> ForwardResult {
-    let img_len = 32 * 32 * 3;
-    let run_chunk = |chunk_id: u64, imgs: &[f32], bn: usize| {
-        let mut ex = Executor::new(
-            weights,
-            cfg.width_mult,
-            cfg.precision,
-            Backend::Gavina {
-                arch: cfg.arch.clone(),
-                tables,
-                seed: cfg.seed
-                    ^ worker_id.wrapping_mul(0xD1F)
-                    ^ chunk_id.wrapping_mul(0x9E37_79B9),
-            },
-        );
-        ex.layer_gs = cfg.layer_gs.clone();
-        ex.forward(imgs, bn)
-    };
-
-    let threads = parallel::resolve_threads(cfg.threads);
-    if threads <= 1 || n <= 1 {
-        return run_chunk(0, images, n);
-    }
-
-    // Contiguous sub-batches, one per thread, merged in request order.
-    let chunk = n.div_ceil(threads.min(n));
-    let starts: Vec<usize> = (0..n).step_by(chunk).collect();
-    let parts = parallel::parallel_map(&starts, starts.len(), |ci, &i0| {
-        let bn = chunk.min(n - i0);
-        run_chunk(ci as u64, &images[i0 * img_len..(i0 + bn) * img_len], bn)
-    });
-
-    let mut logits = Vec::with_capacity(n * 10);
-    let mut stats = ForwardStats::default();
-    let mut classes = 0;
-    for part in parts {
-        logits.extend_from_slice(&part.logits);
-        classes = part.classes;
-        stats.absorb(&part.stats);
-    }
-    ForwardResult {
-        logits,
-        n,
-        classes,
-        stats,
+    match engine.infer_parallel(&images, n, worker_id.wrapping_mul(0xD1F)) {
+        Ok(result) => {
+            let now = Instant::now();
+            let classes = result.classes;
+            let mut lats = Vec::with_capacity(n);
+            for (i, r) in good.into_iter().enumerate() {
+                let latency = now.duration_since(r.submitted);
+                lats.push(latency);
+                let _ = r.resp.send(Response {
+                    result: Ok(result.logits[i * classes..(i + 1) * classes].to_vec()),
+                    latency,
+                    batch_size: n,
+                });
+            }
+            metrics.record(n, &lats, result.stats.cycles, result.stats.corrupted);
+        }
+        Err(e) => {
+            // Shouldn't happen (shapes were validated above), but a
+            // failing backend must not kill the worker either.
+            metrics.record_errors(n);
+            for r in good {
+                let latency = r.submitted.elapsed();
+                let _ = r.resp.send(Response {
+                    result: Err(e.clone()),
+                    latency,
+                    batch_size: n,
+                });
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dnn::exec::synth::synthetic_weights;
+    use crate::arch::{ArchConfig, Precision};
+    use crate::engine::{EngineBuilder, GavPolicy};
     use crate::util::Prng;
 
-    fn small_cfg() -> ServeConfig {
-        ServeConfig {
-            arch: ArchConfig::tiny(),
-            precision: Precision::new(2, 2),
-            layer_gs: vec![Precision::new(2, 2).max_g(); crate::dnn::conv_layer_names().len()],
-            width_mult: 0.125,
+    fn small_engine(threads: usize) -> Arc<Engine> {
+        Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 1)
+                .precision(Precision::new(2, 2))
+                .arch(ArchConfig::tiny())
+                .policy(GavPolicy::Exact)
+                .seed(1)
+                .threads(threads)
+                .build()
+                .unwrap(),
+        )
+    }
+
+    fn small_opts() -> ServeOptions {
+        ServeOptions {
             workers: 2,
-            threads: 1,
             max_batch: 4,
             batch_timeout: Duration::from_millis(5),
-            seed: 1,
         }
+    }
+
+    fn rand_image(rng: &mut Prng) -> Vec<f32> {
+        (0..IMAGE_LEN).map(|_| rng.next_f32()).collect()
     }
 
     #[test]
     fn serves_requests_end_to_end() {
-        let weights = Arc::new(synthetic_weights(0.125, 1));
-        let coord = Coordinator::start(small_cfg(), Arc::clone(&weights), None);
+        let coord = small_engine(1).serve(small_opts());
         let mut rng = Prng::new(2);
         let mut rxs = Vec::new();
         for _ in 0..10 {
-            let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.next_f32()).collect();
-            rxs.push(coord.submit(img));
+            rxs.push(coord.submit(rand_image(&mut rng)));
         }
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
-            assert_eq!(resp.logits.len(), 10);
             assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
-            assert!(resp.logits.iter().all(|v| v.is_finite()));
+            let logits = resp.expect_logits("good request");
+            assert_eq!(logits.len(), 10);
+            assert!(logits.iter().all(|v| v.is_finite()));
         }
         let m = coord.shutdown();
         assert_eq!(m.requests.load(Ordering::Relaxed), 10);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 0);
         assert!(m.batches.load(Ordering::Relaxed) >= 3); // max_batch 4
         assert!(m.sim_cycles.load(Ordering::Relaxed) > 0);
         let (p50, p95, max) = m.latency_percentiles();
         assert!(p50 > 0 && p95 >= p50 && max >= p95);
+        assert!(m.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn bad_request_gets_error_response_and_workers_survive() {
+        // The old coordinator asserted on image length, killing the worker
+        // thread; now the short image gets a typed error Response and the
+        // 10 well-formed requests around it are all still served.
+        let coord = small_engine(1).serve(small_opts());
+        let mut rng = Prng::new(3);
+        let mut good = Vec::new();
+        for _ in 0..3 {
+            good.push(coord.submit(rand_image(&mut rng)));
+        }
+        let bad_rx = coord.submit(vec![0.5; 100]); // short image
+        for _ in 0..7 {
+            good.push(coord.submit(rand_image(&mut rng)));
+        }
+        let bad = bad_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("error response");
+        match bad.result {
+            Err(GavinaError::Shape { expected, got, .. }) => {
+                assert_eq!(expected, IMAGE_LEN);
+                assert_eq!(got, 100);
+            }
+            other => panic!("expected shape error, got {other:?}"),
+        }
+        for rx in good {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+            assert_eq!(resp.expect_logits("good request").len(), 10);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 10);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn batching_respects_max_batch() {
-        let weights = Arc::new(synthetic_weights(0.125, 3));
-        let mut cfg = small_cfg();
-        cfg.max_batch = 2;
-        let coord = Coordinator::start(cfg, weights, None);
+        let mut opts = small_opts();
+        opts.max_batch = 2;
+        let coord = small_engine(1).serve(opts);
         let mut rng = Prng::new(4);
-        let rxs: Vec<_> = (0..6)
-            .map(|_| coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect()))
-            .collect();
+        let rxs: Vec<_> = (0..6).map(|_| coord.submit(rand_image(&mut rng))).collect();
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
             assert!(resp.batch_size <= 2);
@@ -392,62 +544,17 @@ mod tests {
     }
 
     #[test]
-    fn run_images_parallel_matches_same_partition_serial() {
-        // The threaded batch executor must produce exactly the logits of
-        // serially running each sub-batch with the same per-chunk seeds —
-        // parallelism moves work to other threads, never changes it.
-        let weights = synthetic_weights(0.125, 9);
-        let mut cfg = small_cfg();
-        cfg.threads = 2;
-        let n = 5; // odd: chunks of 3 + 2
-        let img_len = 32 * 32 * 3;
-        let mut rng = Prng::new(10);
-        let images: Vec<f32> = (0..n * img_len).map(|_| rng.next_f32()).collect();
-
-        let parallel = run_images(&cfg, 0, &weights, None, &images, n);
-        assert_eq!(parallel.logits.len(), n * parallel.classes);
-
-        let chunk = n.div_ceil(cfg.threads);
-        let mut expect = Vec::new();
-        for (ci, i0) in (0..n).step_by(chunk).enumerate() {
-            let bn = chunk.min(n - i0);
-            let mut ex = Executor::new(
-                &weights,
-                cfg.width_mult,
-                cfg.precision,
-                Backend::Gavina {
-                    arch: cfg.arch.clone(),
-                    tables: None,
-                    seed: cfg.seed ^ (ci as u64).wrapping_mul(0x9E37_79B9),
-                },
-            );
-            ex.layer_gs = cfg.layer_gs.clone();
-            let out = ex.forward(&images[i0 * img_len..(i0 + bn) * img_len], bn);
-            expect.extend_from_slice(&out.logits);
-        }
-        assert_eq!(parallel.logits, expect);
-
-        // And a second identical call is bit-identical (deterministic).
-        let again = run_images(&cfg, 0, &weights, None, &images, n);
-        assert_eq!(parallel.logits, again.logits);
-        assert_eq!(parallel.stats.cycles, again.stats.cycles);
-    }
-
-    #[test]
     fn intra_batch_threads_serve_end_to_end() {
-        let weights = Arc::new(synthetic_weights(0.125, 11));
-        let mut cfg = small_cfg();
-        cfg.threads = 2;
-        cfg.max_batch = 6;
-        let coord = Coordinator::start(cfg, Arc::clone(&weights), None);
+        let mut opts = small_opts();
+        opts.max_batch = 6;
+        let coord = small_engine(2).serve(opts);
         let mut rng = Prng::new(12);
-        let rxs: Vec<_> = (0..9)
-            .map(|_| coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect()))
-            .collect();
+        let rxs: Vec<_> = (0..9).map(|_| coord.submit(rand_image(&mut rng))).collect();
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
-            assert_eq!(resp.logits.len(), 10);
-            assert!(resp.logits.iter().all(|v| v.is_finite()));
+            let logits = resp.expect_logits("good request");
+            assert_eq!(logits.len(), 10);
+            assert!(logits.iter().all(|v| v.is_finite()));
         }
         let m = coord.shutdown();
         assert_eq!(m.requests.load(Ordering::Relaxed), 9);
@@ -455,17 +562,44 @@ mod tests {
 
     #[test]
     fn shutdown_flushes_pending() {
-        let weights = Arc::new(synthetic_weights(0.125, 5));
-        let mut cfg = small_cfg();
-        cfg.max_batch = 64; // never reached
-        cfg.batch_timeout = Duration::from_secs(3600); // never fires
-        let coord = Coordinator::start(cfg, weights, None);
+        let mut opts = small_opts();
+        opts.max_batch = 64; // never reached
+        opts.batch_timeout = Duration::from_secs(3600); // never fires
+        let coord = small_engine(1).serve(opts);
         let mut rng = Prng::new(6);
-        let rx = coord.submit((0..32 * 32 * 3).map(|_| rng.next_f32()).collect());
+        let rx = coord.submit(rand_image(&mut rng));
         // Shutdown must flush the pending (sub-batch) request.
         let m_handle = std::thread::spawn(move || coord.shutdown());
         let resp = rx.recv_timeout(Duration::from_secs(120)).expect("flushed");
-        assert_eq!(resp.logits.len(), 10);
+        assert_eq!(resp.expect_logits("flushed request").len(), 10);
         m_handle.join().unwrap();
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_percentiles_sane() {
+        let mut r = Reservoir::new();
+        for i in 0..(LATENCY_RESERVOIR as u64 * 4) {
+            r.push(i);
+        }
+        assert_eq!(r.buf.len(), LATENCY_RESERVOIR);
+        assert_eq!(r.seen, LATENCY_RESERVOIR as u64 * 4);
+        // The sample must span the observed range, not just the prefix.
+        assert!(r.buf.iter().any(|&v| v >= LATENCY_RESERVOIR as u64));
+    }
+
+    #[test]
+    fn serve_options_from_config_rejects_unknown_keys() {
+        let cfg = crate::config::parse("[serve]\nworkers = 3\nmax_batch = 16\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.workers, 3);
+        assert_eq!(opts.max_batch, 16);
+        assert_eq!(opts.batch_timeout, Duration::from_millis(20));
+
+        let cfg = crate::config::parse("[serve]\nworker = 3\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err();
+        assert!(err.to_string().contains("unknown [serve] key"), "{err}");
+
+        let cfg = crate::config::parse("[serve]\nmax_batch = 0\n").unwrap();
+        assert!(ServeOptions::from_config(&cfg).is_err());
     }
 }

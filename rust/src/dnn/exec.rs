@@ -8,19 +8,23 @@
 //! accuracy here, and every convolution runs as an integer GEMM through
 //! the cycle-level GAVINA simulator with per-layer GAV schedules.
 //!
-//! Two backends:
-//! * [`Backend::Float`] — exact fake-quant reference (integer GEMM in
-//!   i64, no hardware model). Fast; the "exact result" the paper measures
-//!   perturbation against.
-//! * [`Backend::Gavina`] — the cycle-level simulator with optional
-//!   undervolting error injection and per-layer G allocation.
+//! Execution is delegated to a pluggable [`ExecBackend`]
+//! (see [`crate::engine::backend`]): the exact fake-quant reference
+//! ([`crate::engine::FloatBackend`]), the cycle-level simulator with
+//! optional undervolting error injection ([`crate::engine::GavinaBackend`]),
+//! or full gate-level simulation of undervolted tiles
+//! ([`crate::engine::GlsBackend`]). Most callers should not construct an
+//! `Executor` directly — use [`crate::engine::EngineBuilder`], the
+//! validated facade over this type.
 
 use super::lower::{col2im, im2col, weights_to_b, ConvGeom};
 use super::tensor::Tensor;
 use super::weights::{AnyTensor, TensorMap};
-use crate::arch::{ArchConfig, GavSchedule, Precision};
-use crate::errmodel::ErrorTables;
-use crate::simulator::{GavinaSim, GemmJob};
+use crate::arch::{GavSchedule, Precision};
+use crate::engine::backend::{ExecBackend, LayerGemm};
+
+/// Elements of one 32×32×3 input image.
+pub const IMAGE_LEN: usize = 32 * 32 * 3;
 
 /// ResNet-18 stage table: (base channels, first-block stride); actual
 /// widths are `max(8, base · width_mult)` (matches the Python model).
@@ -52,28 +56,8 @@ pub fn conv_layer_names() -> Vec<String> {
     names
 }
 
-/// Execution backend.
-pub enum Backend<'a> {
-    /// Exact fake-quant reference (no hardware model).
-    Float,
-    /// Cycle-level GAVINA with optional error model.
-    Gavina {
-        arch: ArchConfig,
-        tables: Option<&'a ErrorTables>,
-        seed: u64,
-    },
-    /// Cycle-level GAVINA with every undervolted tile run through full
-    /// gate-level simulation (the paper's Fig. 5 setup at network scale —
-    /// intractably slow in the paper, merely very slow here).
-    GavinaGls {
-        arch: ArchConfig,
-        ctx: &'a crate::gls::GlsContext,
-        seed: u64,
-    },
-}
-
 /// Aggregated hardware counters of one forward pass.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ForwardStats {
     pub cycles: u64,
     pub tiles: u64,
@@ -105,6 +89,7 @@ impl ForwardStats {
 }
 
 /// One forward pass result.
+#[derive(Clone, Debug)]
 pub struct ForwardResult {
     /// Logits `[N, classes]` row-major.
     pub logits: Vec<f32>,
@@ -119,8 +104,11 @@ pub struct Executor<'a> {
     pub weights: &'a TensorMap,
     pub width_mult: f64,
     pub prec: Precision,
-    pub backend: Backend<'a>,
+    pub backend: &'a dyn ExecBackend,
     pub layer_gs: Vec<u32>,
+    /// Deterministic sub-batch stream id mixed into the backend's
+    /// per-layer seed (serving shards); `0` for standalone runs.
+    pub stream: u64,
 }
 
 impl<'a> Executor<'a> {
@@ -128,7 +116,7 @@ impl<'a> Executor<'a> {
         weights: &'a TensorMap,
         width_mult: f64,
         prec: Precision,
-        backend: Backend<'a>,
+        backend: &'a dyn ExecBackend,
     ) -> Self {
         let n_layers = conv_layer_names().len();
         Self {
@@ -137,6 +125,7 @@ impl<'a> Executor<'a> {
             prec,
             backend,
             layer_gs: vec![prec.max_g(); n_layers],
+            stream: 0,
         }
     }
 
@@ -198,40 +187,22 @@ impl<'a> Executor<'a> {
             })
             .collect();
 
-        // --- integer GEMM ---
-        let p_int: Vec<i64> = match &self.backend {
-            Backend::Float => crate::gemm::gemm_exact(&qa, &qb, c_dim, l_dim, k_dim),
-            Backend::Gavina { .. } | Backend::GavinaGls { .. } => {
-                let sched = GavSchedule::two_level(self.prec, self.layer_gs[layer_idx]);
-                let job = GemmJob {
-                    a: &qa,
-                    b: &qb,
-                    c: c_dim,
-                    l: l_dim,
-                    k: k_dim,
-                    sched,
-                };
-                let mut sim = match &self.backend {
-                    Backend::Gavina { arch, tables, seed } => GavinaSim::new(
-                        arch.clone(),
-                        *tables,
-                        seed.wrapping_add(layer_idx as u64 * 0x9E37),
-                    ),
-                    Backend::GavinaGls { arch, ctx, seed } => GavinaSim::new_gls(
-                        arch.clone(),
-                        ctx,
-                        seed.wrapping_add(layer_idx as u64 * 0x9E37),
-                    ),
-                    Backend::Float => unreachable!(),
-                };
-                let rep = sim.run_gemm(&job);
-                stats.cycles += rep.cycles;
-                stats.tiles += rep.n_tiles;
-                stats.corrupted += rep.values_corrupted;
-                stats.executed_macs += rep.executed_macs;
-                rep.p
-            }
-        };
+        // --- integer GEMM (pluggable backend) ---
+        let out = self.backend.run_layer_gemm(&LayerGemm {
+            a: &qa,
+            b: &qb,
+            c: c_dim,
+            l: l_dim,
+            k: k_dim,
+            sched: GavSchedule::two_level(self.prec, self.layer_gs[layer_idx]),
+            layer_idx,
+            stream: self.stream,
+        });
+        stats.cycles += out.counters.cycles;
+        stats.tiles += out.counters.tiles;
+        stats.corrupted += out.counters.corrupted;
+        stats.executed_macs += out.counters.executed_macs;
+        let p_int = out.p;
         stats.useful_macs += g.macs();
         if stats.layer_macs.len() <= layer_idx {
             stats.layer_macs.resize(layer_idx + 1, 0);
@@ -291,7 +262,7 @@ impl<'a> Executor<'a> {
 
     /// Forward one batch of NHWC images in `[0, 1]`.
     pub fn forward(&self, images: &[f32], n: usize) -> ForwardResult {
-        assert_eq!(images.len(), n * 32 * 32 * 3);
+        assert_eq!(images.len(), n * IMAGE_LEN);
         let mut stats = ForwardStats::default();
         let mut layer = 0usize;
         let mut x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
@@ -376,7 +347,7 @@ impl<'a> Executor<'a> {
         let mut logits = Vec::new();
         let mut stats = ForwardStats::default();
         let mut classes = 0;
-        let img_len = 32 * 32 * 3;
+        let img_len = IMAGE_LEN;
         let mut i = 0;
         while i < n {
             let bn = batch.min(n - i);
@@ -471,7 +442,10 @@ pub mod synth {
 mod tests {
     use super::*;
     use super::synth::synthetic_weights;
+    use crate::arch::ArchConfig;
+    use crate::engine::backend::{FloatBackend, GavinaBackend};
     use crate::util::Prng;
+    use std::sync::Arc;
 
     fn rand_images(rng: &mut Prng, n: usize) -> Vec<f32> {
         (0..n * 32 * 32 * 3).map(|_| rng.next_f32()).collect()
@@ -497,19 +471,15 @@ mod tests {
         let imgs = rand_images(&mut rng, 2);
         let prec = Precision::new(4, 4);
 
-        let ex_f = Executor::new(&weights, wm, prec, Backend::Float);
+        let ex_f = Executor::new(&weights, wm, prec, &FloatBackend);
         let rf = ex_f.forward(&imgs, 2);
 
-        let ex_g = Executor::new(
-            &weights,
-            wm,
-            prec,
-            Backend::Gavina {
-                arch: ArchConfig::tiny(),
-                tables: None,
-                seed: 3,
-            },
-        );
+        let sim = GavinaBackend {
+            arch: ArchConfig::tiny(),
+            tables: None,
+            seed: 3,
+        };
+        let ex_g = Executor::new(&weights, wm, prec, &sim);
         let rg = ex_g.forward(&imgs, 2);
 
         assert_eq!(rf.logits.len(), rg.logits.len());
@@ -543,19 +513,15 @@ mod tests {
             }
         }
 
-        let exact = Executor::new(&weights, wm, prec, Backend::Float).forward(&imgs, 1);
-        let uv = Executor::new(
-            &weights,
-            wm,
-            prec,
-            Backend::Gavina {
-                arch,
-                tables: Some(&tables),
-                seed: 6,
-            },
-        )
-        .with_uniform_g(0)
-        .forward(&imgs, 1);
+        let exact = Executor::new(&weights, wm, prec, &FloatBackend).forward(&imgs, 1);
+        let sim = GavinaBackend {
+            arch,
+            tables: Some(Arc::new(tables)),
+            seed: 6,
+        };
+        let uv = Executor::new(&weights, wm, prec, &sim)
+            .with_uniform_g(0)
+            .forward(&imgs, 1);
         assert!(uv.stats.corrupted > 0);
         let mse = crate::stats::mse_f32(&exact.logits, &uv.logits);
         assert!(mse > 0.0, "undervolting must perturb logits");
@@ -579,17 +545,13 @@ mod tests {
                 tables.set_prob(msb, e, pb, 0, 1.0);
             }
         }
+        let sim = GavinaBackend {
+            arch,
+            tables: Some(Arc::new(tables)),
+            seed: 9,
+        };
         let mk = |gs: Vec<u32>| {
-            let mut ex = Executor::new(
-                &weights,
-                wm,
-                prec,
-                Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: 9,
-                },
-            );
+            let mut ex = Executor::new(&weights, wm, prec, &sim);
             ex.layer_gs = gs;
             ex.forward(&imgs, 1)
         };

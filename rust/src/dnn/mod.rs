@@ -7,6 +7,6 @@ pub mod lower;
 pub mod tensor;
 pub mod weights;
 
-pub use exec::{conv_layer_names, Backend, Executor, ForwardResult, ForwardStats};
+pub use exec::{conv_layer_names, Executor, ForwardResult, ForwardStats, IMAGE_LEN};
 pub use tensor::Tensor;
 pub use weights::{load_eval_set, load_tensors, EvalSet, TensorMap};

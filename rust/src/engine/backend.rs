@@ -1,0 +1,268 @@
+//! Pluggable execution backends for the quantized-network executor.
+//!
+//! The old `dnn::Backend<'a>` enum hard-wired the three execution modes
+//! into every call site; [`ExecBackend`] turns the seam into a trait so
+//! new backends (remote accelerators, fault-injection campaigns, …) plug
+//! in without touching `dnn/exec.rs`. Three implementations ship:
+//!
+//! * [`FloatBackend`] — the exact fake-quant reference (integer GEMM in
+//!   i64, no hardware model); the "exact result" the paper measures
+//!   perturbation against.
+//! * [`GavinaBackend`] — the cycle-level GAVINA simulator with optional
+//!   LUT error injection (paper §IV-C).
+//! * [`GlsBackend`] — cycle-level simulation with every undervolted tile
+//!   run through full gate-level simulation (paper Fig. 5 methodology).
+//!
+//! Determinism contract: a backend must derive all randomness from
+//! `(its own seed, job.stream, job.layer_idx)` so that identical jobs
+//! produce identical results on any thread.
+
+use std::sync::Arc;
+
+use crate::arch::{ArchConfig, GavSchedule};
+use crate::errmodel::ErrorTables;
+use crate::gls::GlsContext;
+use crate::simulator::{GavinaSim, GemmJob};
+
+/// One convolution-lowered integer GEMM, as handed to a backend.
+pub struct LayerGemm<'a> {
+    /// Activations `[L, C]` (im2col output), row-major.
+    pub a: &'a [i32],
+    /// Weights `[K, C]`, row-major.
+    pub b: &'a [i32],
+    pub c: usize,
+    pub l: usize,
+    pub k: usize,
+    /// The GAV voltage schedule for this layer (per-layer G already
+    /// applied by the executor).
+    pub sched: GavSchedule,
+    /// Index of the conv layer in execution order (seeds the per-layer
+    /// RNG stream).
+    pub layer_idx: usize,
+    /// Deterministic sub-batch stream id (serving shards); `0` for
+    /// standalone runs. XOR-mixed into the backend seed.
+    pub stream: u64,
+}
+
+/// Hardware counters reported by one backend GEMM.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmCounters {
+    pub cycles: u64,
+    pub tiles: u64,
+    pub corrupted: u64,
+    pub executed_macs: u64,
+}
+
+/// A backend GEMM result: the `[K, L]` product plus counters.
+pub struct BackendGemm {
+    /// Product `[K, L]` row-major, i64 accumulators.
+    pub p: Vec<i64>,
+    pub counters: GemmCounters,
+}
+
+/// A pluggable execution backend for conv-lowered integer GEMMs.
+///
+/// Implementations must be `Send + Sync`: one backend instance is shared
+/// (behind an `Arc`) by every serving worker and intra-batch thread.
+pub trait ExecBackend: Send + Sync {
+    /// Short display name (diagnostics, serve banners).
+    fn name(&self) -> &'static str;
+
+    /// Execute one layer GEMM deterministically.
+    fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm;
+
+    /// Whether the backend models accelerator hardware (cycle/energy
+    /// counters are meaningful). The float reference returns `false`.
+    fn is_simulated(&self) -> bool {
+        true
+    }
+}
+
+/// Per-layer RNG stream derivation shared by the simulator backends: the
+/// historical `Executor` seeding (`seed.wrapping_add(layer · 0x9E37)`)
+/// with the serving shard stream XOR-mixed in first, so results are
+/// bit-identical to the pre-trait code on both the standalone and the
+/// coordinator path.
+fn layer_seed(seed: u64, job: &LayerGemm) -> u64 {
+    (seed ^ job.stream).wrapping_add(job.layer_idx as u64 * 0x9E37)
+}
+
+/// Exact fake-quant reference (no hardware model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FloatBackend;
+
+impl ExecBackend for FloatBackend {
+    fn name(&self) -> &'static str {
+        "float"
+    }
+
+    fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
+        BackendGemm {
+            p: crate::gemm::gemm_exact(job.a, job.b, job.c, job.l, job.k),
+            counters: GemmCounters::default(),
+        }
+    }
+
+    fn is_simulated(&self) -> bool {
+        false
+    }
+}
+
+/// Cycle-level GAVINA simulator with optional LUT error injection.
+#[derive(Clone)]
+pub struct GavinaBackend {
+    pub arch: ArchConfig,
+    /// GLS-calibrated error tables; `None` disables injection (guarded
+    /// runs stay exact either way).
+    pub tables: Option<Arc<ErrorTables>>,
+    pub seed: u64,
+}
+
+impl ExecBackend for GavinaBackend {
+    fn name(&self) -> &'static str {
+        "gavina-sim"
+    }
+
+    fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
+        let mut sim = GavinaSim::new(
+            self.arch.clone(),
+            self.tables.as_deref(),
+            layer_seed(self.seed, job),
+        );
+        let rep = sim.run_gemm(&GemmJob {
+            a: job.a,
+            b: job.b,
+            c: job.c,
+            l: job.l,
+            k: job.k,
+            sched: job.sched.clone(),
+        });
+        BackendGemm {
+            p: rep.p,
+            counters: GemmCounters {
+                cycles: rep.cycles,
+                tiles: rep.n_tiles,
+                corrupted: rep.values_corrupted,
+                executed_macs: rep.executed_macs,
+            },
+        }
+    }
+}
+
+/// Cycle-level simulation with full gate-level simulation of every
+/// undervolted tile (very slow; Fig. 5/7 methodology at network scale).
+#[derive(Clone)]
+pub struct GlsBackend {
+    pub arch: ArchConfig,
+    pub ctx: Arc<GlsContext>,
+    pub seed: u64,
+}
+
+impl ExecBackend for GlsBackend {
+    fn name(&self) -> &'static str {
+        "gavina-gls"
+    }
+
+    fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
+        let mut sim = GavinaSim::new_gls(self.arch.clone(), &self.ctx, layer_seed(self.seed, job));
+        let rep = sim.run_gemm(&GemmJob {
+            a: job.a,
+            b: job.b,
+            c: job.c,
+            l: job.l,
+            k: job.k,
+            sched: job.sched.clone(),
+        });
+        BackendGemm {
+            p: rep.p,
+            counters: GemmCounters {
+                cycles: rep.cycles,
+                tiles: rep.n_tiles,
+                corrupted: rep.values_corrupted,
+                executed_macs: rep.executed_macs,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::util::Prng;
+    use crate::workload::uniform_ip_matrices;
+
+    fn job<'a>(a: &'a [i32], b: &'a [i32], c: usize, l: usize, k: usize) -> LayerGemm<'a> {
+        LayerGemm {
+            a,
+            b,
+            c,
+            l,
+            k,
+            sched: GavSchedule::all_guarded(Precision::new(4, 4)),
+            layer_idx: 3,
+            stream: 0,
+        }
+    }
+
+    #[test]
+    fn float_and_guarded_sim_agree_at_backend_level() {
+        let arch = ArchConfig::tiny();
+        let prec = Precision::new(4, 4);
+        let mut rng = Prng::new(1);
+        let (c, l, k) = (arch.c_dim, arch.l_dim, arch.k_dim);
+        let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+
+        let exact = FloatBackend.run_layer_gemm(&job(&a, &b, c, l, k));
+        assert_eq!(exact.counters.cycles, 0);
+        assert!(!FloatBackend.is_simulated());
+
+        let sim = GavinaBackend {
+            arch,
+            tables: None,
+            seed: 2,
+        };
+        let guarded = sim.run_layer_gemm(&job(&a, &b, c, l, k));
+        assert_eq!(exact.p, guarded.p);
+        assert!(guarded.counters.cycles > 0);
+        assert_eq!(guarded.counters.corrupted, 0);
+    }
+
+    #[test]
+    fn stream_and_layer_perturb_the_seed_deterministically() {
+        // Same (seed, stream, layer) => identical; different stream =>
+        // the derived seed differs (the serving-shard contract).
+        assert_eq!(
+            layer_seed(
+                7,
+                &LayerGemm {
+                    a: &[],
+                    b: &[],
+                    c: 0,
+                    l: 0,
+                    k: 0,
+                    sched: GavSchedule::all_guarded(Precision::new(2, 2)),
+                    layer_idx: 5,
+                    stream: 0,
+                }
+            ),
+            7u64.wrapping_add(5 * 0x9E37)
+        );
+        assert_eq!(
+            layer_seed(
+                7,
+                &LayerGemm {
+                    a: &[],
+                    b: &[],
+                    c: 0,
+                    l: 0,
+                    k: 0,
+                    sched: GavSchedule::all_guarded(Precision::new(2, 2)),
+                    layer_idx: 5,
+                    stream: 0xD1F,
+                }
+            ),
+            (7u64 ^ 0xD1F).wrapping_add(5 * 0x9E37)
+        );
+    }
+}

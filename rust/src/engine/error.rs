@@ -1,0 +1,116 @@
+//! The crate-wide error type for the [`Engine`](super::Engine) API.
+//!
+//! Every fallible entry point of the public facade — builder validation,
+//! artifact loading, request shapes, backend execution — returns
+//! [`GavinaError`] instead of panicking, so a malformed request yields an
+//! error `Response` while the serving workers keep running.
+
+/// Typed error for the `gavina::engine` public API.
+///
+/// The variants mirror the four ways the facade can fail: a configuration
+/// that cannot produce a valid engine, an artifact that cannot be read, a
+/// tensor/request with the wrong shape, and a backend execution failure.
+///
+/// ```
+/// use gavina::engine::GavinaError;
+///
+/// let e = GavinaError::Shape {
+///     what: "request image".into(),
+///     expected: 3072,
+///     got: 100,
+/// };
+/// assert_eq!(
+///     e.to_string(),
+///     "shape error: request image: expected 3072, got 100"
+/// );
+/// ```
+#[derive(Clone, Debug)]
+pub enum GavinaError {
+    /// Invalid or inconsistent configuration (builder validation, config
+    /// file sections, policy/backend mismatches).
+    Config(String),
+    /// An artifact (weights, error tables, eval set) could not be read.
+    Io {
+        /// Path of the artifact that failed to load.
+        path: String,
+        /// The underlying I/O error, stringified (keeps the type `Clone`).
+        message: String,
+    },
+    /// A tensor or request had the wrong number of elements.
+    Shape {
+        /// What was being checked (e.g. `"request image"`).
+        what: String,
+        /// Expected element count.
+        expected: usize,
+        /// Actual element count.
+        got: usize,
+    },
+    /// A backend failed to execute (reserved for pluggable backends; the
+    /// built-in simulators are total).
+    Backend(String),
+}
+
+impl GavinaError {
+    /// Wrap an `std::io::Error` with the path it occurred on.
+    pub fn io(path: impl AsRef<std::path::Path>, err: std::io::Error) -> Self {
+        GavinaError::Io {
+            path: path.as_ref().display().to_string(),
+            message: err.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for GavinaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GavinaError::Config(msg) => write!(f, "config error: {msg}"),
+            GavinaError::Io { path, message } => write!(f, "io error at {path}: {message}"),
+            GavinaError::Shape {
+                what,
+                expected,
+                got,
+            } => write!(f, "shape error: {what}: expected {expected}, got {got}"),
+            GavinaError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GavinaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_all_variants() {
+        let cases: Vec<(GavinaError, &str)> = vec![
+            (GavinaError::Config("bad g".into()), "config error: bad g"),
+            (
+                GavinaError::io("/nope/weights.bin", std::io::Error::other("gone")),
+                "io error at /nope/weights.bin: gone",
+            ),
+            (
+                GavinaError::Shape {
+                    what: "image".into(),
+                    expected: 4,
+                    got: 3,
+                },
+                "shape error: image: expected 4, got 3",
+            ),
+            (
+                GavinaError::Backend("sim died".into()),
+                "backend error: sim died",
+            ),
+        ];
+        for (e, want) in cases {
+            assert_eq!(e.to_string(), want);
+        }
+    }
+
+    #[test]
+    fn is_std_error_and_clone() {
+        let e = GavinaError::Config("x".into());
+        let boxed: Box<dyn std::error::Error> = Box::new(e.clone());
+        assert!(boxed.to_string().contains("x"));
+    }
+}

@@ -1,0 +1,956 @@
+//! The crate's public inference API: a validated, `Arc`-shareable
+//! [`Engine`] built once by [`EngineBuilder`].
+//!
+//! Every entry point — CLI subcommands, examples, benches, the serving
+//! coordinator — used to hand-assemble `Executor::new(weights, …)` and
+//! mutate its public `layer_gs` field; the engine facade replaces that
+//! borrow-laden, panic-on-misuse surface with four pieces:
+//!
+//! * [`EngineBuilder`] — weights, [`Precision`], [`ArchConfig`], error
+//!   tables, seed, threads; validates everything once in
+//!   [`EngineBuilder::build`] and never after.
+//! * [`GavPolicy`] — first-class per-layer G allocation (`Exact`,
+//!   `Uniform`, `PerLayer`, or the §IV-D ILP under a budget).
+//! * [`ExecBackend`] — pluggable execution backends (float reference,
+//!   cycle-level simulator, gate-level simulation) instead of the old
+//!   lifetime-bearing `Backend<'a>` enum.
+//! * [`GavinaError`] — typed errors on every fallible path; a malformed
+//!   request yields an error `Response`, not a dead worker thread.
+//!
+//! ```
+//! use gavina::arch::{ArchConfig, Precision};
+//! use gavina::dnn::exec::synth::synthetic_weights;
+//! use gavina::engine::{EngineBuilder, GavPolicy};
+//!
+//! let engine = EngineBuilder::new()
+//!     .weights(synthetic_weights(0.125, 1))
+//!     .width_mult(0.125)
+//!     .precision(Precision::new(2, 2))
+//!     .arch(ArchConfig::tiny())
+//!     .policy(GavPolicy::Exact)
+//!     .build()
+//!     .unwrap();
+//! let image = vec![0.5f32; 32 * 32 * 3];
+//! let out = engine.infer(&image, 1).unwrap();
+//! assert_eq!(out.logits.len(), out.classes);
+//! ```
+
+pub mod backend;
+mod error;
+mod policy;
+
+use std::sync::Arc;
+
+use crate::arch::{ArchConfig, Precision};
+use crate::config::{Config, Value};
+use crate::coordinator::{Coordinator, ServeOptions};
+use crate::dnn::exec::{ch, synth, BLOCKS_PER_STAGE, STAGES};
+use crate::dnn::weights::AnyTensor;
+use crate::dnn::{Executor, ForwardResult, ForwardStats, TensorMap, IMAGE_LEN};
+use crate::errmodel::ErrorTables;
+use crate::gls::GlsContext;
+use crate::ilp::{Allocation, GavAllocator, LayerChoices};
+use crate::util::parallel;
+
+pub use backend::{ExecBackend, FloatBackend, GavinaBackend, GlsBackend};
+pub use error::GavinaError;
+pub use policy::{GavPolicy, IlpReport};
+
+use policy::ProfileSet;
+
+/// Which backend [`EngineBuilder::build`] instantiates.
+#[derive(Clone)]
+enum BackendChoice {
+    /// Exact fake-quant reference (no hardware model).
+    Float,
+    /// Cycle-level GAVINA simulator (default; error injection when tables
+    /// are present).
+    Gavina,
+    /// Gate-level simulation of every undervolted tile (very slow).
+    Gls(Arc<GlsContext>),
+    /// A user-supplied backend.
+    Custom(Arc<dyn ExecBackend>),
+}
+
+/// Builder for [`Engine`]: collect configuration, validate once, produce
+/// an immutable engine. See the [module docs](self) for a quickstart.
+#[derive(Clone)]
+pub struct EngineBuilder {
+    weights: Option<Arc<TensorMap>>,
+    width_mult: f64,
+    prec: Precision,
+    arch: ArchConfig,
+    tables: Option<Arc<ErrorTables>>,
+    backend: BackendChoice,
+    policy: GavPolicy,
+    /// Whether `policy` was set explicitly (via [`EngineBuilder::policy`]
+    /// or a named `engine.policy` config key) — bare-key inference in
+    /// [`EngineBuilder::apply_config`] never overrides an explicit choice.
+    policy_explicit: bool,
+    seed: u64,
+    threads: usize,
+    profile: Option<ProfileSet>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self {
+            weights: None,
+            width_mult: 0.25,
+            prec: Precision::new(4, 4),
+            arch: ArchConfig::paper(),
+            tables: None,
+            backend: BackendChoice::Gavina,
+            policy: GavPolicy::Exact,
+            policy_explicit: false,
+            seed: 2025,
+            threads: 1,
+            profile: None,
+        }
+    }
+
+    /// Set the weight map (accepts `TensorMap` or `Arc<TensorMap>`).
+    pub fn weights(mut self, weights: impl Into<Arc<TensorMap>>) -> Self {
+        self.weights = Some(weights.into());
+        self
+    }
+
+    /// Load weights from a GVNT file ([`crate::dnn::load_tensors`]).
+    pub fn weights_from_file(self, path: &std::path::Path) -> Result<Self, GavinaError> {
+        let w = crate::dnn::load_tensors(path).map_err(|e| GavinaError::io(path, e))?;
+        Ok(self.weights(w))
+    }
+
+    /// Random-but-valid synthetic weights (tests / demos without
+    /// `make artifacts`); also sets the matching `width_mult`.
+    pub fn synthetic_weights(mut self, width_mult: f64, seed: u64) -> Self {
+        self.width_mult = width_mult;
+        self.weights(synth::synthetic_weights(width_mult, seed))
+    }
+
+    /// ResNet width multiplier (must match the trained weights).
+    pub fn width_mult(mut self, width_mult: f64) -> Self {
+        self.width_mult = width_mult;
+        self
+    }
+
+    /// `aXwY` activation/weight precision.
+    pub fn precision(mut self, prec: Precision) -> Self {
+        self.prec = prec;
+        self
+    }
+
+    /// Architectural parameters (array dims, voltages, clock).
+    pub fn arch(mut self, arch: ArchConfig) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// GLS-calibrated error tables for undervolting injection.
+    pub fn tables(mut self, tables: impl Into<Arc<ErrorTables>>) -> Self {
+        self.tables = Some(tables.into());
+        self
+    }
+
+    /// Optional error tables (convenience for call sites that may or may
+    /// not have calibrated artifacts).
+    pub fn tables_opt(mut self, tables: Option<Arc<ErrorTables>>) -> Self {
+        self.tables = tables;
+        self
+    }
+
+    /// Per-layer G allocation policy (default [`GavPolicy::Exact`]).
+    pub fn policy(mut self, policy: GavPolicy) -> Self {
+        self.policy = policy;
+        self.policy_explicit = true;
+        self
+    }
+
+    /// The currently configured policy (what [`EngineBuilder::build`]
+    /// will resolve) — lets callers branch on the outcome of
+    /// [`EngineBuilder::apply_config`], e.g. to attach a profile set
+    /// only when the config selected [`GavPolicy::IlpBudget`].
+    pub fn policy_ref(&self) -> &GavPolicy {
+        &self.policy
+    }
+
+    /// Deterministic seed for error injection (default 2025).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Intra-batch worker threads for [`Engine::infer_parallel`] and the
+    /// serving coordinator (`1` = serial, `0` = one per core).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Use the exact fake-quant reference backend (no hardware model).
+    pub fn backend_float(mut self) -> Self {
+        self.backend = BackendChoice::Float;
+        self
+    }
+
+    /// Use the cycle-level GAVINA simulator (the default).
+    pub fn backend_gavina(mut self) -> Self {
+        self.backend = BackendChoice::Gavina;
+        self
+    }
+
+    /// Run every undervolted tile through full gate-level simulation.
+    pub fn backend_gls(mut self, ctx: impl Into<Arc<GlsContext>>) -> Self {
+        self.backend = BackendChoice::Gls(ctx.into());
+        self
+    }
+
+    /// Plug in a custom [`ExecBackend`] implementation.
+    pub fn backend(mut self, backend: Arc<dyn ExecBackend>) -> Self {
+        self.backend = BackendChoice::Custom(backend);
+        self
+    }
+
+    /// Profile set used to resolve [`GavPolicy::IlpBudget`]: `n` images
+    /// (flat NHWC, `n · 3072` floats) forwarded in mini-batches of
+    /// `batch` during per-layer sensitivity profiling. An empty set
+    /// clears the profile (an `IlpBudget` build will then fail with a
+    /// config error instead of profiling on nothing).
+    pub fn profile_set(mut self, images: &[f32], n: usize, batch: usize) -> Self {
+        self.profile = if n == 0 {
+            None
+        } else {
+            Some(ProfileSet {
+                images: images.to_vec(),
+                n,
+                batch: batch.max(1),
+            })
+        };
+        self
+    }
+
+    /// Apply the `[engine]` section of a parsed config file. Recognized
+    /// keys: `precision`, `policy` (`"exact"`, `"uniform"`, `"per_layer"`,
+    /// `"ilp"`), `g`, `gtar`, `layer_gs`, `width_mult`, `threads`,
+    /// `seed`. Unknown `engine.*` keys are a [`GavinaError::Config`] —
+    /// typos must not silently fall back to defaults.
+    pub fn apply_config(mut self, cfg: &Config) -> Result<Self, GavinaError> {
+        const KNOWN: &[&str] = &[
+            "precision",
+            "policy",
+            "g",
+            "gtar",
+            "layer_gs",
+            "width_mult",
+            "threads",
+            "seed",
+        ];
+        for (key, _) in cfg.keys_with_prefix("engine.") {
+            if !KNOWN.contains(&key) {
+                return Err(GavinaError::Config(format!(
+                    "unknown [engine] key '{key}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        if let Some(v) = cfg.get("engine.precision") {
+            let s = v.as_str().unwrap_or_default();
+            self.prec = Precision::parse(s).ok_or_else(|| {
+                GavinaError::Config(format!("engine.precision '{s}' is not aXwY"))
+            })?;
+        }
+        if let Some(v) = cfg.get("engine.width_mult") {
+            self.width_mult = v.as_float().ok_or_else(|| {
+                GavinaError::Config("engine.width_mult must be a number".into())
+            })?;
+        }
+        if let Some(v) = cfg.get("engine.threads") {
+            self.threads = v
+                .as_int()
+                .and_then(|i| usize::try_from(i).ok())
+                .ok_or_else(|| {
+                    GavinaError::Config("engine.threads must be a non-negative integer".into())
+                })?;
+        }
+        if let Some(v) = cfg.get("engine.seed") {
+            self.seed = v
+                .as_int()
+                .and_then(|i| u64::try_from(i).ok())
+                .ok_or_else(|| {
+                    GavinaError::Config("engine.seed must be a non-negative integer".into())
+                })?;
+        }
+        // `engine.g` with a legacy `run.g` fallback, mirroring
+        // RunConfig::from_config — `policy = "uniform"` must work for a
+        // config that still keeps its g under `[run]`.
+        let g = match cfg.get("engine.g").or_else(|| cfg.get("run.g")) {
+            Some(v) => Some(v.as_int().and_then(|i| u32::try_from(i).ok()).ok_or_else(
+                || GavinaError::Config("engine.g must be a non-negative integer".into()),
+            )?),
+            None => None,
+        };
+        // Type-check `engine.gtar` up front: a quoted number must error,
+        // not silently drop the ILP request.
+        let gtar_cfg = match cfg.get("engine.gtar") {
+            Some(v) => Some(v.as_float().ok_or_else(|| {
+                GavinaError::Config("engine.gtar must be a number".into())
+            })?),
+            None => None,
+        };
+        let policy_name = cfg.get("engine.policy").map(|v| {
+            v.as_str().map(str::to_string).ok_or_else(|| {
+                GavinaError::Config("engine.policy must be a string".into())
+            })
+        });
+        let policy_name = match policy_name {
+            Some(r) => Some(r?),
+            None => None,
+        };
+        match policy_name.as_deref() {
+            Some("exact") => {
+                self.policy = GavPolicy::Exact;
+                self.policy_explicit = true;
+            }
+            Some("uniform") => {
+                let g = g.ok_or_else(|| {
+                    GavinaError::Config("engine.policy = \"uniform\" needs engine.g".into())
+                })?;
+                self.policy = GavPolicy::Uniform(g);
+                self.policy_explicit = true;
+            }
+            Some("per_layer") => {
+                let gs = cfg
+                    .get("engine.layer_gs")
+                    .and_then(|v| match v {
+                        Value::Array(xs) => xs
+                            .iter()
+                            .map(|x| x.as_int().and_then(|i| u32::try_from(i).ok()))
+                            .collect::<Option<Vec<u32>>>(),
+                        _ => None,
+                    })
+                    .ok_or_else(|| {
+                        GavinaError::Config(
+                            "engine.policy = \"per_layer\" needs engine.layer_gs = [..]".into(),
+                        )
+                    })?;
+                self.policy = GavPolicy::PerLayer(gs);
+                self.policy_explicit = true;
+            }
+            Some("ilp") => {
+                let gtar = gtar_cfg.ok_or_else(|| {
+                    GavinaError::Config("engine.policy = \"ilp\" needs engine.gtar".into())
+                })?;
+                self.policy = GavPolicy::IlpBudget { gtar };
+                self.policy_explicit = true;
+            }
+            Some(other) => {
+                return Err(GavinaError::Config(format!(
+                    "engine.policy '{other}' (want exact|uniform|per_layer|ilp)"
+                )))
+            }
+            // No explicit policy key: infer from bare keys — `g` means
+            // uniform G, `gtar` means the ILP budget, both at once is
+            // ambiguous, and an explicit `engine.gtar` outranks a legacy
+            // `[run] g`. Inference never overrides a policy the caller
+            // set explicitly via [`EngineBuilder::policy`].
+            None => {
+                if cfg.get("engine.g").is_some() && gtar_cfg.is_some() {
+                    return Err(GavinaError::Config(
+                        "both engine.g and engine.gtar set without engine.policy — \
+                         pick one (or set engine.policy explicitly)"
+                            .into(),
+                    ));
+                }
+                if !self.policy_explicit {
+                    if let Some(gtar) = gtar_cfg {
+                        self.policy = GavPolicy::IlpBudget { gtar };
+                    } else if let Some(g) = g {
+                        self.policy = GavPolicy::Uniform(g);
+                    }
+                }
+            }
+        }
+        // A G knob that the chosen policy would silently drop is exactly
+        // the typo class this loader exists to reject. (The legacy
+        // `run.g` fallback is exempt — old configs carry it harmlessly.)
+        if let Some(name) = policy_name.as_deref() {
+            if cfg.get("engine.g").is_some() && name != "uniform" {
+                return Err(GavinaError::Config(format!(
+                    "engine.g is set but engine.policy = \"{name}\" ignores it"
+                )));
+            }
+            if gtar_cfg.is_some() && name != "ilp" {
+                return Err(GavinaError::Config(format!(
+                    "engine.gtar is set but engine.policy = \"{name}\" ignores it"
+                )));
+            }
+        }
+        if cfg.get("engine.layer_gs").is_some()
+            && !matches!(self.policy, GavPolicy::PerLayer(_))
+        {
+            return Err(GavinaError::Config(
+                "engine.layer_gs is set but engine.policy is not \"per_layer\" — \
+                 the allocation would be ignored"
+                    .into(),
+            ));
+        }
+        Ok(self)
+    }
+
+    /// Validate everything and produce an immutable [`Engine`].
+    pub fn build(self) -> Result<Engine, GavinaError> {
+        let weights = self
+            .weights
+            .ok_or_else(|| GavinaError::Config("EngineBuilder: weights not set".into()))?;
+        if !self.width_mult.is_finite() || self.width_mult <= 0.0 {
+            return Err(GavinaError::Config(format!(
+                "width_mult {} must be positive",
+                self.width_mult
+            )));
+        }
+        validate_weights(&weights, self.width_mult)?;
+        if matches!(self.backend, BackendChoice::Float)
+            && matches!(self.policy, GavPolicy::IlpBudget { .. })
+        {
+            return Err(GavinaError::Config(
+                "GavPolicy::IlpBudget profiles undervolting errors; it cannot \
+                 resolve on the float reference backend"
+                    .into(),
+            ));
+        }
+        let (layer_gs, ilp) = policy::resolve(
+            &self.policy,
+            &weights,
+            self.width_mult,
+            self.prec,
+            &self.arch,
+            self.tables.as_ref(),
+            self.seed,
+            self.profile.as_ref(),
+        )?;
+        let backend: Arc<dyn ExecBackend> = match self.backend {
+            BackendChoice::Float => Arc::new(FloatBackend),
+            BackendChoice::Gavina => Arc::new(GavinaBackend {
+                arch: self.arch.clone(),
+                tables: self.tables.clone(),
+                seed: self.seed,
+            }),
+            BackendChoice::Gls(ctx) => Arc::new(GlsBackend {
+                arch: self.arch.clone(),
+                ctx,
+                seed: self.seed,
+            }),
+            BackendChoice::Custom(b) => b,
+        };
+        Ok(Engine {
+            weights,
+            backend,
+            prec: self.prec,
+            arch: self.arch,
+            tables: self.tables,
+            width_mult: self.width_mult,
+            seed: self.seed,
+            threads: self.threads,
+            policy: self.policy,
+            layer_gs,
+            ilp,
+        })
+    }
+}
+
+/// Structural weight-map validation: every tensor the forward pass will
+/// touch must exist with the right kind and (where cheap to check) shape,
+/// so a misconfigured engine fails at build time instead of panicking on
+/// the first request.
+fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaError> {
+    let need = |name: &str| -> Result<&[usize], GavinaError> {
+        weights
+            .get(name)
+            .and_then(AnyTensor::as_f32)
+            .map(|(dims, _)| dims)
+            .ok_or_else(|| GavinaError::Config(format!("weights: missing f32 tensor '{name}'")))
+    };
+    let need_bn = |bn: &str| -> Result<(), GavinaError> {
+        for part in ["scale", "bias", "mean", "var"] {
+            need(&format!("{bn}/{part}"))?;
+        }
+        Ok(())
+    };
+    let d0 = need("conv0/w")?;
+    let c0 = ch(64, width_mult);
+    if d0.len() != 4 || d0[3] != c0 {
+        return Err(GavinaError::Config(format!(
+            "conv0/w has shape {d0:?}, want [k,k,3,{c0}] at width_mult {width_mult}"
+        )));
+    }
+    need_bn("bn0")?;
+    let mut cin = c0;
+    for (si, (c, stride)) in STAGES.iter().enumerate() {
+        let cout = ch(*c, width_mult);
+        for bi in 0..BLOCKS_PER_STAGE {
+            let s = if bi == 0 { *stride } else { 1 };
+            let p = format!("s{si}b{bi}");
+            need(&format!("{p}/conv1/w"))?;
+            need_bn(&format!("{p}/bn1"))?;
+            need(&format!("{p}/conv2/w"))?;
+            need_bn(&format!("{p}/bn2"))?;
+            // The executor keys the shortcut conv off its presence; when
+            // topology demands one, require it (and its BN).
+            if s != 1 || cin != cout {
+                need(&format!("{p}/down/w"))?;
+                need_bn(&format!("{p}/dbn"))?;
+            }
+            cin = cout;
+        }
+    }
+    let fd = need("fc/w")?;
+    if fd.len() != 2 || fd[0] != cin {
+        return Err(GavinaError::Config(format!(
+            "fc/w has shape {fd:?}, want [{cin}, classes]"
+        )));
+    }
+    need("fc/b")?;
+    Ok(())
+}
+
+/// The immutable inference engine: share it across threads behind an
+/// `Arc`, call [`Engine::infer`] / [`Engine::infer_batched`], or start a
+/// serving [`Coordinator`] with [`Engine::serve`].
+pub struct Engine {
+    weights: Arc<TensorMap>,
+    backend: Arc<dyn ExecBackend>,
+    prec: Precision,
+    arch: ArchConfig,
+    tables: Option<Arc<ErrorTables>>,
+    width_mult: f64,
+    seed: u64,
+    threads: usize,
+    policy: GavPolicy,
+    layer_gs: Vec<u32>,
+    ilp: Option<IlpReport>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend.name())
+            .field("precision", &self.prec)
+            .field("policy", &self.policy)
+            .field("width_mult", &self.width_mult)
+            .field("seed", &self.seed)
+            .field("threads", &self.threads)
+            .field("layer_gs", &self.layer_gs)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Engine {
+    fn executor(&self) -> Executor<'_> {
+        Executor {
+            weights: self.weights.as_ref(),
+            width_mult: self.width_mult,
+            prec: self.prec,
+            backend: self.backend.as_ref(),
+            layer_gs: self.layer_gs.clone(),
+            stream: 0,
+        }
+    }
+
+    fn check_images(&self, images: &[f32], n: usize) -> Result<(), GavinaError> {
+        if n == 0 {
+            return Err(GavinaError::Config("cannot infer on zero images".into()));
+        }
+        if images.len() != n * IMAGE_LEN {
+            return Err(GavinaError::Shape {
+                what: format!("image batch (n={n})"),
+                expected: n * IMAGE_LEN,
+                got: images.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Forward one batch of `n` NHWC images in `[0, 1]` (flat, `n · 3072`
+    /// floats). Returns logits plus the accelerator counters.
+    pub fn infer(&self, images: &[f32], n: usize) -> Result<ForwardResult, GavinaError> {
+        self.check_images(images, n)?;
+        Ok(self.executor().forward(images, n))
+    }
+
+    /// Forward a large set in internal mini-batches of `batch` images
+    /// (bounds im2col memory), accumulating counters.
+    pub fn infer_batched(
+        &self,
+        images: &[f32],
+        n: usize,
+        batch: usize,
+    ) -> Result<ForwardResult, GavinaError> {
+        self.check_images(images, n)?;
+        if batch == 0 {
+            return Err(GavinaError::Config("mini-batch size must be ≥ 1".into()));
+        }
+        Ok(self.executor().forward_batched(images, n, batch))
+    }
+
+    /// Deterministic seeded inference for one shard of a larger batch:
+    /// `stream` is XOR-mixed into the backend's per-layer seed, so shards
+    /// executed on different threads reproduce bit-exactly.
+    pub fn infer_shard(
+        &self,
+        images: &[f32],
+        n: usize,
+        stream: u64,
+    ) -> Result<ForwardResult, GavinaError> {
+        self.check_images(images, n)?;
+        let mut ex = self.executor();
+        ex.stream = stream;
+        Ok(ex.forward(images, n))
+    }
+
+    /// Execute `n` independent images, splitting them into contiguous
+    /// sub-batches across the engine's `threads` scoped workers (each a
+    /// deterministic [`Engine::infer_shard`] stream), and merge the
+    /// results in request order. `base_stream` namespaces the shard
+    /// streams (the coordinator passes a per-worker value).
+    pub fn infer_parallel(
+        &self,
+        images: &[f32],
+        n: usize,
+        base_stream: u64,
+    ) -> Result<ForwardResult, GavinaError> {
+        self.check_images(images, n)?;
+        let threads = parallel::resolve_threads(self.threads);
+        if threads <= 1 || n <= 1 {
+            return self.infer_shard(images, n, base_stream);
+        }
+        // Contiguous sub-batches, one per thread, merged in request order.
+        let chunk = n.div_ceil(threads.min(n));
+        let starts: Vec<usize> = (0..n).step_by(chunk).collect();
+        let parts = parallel::parallel_map(&starts, starts.len(), |ci, &i0| {
+            let bn = chunk.min(n - i0);
+            let mut ex = self.executor();
+            ex.stream = base_stream ^ (ci as u64).wrapping_mul(0x9E37_79B9);
+            ex.forward(&images[i0 * IMAGE_LEN..(i0 + bn) * IMAGE_LEN], bn)
+        });
+        let mut logits = Vec::with_capacity(n * 10);
+        let mut stats = ForwardStats::default();
+        let mut classes = 0;
+        for part in parts {
+            logits.extend_from_slice(&part.logits);
+            classes = part.classes;
+            stats.absorb(&part.stats);
+        }
+        Ok(ForwardResult {
+            logits,
+            n,
+            classes,
+            stats,
+        })
+    }
+
+    /// Start the serving coordinator (batcher + worker pool) over this
+    /// engine. Takes the `Arc` by value — `Arc::clone(&engine).serve(…)`
+    /// keeps a local handle alive alongside the service.
+    pub fn serve(self: Arc<Self>, opts: ServeOptions) -> Coordinator {
+        Coordinator::start(self, opts)
+    }
+
+    /// Per-layer sensitivity profile (paper Fig. 8a) on the given images;
+    /// needs calibrated error tables.
+    pub fn profile_layers(
+        &self,
+        images: &[f32],
+        n: usize,
+        batch: usize,
+    ) -> Result<Vec<LayerChoices>, GavinaError> {
+        self.check_images(images, n)?;
+        let tables = self.tables.as_ref().ok_or_else(|| {
+            GavinaError::Config("layer profiling needs calibrated error tables".into())
+        })?;
+        policy::profile_layer_choices(
+            &self.weights,
+            self.width_mult,
+            self.prec,
+            &self.arch,
+            tables,
+            self.seed,
+            &ProfileSet {
+                images: images.to_vec(),
+                n,
+                batch: batch.max(1),
+            },
+        )
+    }
+
+    /// Profile + solve the §IV-D ILP for a target average G.
+    pub fn allocate(
+        &self,
+        gtar: f64,
+        images: &[f32],
+        n: usize,
+        batch: usize,
+    ) -> Result<Allocation, GavinaError> {
+        let choices = self.profile_layers(images, n, batch)?;
+        Ok(GavAllocator::new(choices).solve(gtar))
+    }
+
+    /// A new engine sharing this one's weights/tables/backend config but
+    /// with a different G policy. [`GavPolicy::IlpBudget`] is rejected
+    /// here (it needs a profile set — use [`EngineBuilder`]).
+    pub fn with_policy(&self, policy: GavPolicy) -> Result<Engine, GavinaError> {
+        if matches!(policy, GavPolicy::IlpBudget { .. }) {
+            return Err(GavinaError::Config(
+                "with_policy cannot resolve IlpBudget; use EngineBuilder::profile_set".into(),
+            ));
+        }
+        let (layer_gs, _) = policy::resolve(
+            &policy,
+            &self.weights,
+            self.width_mult,
+            self.prec,
+            &self.arch,
+            self.tables.as_ref(),
+            self.seed,
+            None,
+        )?;
+        Ok(Engine {
+            weights: Arc::clone(&self.weights),
+            backend: Arc::clone(&self.backend),
+            prec: self.prec,
+            arch: self.arch.clone(),
+            tables: self.tables.clone(),
+            width_mult: self.width_mult,
+            seed: self.seed,
+            threads: self.threads,
+            policy,
+            layer_gs,
+            ilp: None,
+        })
+    }
+
+    // --- accessors ------------------------------------------------------
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    pub fn width_mult(&self) -> f64 {
+        self.width_mult
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The resolved per-layer G vector (index = conv layer in execution
+    /// order, see [`crate::dnn::conv_layer_names`]).
+    pub fn layer_gs(&self) -> &[u32] {
+        &self.layer_gs
+    }
+
+    pub fn policy(&self) -> &GavPolicy {
+        &self.policy
+    }
+
+    /// ILP profiling artifacts when the engine was built with
+    /// [`GavPolicy::IlpBudget`].
+    pub fn ilp_report(&self) -> Option<&IlpReport> {
+        self.ilp.as_ref()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn tables(&self) -> Option<&Arc<ErrorTables>> {
+        self.tables.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn rand_images(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n * IMAGE_LEN).map(|_| rng.next_f32()).collect()
+    }
+
+    fn tiny_builder() -> EngineBuilder {
+        EngineBuilder::new()
+            .synthetic_weights(0.125, 1)
+            .precision(Precision::new(2, 2))
+            .arch(ArchConfig::tiny())
+            .seed(3)
+    }
+
+    #[test]
+    fn build_validates_weights_and_policy() {
+        assert!(matches!(
+            EngineBuilder::new().build(),
+            Err(GavinaError::Config(_))
+        ));
+        // width_mult mismatch: synthetic 0.125 weights claimed as 0.25.
+        let err = EngineBuilder::new()
+            .weights(synth::synthetic_weights(0.125, 1))
+            .width_mult(0.25)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("conv0/w"), "{err}");
+        // Uniform G beyond G_max.
+        assert!(tiny_builder()
+            .policy(GavPolicy::Uniform(99))
+            .build()
+            .is_err());
+        // IlpBudget on the float reference makes no sense.
+        assert!(tiny_builder()
+            .backend_float()
+            .policy(GavPolicy::IlpBudget { gtar: 1.0 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn infer_checks_shapes_instead_of_panicking() {
+        let engine = tiny_builder().build().unwrap();
+        assert!(matches!(
+            engine.infer(&[0.0; 7], 1),
+            Err(GavinaError::Shape { .. })
+        ));
+        assert!(engine.infer(&[], 0).is_err());
+        let mut rng = Prng::new(5);
+        let imgs = rand_images(&mut rng, 1);
+        assert_eq!(engine.infer(&imgs, 1).unwrap().logits.len(), 10);
+    }
+
+    #[test]
+    fn float_and_guarded_engine_agree() {
+        let mut rng = Prng::new(7);
+        let imgs = rand_images(&mut rng, 2);
+        let exact = tiny_builder().backend_float().build().unwrap();
+        let guarded = tiny_builder().build().unwrap();
+        let a = exact.infer(&imgs, 2).unwrap();
+        let b = guarded.infer(&imgs, 2).unwrap();
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        assert_eq!(a.stats.cycles, 0);
+        assert!(b.stats.cycles > 0);
+        assert_eq!(exact.backend_name(), "float");
+        assert_eq!(guarded.backend_name(), "gavina-sim");
+    }
+
+    #[test]
+    fn with_policy_rebinds_layer_gs() {
+        let engine = tiny_builder().build().unwrap();
+        let max_g = engine.precision().max_g();
+        assert_eq!(engine.layer_gs(), vec![max_g; 20]);
+        let uv = engine.with_policy(GavPolicy::Uniform(0)).unwrap();
+        assert_eq!(uv.layer_gs(), vec![0; 20]);
+        assert!(engine
+            .with_policy(GavPolicy::IlpBudget { gtar: 1.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn apply_config_loads_engine_section_and_rejects_typos() {
+        let cfg = crate::config::parse(
+            "[engine]\nprecision = \"a2w2\"\npolicy = \"uniform\"\ng = 1\nseed = 5\nthreads = 2\n",
+        )
+        .unwrap();
+        let engine = EngineBuilder::new()
+            .synthetic_weights(0.125, 1)
+            .arch(ArchConfig::tiny())
+            .apply_config(&cfg)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(engine.precision(), Precision::new(2, 2));
+        assert_eq!(engine.seed(), 5);
+        assert_eq!(engine.threads(), 2);
+        assert_eq!(engine.layer_gs(), vec![1; 20]);
+
+        // Legacy configs keep g under [run]; policy = "uniform" must
+        // still resolve (engine.* would win if both were present).
+        let cfg = crate::config::parse("[run]\ng = 2\n[engine]\npolicy = \"uniform\"\n").unwrap();
+        let engine = EngineBuilder::new()
+            .synthetic_weights(0.125, 1)
+            .precision(Precision::new(2, 2))
+            .arch(ArchConfig::tiny())
+            .apply_config(&cfg)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(engine.layer_gs(), vec![2; 20]);
+
+        // Bare-key inference must not override an explicitly chosen
+        // policy (library callers applying a legacy config).
+        let cfg = crate::config::parse("[run]\ng = 1\n").unwrap();
+        let engine = tiny_builder()
+            .policy(GavPolicy::Exact)
+            .apply_config(&cfg)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(engine.layer_gs(), vec![Precision::new(2, 2).max_g(); 20]);
+
+        // Typos are hard errors, not silent defaults.
+        let cfg = crate::config::parse("[engine]\nthread = 2\n").unwrap();
+        let err = match EngineBuilder::new().apply_config(&cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("typoed [engine] key must be rejected"),
+        };
+        assert!(err.to_string().contains("unknown [engine] key 'thread'"), "{err}");
+        // So are invalid values (negative seed must not wrap).
+        let cfg = crate::config::parse("[engine]\nseed = -1\n").unwrap();
+        assert!(EngineBuilder::new().apply_config(&cfg).is_err());
+        let cfg = crate::config::parse("[engine]\npolicy = \"bogus\"\n").unwrap();
+        assert!(EngineBuilder::new().apply_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn infer_parallel_matches_shard_partition() {
+        // The threaded path must produce exactly the logits of serially
+        // running each sub-batch with the same per-chunk streams.
+        let engine = tiny_builder().threads(2).build().unwrap();
+        let n = 5; // odd: chunks of 3 + 2
+        let mut rng = Prng::new(10);
+        let images = rand_images(&mut rng, n);
+        let par = engine.infer_parallel(&images, n, 0).unwrap();
+        assert_eq!(par.logits.len(), n * par.classes);
+
+        let chunk = n.div_ceil(2);
+        let mut expect = Vec::new();
+        for (ci, i0) in (0..n).step_by(chunk).enumerate() {
+            let bn = chunk.min(n - i0);
+            let out = engine
+                .infer_shard(
+                    &images[i0 * IMAGE_LEN..(i0 + bn) * IMAGE_LEN],
+                    bn,
+                    (ci as u64).wrapping_mul(0x9E37_79B9),
+                )
+                .unwrap();
+            expect.extend_from_slice(&out.logits);
+        }
+        assert_eq!(par.logits, expect);
+
+        // And a second identical call is bit-identical (deterministic).
+        let again = engine.infer_parallel(&images, n, 0).unwrap();
+        assert_eq!(par.logits, again.logits);
+        assert_eq!(par.stats.cycles, again.stats.cycles);
+    }
+}

@@ -1,0 +1,264 @@
+//! Per-layer G allocation policies.
+//!
+//! The per-layer GAV parameter `G` (how many most-significant bit-serial
+//! steps run at the guarded voltage) used to be a raw `Vec<u32>` smeared
+//! across `ServeConfig`, `Executor` and `main.rs`; [`GavPolicy`] makes the
+//! allocation strategy a first-class value that the
+//! [`EngineBuilder`](super::EngineBuilder) resolves exactly once, at build
+//! time. The ILP allocator (paper §IV-D) plugs in as
+//! [`GavPolicy::IlpBudget`] instead of being a separate CLI code path.
+
+use std::sync::Arc;
+
+use crate::arch::{ArchConfig, Precision};
+use crate::dnn::{conv_layer_names, Executor, TensorMap};
+use crate::engine::backend::{FloatBackend, GavinaBackend};
+use crate::engine::GavinaError;
+use crate::errmodel::ErrorTables;
+use crate::ilp::{Allocation, GavAllocator, LayerChoices};
+
+/// How per-layer G values are chosen.
+///
+/// ```
+/// use gavina::engine::GavPolicy;
+///
+/// // A uniform mid-range guard on every layer:
+/// let p = GavPolicy::Uniform(3);
+/// assert_eq!(p.describe(), "uniform G=3");
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub enum GavPolicy {
+    /// Fully guarded: `G = G_max` on every layer (bit-exact operation).
+    Exact,
+    /// The same G on every layer (the Fig. 6 sweep axis).
+    Uniform(u32),
+    /// Explicit per-layer G values (length must equal the conv layer
+    /// count).
+    PerLayer(Vec<u32>),
+    /// Optimal per-layer allocation under an op-weighted average-G budget
+    /// (branch-and-bound ILP, paper §IV-D). Resolving this policy needs a
+    /// profile set (see [`EngineBuilder::profile_set`]) and calibrated
+    /// error tables.
+    ///
+    /// [`EngineBuilder::profile_set`]: super::EngineBuilder::profile_set
+    IlpBudget {
+        /// Target op-weighted average G (`G_tar` in the paper).
+        gtar: f64,
+    },
+}
+
+impl GavPolicy {
+    /// One-line human description (serve banners, diagnostics).
+    pub fn describe(&self) -> String {
+        match self {
+            GavPolicy::Exact => "exact (G=G_max everywhere)".into(),
+            GavPolicy::Uniform(g) => format!("uniform G={g}"),
+            GavPolicy::PerLayer(gs) => format!("per-layer G {gs:?}"),
+            GavPolicy::IlpBudget { gtar } => format!("ILP allocation, G_tar={gtar}"),
+        }
+    }
+}
+
+/// The ILP resolution artifacts, kept on the engine so callers can print
+/// the Fig. 8a profile and the achieved allocation without re-profiling.
+#[derive(Clone, Debug)]
+pub struct IlpReport {
+    /// Per-layer option menus: `choices[l].cost[g]` is the logit MSE when
+    /// only layer `l` runs at `G = g` on the profile set.
+    pub choices: Vec<LayerChoices>,
+    /// The solved allocation.
+    pub allocation: Allocation,
+}
+
+/// Profile set for [`GavPolicy::IlpBudget`] resolution.
+#[derive(Clone)]
+pub(crate) struct ProfileSet {
+    pub images: Vec<f32>,
+    pub n: usize,
+    pub batch: usize,
+}
+
+/// Per-layer perturbation profile (paper Fig. 8a): for every conv layer
+/// and every `G`, the logit MSE versus the exact reference when only that
+/// layer is undervolted. Layer `li` profiles at seed `seed + li` — the
+/// historical `allocate` subcommand seeding.
+pub(crate) fn profile_layer_choices(
+    weights: &TensorMap,
+    width_mult: f64,
+    prec: Precision,
+    arch: &ArchConfig,
+    tables: &Arc<ErrorTables>,
+    seed: u64,
+    set: &ProfileSet,
+) -> Result<Vec<LayerChoices>, GavinaError> {
+    if set.images.len() != set.n * crate::dnn::IMAGE_LEN {
+        return Err(GavinaError::Shape {
+            what: format!("profile set (n={})", set.n),
+            expected: set.n * crate::dnn::IMAGE_LEN,
+            got: set.images.len(),
+        });
+    }
+    let names = conv_layer_names();
+    let ref_out = Executor::new(weights, width_mult, prec, &FloatBackend).forward_batched(
+        &set.images,
+        set.n,
+        set.batch,
+    );
+    let mut layers = Vec::with_capacity(names.len());
+    for li in 0..names.len() {
+        let mut cost = vec![0.0f64; (prec.max_g() + 1) as usize];
+        let mut macs = 1u64;
+        for g in 0..prec.max_g() {
+            let backend = GavinaBackend {
+                arch: arch.clone(),
+                tables: Some(Arc::clone(tables)),
+                seed: seed + li as u64,
+            };
+            let mut ex = Executor::new(weights, width_mult, prec, &backend);
+            ex.layer_gs = vec![prec.max_g(); names.len()];
+            ex.layer_gs[li] = g;
+            let out = ex.forward_batched(&set.images, set.n, set.batch);
+            macs = out.stats.layer_macs[li].max(1);
+            cost[g as usize] = crate::stats::mse_f32(&ref_out.logits, &out.logits);
+        }
+        layers.push(LayerChoices {
+            ops: macs as f64,
+            cost,
+        });
+    }
+    Ok(layers)
+}
+
+/// Resolve a policy into the per-layer G vector (and, for the ILP, its
+/// report). Pure validation for the first three variants; `IlpBudget`
+/// profiles and solves.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn resolve(
+    policy: &GavPolicy,
+    weights: &TensorMap,
+    width_mult: f64,
+    prec: Precision,
+    arch: &ArchConfig,
+    tables: Option<&Arc<ErrorTables>>,
+    seed: u64,
+    profile: Option<&ProfileSet>,
+) -> Result<(Vec<u32>, Option<IlpReport>), GavinaError> {
+    let n_layers = conv_layer_names().len();
+    let max_g = prec.max_g();
+    match policy {
+        GavPolicy::Exact => Ok((vec![max_g; n_layers], None)),
+        GavPolicy::Uniform(g) => {
+            if *g > max_g {
+                return Err(GavinaError::Config(format!(
+                    "uniform G={g} exceeds G_max={max_g} for {prec}"
+                )));
+            }
+            Ok((vec![*g; n_layers], None))
+        }
+        GavPolicy::PerLayer(gs) => {
+            if gs.len() != n_layers {
+                return Err(GavinaError::Shape {
+                    what: "per-layer G vector".into(),
+                    expected: n_layers,
+                    got: gs.len(),
+                });
+            }
+            if let Some(bad) = gs.iter().find(|&&g| g > max_g) {
+                return Err(GavinaError::Config(format!(
+                    "per-layer G={bad} exceeds G_max={max_g} for {prec}"
+                )));
+            }
+            Ok((gs.clone(), None))
+        }
+        GavPolicy::IlpBudget { gtar } => {
+            if gtar.is_nan() || *gtar < 0.0 {
+                return Err(GavinaError::Config(format!(
+                    "ILP budget G_tar={gtar} must be non-negative"
+                )));
+            }
+            let tables = tables.ok_or_else(|| {
+                GavinaError::Config(
+                    "GavPolicy::IlpBudget needs calibrated error tables \
+                     (EngineBuilder::tables)"
+                        .into(),
+                )
+            })?;
+            let set = profile.ok_or_else(|| {
+                GavinaError::Config(
+                    "GavPolicy::IlpBudget needs a profile set \
+                     (EngineBuilder::profile_set)"
+                        .into(),
+                )
+            })?;
+            let choices =
+                profile_layer_choices(weights, width_mult, prec, arch, tables, seed, set)?;
+            let allocation = GavAllocator::new(choices.clone()).solve(*gtar);
+            let gs = allocation.gs.clone();
+            Ok((
+                gs,
+                Some(IlpReport {
+                    choices,
+                    allocation,
+                }),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::exec::synth::synthetic_weights;
+
+    fn ctx() -> (TensorMap, Precision, ArchConfig) {
+        (synthetic_weights(0.125, 1), Precision::new(2, 2), ArchConfig::tiny())
+    }
+
+    #[test]
+    fn exact_uniform_per_layer_resolve_without_profiling() {
+        let (w, prec, arch) = ctx();
+        let n = conv_layer_names().len();
+        let (gs, rep) =
+            resolve(&GavPolicy::Exact, &w, 0.125, prec, &arch, None, 1, None).unwrap();
+        assert_eq!(gs, vec![prec.max_g(); n]);
+        assert!(rep.is_none());
+
+        let (gs, _) =
+            resolve(&GavPolicy::Uniform(1), &w, 0.125, prec, &arch, None, 1, None).unwrap();
+        assert_eq!(gs, vec![1; n]);
+
+        let want: Vec<u32> = (0..n as u32).map(|i| i % (prec.max_g() + 1)).collect();
+        let (gs, _) = resolve(
+            &GavPolicy::PerLayer(want.clone()),
+            &w,
+            0.125,
+            prec,
+            &arch,
+            None,
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(gs, want);
+    }
+
+    #[test]
+    fn invalid_policies_are_config_errors() {
+        let (w, prec, arch) = ctx();
+        let too_big = GavPolicy::Uniform(prec.max_g() + 1);
+        assert!(matches!(
+            resolve(&too_big, &w, 0.125, prec, &arch, None, 1, None),
+            Err(GavinaError::Config(_))
+        ));
+        let short = GavPolicy::PerLayer(vec![0; 3]);
+        assert!(matches!(
+            resolve(&short, &w, 0.125, prec, &arch, None, 1, None),
+            Err(GavinaError::Shape { .. })
+        ));
+        let no_tables = GavPolicy::IlpBudget { gtar: 1.0 };
+        assert!(matches!(
+            resolve(&no_tables, &w, 0.125, prec, &arch, None, 1, None),
+            Err(GavinaError::Config(_))
+        ));
+    }
+}

@@ -23,6 +23,9 @@
 //! * [`gemm`] — the bit-packed binary-GEMM hot path (u64 AND+popcount).
 //! * [`dnn`] — DNN substrate: tensors, conv-to-GEMM lowering, the
 //!   quantized ResNet-18 benchmark graph.
+//! * [`engine`] — **the public API**: `EngineBuilder` → validated,
+//!   `Arc`-shareable `Engine` with typed `GavinaError`s, pluggable
+//!   `ExecBackend`s and first-class `GavPolicy` G allocation.
 //! * [`ilp`] — branch-and-bound ILP for per-layer G allocation (§IV-D).
 //! * [`stats`] — VAR_NED (Eq. 1), MSE, accuracy metrics.
 //! * [`workload`] — synthetic GEMM/DNN workload generators (§IV-B
@@ -44,6 +47,7 @@ pub mod baseline;
 pub mod config;
 pub mod coordinator;
 pub mod dnn;
+pub mod engine;
 pub mod errmodel;
 pub mod gemm;
 pub mod gls;
@@ -58,5 +62,6 @@ pub mod util;
 pub mod workload;
 
 pub use arch::{ArchConfig, GavSchedule, Precision};
+pub use engine::{Engine, EngineBuilder, GavPolicy, GavinaError};
 pub use errmodel::ErrorTables;
 pub use power::PowerModel;

@@ -12,15 +12,17 @@
 //! gavina selfcheck                   PJRT artifacts vs native cross-check
 //! ```
 //!
-//! `--config run.toml` pre-loads defaults from a `[run]` section.
+//! `--config run.toml` pre-loads defaults from the `[engine]` (and
+//! legacy `[run]`) sections; `serve` also honors `[serve]`.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use gavina::arch::{ArchConfig, GavSchedule, Precision};
 use gavina::config::{Config, RunConfig};
-use gavina::coordinator::{Coordinator, ServeConfig};
+use gavina::coordinator::ServeOptions;
 use gavina::dnn;
+use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
 use gavina::errmodel::{self, CalibrationConfig};
 use gavina::gls::{DelayModel, GlsContext};
 use gavina::power::PowerModel;
@@ -34,22 +36,44 @@ fn usage() -> ! {
     std::process::exit(2)
 }
 
+fn or_die<T>(r: Result<T, GavinaError>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    })
+}
+
 struct Args {
     cmd: String,
     run: RunConfig,
+    /// Parsed `--config` file (the `[engine]`/`[serve]` surface), kept so
+    /// subcommands can apply their sections through the typed loaders.
+    cfg: Option<Config>,
     gtar: f64,
+    /// `-g` given explicitly on the command line (wins over `[engine]`
+    /// policy from the config file).
+    g_set: bool,
+    /// `--gtar` given explicitly on the command line.
+    gtar_set: bool,
     quick: bool,
     n: usize,
 }
 
 fn parse_args() -> Args {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let mut run = RunConfig::default();
+    let mut cfg_file: Option<Config> = None;
     let mut cmd = String::new();
     let mut gtar = 4.0;
     let mut quick = false;
     let mut n = 64;
-    let mut g_set = false;
+    let mut gtar_set = false;
+    // Explicit CLI flags are collected first and applied on top of the
+    // config afterwards, so `-g 3 --config run.toml` and
+    // `--config run.toml -g 3` mean the same thing.
+    let mut cli_precision: Option<Precision> = None;
+    let mut cli_g: Option<u32> = None;
+    let mut cli_threads: Option<usize> = None;
+    let mut cli_artifacts: Option<PathBuf> = None;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -60,21 +84,24 @@ fn parse_args() -> Args {
                         eprintln!("config error: {e}");
                         std::process::exit(2)
                     });
-                run = RunConfig::from_config(&cfg);
+                cfg_file = Some(cfg);
             }
             "-p" | "--precision" => {
                 i += 1;
-                run.precision = Precision::parse(argv.get(i).map(String::as_str).unwrap_or(""))
-                    .unwrap_or_else(|| usage());
+                cli_precision = Some(
+                    Precision::parse(argv.get(i).map(String::as_str).unwrap_or(""))
+                        .unwrap_or_else(|| usage()),
+                );
             }
             "-g" => {
                 i += 1;
-                run.g = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
-                g_set = true;
+                cli_g =
+                    Some(argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage()));
             }
             "--gtar" => {
                 i += 1;
                 gtar = argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+                gtar_set = true;
             }
             "--quick" => quick = true,
             "-n" => {
@@ -83,14 +110,12 @@ fn parse_args() -> Args {
             }
             "--threads" => {
                 i += 1;
-                run.threads = argv
-                    .get(i)
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or_else(|| usage());
+                cli_threads =
+                    Some(argv.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage()));
             }
             "--artifacts" => {
                 i += 1;
-                run.artifacts_dir = PathBuf::from(argv.get(i).unwrap_or_else(|| usage()));
+                cli_artifacts = Some(PathBuf::from(argv.get(i).unwrap_or_else(|| usage())));
             }
             s if cmd.is_empty() && !s.starts_with('-') => cmd = s.to_string(),
             _ => usage(),
@@ -100,16 +125,78 @@ fn parse_args() -> Args {
     if cmd.is_empty() {
         usage();
     }
-    if !g_set {
-        run.g = run.precision.max_g();
+    let mut run = match &cfg_file {
+        Some(cfg) => RunConfig::from_config(cfg),
+        None => RunConfig::default(),
+    };
+    if let Some(p) = cli_precision {
+        run.precision = p;
     }
+    if let Some(t) = cli_threads {
+        run.threads = t;
+    }
+    if let Some(dir) = cli_artifacts {
+        run.artifacts_dir = dir;
+    }
+    let g_set = cli_g.is_some();
+    // CLI -g wins; else a g from the config file survives (RunConfig
+    // already loaded it); else the fully-guarded default.
+    let config_has_g = cfg_file
+        .as_ref()
+        .is_some_and(|c| c.get("engine.g").is_some() || c.get("run.g").is_some());
+    run.g = match cli_g {
+        Some(g) => g,
+        None if config_has_g => run.g,
+        None => run.precision.max_g(),
+    };
     Args {
         cmd,
         run,
+        cfg: cfg_file,
         gtar,
+        g_set,
+        gtar_set,
         quick,
         n,
     }
+}
+
+/// The one place CLI state meets the engine facade. Precedence, lowest to
+/// highest: built-in default (fully guarded — `Exact` ≡ uniform G_max) <
+/// the `[engine]` config section (via `apply_config`, which also rejects
+/// unknown keys) < explicit CLI flags (`-g` replaces the policy;
+/// `-p`/`--threads` — `run` already holds the config-then-CLI merge for
+/// the scalar knobs, so they are re-applied on top).
+fn engine_builder(
+    args: &Args,
+    weights: Arc<dnn::TensorMap>,
+    tables: Option<Arc<errmodel::ErrorTables>>,
+) -> EngineBuilder {
+    let run = &args.run;
+    let mut b = EngineBuilder::new();
+    if let Some(cfg) = &args.cfg {
+        b = or_die(b.apply_config(cfg));
+    }
+    if args.g_set {
+        b = b.policy(GavPolicy::Uniform(run.g));
+    }
+    b.weights(weights)
+        .precision(run.precision)
+        .width_mult(run.width_mult)
+        .arch(ArchConfig::paper())
+        .seed(run.seed)
+        .threads(run.threads)
+        .tables_opt(tables)
+}
+
+/// The uniform-G schedule that best represents an engine's resolved
+/// allocation (exact for Exact/Uniform policies; the rounded op-unweighted
+/// mean for per-layer ones) — what the CLI's energy/TOP/sW lines model.
+fn effective_sched(engine: &gavina::engine::Engine) -> GavSchedule {
+    let gs = engine.layer_gs();
+    let mean = gs.iter().map(|&g| g as f64).sum::<f64>() / gs.len().max(1) as f64;
+    let g = (mean.round() as u32).min(engine.precision().max_g());
+    GavSchedule::two_level(engine.precision(), g)
 }
 
 fn caltables_path(run: &RunConfig) -> PathBuf {
@@ -282,29 +369,35 @@ fn load_images(run: &RunConfig, n: usize) -> (Vec<f32>, Vec<i32>, usize) {
     }
 }
 
-fn cmd_eval(run: &RunConfig, quick: bool) {
-    let weights = load_weights(run);
+fn cmd_eval(args: &Args) {
+    let run = &args.run;
+    let weights = Arc::new(load_weights(run));
     let (images, labels, n) = load_images(run, run.n_eval);
-    let tables = load_or_calibrate_tables(run, quick);
+    let tables = Arc::new(load_or_calibrate_tables(run, args.quick));
     let arch = ArchConfig::paper();
-    let mut ex = dnn::Executor::new(
-        &weights,
-        run.width_mult,
-        run.precision,
-        dnn::Backend::Gavina {
-            arch: arch.clone(),
-            tables: Some(&tables),
-            seed: run.seed,
-        },
-    );
-    ex.layer_gs = vec![run.g; dnn::conv_layer_names().len()];
-    let (res, secs) = gavina::util::timeit(|| ex.forward_batched(&images, n, run.batch));
+    // The profile set only matters when the config selected an ILP
+    // policy; attach it (small) only then, so plain eval never copies
+    // images.
+    let mut builder = engine_builder(args, weights, Some(tables));
+    if matches!(builder.policy_ref(), GavPolicy::IlpBudget { .. }) {
+        let n_prof = n.min(if args.quick { 8 } else { 24 });
+        builder = builder.profile_set(&images[..n_prof * 3072], n_prof, run.batch);
+    }
+    let engine = or_die(builder.build());
+    eprintln!("engine: {} backend, {}", engine.backend_name(), engine.policy().describe());
+    let (res, secs) =
+        gavina::util::timeit(|| or_die(engine.infer_batched(&images, n, run.batch)));
     let acc = gavina::stats::accuracy(&res.logits, &labels, res.classes);
-    let sched = GavSchedule::two_level(run.precision, run.g);
+    // Energy is modelled on the uniform-G schedule matching the engine's
+    // *resolved* allocation (config G included), not the CLI default.
+    let sched = effective_sched(&engine);
     let power = PowerModel::paper_calibrated();
     println!(
-        "eval {} G={} on {} images: accuracy {:.4}",
-        run.precision, run.g, n, acc
+        "eval {} ({}) on {} images: accuracy {:.4}",
+        run.precision,
+        engine.policy().describe(),
+        n,
+        acc
     );
     println!(
         "  sim: {} cycles ({} tiles, {} corrupted values), hw time {:.3} ms, energy {:.3} mJ",
@@ -321,58 +414,47 @@ fn cmd_eval(run: &RunConfig, quick: bool) {
     );
 }
 
-fn cmd_allocate(run: &RunConfig, gtar: f64, quick: bool) {
-    let weights = load_weights(run);
-    let (images, _, n) = load_images(run, if quick { 8 } else { 24 });
-    let tables = load_or_calibrate_tables(run, quick);
-    let arch = ArchConfig::paper();
+fn cmd_allocate(args: &Args) {
+    let run = &args.run;
+    let weights = Arc::new(load_weights(run));
+    let (images, _, n) = load_images(run, if args.quick { 8 } else { 24 });
+    let tables = Arc::new(load_or_calibrate_tables(run, args.quick));
     let prec = run.precision;
     let names = dnn::conv_layer_names();
+    // --gtar on the CLI wins; otherwise an `engine.gtar` from the config
+    // file; otherwise the built-in default.
+    let gtar = if args.gtar_set {
+        args.gtar
+    } else {
+        args.cfg
+            .as_ref()
+            .and_then(|c| c.get("engine.gtar"))
+            .and_then(gavina::config::Value::as_float)
+            .unwrap_or(args.gtar)
+    };
 
-    // Exact reference logits.
-    let ex = dnn::Executor::new(&weights, run.width_mult, prec, dnn::Backend::Float);
-    let ref_out = ex.forward_batched(&images, n, run.batch);
-
-    // Per-layer MSE profile (Fig. 8a): undervolt one layer at a time.
-    let g_values: Vec<u32> = (0..=prec.max_g()).collect();
-    let mut layers = Vec::new();
-    let mut macs = vec![0u64; names.len()];
+    // The ILP is a policy now: profiling (Fig. 8a) + branch-and-bound all
+    // happen inside EngineBuilder::build, and the report hangs off the
+    // engine.
+    eprintln!("profiling per-layer sensitivity on {n} images…");
+    let engine = or_die(
+        engine_builder(args, weights, Some(tables))
+            .policy(GavPolicy::IlpBudget { gtar })
+            .profile_set(&images, n, run.batch)
+            .build(),
+    );
+    let report = engine.ilp_report().expect("IlpBudget engines carry a report");
     for (li, name) in names.iter().enumerate() {
-        let mut cost = Vec::new();
-        for &g in &g_values {
-            if g == prec.max_g() {
-                cost.push(0.0);
-                continue;
-            }
-            let mut exg = dnn::Executor::new(
-                &weights,
-                run.width_mult,
-                prec,
-                dnn::Backend::Gavina {
-                    arch: arch.clone(),
-                    tables: Some(&tables),
-                    seed: run.seed + li as u64,
-                },
-            );
-            exg.layer_gs = vec![prec.max_g(); names.len()];
-            exg.layer_gs[li] = g;
-            let out = exg.forward_batched(&images, n, run.batch);
-            if macs[li] == 0 {
-                macs[li] = out.stats.layer_macs[li];
-            }
-            cost.push(gavina::stats::mse_f32(&ref_out.logits, &out.logits));
-        }
         eprintln!(
             "layer {li:2} {name:12} MSE(G): {:?}",
-            cost.iter().map(|c| format!("{c:.2e}")).collect::<Vec<_>>()
+            report.choices[li]
+                .cost
+                .iter()
+                .map(|c| format!("{c:.2e}"))
+                .collect::<Vec<_>>()
         );
-        layers.push(gavina::ilp::LayerChoices {
-            ops: macs[li] as f64,
-            cost,
-        });
     }
-
-    let alloc = gavina::ilp::GavAllocator::new(layers).solve(gtar);
+    let alloc = &report.allocation;
     println!("ILP allocation for {prec}, G_tar = {gtar}:");
     for (li, name) in names.iter().enumerate() {
         println!("  {name:12} G = {}", alloc.gs[li]);
@@ -383,29 +465,51 @@ fn cmd_allocate(run: &RunConfig, gtar: f64, quick: bool) {
     );
 }
 
-fn cmd_serve(run: &RunConfig, n: usize) {
+fn cmd_serve(args: &Args) {
+    let run = &args.run;
     let weights = Arc::new(load_weights(run));
     let tables = Arc::new(load_or_calibrate_tables(run, true));
-    let mut cfg = ServeConfig::new(run.precision, run.g);
-    cfg.width_mult = run.width_mult;
-    cfg.max_batch = run.batch;
-    cfg.threads = run.threads;
+    // Load the request stream before the service starts so the metrics
+    // throughput window (coordinator start → last batch) measures
+    // serving, not disk I/O.
+    let (images, _, n_imgs) = load_images(run, args.n);
+    let mut builder = engine_builder(args, weights, Some(tables));
+    if matches!(builder.policy_ref(), GavPolicy::IlpBudget { .. }) {
+        let n_prof = n_imgs.min(8);
+        builder = builder.profile_set(&images[..n_prof * 3072], n_prof, run.batch);
+    }
+    let engine = Arc::new(or_die(builder.build()));
+    let mut opts = match &args.cfg {
+        Some(cfg) => or_die(ServeOptions::from_config(cfg)),
+        None => ServeOptions::default(),
+    };
+    // `[serve] max_batch` from the config wins; otherwise the `[run]`
+    // batch knob keeps its historical meaning.
+    let config_sets_max_batch = args
+        .cfg
+        .as_ref()
+        .is_some_and(|c| c.get("serve.max_batch").is_some());
+    if !config_sets_max_batch {
+        opts.max_batch = run.batch;
+    }
     eprintln!(
-        "coordinator: {} batch workers × {} intra-batch threads",
-        cfg.workers,
-        gavina::util::parallel::resolve_threads(cfg.threads)
+        "coordinator: {} batch workers × {} intra-batch threads ({} backend, {})",
+        opts.workers,
+        gavina::util::parallel::resolve_threads(engine.threads()),
+        engine.backend_name(),
+        engine.policy().describe(),
     );
-    let sched = GavSchedule::two_level(run.precision, run.g);
-    let coord = Coordinator::start(cfg, Arc::clone(&weights), Some(tables));
-    let (images, _, n_imgs) = load_images(run, n);
+    let sched = effective_sched(&engine);
+    let coord = engine.serve(opts);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_imgs)
         .map(|i| coord.submit(images[i * 3072..(i + 1) * 3072].to_vec()))
         .collect();
     let mut ok = 0;
     for rx in rxs {
-        if rx.recv_timeout(std::time::Duration::from_secs(600)).is_ok() {
-            ok += 1;
+        match rx.recv_timeout(std::time::Duration::from_secs(600)) {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            _ => {}
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -413,8 +517,8 @@ fn cmd_serve(run: &RunConfig, n: usize) {
     let (p50, p95, max) = m.latency_percentiles();
     let power = PowerModel::paper_calibrated();
     println!(
-        "served {ok}/{n_imgs} requests in {wall:.2}s ({:.1} img/s host)",
-        ok as f64 / wall
+        "served {ok}/{n_imgs} requests in {wall:.2}s ({:.1} req/s service-side)",
+        m.requests_per_sec()
     );
     println!(
         "  latency p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
@@ -481,9 +585,9 @@ fn main() {
         "calibrate" => {
             calibrate(&args.run, args.quick);
         }
-        "eval" => cmd_eval(&args.run, args.quick),
-        "allocate" => cmd_allocate(&args.run, args.gtar, args.quick),
-        "serve" => cmd_serve(&args.run, args.n),
+        "eval" => cmd_eval(&args),
+        "allocate" => cmd_allocate(&args),
+        "serve" => cmd_serve(&args),
         "selfcheck" => cmd_selfcheck(&args.run),
         _ => usage(),
     }

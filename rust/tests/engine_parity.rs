@@ -1,0 +1,254 @@
+//! Golden-parity tests for the `gavina::engine` facade: `Engine::infer`
+//! must produce **bit-identical** logits and `ForwardStats` to the
+//! pre-redesign path (direct `Executor` construction with a hand-set
+//! `layer_gs` vector) on synthetic weights, for the `Exact`, `Uniform`
+//! and `PerLayer` policies — the API moved, the numerics must not.
+
+use std::sync::Arc;
+
+use gavina::arch::{ArchConfig, Precision};
+use gavina::dnn::exec::synth::synthetic_weights;
+use gavina::dnn::{conv_layer_names, Executor, ForwardResult, TensorMap, IMAGE_LEN};
+use gavina::engine::{EngineBuilder, FloatBackend, GavPolicy, GavinaBackend};
+use gavina::errmodel::{ErrorTables, ModelParams};
+use gavina::util::Prng;
+
+const WM: f64 = 0.125;
+const SEED: u64 = 41;
+
+fn test_tables(arch: &ArchConfig) -> Arc<ErrorTables> {
+    // Dense synthetic tables with a mid-size flip probability so
+    // undervolted runs actually corrupt values — parity on error-free
+    // runs would prove much less.
+    let params = ModelParams::paper(arch.c_dim);
+    let mut tables = ErrorTables::zeroed(params);
+    for bit in 0..params.s_bits {
+        for e in 0..=params.c_dim as u16 {
+            for pb in 0..params.p_bins {
+                for cd in 0..params.n_cond(bit) {
+                    tables.set_prob(bit, e, pb, cd, 0.05);
+                }
+            }
+        }
+    }
+    Arc::new(tables)
+}
+
+fn rand_images(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..n * IMAGE_LEN).map(|_| rng.next_f32()).collect()
+}
+
+/// The pre-redesign path: hand-built `Executor` over the simulator
+/// backend with an explicitly assigned `layer_gs` vector.
+fn legacy_forward(
+    weights: &TensorMap,
+    prec: Precision,
+    arch: &ArchConfig,
+    tables: Option<Arc<ErrorTables>>,
+    layer_gs: Vec<u32>,
+    images: &[f32],
+    n: usize,
+) -> ForwardResult {
+    let backend = GavinaBackend {
+        arch: arch.clone(),
+        tables,
+        seed: SEED,
+    };
+    let mut ex = Executor::new(weights, WM, prec, &backend);
+    ex.layer_gs = layer_gs;
+    ex.forward(images, n)
+}
+
+fn engine_forward(
+    weights: Arc<TensorMap>,
+    prec: Precision,
+    arch: &ArchConfig,
+    tables: Option<Arc<ErrorTables>>,
+    policy: GavPolicy,
+    images: &[f32],
+    n: usize,
+) -> ForwardResult {
+    let engine = EngineBuilder::new()
+        .weights(weights)
+        .width_mult(WM)
+        .precision(prec)
+        .arch(arch.clone())
+        .tables_opt(tables)
+        .policy(policy)
+        .seed(SEED)
+        .build()
+        .expect("engine config");
+    engine.infer(images, n).expect("engine inference")
+}
+
+fn assert_bit_identical(a: &ForwardResult, b: &ForwardResult) {
+    assert_eq!(a.logits, b.logits, "logits must be bit-identical");
+    assert_eq!(a.n, b.n);
+    assert_eq!(a.classes, b.classes);
+    assert_eq!(a.stats, b.stats, "ForwardStats must be identical");
+}
+
+#[test]
+fn exact_policy_matches_legacy_executor() {
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 1));
+    let tables = test_tables(&arch);
+    let images = rand_images(2, 2);
+    let n_layers = conv_layer_names().len();
+
+    let legacy = legacy_forward(
+        &weights,
+        prec,
+        &arch,
+        Some(Arc::clone(&tables)),
+        vec![prec.max_g(); n_layers],
+        &images,
+        2,
+    );
+    let engine = engine_forward(
+        weights,
+        prec,
+        &arch,
+        Some(tables),
+        GavPolicy::Exact,
+        &images,
+        2,
+    );
+    assert_bit_identical(&legacy, &engine);
+    // Fully guarded: the error model must not have fired.
+    assert_eq!(engine.stats.corrupted, 0);
+    assert!(engine.stats.cycles > 0);
+}
+
+#[test]
+fn uniform_policy_matches_legacy_executor() {
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 3));
+    let tables = test_tables(&arch);
+    let images = rand_images(4, 1);
+    let n_layers = conv_layer_names().len();
+
+    for g in [0u32, 1, 2] {
+        let legacy = legacy_forward(
+            &weights,
+            prec,
+            &arch,
+            Some(Arc::clone(&tables)),
+            vec![g; n_layers],
+            &images,
+            1,
+        );
+        let engine = engine_forward(
+            Arc::clone(&weights),
+            prec,
+            &arch,
+            Some(Arc::clone(&tables)),
+            GavPolicy::Uniform(g),
+            &images,
+            1,
+        );
+        assert_bit_identical(&legacy, &engine);
+        if g == 0 {
+            assert!(
+                engine.stats.corrupted > 0,
+                "fully undervolted parity run must actually inject errors"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_layer_policy_matches_legacy_executor() {
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 5));
+    let tables = test_tables(&arch);
+    let images = rand_images(6, 1);
+    let n_layers = conv_layer_names().len();
+
+    // A mixed allocation: guard the input conv, undervolt a spread of
+    // mid/deep layers at different G.
+    let gs: Vec<u32> = (0..n_layers as u32)
+        .map(|i| i * 7 % (prec.max_g() + 1))
+        .collect();
+
+    let legacy = legacy_forward(
+        &weights,
+        prec,
+        &arch,
+        Some(Arc::clone(&tables)),
+        gs.clone(),
+        &images,
+        1,
+    );
+    let engine = engine_forward(
+        weights,
+        prec,
+        &arch,
+        Some(tables),
+        GavPolicy::PerLayer(gs),
+        &images,
+        1,
+    );
+    assert_bit_identical(&legacy, &engine);
+}
+
+#[test]
+fn float_backend_matches_legacy_float_executor() {
+    let prec = Precision::new(4, 4);
+    let weights = Arc::new(synthetic_weights(WM, 7));
+    let images = rand_images(8, 2);
+
+    let mut legacy_ex = Executor::new(&weights, WM, prec, &FloatBackend);
+    legacy_ex.layer_gs = vec![prec.max_g(); conv_layer_names().len()];
+    let legacy = legacy_ex.forward(&images, 2);
+
+    let engine = EngineBuilder::new()
+        .weights(weights)
+        .width_mult(WM)
+        .precision(prec)
+        .backend_float()
+        .policy(GavPolicy::Exact)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let out = engine.infer(&images, 2).unwrap();
+    assert_bit_identical(&legacy, &out);
+    assert_eq!(out.stats.cycles, 0, "float reference models no hardware");
+}
+
+#[test]
+fn batched_inference_matches_legacy_forward_batched() {
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 9));
+    let tables = test_tables(&arch);
+    let n = 5;
+    let images = rand_images(10, n);
+    let n_layers = conv_layer_names().len();
+
+    let backend = GavinaBackend {
+        arch: arch.clone(),
+        tables: Some(Arc::clone(&tables)),
+        seed: SEED,
+    };
+    let mut ex = Executor::new(&weights, WM, prec, &backend);
+    ex.layer_gs = vec![1; n_layers];
+    let legacy = ex.forward_batched(&images, n, 2);
+
+    let engine = EngineBuilder::new()
+        .weights(weights)
+        .width_mult(WM)
+        .precision(prec)
+        .arch(arch)
+        .tables(tables)
+        .policy(GavPolicy::Uniform(1))
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let out = engine.infer_batched(&images, n, 2).unwrap();
+    assert_bit_identical(&legacy, &out);
+}

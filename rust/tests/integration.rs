@@ -248,16 +248,18 @@ fn trained_weights_reach_usable_accuracy() {
         eprintln!("skipping (no artifacts)");
         return;
     }
-    let weights = gavina::dnn::load_tensors(&wpath).unwrap();
     let eval = gavina::dnn::load_eval_set(&dpath).unwrap();
     let n = 64.min(eval.n);
-    let ex = gavina::dnn::Executor::new(
-        &weights,
-        0.25,
-        Precision::new(8, 8),
-        gavina::dnn::Backend::Float,
-    );
-    let out = ex.forward_batched(&eval.images[..n * 3072], n, 16);
+    let engine = gavina::engine::EngineBuilder::new()
+        .weights_from_file(&wpath)
+        .unwrap()
+        .precision(Precision::new(8, 8))
+        .backend_float()
+        .build()
+        .unwrap();
+    let out = engine
+        .infer_batched(&eval.images[..n * 3072], n, 16)
+        .unwrap();
     let acc = gavina::stats::accuracy(&out.logits, &eval.labels[..n], out.classes);
     assert!(
         acc > 0.6,
@@ -281,9 +283,16 @@ fn precision_ladder_accuracy_is_monotone_ish() {
         if !wpath.exists() {
             return;
         }
-        let weights = gavina::dnn::load_tensors(&wpath).unwrap();
-        let ex = gavina::dnn::Executor::new(&weights, 0.25, prec, gavina::dnn::Backend::Float);
-        let out = ex.forward_batched(&eval.images[..n * 3072], n, 16);
+        let engine = gavina::engine::EngineBuilder::new()
+            .weights_from_file(&wpath)
+            .unwrap()
+            .precision(prec)
+            .backend_float()
+            .build()
+            .unwrap();
+        let out = engine
+            .infer_batched(&eval.images[..n * 3072], n, 16)
+            .unwrap();
         accs.push(gavina::stats::accuracy(
             &out.logits,
             &eval.labels[..n],
