@@ -6,6 +6,8 @@
 //! * error-model injection throughput — values/ms
 //! * cycle-simulator end-to-end GEMM — MACs/ms
 //! * GLS event throughput — iPE-cycles/s
+//! * compile-once data plane: one-time `build()` lowering cost, then
+//!   planned steady-state vs per-request lowering — ms/image + speedup
 //! * ResNet-18 image latency on the Gavina backend (model path)
 //!
 //! Flags: `--quick` (CI-sized runs), `--threads N` (worker threads for
@@ -185,6 +187,81 @@ fn main() {
         n_steps as f64 / secs,
         transitions as f64 / n_steps as f64
     );
+
+    // ---- compile-once data plane: planned vs per-request lowering ---------
+    {
+        use gavina::dnn::exec::synth::synthetic_weights;
+        use gavina::dnn::Executor;
+        use gavina::engine::{EngineBuilder, FloatBackend, GavPolicy};
+
+        let wm = 0.25;
+        let weights = synthetic_weights(wm, 0xC0);
+        let n = if quick { 2 } else { 4 };
+        let mut irng = Prng::new(0xC1);
+        let imgs: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| irng.next_f32()).collect();
+
+        // One-time compilation: quantize + bit-plane-pack all weights,
+        // fold BN, resolve schedules. Reported separately so the
+        // compile-once win (and its cost) is visible in the CI artifact.
+        let t0 = std::time::Instant::now();
+        let engine = EngineBuilder::new()
+            .weights(weights.clone())
+            .width_mult(wm)
+            .precision(prec)
+            .backend_float()
+            .policy(GavPolicy::Exact)
+            .build()
+            .expect("engine config");
+        let build_s = t0.elapsed().as_secs_f64();
+        println!(
+            "[perf] {:44} {:>12.3} ms ({} KiB packed weight planes)",
+            "engine build() (lower + pack weights, 1x)",
+            build_s * 1e3,
+            engine.model().packed_weight_bytes() / 1024
+        );
+
+        let reps = if quick { 2 } else { 5 };
+        // Warm-up: touch the scratch arena + page in the plans.
+        let warm = engine.infer_batched(&imgs, n, n).expect("forward pass");
+
+        let t0 = std::time::Instant::now();
+        let mut planned = Vec::new();
+        for _ in 0..reps {
+            planned = engine.infer_batched(&imgs, n, n).expect("forward pass").logits;
+        }
+        let secs_planned = t0.elapsed().as_secs_f64();
+        println!(
+            "[perf] {:44} {:>12.3} ms/image",
+            "planned steady-state infer (compile-once)",
+            secs_planned * 1e3 / (reps * n) as f64
+        );
+
+        // The pre-refactor behaviour: every request re-lowers the model
+        // (re-quantize + re-pack weights, re-fold BN) before forwarding.
+        let t0 = std::time::Instant::now();
+        let mut unplanned = Vec::new();
+        for _ in 0..reps {
+            unplanned = Executor::new(&weights, wm, prec, &FloatBackend)
+                .forward(&imgs, n)
+                .logits;
+        }
+        let secs_unplanned = t0.elapsed().as_secs_f64();
+        println!(
+            "[perf] {:44} {:>12.3} ms/image",
+            "per-request lowering infer (first-call cost)",
+            secs_unplanned * 1e3 / (reps * n) as f64
+        );
+        println!(
+            "[perf] {:44} {:>11.2}x (per-request / planned)",
+            "compile-once speedup",
+            secs_unplanned / secs_planned.max(1e-12)
+        );
+        assert_eq!(
+            planned, unplanned,
+            "planned and per-request lowering must produce identical logits"
+        );
+        assert_eq!(warm.logits, planned, "steady-state must not drift");
+    }
 
     // ---- ResNet-18 image latency ------------------------------------------
     let artifacts = common::artifacts_dir();

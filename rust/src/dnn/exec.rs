@@ -8,6 +8,14 @@
 //! accuracy here, and every convolution runs as an integer GEMM through
 //! the cycle-level GAVINA simulator with per-layer GAV schedules.
 //!
+//! The data plane is **compile-once** (see [`crate::dnn::plan`]): the
+//! network is lowered into per-layer [`LayerPlan`]s — quantized weights
+//! pre-packed as bit-planes, BN folded, geometry and GAV schedule
+//! resolved — either at `EngineBuilder::build()` or in
+//! [`Executor::new`]. A request then only pays for activation work:
+//! im2col into a reusable scratch arena, activation quantization, one
+//! A-side plane packing per layer, and the backend GEMM.
+//!
 //! Execution is delegated to a pluggable [`ExecBackend`]
 //! (see [`crate::engine::backend`]): the exact fake-quant reference
 //! ([`crate::engine::FloatBackend`]), the cycle-level simulator with
@@ -17,11 +25,16 @@
 //! `Executor` directly — use [`crate::engine::EngineBuilder`], the
 //! validated facade over this type.
 
-use super::lower::{col2im, im2col, weights_to_b, ConvGeom};
+use std::borrow::Cow;
+use std::cell::RefCell;
+
+use super::lower::im2col_into;
+use super::plan::{LayerPlan, PlannedModel};
 use super::tensor::Tensor;
-use super::weights::{AnyTensor, TensorMap};
-use crate::arch::{GavSchedule, Precision};
+use super::weights::TensorMap;
+use crate::arch::Precision;
 use crate::engine::backend::{ExecBackend, LayerGemm};
+use crate::quant::PackedPlanes;
 
 /// Elements of one 32×32×3 input image.
 pub const IMAGE_LEN: usize = 32 * 32 * 3;
@@ -71,6 +84,23 @@ pub struct ForwardStats {
 }
 
 impl ForwardStats {
+    /// Grow both per-layer tables so index `idx` is valid — the one place
+    /// that keeps `layer_macs` and `layer_dims` the same length (they
+    /// used to be resized independently at every record site).
+    pub fn ensure_layer(&mut self, idx: usize) {
+        if self.layer_macs.len() <= idx {
+            self.layer_macs.resize(idx + 1, 0);
+            self.layer_dims.resize(idx + 1, (0, 0, 0));
+        }
+    }
+
+    /// Record one layer's geometry (MACs + GEMM dims) at `idx`.
+    pub fn record_layer(&mut self, idx: usize, macs: u64, dims: (usize, usize, usize)) {
+        self.ensure_layer(idx);
+        self.layer_macs[idx] = macs;
+        self.layer_dims[idx] = dims;
+    }
+
     /// Accumulate another pass's counters. The per-layer tables are
     /// copied from the first non-empty source only: they describe that
     /// pass's per-layer shape (layer MACs scale with its batch size), so
@@ -81,9 +111,11 @@ impl ForwardStats {
         self.corrupted += other.corrupted;
         self.useful_macs += other.useful_macs;
         self.executed_macs += other.executed_macs;
-        if self.layer_macs.is_empty() {
-            self.layer_macs = other.layer_macs.clone();
-            self.layer_dims = other.layer_dims.clone();
+        // Both tables travel together (ensure_layer keeps them the same
+        // length), so guard on both before adopting the source geometry.
+        if self.layer_macs.is_empty() && self.layer_dims.is_empty() {
+            self.layer_macs.clone_from(&other.layer_macs);
+            self.layer_dims.clone_from(&other.layer_dims);
         }
     }
 }
@@ -98,164 +130,148 @@ pub struct ForwardResult {
     pub stats: ForwardStats,
 }
 
-/// The executor. `layer_gs[i]` is the GAV `G` for conv layer `i`; use
-/// `prec.max_g()` everywhere for exact operation.
+/// Reusable scratch buffers: im2col and activation quantization output.
+#[derive(Default)]
+struct Scratch {
+    /// im2col patch matrix `A[C, L]` (f32).
+    af: Vec<f32>,
+    /// Quantized activations (same layout).
+    qa: Vec<i32>,
+}
+
+thread_local! {
+    /// One scratch arena per OS thread, re-used across layers, forward
+    /// passes AND executors — the engine/serve path constructs a fresh
+    /// short-lived `Executor` per request, so per-executor buffers would
+    /// re-allocate on every call; per-thread buffers amortize to zero on
+    /// a long-lived serving worker. Backends never re-enter the executor,
+    /// so the `RefCell` borrow is never contended.
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// The executor: walks the ResNet topology over a [`PlannedModel`] —
+/// borrowed from an `Engine` (the serve path, lowered exactly once at
+/// `build()`) or owned (standalone construction from raw weights) —
+/// packing activation planes once per layer and delegating every GEMM to
+/// the backend. Weights are never touched at request time.
 pub struct Executor<'a> {
-    pub weights: &'a TensorMap,
-    pub width_mult: f64,
-    pub prec: Precision,
+    model: Cow<'a, PlannedModel>,
     pub backend: &'a dyn ExecBackend,
-    pub layer_gs: Vec<u32>,
     /// Deterministic sub-batch stream id mixed into the backend's
     /// per-layer seed (serving shards); `0` for standalone runs.
     pub stream: u64,
 }
 
 impl<'a> Executor<'a> {
+    /// Lower `weights` on the spot (fully guarded schedules) and wrap an
+    /// executor around the result — the standalone/offline entry point.
+    /// The serve path lowers once at `EngineBuilder::build()` and uses
+    /// [`Executor::planned`] instead.
     pub fn new(
-        weights: &'a TensorMap,
+        weights: &TensorMap,
         width_mult: f64,
         prec: Precision,
         backend: &'a dyn ExecBackend,
     ) -> Self {
-        let n_layers = conv_layer_names().len();
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
         Self {
-            weights,
-            width_mult,
-            prec,
+            model: Cow::Owned(PlannedModel::lower(weights, width_mult, prec, &gs)),
             backend,
-            layer_gs: vec![prec.max_g(); n_layers],
             stream: 0,
         }
     }
 
-    /// Set a uniform G on every layer.
-    pub fn with_uniform_g(mut self, g: u32) -> Self {
-        for x in &mut self.layer_gs {
-            *x = g;
+    /// An executor over an already-compiled model (no lowering, no
+    /// packing — the per-request path).
+    pub fn planned(model: &'a PlannedModel, backend: &'a dyn ExecBackend) -> Self {
+        Self {
+            model: Cow::Borrowed(model),
+            backend,
+            stream: 0,
         }
+    }
+
+    /// The compiled model this executor runs.
+    pub fn model(&self) -> &PlannedModel {
+        &self.model
+    }
+
+    /// Set a uniform G on every layer (cheap: schedules are re-resolved,
+    /// packed weights are shared).
+    pub fn with_uniform_g(self, g: u32) -> Self {
+        let n = self.model().plans().len();
+        self.with_layer_gs(vec![g; n])
+    }
+
+    /// Replace the per-layer G vector (builder style).
+    pub fn with_layer_gs(mut self, gs: Vec<u32>) -> Self {
+        self.set_layer_gs(gs);
         self
     }
 
-    fn wf32(&self, name: &str) -> (&[usize], &[f32]) {
-        self.weights
-            .get(name)
-            .and_then(AnyTensor::as_f32)
-            .unwrap_or_else(|| panic!("missing f32 weight '{name}'"))
+    /// Replace the per-layer G vector in place.
+    pub fn set_layer_gs(&mut self, gs: Vec<u32>) {
+        let rescheduled = self.model().with_layer_gs(&gs);
+        self.model = Cow::Owned(rescheduled);
     }
 
-    /// Quantize + integer-GEMM one conv; returns the dequantized output
-    /// (pre-BN).
-    fn qconv(
-        &self,
-        x: &Tensor,
-        conv: &str,
-        stride: usize,
-        layer_idx: usize,
-        stats: &mut ForwardStats,
-    ) -> Tensor {
-        let (wdims, wdata) = self.wf32(&format!("{conv}/w"));
-        let g = ConvGeom::new(x, wdims, stride);
+    /// Quantize activations, run one planned conv through the backend,
+    /// and apply the fused dequant + folded-BN (+ ReLU) epilogue. The
+    /// arithmetic matches the old per-request path bit for bit: same
+    /// quantization expressions, same f32 operation order per element.
+    fn qconv(&self, x: &Tensor, plan: &LayerPlan, relu: bool, stats: &mut ForwardStats) -> Tensor {
+        let prec = self.model().prec();
+        let g = plan.geom(x.dims[0]);
+        debug_assert_eq!(
+            [x.dims[1], x.dims[2], x.dims[3]],
+            [g.h, g.w, g.cin],
+            "input shape vs plan '{}' geometry",
+            plan.name()
+        );
         let (c_dim, l_dim, k_dim) = (g.c_dim(), g.l_dim(), g.k_dim());
 
         // --- activation quantization (per tensor, robust range) ---
-        let hi_a = ((1i32 << (self.prec.a_bits - 1)) - 1) as f32;
+        let hi_a = ((1i32 << (prec.a_bits - 1)) - 1) as f32;
         let sa = x.robust_amax().max(1e-8) / hi_a;
-        let a_f = im2col(x, &g);
-        let qa: Vec<i32> = a_f
-            .iter()
-            .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32))
-            .collect();
+        let out = SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let Scratch { af, qa } = &mut *scratch;
+            im2col_into(x, &g, af);
+            qa.clear();
+            qa.extend(
+                af.iter()
+                    .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32)),
+            );
 
-        // --- weight quantization (per output channel) ---
-        let hi_w = ((1i32 << (self.prec.b_bits - 1)) - 1) as f32;
-        let b_f = weights_to_b(wdims, wdata);
-        let mut sw = vec![0.0f32; k_dim];
-        for k in 0..k_dim {
-            let amax = b_f[k * c_dim..(k + 1) * c_dim]
-                .iter()
-                .fold(0.0f32, |m, v| m.max(v.abs()))
-                .max(1e-8);
-            sw[k] = amax / hi_w;
-        }
-        let qb: Vec<i32> = b_f
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
-                let k = i / c_dim;
-                ((v / sw[k]).round() as i32).clamp(-hi_w as i32, hi_w as i32)
+            // Pack the A-side planes once per layer; B was packed at
+            // build() and lives in the plan. Then the integer GEMM
+            // through the pluggable backend.
+            let pa = PackedPlanes::from_a_matrix(qa, c_dim, l_dim, prec.a_bits);
+            self.backend.run_layer_gemm(&LayerGemm {
+                a: &pa,
+                plan,
+                stream: self.stream,
             })
-            .collect();
-
-        // --- integer GEMM (pluggable backend) ---
-        let out = self.backend.run_layer_gemm(&LayerGemm {
-            a: &qa,
-            b: &qb,
-            c: c_dim,
-            l: l_dim,
-            k: k_dim,
-            sched: GavSchedule::two_level(self.prec, self.layer_gs[layer_idx]),
-            layer_idx,
-            stream: self.stream,
         });
         stats.cycles += out.counters.cycles;
         stats.tiles += out.counters.tiles;
         stats.corrupted += out.counters.corrupted;
         stats.executed_macs += out.counters.executed_macs;
-        let p_int = out.p;
         stats.useful_macs += g.macs();
-        if stats.layer_macs.len() <= layer_idx {
-            stats.layer_macs.resize(layer_idx + 1, 0);
-            stats.layer_dims.resize(layer_idx + 1, (0, 0, 0));
-        }
-        stats.layer_macs[layer_idx] = g.macs();
-        stats.layer_dims[layer_idx] = (c_dim, l_dim, k_dim);
+        stats.record_layer(plan.layer_idx(), g.macs(), (c_dim, l_dim, k_dim));
 
-        // --- dequantize ---
-        let mut p = vec![0.0f32; k_dim * l_dim];
+        // --- fused dequant + folded BN (+ ReLU), written straight into
+        //     the NHWC output tensor ---
+        let sw = plan.wscales();
+        let bn = plan.bn();
+        let mut y = Tensor::zeros(vec![g.n, g.oh, g.ow, g.cout]);
         for k in 0..k_dim {
             let s = sa * sw[k];
             for l in 0..l_dim {
-                p[k * l_dim + l] = p_int[k * l_dim + l] as f32 * s;
+                let v = bn.apply(k, out.p[k * l_dim + l] as f32 * s);
+                // l = (n·oh + ohi)·ow + owi ; NHWC index = l·cout + k.
+                y.data[l * g.cout + k] = if relu && v < 0.0 { 0.0 } else { v };
             }
-        }
-        col2im(&p, &g)
-    }
-
-    /// BN (inference form) per channel.
-    fn bn(&self, x: &mut Tensor, bn: &str) {
-        let (_, scale) = self.wf32(&format!("{bn}/scale"));
-        let (_, bias) = self.wf32(&format!("{bn}/bias"));
-        let (_, mean) = self.wf32(&format!("{bn}/mean"));
-        let (_, var) = self.wf32(&format!("{bn}/var"));
-        let c = *x.dims.last().unwrap();
-        assert_eq!(scale.len(), c);
-        // Precompute per-channel affine.
-        let mul: Vec<f32> = (0..c)
-            .map(|i| scale[i] / (var[i] + 1e-5).sqrt())
-            .collect();
-        for (i, v) in x.data.iter_mut().enumerate() {
-            let ci = i % c;
-            *v = (*v - mean[ci]) * mul[ci] + bias[ci];
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn qconv_bn(
-        &self,
-        x: &Tensor,
-        conv: &str,
-        bnn: &str,
-        stride: usize,
-        relu: bool,
-        layer: &mut usize,
-        stats: &mut ForwardStats,
-    ) -> Tensor {
-        let mut y = self.qconv(x, conv, stride, *layer, stats);
-        *layer += 1;
-        self.bn(&mut y, bnn);
-        if relu {
-            y.relu_inplace();
         }
         y
     }
@@ -263,73 +279,52 @@ impl<'a> Executor<'a> {
     /// Forward one batch of NHWC images in `[0, 1]`.
     pub fn forward(&self, images: &[f32], n: usize) -> ForwardResult {
         assert_eq!(images.len(), n * IMAGE_LEN);
+        let model = self.model();
+        let plans = model.plans();
         let mut stats = ForwardStats::default();
         let mut layer = 0usize;
         let mut x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
 
-        x = self.qconv_bn(&x, "conv0", "bn0", 1, true, &mut layer, &mut stats);
-        let mut cin = ch(64, self.width_mult);
-        for (si, (c, stride)) in STAGES.iter().enumerate() {
-            let cout = ch(*c, self.width_mult);
-            for bi in 0..BLOCKS_PER_STAGE {
-                let s = if bi == 0 { *stride } else { 1 };
-                let p = format!("s{si}b{bi}");
-                let y = self.qconv_bn(
-                    &x,
-                    &format!("{p}/conv1"),
-                    &format!("{p}/bn1"),
-                    s,
-                    true,
-                    &mut layer,
-                    &mut stats,
-                );
-                let mut y = self.qconv_bn(
-                    &y,
-                    &format!("{p}/conv2"),
-                    &format!("{p}/bn2"),
-                    1,
-                    false,
-                    &mut layer,
-                    &mut stats,
-                );
-                let sc = if self.weights.contains_key(&format!("{p}/down/w")) {
-                    self.qconv_bn(
-                        &x,
-                        &format!("{p}/down"),
-                        &format!("{p}/dbn"),
-                        s,
-                        false,
-                        &mut layer,
-                        &mut stats,
-                    )
+        x = self.qconv(&x, &plans[layer], true, &mut stats);
+        layer += 1;
+        for _si in 0..STAGES.len() {
+            for _bi in 0..BLOCKS_PER_STAGE {
+                let y = self.qconv(&x, &plans[layer], true, &mut stats);
+                layer += 1;
+                let mut y = self.qconv(&y, &plans[layer], false, &mut stats);
+                layer += 1;
+                // The lowering emits a `…/down` plan right after conv2
+                // exactly when the block has a projection shortcut.
+                let sc = if plans.get(layer).is_some_and(|p| p.name().ends_with("/down")) {
+                    let sc = self.qconv(&x, &plans[layer], false, &mut stats);
+                    layer += 1;
+                    sc
                 } else {
                     x.clone()
                 };
                 y.add_inplace(&sc);
                 y.relu_inplace();
                 x = y;
-                cin = cout;
             }
         }
-        let _ = cin;
+        debug_assert_eq!(layer, plans.len());
 
         // GAP -> fake-quant -> fc (fc itself stays in float, as in Python).
         let mut gap = x.global_avg_pool();
-        let hi_a = ((1i32 << (self.prec.a_bits - 1)) - 1) as f32;
+        let hi_a = ((1i32 << (model.prec().a_bits - 1)) - 1) as f32;
         let sa = gap.robust_amax().max(1e-8) / hi_a;
         for v in &mut gap.data {
             *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
         }
-        let (fdims, fw) = self.wf32("fc/w");
-        let (_, fb) = self.wf32("fc/b");
-        let (cin_fc, classes) = (fdims[0], fdims[1]);
+        let fc = &model.fc;
+        let (cin_fc, classes) = (fc.fc_in, fc.classes);
         assert_eq!(gap.dims, vec![n, cin_fc]);
         let mut logits = vec![0.0f32; n * classes];
         for ni in 0..n {
             for k in 0..classes {
-                let mut acc = fb[k];
+                let mut acc = fc.b[k];
                 for ci in 0..cin_fc {
-                    acc += gap.data[ni * cin_fc + ci] * fw[ci * classes + k];
+                    acc += gap.data[ni * cin_fc + ci] * fc.w[ci * classes + k];
                 }
                 logits[ni * classes + k] = acc;
             }
@@ -372,8 +367,8 @@ impl<'a> Executor<'a> {
 /// the quickstart run without `make artifacts`.
 pub mod synth {
     use super::*;
-    use crate::util::Prng;
     use crate::dnn::weights::AnyTensor;
+    use crate::util::Prng;
 
     /// Build a random-but-valid weight map for a narrow model (tests run
     /// without artifacts).
@@ -492,6 +487,35 @@ mod tests {
     }
 
     #[test]
+    fn planned_executor_reuses_the_compiled_model() {
+        // Executor::planned over a shared PlannedModel must equal the
+        // standalone lower-on-construction path bit for bit, and repeat
+        // calls (scratch reuse) must stay deterministic.
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 11);
+        let mut rng = Prng::new(12);
+        let imgs = rand_images(&mut rng, 2);
+        let prec = Precision::new(2, 2);
+        let sim = GavinaBackend {
+            arch: ArchConfig::tiny(),
+            tables: None,
+            seed: 13,
+        };
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
+        let model = PlannedModel::lower(&weights, wm, prec, &gs);
+        let planned = Executor::planned(&model, &sim);
+        let a = planned.forward(&imgs, 2);
+        let b = Executor::new(&weights, wm, prec, &sim).forward(&imgs, 2);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.stats, b.stats);
+        // Second call on the same executor: scratch buffers are reused,
+        // results must not drift.
+        let again = planned.forward(&imgs, 2);
+        assert_eq!(a.logits, again.logits);
+        assert_eq!(a.stats, again.stats);
+    }
+
+    #[test]
     fn error_injection_perturbs_logits() {
         use crate::errmodel::{ErrorTables, ModelParams};
         let wm = 0.125;
@@ -551,9 +575,7 @@ mod tests {
             seed: 9,
         };
         let mk = |gs: Vec<u32>| {
-            let mut ex = Executor::new(&weights, wm, prec, &sim);
-            ex.layer_gs = gs;
-            ex.forward(&imgs, 1)
+            Executor::new(&weights, wm, prec, &sim).with_layer_gs(gs).forward(&imgs, 1)
         };
         let all_guard = mk(vec![prec.max_g(); 20]);
         assert_eq!(all_guard.stats.corrupted, 0);
@@ -561,5 +583,24 @@ mod tests {
         gs[5] = 0;
         let one_uv = mk(gs);
         assert!(one_uv.stats.corrupted > 0);
+    }
+
+    #[test]
+    fn ensure_layer_keeps_tables_in_lockstep() {
+        let mut s = ForwardStats::default();
+        s.record_layer(4, 7, (1, 2, 3));
+        assert_eq!(s.layer_macs.len(), 5);
+        assert_eq!(s.layer_dims.len(), 5);
+        assert_eq!(s.layer_macs[4], 7);
+        assert_eq!(s.layer_dims[4], (1, 2, 3));
+        // Absorb adopts the first non-empty geometry only.
+        let mut t = ForwardStats::default();
+        t.absorb(&s);
+        assert_eq!(t.layer_macs, s.layer_macs);
+        assert_eq!(t.layer_dims, s.layer_dims);
+        let mut u = ForwardStats::default();
+        u.record_layer(0, 99, (9, 9, 9));
+        u.absorb(&s);
+        assert_eq!(u.layer_macs, vec![99]);
     }
 }

@@ -47,9 +47,16 @@ pub struct ConvGeom {
 
 impl ConvGeom {
     pub fn new(x: &Tensor, wdims: &[usize], stride: usize) -> Self {
-        let (n, h, w, cin) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
-        let (kh, kw, wcin, cout) = (wdims[0], wdims[1], wdims[2], wdims[3]);
-        assert_eq!(cin, wcin, "channel mismatch");
+        let g = Self::from_dims(x.dims[0], x.dims[1], x.dims[2], wdims, stride);
+        assert_eq!(x.dims[3], g.cin, "channel mismatch");
+        g
+    }
+
+    /// Geometry from raw dimensions (no input tensor yet) — used by the
+    /// build-time lowering, where only the batch axis is unknown until
+    /// request time.
+    pub fn from_dims(n: usize, h: usize, w: usize, wdims: &[usize], stride: usize) -> Self {
+        let (kh, kw, cin, cout) = (wdims[0], wdims[1], wdims[2], wdims[3]);
         let ph = same_pad(h, kh, stride);
         let pw = same_pad(w, kw, stride);
         Self {
@@ -92,8 +99,19 @@ impl ConvGeom {
 /// im2col: build the `A[C, L]` patch matrix (row-major `a[c·L + l]`) from
 /// an NHWC input. Out-of-bounds taps read 0 (zero padding).
 pub fn im2col(x: &Tensor, g: &ConvGeom) -> Vec<f32> {
+    let mut a = Vec::new();
+    im2col_into(x, g, &mut a);
+    a
+}
+
+/// [`im2col`] into a caller-owned buffer (the executor's scratch arena):
+/// cleared, zero-filled to `C·L` and written in place, so steady-state
+/// inference re-uses one allocation per executor instead of one per
+/// layer per request.
+pub fn im2col_into(x: &Tensor, g: &ConvGeom, a: &mut Vec<f32>) {
     let (c_dim, l_dim) = (g.c_dim(), g.l_dim());
-    let mut a = vec![0.0f32; c_dim * l_dim];
+    a.clear();
+    a.resize(c_dim * l_dim, 0.0);
     for ni in 0..g.n {
         for ohi in 0..g.oh {
             for owi in 0..g.ow {
@@ -118,7 +136,6 @@ pub fn im2col(x: &Tensor, g: &ConvGeom) -> Vec<f32> {
             }
         }
     }
-    a
 }
 
 /// Reshape HWIO conv weights into the `B[K, C]` GEMM operand (row-major

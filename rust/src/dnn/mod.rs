@@ -4,9 +4,11 @@
 
 pub mod exec;
 pub mod lower;
+pub mod plan;
 pub mod tensor;
 pub mod weights;
 
 pub use exec::{conv_layer_names, Executor, ForwardResult, ForwardStats, IMAGE_LEN};
+pub use plan::{BnFold, LayerPlan, PlannedModel};
 pub use tensor::Tensor;
 pub use weights::{load_eval_set, load_tensors, EvalSet, TensorMap};

@@ -1,0 +1,560 @@
+//! Compile-once lowering of the quantized network into per-layer
+//! [`LayerPlan`]s — the software analogue of flashing GAVINA's static
+//! weight bit-planes into the B0 memory.
+//!
+//! GAVINA's weights are static: the ASIC streams pre-packed weight
+//! bit-planes from the B0 memory every cycle, and nothing about them
+//! changes between inferences. The old software data plane nevertheless
+//! re-quantized, re-scaled and re-bit-plane-packed the same f32 weights
+//! inside the executor on **every** `infer()` call, and re-derived the
+//! BN constants per layer per request. [`PlannedModel::lower`] moves all
+//! of that to build time:
+//!
+//! * per-output-channel weight quantization + [`PackedPlanes`] packing
+//!   (the B-side of every conv GEMM),
+//! * BN folded into a per-channel affine ([`BnFold`]) with the
+//!   `1/sqrt(var + eps)` term resolved once,
+//! * the conv→GEMM geometry ([`ConvGeom`]) of every layer,
+//! * the resolved [`GavSchedule`] for the layer's G.
+//!
+//! Request time then only pays for activation work: im2col, activation
+//! quantization, packing the A-side planes once per layer, and the
+//! backend GEMM. The arithmetic is kept **bit-identical** to the old
+//! per-request path (same quantization expressions, same f32 operation
+//! order for dequant + BN) — `tests/engine_parity.rs` pins it.
+
+use std::sync::Arc;
+
+use super::exec::{conv_layer_names, BLOCKS_PER_STAGE, STAGES};
+use super::lower::{weights_to_b, ConvGeom};
+use super::weights::{AnyTensor, TensorMap};
+use crate::arch::{GavSchedule, Precision};
+use crate::quant::PackedPlanes;
+
+/// Batch-norm constants folded to a per-channel affine at build time.
+///
+/// Application order is exactly the legacy `Executor::bn` pass —
+/// `(v - mean[c]) * mul[c] + bias[c]` with `mul = scale / sqrt(var + 1e-5)`
+/// — so folded execution is bit-identical to the old separate BN pass
+/// (property-tested below).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BnFold {
+    /// `scale / sqrt(var + 1e-5)`, per channel (the expensive part,
+    /// resolved once).
+    pub mul: Vec<f32>,
+    /// Running mean, per channel.
+    pub mean: Vec<f32>,
+    /// Learned shift, per channel.
+    pub bias: Vec<f32>,
+}
+
+impl BnFold {
+    /// Fold raw BN tensors. All four slices must have equal length.
+    pub fn fold(scale: &[f32], bias: &[f32], mean: &[f32], var: &[f32]) -> Self {
+        assert_eq!(scale.len(), bias.len());
+        assert_eq!(scale.len(), mean.len());
+        assert_eq!(scale.len(), var.len());
+        let mul: Vec<f32> = scale
+            .iter()
+            .zip(var)
+            .map(|(&s, &v)| s / (v + 1e-5).sqrt())
+            .collect();
+        Self {
+            mul,
+            mean: mean.to_vec(),
+            bias: bias.to_vec(),
+        }
+    }
+
+    /// The no-op fold (GEMM-only plans).
+    pub fn identity(channels: usize) -> Self {
+        Self {
+            mul: vec![1.0; channels],
+            mean: vec![0.0; channels],
+            bias: vec![0.0; channels],
+        }
+    }
+
+    /// Apply the folded affine to one value of channel `c` — the same
+    /// f32 expression, in the same order, as the legacy separate pass.
+    #[inline]
+    pub fn apply(&self, c: usize, v: f32) -> f32 {
+        (v - self.mean[c]) * self.mul[c] + self.bias[c]
+    }
+}
+
+/// The immutable build-time artifacts of one conv layer, shared (behind
+/// an `Arc`) by every re-scheduled [`LayerPlan`] so policy changes never
+/// re-pack weights.
+#[derive(Clone, Debug)]
+struct LayerData {
+    /// Layer name in execution order (`conv0`, `s2b1/conv1`, …).
+    name: String,
+    /// Conv→GEMM geometry at batch size 1; [`LayerPlan::geom`] rescales
+    /// the batch-dependent `n`/`L` axis per request.
+    geom1: ConvGeom,
+    /// Quantized weights `B[K, C]` packed as bit-planes — the B0 image.
+    packed_b: PackedPlanes,
+    /// Per-output-channel weight quantization scales.
+    wscales: Vec<f32>,
+    /// Folded BN constants.
+    bn: BnFold,
+}
+
+/// The compiled form of one conv/linear layer: pre-packed weight
+/// bit-planes, per-channel scales, folded BN, geometry, and the resolved
+/// voltage schedule. Produced by [`PlannedModel::lower`] at
+/// `EngineBuilder::build()` time; consumed by every
+/// [`ExecBackend`](crate::engine::ExecBackend) via
+/// [`LayerGemm`](crate::engine::backend::LayerGemm).
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    layer_idx: usize,
+    sched: GavSchedule,
+    data: Arc<LayerData>,
+}
+
+impl LayerPlan {
+    /// A GEMM-only plan over an already-quantized `B[K, C]` matrix, with
+    /// degenerate 1×1 geometry, unit weight scales and identity BN — for
+    /// backend-level tests and benches that have no conv around their
+    /// GEMM.
+    pub fn for_gemm(
+        b: &[i32],
+        k_dim: usize,
+        c_dim: usize,
+        sched: GavSchedule,
+        layer_idx: usize,
+    ) -> Self {
+        let packed_b = PackedPlanes::from_b_matrix(b, k_dim, c_dim, sched.precision().b_bits);
+        let geom1 = ConvGeom::from_dims(1, 1, 1, &[1, 1, c_dim, k_dim], 1);
+        Self {
+            layer_idx,
+            sched,
+            data: Arc::new(LayerData {
+                name: "gemm".into(),
+                geom1,
+                packed_b,
+                wscales: vec![1.0; k_dim],
+                bn: BnFold::identity(k_dim),
+            }),
+        }
+    }
+
+    /// The same plan re-resolved at a different G (weight data shared,
+    /// nothing re-packed).
+    pub fn with_g(&self, g: u32) -> Self {
+        Self {
+            layer_idx: self.layer_idx,
+            sched: GavSchedule::two_level(self.sched.precision(), g),
+            data: Arc::clone(&self.data),
+        }
+    }
+
+    /// Index of this layer in execution order (seeds the backend's
+    /// per-layer RNG stream).
+    pub fn layer_idx(&self) -> usize {
+        self.layer_idx
+    }
+
+    /// The resolved GAV voltage schedule for this layer's G.
+    pub fn sched(&self) -> &GavSchedule {
+        &self.sched
+    }
+
+    /// Layer name in execution order.
+    pub fn name(&self) -> &str {
+        &self.data.name
+    }
+
+    /// The pre-packed weight bit-planes `B[K, C]`.
+    pub fn packed_b(&self) -> &PackedPlanes {
+        &self.data.packed_b
+    }
+
+    /// Per-output-channel weight quantization scales.
+    pub fn wscales(&self) -> &[f32] {
+        &self.data.wscales
+    }
+
+    /// The folded BN affine.
+    pub fn bn(&self) -> &BnFold {
+        &self.data.bn
+    }
+
+    /// Conv→GEMM geometry for a batch of `n` images (only the batch axis
+    /// varies per request; everything else was fixed at lowering).
+    pub fn geom(&self, n: usize) -> ConvGeom {
+        ConvGeom {
+            n,
+            ..self.data.geom1
+        }
+    }
+}
+
+/// The float classifier head (GAP → fc), `Arc`-shared by every
+/// re-scheduled copy of a model.
+#[derive(Clone, Debug)]
+pub(crate) struct FcHead {
+    /// Classifier input width (`fc/w` is `[fc_in, classes]` row-major).
+    pub(crate) fc_in: usize,
+    pub(crate) classes: usize,
+    pub(crate) w: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+}
+
+/// The fully lowered network: one [`LayerPlan`] per conv layer in
+/// execution order plus the (float) classifier head. Built once by
+/// `EngineBuilder::build()`; shared immutably by every request.
+#[derive(Clone, Debug)]
+pub struct PlannedModel {
+    prec: Precision,
+    width_mult: f64,
+    plans: Vec<LayerPlan>,
+    pub(crate) fc: Arc<FcHead>,
+}
+
+fn wf32<'m>(weights: &'m TensorMap, name: &str) -> (&'m [usize], &'m [f32]) {
+    weights
+        .get(name)
+        .and_then(AnyTensor::as_f32)
+        .unwrap_or_else(|| panic!("missing f32 weight '{name}'"))
+}
+
+/// Lower one conv layer: quantize the weights per output channel (the
+/// exact arithmetic of the old per-request path), pack the bit-planes,
+/// fold BN, and resolve the schedule.
+#[allow(clippy::too_many_arguments)]
+fn lower_layer(
+    weights: &TensorMap,
+    prec: Precision,
+    g: u32,
+    layer_idx: usize,
+    conv: &str,
+    bn_name: &str,
+    h: usize,
+    w: usize,
+    stride: usize,
+) -> LayerPlan {
+    let (wdims, wdata) = wf32(weights, &format!("{conv}/w"));
+    let geom1 = ConvGeom::from_dims(1, h, w, wdims, stride);
+    let (c_dim, k_dim) = (geom1.c_dim(), geom1.k_dim());
+
+    let hi_w = ((1i32 << (prec.b_bits - 1)) - 1) as f32;
+    let b_f = weights_to_b(wdims, wdata);
+    let mut sw = vec![0.0f32; k_dim];
+    for (k, s) in sw.iter_mut().enumerate() {
+        let amax = b_f[k * c_dim..(k + 1) * c_dim]
+            .iter()
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+            .max(1e-8);
+        *s = amax / hi_w;
+    }
+    let qb: Vec<i32> = b_f
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let k = i / c_dim;
+            ((v / sw[k]).round() as i32).clamp(-hi_w as i32, hi_w as i32)
+        })
+        .collect();
+    let packed_b = PackedPlanes::from_b_matrix(&qb, k_dim, c_dim, prec.b_bits);
+
+    let (_, scale) = wf32(weights, &format!("{bn_name}/scale"));
+    let (_, bias) = wf32(weights, &format!("{bn_name}/bias"));
+    let (_, mean) = wf32(weights, &format!("{bn_name}/mean"));
+    let (_, var) = wf32(weights, &format!("{bn_name}/var"));
+    assert_eq!(scale.len(), k_dim, "{bn_name} width vs {conv} cout");
+    let bn = BnFold::fold(scale, bias, mean, var);
+
+    LayerPlan {
+        layer_idx,
+        sched: GavSchedule::two_level(prec, g),
+        data: Arc::new(LayerData {
+            name: conv.to_string(),
+            geom1,
+            packed_b,
+            wscales: sw,
+            bn,
+        }),
+    }
+}
+
+impl PlannedModel {
+    /// Lower a weight map into the compiled data plane. `layer_gs[i]` is
+    /// the GAV `G` of conv layer `i` in execution order (length must
+    /// equal [`conv_layer_names`]`().len()`).
+    ///
+    /// Panics on a structurally invalid weight map — the engine builder
+    /// validates the map before lowering, so library users go through
+    /// `EngineBuilder::build()` and get a typed error instead.
+    pub fn lower(weights: &TensorMap, width_mult: f64, prec: Precision, layer_gs: &[u32]) -> Self {
+        let n_layers = conv_layer_names().len();
+        assert_eq!(layer_gs.len(), n_layers, "layer_gs length vs conv layer count");
+        let mut plans: Vec<LayerPlan> = Vec::with_capacity(n_layers);
+        // Walk the topology tracking the activation shape, asserting the
+        // channel chain on every layer (the legacy per-request path
+        // asserted `cin == wcin` on every call, release builds included
+        // — lowering must be at least as strict).
+        let (mut h, mut w) = (32usize, 32usize);
+        let mut cin = 3usize;
+        let idx = plans.len();
+        let p0 = lower_layer(weights, prec, layer_gs[idx], idx, "conv0", "bn0", h, w, 1);
+        assert_eq!(p0.data.geom1.cin, cin, "conv0 input channel mismatch");
+        (h, w) = (p0.data.geom1.oh, p0.data.geom1.ow);
+        cin = p0.data.geom1.cout;
+        plans.push(p0);
+        for (si, (_, stride)) in STAGES.iter().enumerate() {
+            for bi in 0..BLOCKS_PER_STAGE {
+                let s = if bi == 0 { *stride } else { 1 };
+                let p = format!("s{si}b{bi}");
+                let idx = plans.len();
+                let c1 = lower_layer(
+                    weights,
+                    prec,
+                    layer_gs[idx],
+                    idx,
+                    &format!("{p}/conv1"),
+                    &format!("{p}/bn1"),
+                    h,
+                    w,
+                    s,
+                );
+                assert_eq!(c1.data.geom1.cin, cin, "{p}/conv1 input channel mismatch");
+                let (h1, w1) = (c1.data.geom1.oh, c1.data.geom1.ow);
+                let cout = c1.data.geom1.cout;
+                plans.push(c1);
+                let idx = plans.len();
+                let c2 = lower_layer(
+                    weights,
+                    prec,
+                    layer_gs[idx],
+                    idx,
+                    &format!("{p}/conv2"),
+                    &format!("{p}/bn2"),
+                    h1,
+                    w1,
+                    1,
+                );
+                assert_eq!(
+                    (c2.data.geom1.cin, c2.data.geom1.cout),
+                    (cout, cout),
+                    "{p}/conv2 channel mismatch"
+                );
+                plans.push(c2);
+                if weights.contains_key(&format!("{p}/down/w")) {
+                    let idx = plans.len();
+                    let down = lower_layer(
+                        weights,
+                        prec,
+                        layer_gs[idx],
+                        idx,
+                        &format!("{p}/down"),
+                        &format!("{p}/dbn"),
+                        h,
+                        w,
+                        s,
+                    );
+                    assert_eq!(
+                        (down.data.geom1.cin, down.data.geom1.cout),
+                        (cin, cout),
+                        "{p}/down channel mismatch"
+                    );
+                    plans.push(down);
+                } else {
+                    // Identity shortcut: the residual add requires the
+                    // block to preserve shape.
+                    assert_eq!((s, cin), (1, cout), "{p} identity shortcut shape mismatch");
+                }
+                (h, w) = (h1, w1);
+                cin = cout;
+            }
+        }
+        assert_eq!(plans.len(), n_layers, "lowering walk vs conv_layer_names");
+        let (fdims, fw) = wf32(weights, "fc/w");
+        let (_, fb) = wf32(weights, "fc/b");
+        assert_eq!(fdims.len(), 2, "fc/w must be [cin, classes]");
+        Self {
+            prec,
+            width_mult,
+            plans,
+            fc: Arc::new(FcHead {
+                fc_in: fdims[0],
+                classes: fdims[1],
+                w: fw.to_vec(),
+                b: fb.to_vec(),
+            }),
+        }
+    }
+
+    /// The same model re-resolved under a different per-layer G vector.
+    /// Cheap: schedules are rebuilt, the packed weight planes and folded
+    /// BN constants are shared via `Arc`.
+    pub fn with_layer_gs(&self, layer_gs: &[u32]) -> Self {
+        assert_eq!(layer_gs.len(), self.plans.len(), "layer_gs length");
+        Self {
+            prec: self.prec,
+            width_mult: self.width_mult,
+            plans: self
+                .plans
+                .iter()
+                .zip(layer_gs)
+                .map(|(p, &g)| p.with_g(g))
+                .collect(),
+            fc: Arc::clone(&self.fc),
+        }
+    }
+
+    /// The per-layer plans in execution order.
+    pub fn plans(&self) -> &[LayerPlan] {
+        &self.plans
+    }
+
+    /// The `aXwY` precision the model was lowered at.
+    pub fn prec(&self) -> Precision {
+        self.prec
+    }
+
+    /// ResNet width multiplier the weights were trained at.
+    pub fn width_mult(&self) -> f64 {
+        self.width_mult
+    }
+
+    /// The resolved per-layer G vector (`None` entries never occur for
+    /// models lowered through the two-level policy).
+    pub fn layer_gs(&self) -> Vec<u32> {
+        self.plans
+            .iter()
+            .map(|p| p.sched.g().expect("lowered plans use the two-level policy"))
+            .collect()
+    }
+
+    /// Total bytes of pre-packed weight bit-planes (the B0 image size).
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.plans.iter().map(|p| p.packed_b().nbytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::exec::synth::synthetic_weights;
+    use crate::gemm::{bitserial_gemm, gemm_exact};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn lowering_walk_matches_layer_names() {
+        let prec = Precision::new(2, 2);
+        let weights = synthetic_weights(0.125, 1);
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
+        let model = PlannedModel::lower(&weights, 0.125, prec, &gs);
+        let names: Vec<&str> = model.plans().iter().map(|p| p.name()).collect();
+        let expect = conv_layer_names();
+        assert_eq!(names, expect.iter().map(String::as_str).collect::<Vec<_>>());
+        assert_eq!(model.layer_gs(), gs);
+        assert!(model.packed_weight_bytes() > 0);
+        // Geometry: conv0 consumes 32×32×3; the batch axis rescales.
+        let g1 = model.plans()[0].geom(1);
+        assert_eq!((g1.h, g1.w, g1.cin, g1.n), (32, 32, 3, 1));
+        let g4 = model.plans()[0].geom(4);
+        assert_eq!(g4.l_dim(), 4 * g1.l_dim());
+        assert_eq!(g4.c_dim(), g1.c_dim());
+    }
+
+    #[test]
+    fn with_layer_gs_shares_packed_weights() {
+        let prec = Precision::new(2, 2);
+        let weights = synthetic_weights(0.125, 2);
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
+        let model = PlannedModel::lower(&weights, 0.125, prec, &gs);
+        let uv = model.with_layer_gs(&vec![0; gs.len()]);
+        for (a, b) in model.plans().iter().zip(uv.plans()) {
+            // Re-scheduling must not touch (or copy) the packed planes.
+            assert!(Arc::ptr_eq(&a.data, &b.data));
+            assert_eq!(b.sched().g(), Some(0));
+        }
+        // The classifier head is shared too — rescheduling allocates
+        // nothing beyond the schedule vectors.
+        assert!(Arc::ptr_eq(&model.fc, &uv.fc));
+    }
+
+    #[test]
+    fn plan_weight_quantization_matches_legacy_per_request_path() {
+        // The build-time quantization must produce exactly the integers
+        // the old per-request `Executor::qconv` derived, for every layer.
+        check("plan quant == legacy quant", 3, |rng| {
+            let prec = Precision::new(rng.int_in(2, 8) as u8, rng.int_in(2, 8) as u8);
+            let weights = synthetic_weights(0.125, rng.int_in(0, 1 << 20) as u64);
+            let gs = vec![prec.max_g(); conv_layer_names().len()];
+            let model = PlannedModel::lower(&weights, 0.125, prec, &gs);
+            for (plan, name) in model.plans().iter().zip(conv_layer_names()) {
+                let (wdims, wdata) = wf32(&weights, &format!("{name}/w"));
+                let hi_w = ((1i32 << (prec.b_bits - 1)) - 1) as f32;
+                let b_f = weights_to_b(wdims, wdata);
+                let g = plan.geom(1);
+                let (c_dim, k_dim) = (g.c_dim(), g.k_dim());
+                // Every scale, a strided sample of packed values (full
+                // coverage of every value is O(model) and slow in debug).
+                let cstep = (c_dim / 37).max(1);
+                for k in 0..k_dim {
+                    let amax = b_f[k * c_dim..(k + 1) * c_dim]
+                        .iter()
+                        .fold(0.0f32, |m, v| m.max(v.abs()))
+                        .max(1e-8);
+                    assert_eq!(plan.wscales()[k], amax / hi_w, "{name} sw[{k}]");
+                    for c in (0..c_dim).step_by(cstep) {
+                        let q = ((b_f[k * c_dim + c] / plan.wscales()[k]).round() as i32)
+                            .clamp(-hi_w as i32, hi_w as i32);
+                        assert_eq!(plan.packed_b().value(k, c), q, "{name} qb[{k},{c}]");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn plan_packing_bitserial_equals_exact_gemm() {
+        // LayerPlan weight packing + bitserial_gemm == gemm_exact for
+        // random shapes and precisions (the compiled B-side must be a
+        // faithful GEMM operand).
+        check("plan packed B: bitserial == exact", 40, |rng| {
+            let prec = Precision::new(rng.int_in(2, 8) as u8, rng.int_in(2, 8) as u8);
+            let c = rng.int_in(1, 130) as usize;
+            let l = rng.int_in(1, 9) as usize;
+            let k = rng.int_in(1, 17) as usize;
+            let hi_a = (1i64 << (prec.a_bits - 1)) - 1;
+            let hi_b = (1i64 << (prec.b_bits - 1)) - 1;
+            let a: Vec<i32> = (0..c * l).map(|_| rng.int_in(-hi_a - 1, hi_a) as i32).collect();
+            let b: Vec<i32> = (0..k * c).map(|_| rng.int_in(-hi_b - 1, hi_b) as i32).collect();
+            let plan = LayerPlan::for_gemm(&b, k, c, GavSchedule::all_guarded(prec), 0);
+            let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+            assert_eq!(
+                bitserial_gemm(&pa, plan.packed_b()),
+                gemm_exact(&a, &b, c, l, k),
+                "{prec} c={c} l={l} k={k}"
+            );
+        });
+    }
+
+    #[test]
+    fn bn_fold_identity_with_old_separate_pass() {
+        // Folded BN must be bit-identical to the legacy separate pass:
+        // mul derived per request as scale / sqrt(var + 1e-5), then
+        // (v - mean) * mul + bias, in that order.
+        check("BnFold == legacy bn()", 50, |rng| {
+            let c = rng.int_in(1, 40) as usize;
+            let scale: Vec<f32> = (0..c).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let bias: Vec<f32> = (0..c).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let mean: Vec<f32> = (0..c).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let var: Vec<f32> = (0..c).map(|_| rng.next_f32()).collect();
+            let fold = BnFold::fold(&scale, &bias, &mean, &var);
+            for _ in 0..32 {
+                let ci = rng.index(c);
+                let v = rng.next_f32() * 8.0 - 4.0;
+                let mul = scale[ci] / (var[ci] + 1e-5).sqrt();
+                let legacy = (v - mean[ci]) * mul + bias[ci];
+                assert_eq!(fold.apply(ci, v).to_bits(), legacy.to_bits(), "ci={ci}");
+            }
+        });
+    }
+}

@@ -13,32 +13,36 @@
 //! * [`GlsBackend`] — cycle-level simulation with every undervolted tile
 //!   run through full gate-level simulation (paper Fig. 5 methodology).
 //!
+//! Since the compile-once refactor a backend consumes **pre-packed
+//! bit-planes** only: [`LayerGemm`] carries the activation planes (packed
+//! once per layer per request) and a [`LayerPlan`] whose weight planes
+//! were packed exactly once at `EngineBuilder::build()`. No backend
+//! quantizes or bit-plane-packs anything per request.
+//!
 //! Determinism contract: a backend must derive all randomness from
-//! `(its own seed, job.stream, job.layer_idx)` so that identical jobs
-//! produce identical results on any thread.
+//! `(its own seed, job.stream, job.plan.layer_idx())` so that identical
+//! jobs produce identical results on any thread.
 
 use std::sync::Arc;
 
-use crate::arch::{ArchConfig, GavSchedule};
+use crate::arch::ArchConfig;
+use crate::dnn::plan::LayerPlan;
 use crate::errmodel::ErrorTables;
 use crate::gls::GlsContext;
-use crate::simulator::{GavinaSim, GemmJob};
+use crate::quant::PackedPlanes;
+use crate::simulator::GavinaSim;
 
-/// One convolution-lowered integer GEMM, as handed to a backend.
+/// One convolution-lowered integer GEMM, as handed to a backend: packed
+/// activation planes × a compiled layer plan.
 pub struct LayerGemm<'a> {
-    /// Activations `[L, C]` (im2col output), row-major.
-    pub a: &'a [i32],
-    /// Weights `[K, C]`, row-major.
-    pub b: &'a [i32],
-    pub c: usize,
-    pub l: usize,
-    pub k: usize,
-    /// The GAV voltage schedule for this layer (per-layer G already
-    /// applied by the executor).
-    pub sched: GavSchedule,
-    /// Index of the conv layer in execution order (seeds the per-layer
-    /// RNG stream).
-    pub layer_idx: usize,
+    /// Activation bit-planes `[C, L]` (im2col output, quantized and
+    /// packed once per layer by the executor).
+    pub a: &'a PackedPlanes,
+    /// The compiled layer: weight bit-planes `[K, C]` packed at
+    /// `build()`, the resolved [`GavSchedule`](crate::arch::GavSchedule)
+    /// for the layer's G, and the layer index that seeds the per-layer
+    /// RNG stream.
+    pub plan: &'a LayerPlan,
     /// Deterministic sub-batch stream id (serving shards); `0` for
     /// standalone runs. XOR-mixed into the backend seed.
     pub stream: u64,
@@ -84,10 +88,13 @@ pub trait ExecBackend: Send + Sync {
 /// bit-identical to the pre-trait code on both the standalone and the
 /// coordinator path.
 fn layer_seed(seed: u64, job: &LayerGemm) -> u64 {
-    (seed ^ job.stream).wrapping_add(job.layer_idx as u64 * 0x9E37)
+    (seed ^ job.stream).wrapping_add(job.plan.layer_idx() as u64 * 0x9E37)
 }
 
-/// Exact fake-quant reference (no hardware model).
+/// Exact fake-quant reference (no hardware model). Runs the packed
+/// bit-serial popcount GEMM, which is exactly equal to the plain integer
+/// GEMM (`gemm::bitserial_gemm == gemm::gemm_exact`, property-tested in
+/// [`crate::gemm`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FloatBackend;
 
@@ -98,7 +105,7 @@ impl ExecBackend for FloatBackend {
 
     fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
         BackendGemm {
-            p: crate::gemm::gemm_exact(job.a, job.b, job.c, job.l, job.k),
+            p: crate::gemm::bitserial_gemm(job.a, job.plan.packed_b()),
             counters: GemmCounters::default(),
         }
     }
@@ -129,14 +136,7 @@ impl ExecBackend for GavinaBackend {
             self.tables.as_deref(),
             layer_seed(self.seed, job),
         );
-        let rep = sim.run_gemm(&GemmJob {
-            a: job.a,
-            b: job.b,
-            c: job.c,
-            l: job.l,
-            k: job.k,
-            sched: job.sched.clone(),
-        });
+        let rep = sim.run_planes(job.a, job.plan.packed_b(), job.plan.sched());
         BackendGemm {
             p: rep.p,
             counters: GemmCounters {
@@ -165,14 +165,7 @@ impl ExecBackend for GlsBackend {
 
     fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
         let mut sim = GavinaSim::new_gls(self.arch.clone(), &self.ctx, layer_seed(self.seed, job));
-        let rep = sim.run_gemm(&GemmJob {
-            a: job.a,
-            b: job.b,
-            c: job.c,
-            l: job.l,
-            k: job.k,
-            sched: job.sched.clone(),
-        });
+        let rep = sim.run_planes(job.a, job.plan.packed_b(), job.plan.sched());
         BackendGemm {
             p: rep.p,
             counters: GemmCounters {
@@ -188,21 +181,23 @@ impl ExecBackend for GlsBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::Precision;
+    use crate::arch::{GavSchedule, Precision};
     use crate::util::Prng;
     use crate::workload::uniform_ip_matrices;
 
-    fn job<'a>(a: &'a [i32], b: &'a [i32], c: usize, l: usize, k: usize) -> LayerGemm<'a> {
-        LayerGemm {
-            a,
-            b,
-            c,
-            l,
-            k,
-            sched: GavSchedule::all_guarded(Precision::new(4, 4)),
-            layer_idx: 3,
-            stream: 0,
-        }
+    fn packed_job(
+        a: &[i32],
+        b: &[i32],
+        c: usize,
+        l: usize,
+        k: usize,
+        prec: Precision,
+        layer_idx: usize,
+    ) -> (PackedPlanes, LayerPlan) {
+        (
+            PackedPlanes::from_a_matrix(a, c, l, prec.a_bits),
+            LayerPlan::for_gemm(b, k, c, GavSchedule::all_guarded(prec), layer_idx),
+        )
     }
 
     #[test]
@@ -212,17 +207,26 @@ mod tests {
         let mut rng = Prng::new(1);
         let (c, l, k) = (arch.c_dim, arch.l_dim, arch.k_dim);
         let (a, b) = uniform_ip_matrices(c, l, k, prec, &mut rng);
+        let (pa, plan) = packed_job(&a, &b, c, l, k, prec, 3);
+        let job = LayerGemm {
+            a: &pa,
+            plan: &plan,
+            stream: 0,
+        };
 
-        let exact = FloatBackend.run_layer_gemm(&job(&a, &b, c, l, k));
+        let exact = FloatBackend.run_layer_gemm(&job);
         assert_eq!(exact.counters.cycles, 0);
         assert!(!FloatBackend.is_simulated());
+        // The float backend's packed popcount path equals the plain
+        // integer GEMM bit for bit.
+        assert_eq!(exact.p, crate::gemm::gemm_exact(&a, &b, c, l, k));
 
         let sim = GavinaBackend {
             arch,
             tables: None,
             seed: 2,
         };
-        let guarded = sim.run_layer_gemm(&job(&a, &b, c, l, k));
+        let guarded = sim.run_layer_gemm(&job);
         assert_eq!(exact.p, guarded.p);
         assert!(guarded.counters.cycles > 0);
         assert_eq!(guarded.counters.corrupted, 0);
@@ -232,17 +236,15 @@ mod tests {
     fn stream_and_layer_perturb_the_seed_deterministically() {
         // Same (seed, stream, layer) => identical; different stream =>
         // the derived seed differs (the serving-shard contract).
+        let prec = Precision::new(2, 2);
+        let pa = PackedPlanes::from_a_matrix(&[0], 1, 1, prec.a_bits);
+        let plan = LayerPlan::for_gemm(&[0], 1, 1, GavSchedule::all_guarded(prec), 5);
         assert_eq!(
             layer_seed(
                 7,
                 &LayerGemm {
-                    a: &[],
-                    b: &[],
-                    c: 0,
-                    l: 0,
-                    k: 0,
-                    sched: GavSchedule::all_guarded(Precision::new(2, 2)),
-                    layer_idx: 5,
+                    a: &pa,
+                    plan: &plan,
                     stream: 0,
                 }
             ),
@@ -252,13 +254,8 @@ mod tests {
             layer_seed(
                 7,
                 &LayerGemm {
-                    a: &[],
-                    b: &[],
-                    c: 0,
-                    l: 0,
-                    k: 0,
-                    sched: GavSchedule::all_guarded(Precision::new(2, 2)),
-                    layer_idx: 5,
+                    a: &pa,
+                    plan: &plan,
                     stream: 0xD1F,
                 }
             ),

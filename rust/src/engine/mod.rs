@@ -8,7 +8,11 @@
 //!
 //! * [`EngineBuilder`] — weights, [`Precision`], [`ArchConfig`], error
 //!   tables, seed, threads; validates everything once in
-//!   [`EngineBuilder::build`] and never after.
+//!   [`EngineBuilder::build`] and never after. `build()` also **compiles
+//!   the data plane**: the network is lowered into per-layer
+//!   [`LayerPlan`](crate::dnn::LayerPlan)s (weights quantized and packed
+//!   as bit-planes, BN folded, GAV schedules resolved) exactly once, so
+//!   requests only pay for activation work.
 //! * [`GavPolicy`] — first-class per-layer G allocation (`Exact`,
 //!   `Uniform`, `PerLayer`, or the §IV-D ILP under a budget).
 //! * [`ExecBackend`] — pluggable execution backends (float reference,
@@ -46,7 +50,9 @@ use crate::config::{Config, Value};
 use crate::coordinator::{Coordinator, ServeOptions};
 use crate::dnn::exec::{ch, synth, BLOCKS_PER_STAGE, STAGES};
 use crate::dnn::weights::AnyTensor;
-use crate::dnn::{Executor, ForwardResult, ForwardStats, TensorMap, IMAGE_LEN};
+use crate::dnn::{
+    conv_layer_names, Executor, ForwardResult, ForwardStats, PlannedModel, TensorMap, IMAGE_LEN,
+};
 use crate::errmodel::ErrorTables;
 use crate::gls::GlsContext;
 use crate::ilp::{Allocation, GavAllocator, LayerChoices};
@@ -424,16 +430,22 @@ impl EngineBuilder {
                     .into(),
             ));
         }
+        // Compile-once lowering: quantize + bit-plane-pack the weights
+        // and fold BN exactly once, here. Policy resolution (including
+        // ILP profiling) then runs over the compiled model, and the
+        // chosen per-layer Gs only re-resolve the schedules — the packed
+        // planes are shared, never re-packed.
+        let max_gs = vec![self.prec.max_g(); conv_layer_names().len()];
+        let base = PlannedModel::lower(&weights, self.width_mult, self.prec, &max_gs);
         let (layer_gs, ilp) = policy::resolve(
             &self.policy,
-            &weights,
-            self.width_mult,
-            self.prec,
+            &base,
             &self.arch,
             self.tables.as_ref(),
             self.seed,
             self.profile.as_ref(),
         )?;
+        let model = Arc::new(base.with_layer_gs(&layer_gs));
         let backend: Arc<dyn ExecBackend> = match self.backend {
             BackendChoice::Float => Arc::new(FloatBackend),
             BackendChoice::Gavina => Arc::new(GavinaBackend {
@@ -449,16 +461,13 @@ impl EngineBuilder {
             BackendChoice::Custom(b) => b,
         };
         Ok(Engine {
-            weights,
+            model,
             backend,
-            prec: self.prec,
             arch: self.arch,
             tables: self.tables,
-            width_mult: self.width_mult,
             seed: self.seed,
             threads: self.threads,
             policy: self.policy,
-            layer_gs,
             ilp,
         })
     }
@@ -476,35 +485,64 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
             .map(|(dims, _)| dims)
             .ok_or_else(|| GavinaError::Config(format!("weights: missing f32 tensor '{name}'")))
     };
-    let need_bn = |bn: &str| -> Result<(), GavinaError> {
+    // Conv kernels must be 4-D HWIO with the channel chain the topology
+    // implies — a mismatch must be a typed build error, not wrong logits
+    // (lowering re-asserts this, but with a panic).
+    let need_conv = |name: &str, cin: usize, cout: usize| -> Result<(), GavinaError> {
+        let dims = need(name)?;
+        if dims.len() != 4 || dims[2] != cin || dims[3] != cout {
+            return Err(GavinaError::Config(format!(
+                "{name} has shape {dims:?}, want [k,k,{cin},{cout}]"
+            )));
+        }
+        Ok(())
+    };
+    // BN tensors must match the conv's output width — lowering folds
+    // them per channel, so a length mismatch must be a typed build error,
+    // not a panic inside `PlannedModel::lower`.
+    let need_bn = |bn: &str, cout: usize| -> Result<(), GavinaError> {
         for part in ["scale", "bias", "mean", "var"] {
-            need(&format!("{bn}/{part}"))?;
+            let name = format!("{bn}/{part}");
+            let dims = need(&name)?;
+            if dims.iter().product::<usize>() != cout {
+                return Err(GavinaError::Config(format!(
+                    "{name} has shape {dims:?}, want [{cout}]"
+                )));
+            }
         }
         Ok(())
     };
     let d0 = need("conv0/w")?;
     let c0 = ch(64, width_mult);
-    if d0.len() != 4 || d0[3] != c0 {
+    if d0.len() != 4 || d0[2] != 3 || d0[3] != c0 {
         return Err(GavinaError::Config(format!(
             "conv0/w has shape {d0:?}, want [k,k,3,{c0}] at width_mult {width_mult}"
         )));
     }
-    need_bn("bn0")?;
+    need_bn("bn0", c0)?;
     let mut cin = c0;
     for (si, (c, stride)) in STAGES.iter().enumerate() {
         let cout = ch(*c, width_mult);
         for bi in 0..BLOCKS_PER_STAGE {
             let s = if bi == 0 { *stride } else { 1 };
             let p = format!("s{si}b{bi}");
-            need(&format!("{p}/conv1/w"))?;
-            need_bn(&format!("{p}/bn1"))?;
-            need(&format!("{p}/conv2/w"))?;
-            need_bn(&format!("{p}/bn2"))?;
+            need_conv(&format!("{p}/conv1/w"), cin, cout)?;
+            need_bn(&format!("{p}/bn1"), cout)?;
+            need_conv(&format!("{p}/conv2/w"), cout, cout)?;
+            need_bn(&format!("{p}/bn2"), cout)?;
             // The executor keys the shortcut conv off its presence; when
-            // topology demands one, require it (and its BN).
+            // topology demands one, require it (and its BN). When it
+            // demands an identity shortcut, a stray projection conv must
+            // be rejected here — lowering would otherwise emit a plan
+            // the fixed-length G vector has no slot for, and panic.
             if s != 1 || cin != cout {
-                need(&format!("{p}/down/w"))?;
-                need_bn(&format!("{p}/dbn"))?;
+                need_conv(&format!("{p}/down/w"), cin, cout)?;
+                need_bn(&format!("{p}/dbn"), cout)?;
+            } else if weights.contains_key(&format!("{p}/down/w")) {
+                return Err(GavinaError::Config(format!(
+                    "{p}/down/w present but block {p} has an identity shortcut \
+                     (stride 1, {cin} channels in and out)"
+                )));
             }
             cin = cout;
         }
@@ -515,7 +553,13 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
             "fc/w has shape {fd:?}, want [{cin}, classes]"
         )));
     }
-    need("fc/b")?;
+    let classes = fd[1];
+    let fb = need("fc/b")?;
+    if fb.iter().product::<usize>() != classes {
+        return Err(GavinaError::Config(format!(
+            "fc/b has shape {fb:?}, want [{classes}]"
+        )));
+    }
     Ok(())
 }
 
@@ -523,16 +567,18 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
 /// `Arc`, call [`Engine::infer`] / [`Engine::infer_batched`], or start a
 /// serving [`Coordinator`] with [`Engine::serve`].
 pub struct Engine {
-    weights: Arc<TensorMap>,
+    /// The compiled data plane: weights quantized, bit-plane-packed and
+    /// BN-folded exactly once, at [`EngineBuilder::build`]. Also the
+    /// single source of truth for precision, width multiplier and the
+    /// resolved per-layer G vector — the schedules the model actually
+    /// runs can never drift from what the accessors report.
+    model: Arc<PlannedModel>,
     backend: Arc<dyn ExecBackend>,
-    prec: Precision,
     arch: ArchConfig,
     tables: Option<Arc<ErrorTables>>,
-    width_mult: f64,
     seed: u64,
     threads: usize,
     policy: GavPolicy,
-    layer_gs: Vec<u32>,
     ilp: Option<IlpReport>,
 }
 
@@ -540,26 +586,19 @@ impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Engine")
             .field("backend", &self.backend.name())
-            .field("precision", &self.prec)
+            .field("precision", &self.model.prec())
             .field("policy", &self.policy)
-            .field("width_mult", &self.width_mult)
+            .field("width_mult", &self.model.width_mult())
             .field("seed", &self.seed)
             .field("threads", &self.threads)
-            .field("layer_gs", &self.layer_gs)
+            .field("layer_gs", &self.model.layer_gs())
             .finish_non_exhaustive()
     }
 }
 
 impl Engine {
     fn executor(&self) -> Executor<'_> {
-        Executor {
-            weights: self.weights.as_ref(),
-            width_mult: self.width_mult,
-            prec: self.prec,
-            backend: self.backend.as_ref(),
-            layer_gs: self.layer_gs.clone(),
-            stream: 0,
-        }
+        Executor::planned(&self.model, self.backend.as_ref())
     }
 
     fn check_images(&self, images: &[f32], n: usize) -> Result<(), GavinaError> {
@@ -674,9 +713,7 @@ impl Engine {
             GavinaError::Config("layer profiling needs calibrated error tables".into())
         })?;
         policy::profile_layer_choices(
-            &self.weights,
-            self.width_mult,
-            self.prec,
+            &self.model,
             &self.arch,
             tables,
             self.seed,
@@ -711,25 +748,22 @@ impl Engine {
         }
         let (layer_gs, _) = policy::resolve(
             &policy,
-            &self.weights,
-            self.width_mult,
-            self.prec,
+            &self.model,
             &self.arch,
             self.tables.as_ref(),
             self.seed,
             None,
         )?;
         Ok(Engine {
-            weights: Arc::clone(&self.weights),
+            // Re-resolve the schedules only — the packed weight planes
+            // and folded BN constants are shared with this engine.
+            model: Arc::new(self.model.with_layer_gs(&layer_gs)),
             backend: Arc::clone(&self.backend),
-            prec: self.prec,
             arch: self.arch.clone(),
             tables: self.tables.clone(),
-            width_mult: self.width_mult,
             seed: self.seed,
             threads: self.threads,
             policy,
-            layer_gs,
             ilp: None,
         })
     }
@@ -737,7 +771,7 @@ impl Engine {
     // --- accessors ------------------------------------------------------
 
     pub fn precision(&self) -> Precision {
-        self.prec
+        self.model.prec()
     }
 
     pub fn arch(&self) -> &ArchConfig {
@@ -745,7 +779,7 @@ impl Engine {
     }
 
     pub fn width_mult(&self) -> f64 {
-        self.width_mult
+        self.model.width_mult()
     }
 
     pub fn seed(&self) -> u64 {
@@ -757,9 +791,10 @@ impl Engine {
     }
 
     /// The resolved per-layer G vector (index = conv layer in execution
-    /// order, see [`crate::dnn::conv_layer_names`]).
-    pub fn layer_gs(&self) -> &[u32] {
-        &self.layer_gs
+    /// order, see [`crate::dnn::conv_layer_names`]), read back from the
+    /// compiled schedules.
+    pub fn layer_gs(&self) -> Vec<u32> {
+        self.model.layer_gs()
     }
 
     pub fn policy(&self) -> &GavPolicy {
@@ -774,6 +809,11 @@ impl Engine {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The compiled data plane (per-layer plans, packed weight planes).
+    pub fn model(&self) -> &PlannedModel {
+        &self.model
     }
 
     pub fn tables(&self) -> Option<&Arc<ErrorTables>> {

@@ -10,8 +10,8 @@
 
 use std::sync::Arc;
 
-use crate::arch::{ArchConfig, Precision};
-use crate::dnn::{conv_layer_names, Executor, TensorMap};
+use crate::arch::ArchConfig;
+use crate::dnn::{Executor, PlannedModel};
 use crate::engine::backend::{FloatBackend, GavinaBackend};
 use crate::engine::GavinaError;
 use crate::errmodel::ErrorTables;
@@ -82,10 +82,12 @@ pub(crate) struct ProfileSet {
 /// and every `G`, the logit MSE versus the exact reference when only that
 /// layer is undervolted. Layer `li` profiles at seed `seed + li` — the
 /// historical `allocate` subcommand seeding.
+///
+/// Profiling runs over the **compiled** model: the weights were packed
+/// once at lowering, and each `(layer, G)` point only re-resolves the
+/// schedules (`PlannedModel::with_layer_gs` shares the packed planes).
 pub(crate) fn profile_layer_choices(
-    weights: &TensorMap,
-    width_mult: f64,
-    prec: Precision,
+    model: &PlannedModel,
     arch: &ArchConfig,
     tables: &Arc<ErrorTables>,
     seed: u64,
@@ -98,14 +100,14 @@ pub(crate) fn profile_layer_choices(
             got: set.images.len(),
         });
     }
-    let names = conv_layer_names();
-    let ref_out = Executor::new(weights, width_mult, prec, &FloatBackend).forward_batched(
-        &set.images,
-        set.n,
-        set.batch,
-    );
-    let mut layers = Vec::with_capacity(names.len());
-    for li in 0..names.len() {
+    let prec = model.prec();
+    let n_layers = model.plans().len();
+    let exact_gs = vec![prec.max_g(); n_layers];
+    let base = model.with_layer_gs(&exact_gs);
+    let ref_out =
+        Executor::planned(&base, &FloatBackend).forward_batched(&set.images, set.n, set.batch);
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
         let mut cost = vec![0.0f64; (prec.max_g() + 1) as usize];
         let mut macs = 1u64;
         for g in 0..prec.max_g() {
@@ -114,10 +116,11 @@ pub(crate) fn profile_layer_choices(
                 tables: Some(Arc::clone(tables)),
                 seed: seed + li as u64,
             };
-            let mut ex = Executor::new(weights, width_mult, prec, &backend);
-            ex.layer_gs = vec![prec.max_g(); names.len()];
-            ex.layer_gs[li] = g;
-            let out = ex.forward_batched(&set.images, set.n, set.batch);
+            let mut gs = exact_gs.clone();
+            gs[li] = g;
+            let probe = base.with_layer_gs(&gs);
+            let out =
+                Executor::planned(&probe, &backend).forward_batched(&set.images, set.n, set.batch);
             macs = out.stats.layer_macs[li].max(1);
             cost[g as usize] = crate::stats::mse_f32(&ref_out.logits, &out.logits);
         }
@@ -131,19 +134,17 @@ pub(crate) fn profile_layer_choices(
 
 /// Resolve a policy into the per-layer G vector (and, for the ILP, its
 /// report). Pure validation for the first three variants; `IlpBudget`
-/// profiles and solves.
-#[allow(clippy::too_many_arguments)]
+/// profiles (over the compiled model) and solves.
 pub(crate) fn resolve(
     policy: &GavPolicy,
-    weights: &TensorMap,
-    width_mult: f64,
-    prec: Precision,
+    model: &PlannedModel,
     arch: &ArchConfig,
     tables: Option<&Arc<ErrorTables>>,
     seed: u64,
     profile: Option<&ProfileSet>,
 ) -> Result<(Vec<u32>, Option<IlpReport>), GavinaError> {
-    let n_layers = conv_layer_names().len();
+    let prec = model.prec();
+    let n_layers = model.plans().len();
     let max_g = prec.max_g();
     match policy {
         GavPolicy::Exact => Ok((vec![max_g; n_layers], None)),
@@ -190,8 +191,7 @@ pub(crate) fn resolve(
                         .into(),
                 )
             })?;
-            let choices =
-                profile_layer_choices(weights, width_mult, prec, arch, tables, seed, set)?;
+            let choices = profile_layer_choices(model, arch, tables, seed, set)?;
             let allocation = GavAllocator::new(choices.clone()).solve(*gtar);
             let gs = allocation.gs.clone();
             Ok((
@@ -208,56 +208,54 @@ pub(crate) fn resolve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::Precision;
+    use crate::dnn::conv_layer_names;
     use crate::dnn::exec::synth::synthetic_weights;
 
-    fn ctx() -> (TensorMap, Precision, ArchConfig) {
-        (synthetic_weights(0.125, 1), Precision::new(2, 2), ArchConfig::tiny())
+    fn ctx() -> (PlannedModel, Precision, ArchConfig) {
+        let prec = Precision::new(2, 2);
+        let weights = synthetic_weights(0.125, 1);
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
+        (
+            PlannedModel::lower(&weights, 0.125, prec, &gs),
+            prec,
+            ArchConfig::tiny(),
+        )
     }
 
     #[test]
     fn exact_uniform_per_layer_resolve_without_profiling() {
-        let (w, prec, arch) = ctx();
+        let (m, prec, arch) = ctx();
         let n = conv_layer_names().len();
-        let (gs, rep) =
-            resolve(&GavPolicy::Exact, &w, 0.125, prec, &arch, None, 1, None).unwrap();
+        let (gs, rep) = resolve(&GavPolicy::Exact, &m, &arch, None, 1, None).unwrap();
         assert_eq!(gs, vec![prec.max_g(); n]);
         assert!(rep.is_none());
 
-        let (gs, _) =
-            resolve(&GavPolicy::Uniform(1), &w, 0.125, prec, &arch, None, 1, None).unwrap();
+        let (gs, _) = resolve(&GavPolicy::Uniform(1), &m, &arch, None, 1, None).unwrap();
         assert_eq!(gs, vec![1; n]);
 
         let want: Vec<u32> = (0..n as u32).map(|i| i % (prec.max_g() + 1)).collect();
-        let (gs, _) = resolve(
-            &GavPolicy::PerLayer(want.clone()),
-            &w,
-            0.125,
-            prec,
-            &arch,
-            None,
-            1,
-            None,
-        )
-        .unwrap();
+        let (gs, _) = resolve(&GavPolicy::PerLayer(want.clone()), &m, &arch, None, 1, None)
+            .unwrap();
         assert_eq!(gs, want);
     }
 
     #[test]
     fn invalid_policies_are_config_errors() {
-        let (w, prec, arch) = ctx();
+        let (m, prec, arch) = ctx();
         let too_big = GavPolicy::Uniform(prec.max_g() + 1);
         assert!(matches!(
-            resolve(&too_big, &w, 0.125, prec, &arch, None, 1, None),
+            resolve(&too_big, &m, &arch, None, 1, None),
             Err(GavinaError::Config(_))
         ));
         let short = GavPolicy::PerLayer(vec![0; 3]);
         assert!(matches!(
-            resolve(&short, &w, 0.125, prec, &arch, None, 1, None),
+            resolve(&short, &m, &arch, None, 1, None),
             Err(GavinaError::Shape { .. })
         ));
         let no_tables = GavPolicy::IlpBudget { gtar: 1.0 };
         assert!(matches!(
-            resolve(&no_tables, &w, 0.125, prec, &arch, None, 1, None),
+            resolve(&no_tables, &m, &arch, None, 1, None),
             Err(GavinaError::Config(_))
         ));
     }

@@ -16,6 +16,14 @@
 //! two's-complement sign rule; `bitserial_gemm` composes the two and must
 //! equal the plain integer GEMM (property-tested below — the same identity
 //! `pytest` checks for the Pallas kernel).
+//!
+//! Since the compile-once data plane, operands arrive **pre-packed**: the
+//! B-side planes come from a [`crate::dnn::LayerPlan`] (packed once at
+//! `EngineBuilder::build()`), the A-side planes are packed once per layer
+//! per request by the executor, and the cycle simulator carves hardware
+//! tiles out of them with [`PackedPlanes::extract_tile`] instead of
+//! re-packing dense tiles. `bitserial_gemm` is also the float reference
+//! backend's compute path (exactly equal to [`gemm_exact`]).
 
 use crate::arch::Precision;
 use crate::quant::PackedPlanes;

@@ -135,40 +135,85 @@ impl<'t> GavinaSim<'t> {
     }
 
     /// Run one GEMM job through the tiled bit-serial pipeline.
+    ///
+    /// Convenience wrapper over [`Self::run_planes`] for raw integer
+    /// operands (benches, CLI workloads): packs each matrix **once**,
+    /// then carves hardware tiles out of the packed planes. Bit-identical
+    /// to the old per-tile packing path.
     pub fn run_gemm(&mut self, job: &GemmJob) -> SimReport {
-        let arch = &self.arch;
         let prec = job.sched.precision();
         assert_eq!(job.a.len(), job.c * job.l);
         assert_eq!(job.b.len(), job.k * job.c);
+        let pa = PackedPlanes::from_a_matrix(job.a, job.c, job.l, prec.a_bits);
+        let pb = PackedPlanes::from_b_matrix(job.b, job.k, job.c, prec.b_bits);
+        self.run_planes(&pa, &pb, &job.sched)
+    }
+
+    /// Run one GEMM over **pre-packed** bit-planes — the compile-once
+    /// data plane entry point. `a` is `[C, L]` (packed once per layer per
+    /// request by the executor), `b` is `[K, C]` (packed once for the
+    /// model's lifetime at `EngineBuilder::build()`). Hardware tiles are
+    /// carved out word-wise with [`PackedPlanes::extract_tile`]; nothing
+    /// is re-quantized or re-packed here.
+    pub fn run_planes(
+        &mut self,
+        a: &PackedPlanes,
+        b: &PackedPlanes,
+        sched: &GavSchedule,
+    ) -> SimReport {
+        let arch = &self.arch;
+        let prec = sched.precision();
+        assert_eq!(a.c_dim, b.c_dim, "reduction axis mismatch");
+        assert_eq!(
+            (a.bits, b.bits),
+            (prec.a_bits, prec.b_bits),
+            "operand planes vs schedule precision"
+        );
+        let (c, l, k) = (a.c_dim, a.n_vecs, b.n_vecs);
 
         let (ct, lt, kt) = (
-            ceil_div(job.c, arch.c_dim),
-            ceil_div(job.l, arch.l_dim),
-            ceil_div(job.k, arch.k_dim),
+            ceil_div(c, arch.c_dim),
+            ceil_div(l, arch.l_dim),
+            ceil_div(k, arch.k_dim),
         );
         let steps = prec.steps() as u64;
-        let approx_mask = job.sched.approx_mask();
+        let approx_mask = sched.approx_mask();
         let n_approx_per_tile = approx_mask.iter().filter(|&&x| x).count() as u64;
 
-        let mut p = vec![0i64; job.k * job.l];
+        let mut p = vec![0i64; k * l];
         let mut n_tiles = 0u64;
         let mut corrupted = 0u64;
+
+        // Carve every operand tile exactly once: A tiles depend on
+        // (lo, co) and are revisited every K-row, B tiles depend on
+        // (ko, co) and are revisited every L-column. The A-tile cache
+        // costs about as much memory as the packed A matrix itself.
+        let a_tiles: Vec<PackedPlanes> = (0..lt * ct)
+            .map(|i| {
+                let (lo, co) = (i / ct, i % ct);
+                a.extract_tile(co * arch.c_dim, arch.c_dim, lo * arch.l_dim, arch.l_dim)
+            })
+            .collect();
 
         // Controller loop: output tile (ko, lo) outer, C-chunk inner (the
         // P memory accumulates partial sums across C-chunks).
         for ko in 0..kt {
+            let b_tiles: Vec<PackedPlanes> = (0..ct)
+                .map(|co| b.extract_tile(co * arch.c_dim, arch.c_dim, ko * arch.k_dim, arch.k_dim))
+                .collect();
             for lo in 0..lt {
                 for co in 0..ct {
                     n_tiles += 1;
-                    let (pa, pb) = self.load_tile(job, prec, co, lo, ko);
+                    let pa = &a_tiles[lo * ct + co];
+                    let pb = &b_tiles[co];
                     // Parallel Array + L0: one bit-plane GEMM per cycle.
                     let seq = match &self.errors {
                         // A fully guarded schedule is exact by definition —
                         // skip the (possibly very expensive) error source.
-                        _ if n_approx_per_tile == 0 => gemm::ipe_sequence(&pa, &pb),
-                        ErrorSource::None => gemm::ipe_sequence(&pa, &pb),
+                        _ if n_approx_per_tile == 0 => gemm::ipe_sequence(pa, pb),
+                        ErrorSource::None => gemm::ipe_sequence(pa, pb),
                         ErrorSource::Tables(tables) => {
-                            let mut seq = gemm::ipe_sequence(&pa, &pb);
+                            let mut seq = gemm::ipe_sequence(pa, pb);
                             let mut tile_rng = self.rng.fork(n_tiles);
                             corrupted +=
                                 tables.inject_masked(&mut seq, &approx_mask, &mut tile_rng);
@@ -176,7 +221,7 @@ impl<'t> GavinaSim<'t> {
                         }
                         ErrorSource::Gls(ctx) => {
                             let mut tg = crate::gls::TileGls::new(ctx, self.arch.clone());
-                            let trace = tg.run_tile(&pa, &pb, &job.sched);
+                            let trace = tg.run_tile(pa, pb, sched);
                             corrupted += trace
                                 .exact
                                 .iter()
@@ -189,13 +234,13 @@ impl<'t> GavinaSim<'t> {
                     };
                     // L1 shift-accumulate into the P memory region.
                     let tile_p = gemm::recombine(&seq, prec);
-                    self.accumulate(&mut p, &tile_p, job, lo, ko);
+                    self.accumulate(&mut p, &tile_p, l, k, lo, ko);
                 }
             }
         }
 
         let compute_cycles = n_tiles * steps;
-        let cycles = fill_cycles(&job.sched) + compute_cycles + DRAIN_CYCLES;
+        let cycles = fill_cycles(sched) + compute_cycles + DRAIN_CYCLES;
         SimReport {
             p,
             cycles,
@@ -205,48 +250,27 @@ impl<'t> GavinaSim<'t> {
             a0b0_reads: 2 * compute_cycles,
             tile_bursts: n_tiles,
             values_corrupted: corrupted,
-            useful_macs: (job.c * job.l * job.k) as u64,
+            useful_macs: (c * l * k) as u64,
             executed_macs: n_tiles * arch.macs_per_tile() as u64,
         }
     }
 
-    /// Fetch one hardware tile from the job operands, zero-padded to the
-    /// array shape (what the A1→A0 / B1→B0 loaders do).
-    fn load_tile(
+    /// P-memory accumulation of one tile's partial result into the
+    /// `[K, L]` output (`l_dim`/`k_dim` are the full GEMM dims).
+    fn accumulate(
         &self,
-        job: &GemmJob,
-        prec: crate::arch::Precision,
-        co: usize,
+        p: &mut [i64],
+        tile_p: &[i64],
+        l_dim: usize,
+        k_dim: usize,
         lo: usize,
         ko: usize,
-    ) -> (PackedPlanes, PackedPlanes) {
-        let arch = &self.arch;
-        let (c0, l0, k0) = (co * arch.c_dim, lo * arch.l_dim, ko * arch.k_dim);
-        let mut a_tile = vec![0i32; arch.c_dim * arch.l_dim];
-        for c in 0..arch.c_dim.min(job.c - c0) {
-            for l in 0..arch.l_dim.min(job.l - l0) {
-                a_tile[c * arch.l_dim + l] = job.a[(c0 + c) * job.l + (l0 + l)];
-            }
-        }
-        let mut b_tile = vec![0i32; arch.k_dim * arch.c_dim];
-        for k in 0..arch.k_dim.min(job.k - k0) {
-            for c in 0..arch.c_dim.min(job.c - c0) {
-                b_tile[k * arch.c_dim + c] = job.b[(k0 + k) * job.c + (c0 + c)];
-            }
-        }
-        (
-            PackedPlanes::from_a_matrix(&a_tile, arch.c_dim, arch.l_dim, prec.a_bits),
-            PackedPlanes::from_b_matrix(&b_tile, arch.k_dim, arch.c_dim, prec.b_bits),
-        )
-    }
-
-    /// P-memory accumulation of one tile's partial result.
-    fn accumulate(&self, p: &mut [i64], tile_p: &[i64], job: &GemmJob, lo: usize, ko: usize) {
+    ) {
         let arch = &self.arch;
         let (l0, k0) = (lo * arch.l_dim, ko * arch.k_dim);
-        for k in 0..arch.k_dim.min(job.k - k0) {
-            for l in 0..arch.l_dim.min(job.l - l0) {
-                p[(k0 + k) * job.l + (l0 + l)] += tile_p[k * arch.l_dim + l];
+        for k in 0..arch.k_dim.min(k_dim - k0) {
+            for l in 0..arch.l_dim.min(l_dim - l0) {
+                p[(k0 + k) * l_dim + (l0 + l)] += tile_p[k * arch.l_dim + l];
             }
         }
     }

@@ -1,16 +1,33 @@
-//! Golden-parity tests for the `gavina::engine` facade: `Engine::infer`
-//! must produce **bit-identical** logits and `ForwardStats` to the
-//! pre-redesign path (direct `Executor` construction with a hand-set
-//! `layer_gs` vector) on synthetic weights, for the `Exact`, `Uniform`
-//! and `PerLayer` policies — the API moved, the numerics must not.
+//! Golden-parity tests for the `gavina::engine` facade and the
+//! compile-once data plane.
+//!
+//! Two pins, both **bit-identical** (logits and `ForwardStats`):
+//!
+//! 1. `Engine::infer` vs a hand-built `Executor` with a hand-set G
+//!    vector, for the `Exact`, `Uniform` and `PerLayer` policies — the
+//!    API moved, the numerics must not.
+//! 2. `Engine::infer` (weights quantized, bit-plane-packed and BN-folded
+//!    exactly once at `build()`) vs [`per_request_forward`] — a verbatim
+//!    in-test reproduction of the pre-`PlannedModel` data plane that
+//!    re-quantizes the f32 weights, re-packs the B-side planes and
+//!    re-derives the BN constants on **every** call, then applies BN as
+//!    a separate pass. The refactor moved the work to build time; the
+//!    arithmetic must not have moved at all.
 
 use std::sync::Arc;
 
-use gavina::arch::{ArchConfig, Precision};
+use gavina::arch::{ArchConfig, GavSchedule, Precision};
 use gavina::dnn::exec::synth::synthetic_weights;
-use gavina::dnn::{conv_layer_names, Executor, ForwardResult, TensorMap, IMAGE_LEN};
+use gavina::dnn::lower::{col2im, im2col, weights_to_b, ConvGeom};
+use gavina::dnn::weights::AnyTensor;
+use gavina::dnn::{
+    conv_layer_names, Executor, ForwardResult, ForwardStats, LayerPlan, Tensor, TensorMap,
+    IMAGE_LEN,
+};
+use gavina::engine::backend::{ExecBackend, LayerGemm};
 use gavina::engine::{EngineBuilder, FloatBackend, GavPolicy, GavinaBackend};
 use gavina::errmodel::{ErrorTables, ModelParams};
+use gavina::quant::PackedPlanes;
 use gavina::util::Prng;
 
 const WM: f64 = 0.125;
@@ -39,8 +56,8 @@ fn rand_images(seed: u64, n: usize) -> Vec<f32> {
     (0..n * IMAGE_LEN).map(|_| rng.next_f32()).collect()
 }
 
-/// The pre-redesign path: hand-built `Executor` over the simulator
-/// backend with an explicitly assigned `layer_gs` vector.
+/// The pre-redesign facade path: hand-built `Executor` over the simulator
+/// backend with an explicitly assigned per-layer G vector.
 fn legacy_forward(
     weights: &TensorMap,
     prec: Precision,
@@ -55,9 +72,7 @@ fn legacy_forward(
         tables,
         seed: SEED,
     };
-    let mut ex = Executor::new(weights, WM, prec, &backend);
-    ex.layer_gs = layer_gs;
-    ex.forward(images, n)
+    Executor::new(weights, WM, prec, &backend).with_layer_gs(layer_gs).forward(images, n)
 }
 
 fn engine_forward(
@@ -88,6 +103,343 @@ fn assert_bit_identical(a: &ForwardResult, b: &ForwardResult) {
     assert_eq!(a.classes, b.classes);
     assert_eq!(a.stats, b.stats, "ForwardStats must be identical");
 }
+
+// ---------------------------------------------------------------------
+// The pre-compile-once data plane, reproduced verbatim: everything the
+// old `Executor::qconv`/`bn`/`forward` did per request, per call.
+// ---------------------------------------------------------------------
+
+fn wf32<'m>(weights: &'m TensorMap, name: &str) -> (&'m [usize], &'m [f32]) {
+    weights
+        .get(name)
+        .and_then(AnyTensor::as_f32)
+        .unwrap_or_else(|| panic!("missing f32 weight '{name}'"))
+}
+
+/// One conv exactly as the old per-request `Executor::qconv`: quantize
+/// activations AND weights, pack both operand planes, run the backend
+/// GEMM, dequantize, fold back with `col2im`. The weight quantization and
+/// B-side packing here happen on every call — the work `build()` now
+/// does once.
+#[allow(clippy::too_many_arguments)]
+fn per_request_qconv(
+    weights: &TensorMap,
+    prec: Precision,
+    backend: &dyn ExecBackend,
+    layer_gs: &[u32],
+    x: &Tensor,
+    conv: &str,
+    stride: usize,
+    layer_idx: usize,
+    stats: &mut ForwardStats,
+) -> Tensor {
+    let (wdims, wdata) = wf32(weights, &format!("{conv}/w"));
+    let g = ConvGeom::new(x, wdims, stride);
+    let (c_dim, l_dim, k_dim) = (g.c_dim(), g.l_dim(), g.k_dim());
+
+    // --- activation quantization (per tensor, robust range) ---
+    let hi_a = ((1i32 << (prec.a_bits - 1)) - 1) as f32;
+    let sa = x.robust_amax().max(1e-8) / hi_a;
+    let a_f = im2col(x, &g);
+    let qa: Vec<i32> = a_f
+        .iter()
+        .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32))
+        .collect();
+
+    // --- per-request weight quantization (per output channel) ---
+    let hi_w = ((1i32 << (prec.b_bits - 1)) - 1) as f32;
+    let b_f = weights_to_b(wdims, wdata);
+    let mut sw = vec![0.0f32; k_dim];
+    for k in 0..k_dim {
+        let amax = b_f[k * c_dim..(k + 1) * c_dim]
+            .iter()
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+            .max(1e-8);
+        sw[k] = amax / hi_w;
+    }
+    let qb: Vec<i32> = b_f
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let k = i / c_dim;
+            ((v / sw[k]).round() as i32).clamp(-hi_w as i32, hi_w as i32)
+        })
+        .collect();
+
+    // --- per-request packing of BOTH operands, then the backend GEMM ---
+    let pa = PackedPlanes::from_a_matrix(&qa, c_dim, l_dim, prec.a_bits);
+    let plan = LayerPlan::for_gemm(
+        &qb,
+        k_dim,
+        c_dim,
+        GavSchedule::two_level(prec, layer_gs[layer_idx]),
+        layer_idx,
+    );
+    let out = backend.run_layer_gemm(&LayerGemm {
+        a: &pa,
+        plan: &plan,
+        stream: 0,
+    });
+    stats.cycles += out.counters.cycles;
+    stats.tiles += out.counters.tiles;
+    stats.corrupted += out.counters.corrupted;
+    stats.executed_macs += out.counters.executed_macs;
+    stats.useful_macs += g.macs();
+    if stats.layer_macs.len() <= layer_idx {
+        stats.layer_macs.resize(layer_idx + 1, 0);
+        stats.layer_dims.resize(layer_idx + 1, (0, 0, 0));
+    }
+    stats.layer_macs[layer_idx] = g.macs();
+    stats.layer_dims[layer_idx] = (c_dim, l_dim, k_dim);
+
+    // --- dequantize ---
+    let mut p = vec![0.0f32; k_dim * l_dim];
+    for k in 0..k_dim {
+        let s = sa * sw[k];
+        for l in 0..l_dim {
+            p[k * l_dim + l] = out.p[k * l_dim + l] as f32 * s;
+        }
+    }
+    col2im(&p, &g)
+}
+
+/// BN exactly as the old separate `Executor::bn` pass, constants
+/// re-derived per call.
+fn per_request_bn(weights: &TensorMap, x: &mut Tensor, bn: &str) {
+    let (_, scale) = wf32(weights, &format!("{bn}/scale"));
+    let (_, bias) = wf32(weights, &format!("{bn}/bias"));
+    let (_, mean) = wf32(weights, &format!("{bn}/mean"));
+    let (_, var) = wf32(weights, &format!("{bn}/var"));
+    let c = *x.dims.last().unwrap();
+    assert_eq!(scale.len(), c);
+    let mul: Vec<f32> = (0..c).map(|i| scale[i] / (var[i] + 1e-5).sqrt()).collect();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = (*v - mean[ci]) * mul[ci] + bias[ci];
+    }
+}
+
+/// The full pre-refactor forward pass: per-request quantization, packing
+/// and BN, over the same pluggable backend.
+fn per_request_forward(
+    weights: &TensorMap,
+    prec: Precision,
+    backend: &dyn ExecBackend,
+    layer_gs: &[u32],
+    images: &[f32],
+    n: usize,
+) -> ForwardResult {
+    assert_eq!(images.len(), n * IMAGE_LEN);
+    let mut stats = ForwardStats::default();
+    let mut layer = 0usize;
+    let mut x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
+
+    let qconv_bn = |x: &Tensor,
+                        conv: &str,
+                        bnn: &str,
+                        stride: usize,
+                        relu: bool,
+                        layer: &mut usize,
+                        stats: &mut ForwardStats|
+     -> Tensor {
+        let mut y = per_request_qconv(
+            weights,
+            prec,
+            backend,
+            layer_gs,
+            x,
+            conv,
+            stride,
+            *layer,
+            stats,
+        );
+        *layer += 1;
+        per_request_bn(weights, &mut y, bnn);
+        if relu {
+            y.relu_inplace();
+        }
+        y
+    };
+
+    x = qconv_bn(&x, "conv0", "bn0", 1, true, &mut layer, &mut stats);
+    let stages: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+    for (si, (_, stride)) in stages.iter().enumerate() {
+        for bi in 0..2 {
+            let s = if bi == 0 { *stride } else { 1 };
+            let p = format!("s{si}b{bi}");
+            let y = qconv_bn(
+                &x,
+                &format!("{p}/conv1"),
+                &format!("{p}/bn1"),
+                s,
+                true,
+                &mut layer,
+                &mut stats,
+            );
+            let mut y = qconv_bn(
+                &y,
+                &format!("{p}/conv2"),
+                &format!("{p}/bn2"),
+                1,
+                false,
+                &mut layer,
+                &mut stats,
+            );
+            let sc = if weights.contains_key(&format!("{p}/down/w")) {
+                qconv_bn(
+                    &x,
+                    &format!("{p}/down"),
+                    &format!("{p}/dbn"),
+                    s,
+                    false,
+                    &mut layer,
+                    &mut stats,
+                )
+            } else {
+                x.clone()
+            };
+            y.add_inplace(&sc);
+            y.relu_inplace();
+            x = y;
+        }
+    }
+
+    // GAP -> fake-quant -> fc (fc itself stays in float).
+    let mut gap = x.global_avg_pool();
+    let hi_a = ((1i32 << (prec.a_bits - 1)) - 1) as f32;
+    let sa = gap.robust_amax().max(1e-8) / hi_a;
+    for v in &mut gap.data {
+        *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
+    }
+    let (fdims, fw) = wf32(weights, "fc/w");
+    let (_, fb) = wf32(weights, "fc/b");
+    let (cin_fc, classes) = (fdims[0], fdims[1]);
+    assert_eq!(gap.dims, vec![n, cin_fc]);
+    let mut logits = vec![0.0f32; n * classes];
+    for ni in 0..n {
+        for k in 0..classes {
+            let mut acc = fb[k];
+            for ci in 0..cin_fc {
+                acc += gap.data[ni * cin_fc + ci] * fw[ci * classes + k];
+            }
+            logits[ni * classes + k] = acc;
+        }
+    }
+    ForwardResult {
+        logits,
+        n,
+        classes,
+        stats,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compile-once vs per-request golden parity
+// ---------------------------------------------------------------------
+
+#[test]
+fn planned_engine_matches_per_request_data_plane_float() {
+    let prec = Precision::new(4, 4);
+    let weights = Arc::new(synthetic_weights(WM, 21));
+    let images = rand_images(22, 2);
+    let n_layers = conv_layer_names().len();
+
+    let golden = per_request_forward(
+        &weights,
+        prec,
+        &FloatBackend,
+        &vec![prec.max_g(); n_layers],
+        &images,
+        2,
+    );
+    let engine = EngineBuilder::new()
+        .weights(Arc::clone(&weights))
+        .width_mult(WM)
+        .precision(prec)
+        .backend_float()
+        .policy(GavPolicy::Exact)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let planned = engine.infer(&images, 2).unwrap();
+    assert_bit_identical(&golden, &planned);
+}
+
+#[test]
+fn planned_engine_matches_per_request_data_plane_gavina() {
+    // Mixed per-layer Gs + dense error tables: the hardest parity case —
+    // error injection makes the result depend on the exact packed tile
+    // bits, the tile order and the per-layer seeds, all of which the
+    // compile-once refactor re-plumbed.
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 23));
+    let tables = test_tables(&arch);
+    let images = rand_images(24, 2);
+    let n_layers = conv_layer_names().len();
+    let gs: Vec<u32> = (0..n_layers as u32)
+        .map(|i| i * 5 % (prec.max_g() + 1))
+        .collect();
+
+    let backend = GavinaBackend {
+        arch: arch.clone(),
+        tables: Some(Arc::clone(&tables)),
+        seed: SEED,
+    };
+    let golden = per_request_forward(&weights, prec, &backend, &gs, &images, 2);
+    assert!(
+        golden.stats.corrupted > 0,
+        "parity run must actually inject errors"
+    );
+
+    let engine = EngineBuilder::new()
+        .weights(Arc::clone(&weights))
+        .width_mult(WM)
+        .precision(prec)
+        .arch(arch)
+        .tables(tables)
+        .policy(GavPolicy::PerLayer(gs))
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let planned = engine.infer(&images, 2).unwrap();
+    assert_bit_identical(&golden, &planned);
+}
+
+#[test]
+fn no_weight_repacking_across_requests() {
+    // Two infer() calls on one engine must agree bit-for-bit with each
+    // other and with a fresh engine built from the same weights — the
+    // compiled plans are immutable and fully determine the result.
+    let prec = Precision::new(2, 2);
+    let arch = ArchConfig::tiny();
+    let weights = Arc::new(synthetic_weights(WM, 25));
+    let tables = test_tables(&arch);
+    let images = rand_images(26, 1);
+    let build = || {
+        EngineBuilder::new()
+            .weights(Arc::clone(&weights))
+            .width_mult(WM)
+            .precision(prec)
+            .arch(arch.clone())
+            .tables(Arc::clone(&tables))
+            .policy(GavPolicy::Uniform(0))
+            .seed(SEED)
+            .build()
+            .unwrap()
+    };
+    let engine = build();
+    let a = engine.infer(&images, 1).unwrap();
+    let b = engine.infer(&images, 1).unwrap();
+    let c = build().infer(&images, 1).unwrap();
+    assert_bit_identical(&a, &b);
+    assert_bit_identical(&a, &c);
+    assert!(engine.model().packed_weight_bytes() > 0);
+}
+
+// ---------------------------------------------------------------------
+// Facade parity (PR 2 pins, kept green across the data-plane refactor)
+// ---------------------------------------------------------------------
 
 #[test]
 fn exact_policy_matches_legacy_executor() {
@@ -202,9 +554,7 @@ fn float_backend_matches_legacy_float_executor() {
     let weights = Arc::new(synthetic_weights(WM, 7));
     let images = rand_images(8, 2);
 
-    let mut legacy_ex = Executor::new(&weights, WM, prec, &FloatBackend);
-    legacy_ex.layer_gs = vec![prec.max_g(); conv_layer_names().len()];
-    let legacy = legacy_ex.forward(&images, 2);
+    let legacy = Executor::new(&weights, WM, prec, &FloatBackend).forward(&images, 2);
 
     let engine = EngineBuilder::new()
         .weights(weights)
@@ -235,9 +585,9 @@ fn batched_inference_matches_legacy_forward_batched() {
         tables: Some(Arc::clone(&tables)),
         seed: SEED,
     };
-    let mut ex = Executor::new(&weights, WM, prec, &backend);
-    ex.layer_gs = vec![1; n_layers];
-    let legacy = ex.forward_batched(&images, n, 2);
+    let legacy = Executor::new(&weights, WM, prec, &backend)
+        .with_layer_gs(vec![1; n_layers])
+        .forward_batched(&images, n, 2);
 
     let engine = EngineBuilder::new()
         .weights(weights)
