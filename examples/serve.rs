@@ -1,26 +1,29 @@
-//! Serving demo: the Layer-3 coordinator batching inference requests onto
-//! the GAVINA simulator — build an `Engine`, replay the evaluation set
-//! as a request stream, report latency percentiles, throughput and
-//! accelerator-side energy.
+//! Serving demo: the `gavina::serve` QoS layer batching inference
+//! requests onto the GAVINA simulator — build an `Engine`, start a
+//! three-tier service with the load-adaptive undervolting governor,
+//! replay the evaluation set as a request stream, and report per-tier
+//! latency percentiles, throughput, energy and the governor trajectory.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve [n_requests] [g] [threads]
+//! cargo run --release --example serve [n_requests] [g] [threads]
 //! ```
 //!
-//! `threads` sets the intra-batch worker threads per batch executor
-//! (1 = serial, 0 = one per core) — run with 1 and then your core count
-//! to see single-thread vs multi-thread serving throughput.
+//! With `make artifacts` present the demo serves the trained a4w4
+//! ResNet on real CIFAR images and reports accuracy; without artifacts
+//! it falls back to synthetic weights and random images (same serving
+//! path, no accuracy line) so it runs anywhere — CI uses it as a smoke
+//! step.
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use gavina::arch::{GavSchedule, Precision};
-use gavina::coordinator::ServeOptions;
+use gavina::arch::Precision;
 use gavina::dnn;
-use gavina::engine::{EngineBuilder, GavPolicy};
+use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
 use gavina::errmodel;
 use gavina::power::PowerModel;
+use gavina::serve::{GovernorOptions, ServeOptions, SubmitOptions};
 use gavina::stats::accuracy;
 
 fn main() {
@@ -39,15 +42,34 @@ fn main() {
         .unwrap_or(1);
 
     let artifacts = Path::new("artifacts");
-    let eval = dnn::load_eval_set(&artifacts.join("dataset_eval.bin")).expect("eval set");
     let tables = errmodel::io::load(&artifacts.join("caltables_v035.bin"))
         .map(|(t, _)| Arc::new(t))
         .ok();
 
+    // Artifacts are optional: fall back to synthetic weights + random
+    // images so the demo (and the CI smoke step) runs without
+    // `make artifacts`.
+    let (builder, images, labels) = match (
+        dnn::load_tensors(&artifacts.join("weights_a4w4.bin")),
+        dnn::load_eval_set(&artifacts.join("dataset_eval.bin")),
+    ) {
+        // The guard keeps n_avail ≥ 1 below (an empty eval set would
+        // otherwise divide-and-modulo by zero).
+        (Ok(w), Ok(eval)) if eval.n > 0 => {
+            let b = EngineBuilder::new().weights(w);
+            (b, eval.images.clone(), Some(eval.labels.clone()))
+        }
+        _ => {
+            eprintln!("no artifacts found — serving synthetic weights on random images");
+            let b = EngineBuilder::new().synthetic_weights(0.25, 7);
+            let mut rng = gavina::util::Prng::new(11);
+            let imgs: Vec<f32> = (0..64 * 3072).map(|_| rng.next_f32()).collect();
+            (b, imgs, None)
+        }
+    };
+
     let engine = Arc::new(
-        EngineBuilder::new()
-            .weights_from_file(&artifacts.join("weights_a4w4.bin"))
-            .expect("run `make artifacts`")
+        builder
             .precision(prec)
             .tables_opt(tables)
             .policy(GavPolicy::Uniform(g))
@@ -56,62 +78,109 @@ fn main() {
             .build()
             .expect("engine config"),
     );
+
+    // Three QoS tiers + the governor on the default (guarded) tier.
     let opts = ServeOptions {
         workers: 4,
-        max_batch: 8,
-        batch_timeout: Duration::from_millis(10),
+        queue_depth: 256,
+        governor: Some(GovernorOptions {
+            period: Duration::from_millis(20),
+            ..Default::default()
+        }),
+        ..Default::default()
     };
     println!(
-        "starting coordinator: {} workers × {} intra-batch threads, max batch {}, {prec} ({})",
+        "starting service: {} workers × {} intra-batch threads, admission depth {}, \
+         tiers [{}], governor on, {prec} ({})",
         opts.workers,
         gavina::util::parallel::resolve_threads(engine.threads()),
-        opts.max_batch,
+        opts.queue_depth,
+        opts.tiers
+            .iter()
+            .map(|t| t.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", "),
         engine.policy().describe(),
     );
-    let coord = engine.serve(opts);
+    let service = Arc::clone(&engine).serve(opts).expect("serve options");
+    let session = service.session();
 
-    let n = n_req.min(eval.n);
+    // Replay: requests wrap around the available images, so n_req may
+    // exceed the eval-set size (the stream just repeats).
+    let n_avail = images.len() / 3072;
+    let n = n_req.max(1);
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n)
-        .map(|i| coord.submit(eval.images[i * 3072..(i + 1) * 3072].to_vec()))
-        .collect();
-
-    let mut logits = Vec::with_capacity(n * 10);
-    for rx in rxs {
-        let resp = rx
-            .recv_timeout(Duration::from_secs(600))
-            .expect("response");
-        logits.extend_from_slice(&resp.expect_logits("request failed"));
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let image = images[(i % n_avail) * 3072..(i % n_avail + 1) * 3072].to_vec();
+        // Every 8th request asks for the bit-exact reproducibility tier;
+        // the rest ride the governed default tier.
+        let ticket = if i % 8 == 0 {
+            session.submit_with(image, SubmitOptions::new().tier("exact"))
+        } else {
+            session.submit(image)
+        };
+        match ticket {
+            Ok(t) => tickets.push((i, t)),
+            Err(GavinaError::Overloaded { capacity }) => {
+                eprintln!("request {i} rejected: admission full at {capacity}");
+            }
+            Err(e) => panic!("submit failed: {e}"),
+        }
     }
+
+    // Accuracy is computed over the requests that were actually served
+    // (admission may have rejected some), so the logit/label sets stay
+    // aligned and NaN-free.
+    let mut served_logits = Vec::with_capacity(tickets.len() * 10);
+    let mut served_labels = Vec::with_capacity(tickets.len());
+    for (i, t) in tickets {
+        let resp = t
+            .wait_timeout(Duration::from_secs(600))
+            .expect("service answered")
+            .expect("response within 600 s");
+        served_logits.extend_from_slice(&resp.expect_logits("request failed"));
+        if let Some(labels) = &labels {
+            served_labels.push(labels[i % n_avail]);
+        }
+    }
+    let served = served_labels.len().max(served_logits.len() / 10);
     let wall = t0.elapsed().as_secs_f64();
-    let acc = accuracy(&logits, &eval.labels[..n], 10);
 
-    let m = coord.shutdown();
-    let (p50, p95, max) = m.latency_percentiles();
+    if !served_labels.is_empty() {
+        let acc = accuracy(&served_logits, &served_labels, 10);
+        println!("accuracy under service config: {acc:.4}");
+    }
+
+    let report = service.shutdown();
     let power = PowerModel::paper_calibrated();
-    let sched = GavSchedule::two_level(prec, g);
-    let cycles = m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed);
-
+    println!("\nserved {served}/{n} requests in {wall:.2} s ({} rejected)", report.rejected);
+    for m in &report.tiers {
+        if m.requests == 0 {
+            continue;
+        }
+        // Energy is modelled on each tier's own schedule (the exact tier
+        // runs fully guarded, aggressive at G=0 — not the base engine's).
+        println!(
+            "tier {:10} {:5} reqs  {:7.1} req/s  p50 {:6.1} ms  p99 {:6.1} ms  \
+             {:8.3} mJ  {} corrupted",
+            m.tier,
+            m.requests,
+            m.requests_per_sec,
+            m.p50_us as f64 / 1e3,
+            m.p99_us as f64 / 1e3,
+            m.energy_mj(&power, &m.effective_schedule(prec)),
+            m.corrupted,
+        );
+    }
     println!(
-        "\nserved {n} requests in {wall:.2} s  ({:.1} req/s service-side)",
-        m.requests_per_sec()
-    );
-    println!("accuracy under service config: {acc:.4}");
-    println!(
-        "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",
-        p50 as f64 / 1e3,
-        p95 as f64 / 1e3,
-        max as f64 / 1e3
-    );
-    println!(
-        "batches: {} (avg {:.1} img/batch)",
-        m.batches.load(std::sync::atomic::Ordering::Relaxed),
-        n as f64 / m.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
-    );
-    println!(
-        "accelerator: {cycles} cycles = {:.2} ms hw time, {:.3} mJ ({:.3} mJ/img)",
-        cycles as f64 / 50e6 * 1e3,
-        power.energy_mj(&sched, cycles),
-        power.energy_mj(&sched, cycles) / n as f64
+        "governor: {} ticks, mean-G trajectory [{}]",
+        report.governor.len(),
+        report
+            .governor
+            .iter()
+            .map(|s| format!("{:.1}", s.mean_g))
+            .collect::<Vec<_>>()
+            .join(" ")
     );
 }

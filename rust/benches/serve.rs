@@ -1,0 +1,207 @@
+//! Closed-loop serving bench: per-tier latency percentiles and
+//! throughput under a low → high → low load ramp, plus the governor's
+//! per-layer-G trajectory across the ramp.
+//!
+//! The load generator keeps a fixed number of requests outstanding
+//! (closed loop) per phase; the governor watches the admission-queue
+//! load fraction and slides the default tier along its undervolting
+//! ladder — the bench asserts it visits at least two distinct per-layer
+//! schedules, which is the paper's §IV-D flexibility exercised at
+//! serving time.
+//!
+//! Flags: `--quick` (CI-sized run).
+
+mod common;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gavina::arch::{ArchConfig, Precision};
+use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
+use gavina::serve::{
+    GovernorOptions, ServeOptions, Service, Session, SubmitOptions, Ticket, TierSpec,
+};
+use gavina::util::Prng;
+
+/// Keep `concurrency` requests outstanding until `n_requests` have been
+/// submitted *and* the governor has ticked at least `min_ticks` more
+/// times (so every phase is long enough for the control loop to react).
+/// Returns (served, rejected).
+fn run_phase(
+    service: &Service,
+    session: &Session,
+    images: &[Vec<f32>],
+    concurrency: usize,
+    n_requests: usize,
+    min_ticks: usize,
+) -> (usize, usize) {
+    let tick0 = service.governor_ticks();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut outstanding: VecDeque<Ticket> = VecDeque::new();
+    let mut sent = 0usize;
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    let mut i = 0usize;
+    loop {
+        let need_requests = sent < n_requests;
+        let need_ticks = service.governor_ticks() < tick0 + min_ticks;
+        if !need_requests && !need_ticks {
+            break;
+        }
+        if Instant::now() > deadline {
+            eprintln!("[serve] phase wall-clock cap hit (governor too slow?)");
+            break;
+        }
+        // Every 8th request exercises the bit-exact tier; the rest ride
+        // the governed default tier.
+        let image = images[i % images.len()].clone();
+        let res = if i % 8 == 0 {
+            session.submit_with(image, SubmitOptions::new().tier("exact"))
+        } else {
+            session.submit(image)
+        };
+        i += 1;
+        match res {
+            Ok(t) => {
+                outstanding.push_back(t);
+                sent += 1;
+            }
+            Err(GavinaError::Overloaded { .. }) => {
+                rejected += 1;
+                // Back off: drain one response before retrying.
+                if let Some(t) = outstanding.pop_front() {
+                    t.wait().expect("response");
+                    served += 1;
+                }
+            }
+            Err(e) => panic!("submit failed: {e}"),
+        }
+        while outstanding.len() >= concurrency {
+            let t = outstanding.pop_front().expect("nonempty");
+            t.wait().expect("response");
+            served += 1;
+        }
+    }
+    for t in outstanding {
+        t.wait().expect("response");
+        served += 1;
+    }
+    (served, rejected)
+}
+
+fn main() {
+    let quick = common::quick();
+    let prec = Precision::new(2, 2);
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .synthetic_weights(0.125, 0x5E)
+            .precision(prec)
+            .arch(ArchConfig::tiny())
+            .policy(GavPolicy::Uniform(2))
+            .seed(3)
+            .build()
+            .expect("engine config"),
+    );
+
+    let queue_depth = 16;
+    let opts = ServeOptions {
+        workers: 2,
+        queue_depth,
+        default_tier: "guarded".into(),
+        tiers: vec![
+            TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1),
+            TierSpec::new("guarded", None)
+                .max_batch(4)
+                .batch_timeout(Duration::from_millis(4)),
+            TierSpec::new("aggressive", Some(GavPolicy::Uniform(0)))
+                .max_batch(8)
+                .batch_timeout(Duration::from_millis(2)),
+        ],
+        governor: Some(GovernorOptions {
+            period: Duration::from_millis(15),
+            high_load: 0.6,
+            low_load: 0.3,
+            ..Default::default()
+        }),
+    };
+    println!(
+        "[serve] closed-loop bench: {prec}, queue_depth {queue_depth}, governor period 15 ms"
+    );
+
+    let mut rng = Prng::new(0x5EED);
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.next_f32()).collect())
+        .collect();
+
+    let service = Arc::clone(&engine).serve(opts).expect("serve options");
+    let session = service.session();
+
+    // Load ramp: low → high → low concurrency, relative to queue_depth
+    // and the governor's 0.3 / 0.6 thresholds.
+    let n = if quick { 24 } else { 96 };
+    let ticks = if quick { 3 } else { 6 };
+    let phases = [("low", 2usize, n), ("high", 12, 3 * n), ("low", 2, n)];
+    let t0 = Instant::now();
+    let mut total_rejected = 0usize;
+    for (name, concurrency, n_requests) in phases {
+        let p0 = Instant::now();
+        let (served, rejected) =
+            run_phase(&service, &session, &images, concurrency, n_requests, ticks);
+        total_rejected += rejected;
+        println!(
+            "[serve] phase {name:5} concurrency {concurrency:2}: {served} served, \
+             {rejected} rejected in {:.2} s",
+            p0.elapsed().as_secs_f64()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let report = service.shutdown();
+    for m in &report.tiers {
+        println!(
+            "[serve] tier {:10} {:5} reqs {:8.1} req/s  p50 {:7.2} ms  p99 {:7.2} ms  \
+             max {:7.2} ms  {} batches",
+            m.tier,
+            m.requests,
+            m.requests_per_sec,
+            m.p50_us as f64 / 1e3,
+            m.p99_us as f64 / 1e3,
+            m.max_us as f64 / 1e3,
+            m.batches,
+        );
+    }
+    println!(
+        "[serve] total: {} reqs in {wall:.2} s ({total_rejected} briefly rejected at admission)",
+        report.requests()
+    );
+
+    // The governor must have moved the default tier's per-layer G across
+    // the ramp: at least two distinct schedules in the trajectory.
+    let mut distinct: Vec<&Vec<u32>> = Vec::new();
+    for step in &report.governor {
+        if !distinct.iter().any(|gs| **gs == step.layer_gs) {
+            distinct.push(&step.layer_gs);
+        }
+    }
+    println!(
+        "[serve] governor trajectory ({} ticks): mean-G [{}]",
+        report.governor.len(),
+        report
+            .governor
+            .iter()
+            .map(|s| format!("{:.1}", s.mean_g))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    for gs in &distinct {
+        println!("[serve]   schedule visited: {gs:?}");
+    }
+    println!("[serve] governor distinct schedules: {}", distinct.len());
+    assert!(
+        distinct.len() >= 2,
+        "governor must move per-layer G between at least two distinct schedules \
+         across the load ramp (saw {})",
+        distinct.len()
+    );
+}

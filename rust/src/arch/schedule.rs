@@ -96,6 +96,23 @@ impl GavSchedule {
         self.precision
     }
 
+    /// The layer-unweighted mean of a per-layer G vector — the single
+    /// definition shared by [`GavSchedule::representative`], the serving
+    /// governor's ladder, and energy reporting, so "the schedule that
+    /// best represents this allocation" can never diverge between them.
+    pub fn mean_g(layer_gs: &[u32]) -> f64 {
+        layer_gs.iter().map(|&g| g as f64).sum::<f64>() / layer_gs.len().max(1) as f64
+    }
+
+    /// The uniform two-level schedule that best represents a per-layer G
+    /// allocation (exact when the allocation is uniform; the rounded
+    /// [`GavSchedule::mean_g`] otherwise) — what energy/TOP-per-W
+    /// modelling of that allocation's traffic should use.
+    pub fn representative(precision: Precision, layer_gs: &[u32]) -> Self {
+        let g = (Self::mean_g(layer_gs).round() as u32).min(precision.max_g());
+        Self::two_level(precision, g)
+    }
+
     /// The G value, if this schedule came from the two-level policy.
     pub fn g(&self) -> Option<u32> {
         self.g
@@ -154,6 +171,22 @@ impl GavSchedule {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn representative_schedule_rounds_and_clamps_mean_g() {
+        let p = Precision::new(2, 2); // max_g = 3
+        assert_eq!(GavSchedule::mean_g(&[]), 0.0);
+        assert!((GavSchedule::mean_g(&[1, 2, 3]) - 2.0).abs() < 1e-12);
+        // Uniform allocations are represented exactly.
+        assert_eq!(GavSchedule::representative(p, &[2; 20]).g(), Some(2));
+        // Non-uniform: the rounded mean ((1·18 + 2·2)/20 = 1.1 -> 1).
+        let mut gs = vec![1u32; 20];
+        gs[0] = 2;
+        gs[19] = 2;
+        assert_eq!(GavSchedule::representative(p, &gs).g(), Some(1));
+        // Means above G_max clamp instead of panicking in two_level.
+        assert_eq!(GavSchedule::representative(p, &[9; 4]).g(), Some(3));
+    }
 
     #[test]
     fn g0_all_approx_gmax_all_guarded() {

@@ -2,13 +2,16 @@
 //! has no `toml`/`serde` stack) plus the typed [`RunConfig`] the CLI
 //! consumes. The `[engine]` and `[serve]` sections feed the typed loaders
 //! [`crate::engine::EngineBuilder::apply_config`] and
-//! [`crate::coordinator::ServeOptions::from_config`]; duplicate keys are
-//! parse errors, and unknown keys in those sections are config errors.
+//! [`crate::serve::ServeOptions::from_config`]; duplicate keys are
+//! parse errors, and unknown keys in those sections are config errors
+//! that name the offending config line (see [`Config::line_of`]).
 //!
-//! Supported syntax: `[section]` headers, `key = value` with string
-//! (`"…"`), integer, float, boolean and flat array values, `#` comments.
-//! That covers every config this project ships; nested tables are
-//! rejected with a clear error.
+//! Supported syntax: `[section]` headers — including dotted sub-tables
+//! like `[serve.tier.exact]`, whose keys become `serve.tier.exact.*` —
+//! `key = value` with string (`"…"`), integer, float, boolean and flat
+//! array values, and `#` comments. That covers every config this project
+//! ships; array-of-table headers (`[[x]]`) are rejected with a clear
+//! error.
 
 use std::collections::BTreeMap;
 
@@ -54,6 +57,14 @@ impl Value {
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub values: BTreeMap<String, Value>,
+    /// The config-file line each key was defined on (for loader errors
+    /// that point back at the offending line, like the parser's own
+    /// duplicate-key errors).
+    lines: BTreeMap<String, usize>,
+    /// Every `[section]` header seen (name → line), including empty
+    /// sections — so a bare `[serve.governor]` header is observable even
+    /// though it contributes no keys.
+    sections: BTreeMap<String, usize>,
 }
 
 /// Parse error with line number.
@@ -120,13 +131,24 @@ pub fn parse(text: &str) -> Result<Config, ParseError> {
                 line: line_no,
                 message: "unterminated section header".into(),
             })?;
-            if name.contains('[') || name.contains('.') {
+            if name.contains('[') || name.contains(']') {
                 return Err(ParseError {
                     line: line_no,
-                    message: format!("nested tables not supported: [{name}]"),
+                    message: format!("array-of-table headers not supported: [{name}]"),
                 });
             }
-            section = name.trim().to_string();
+            // Dotted sub-tables ([serve.tier.exact]) are allowed; their
+            // keys land under the full dotted prefix. Every path segment
+            // must be non-empty.
+            let name = name.trim();
+            if name.is_empty() || name.split('.').any(|seg| seg.trim().is_empty()) {
+                return Err(ParseError {
+                    line: line_no,
+                    message: format!("empty section name segment: [{name}]"),
+                });
+            }
+            section = name.to_string();
+            cfg.sections.entry(section.clone()).or_insert(line_no);
             continue;
         }
         let (key, val) = line.split_once('=').ok_or(ParseError {
@@ -163,6 +185,7 @@ pub fn parse(text: &str) -> Result<Config, ParseError> {
                 message: format!("duplicate key '{full_key}'"),
             });
         }
+        cfg.lines.insert(full_key, line_no);
     }
     Ok(cfg)
 }
@@ -175,6 +198,34 @@ impl Config {
 
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
+    }
+
+    /// The config-file line `key` was defined on (`None` for keys that
+    /// were never parsed from text — e.g. a hand-built `Config`). Section
+    /// loaders use this so an unknown-key error names the offending line,
+    /// matching the parser's own duplicate-key diagnostics.
+    pub fn line_of(&self, key: &str) -> Option<usize> {
+        self.lines.get(key).copied()
+    }
+
+    /// Whether a `[name]` section header appeared, even with no keys
+    /// under it (e.g. a bare `[serve.governor]` enabling the governor
+    /// with all defaults).
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.contains_key(name)
+    }
+
+    /// Iterate `(suffix, first line)` over every section header starting
+    /// with `prefix` (e.g. `sections_with_prefix("serve.")` yields
+    /// `("tier.exact", 12)` for `[serve.tier.exact]`). Lets loaders
+    /// reject typoed sub-section names and see empty sections.
+    pub fn sections_with_prefix<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, usize)> {
+        self.sections
+            .iter()
+            .filter_map(move |(s, &line)| s.strip_prefix(prefix).map(|rest| (rest, line)))
     }
 
     /// Iterate `(suffix, value)` over every key starting with `prefix`
@@ -207,7 +258,7 @@ impl Config {
     }
 }
 
-/// Typed run configuration shared by the CLI and the coordinator.
+/// Typed run configuration shared by the CLI and the serving layer.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// `aXwY`.
@@ -220,9 +271,9 @@ pub struct RunConfig {
     pub width_mult: f64,
     /// Evaluation subset size (0 = all).
     pub n_eval: usize,
-    /// Coordinator batch size.
+    /// Serving-layer batch size.
     pub batch: usize,
-    /// Intra-batch worker threads for the serving coordinator (`serve`
+    /// Intra-batch worker threads for the serving layer (`serve`
     /// subcommand; `0` = one per available core, `1` = serial). The
     /// GEMM benches take their own `--threads` flag.
     pub threads: usize,
@@ -351,8 +402,34 @@ enabled = true
         assert_eq!(err.line, 2);
         let err = parse("[run\n").unwrap_err();
         assert_eq!(err.line, 1);
-        let err = parse("[a.b]\n").unwrap_err();
-        assert!(err.message.contains("nested"));
+        let err = parse("[[a]]\n").unwrap_err();
+        assert!(err.message.contains("array-of-table"));
+        let err = parse("[a..b]\n").unwrap_err();
+        assert!(err.message.contains("empty section name"));
+    }
+
+    #[test]
+    fn dotted_sections_become_dotted_key_prefixes() {
+        let cfg = parse(
+            "[serve]\nworkers = 2\n[serve.tier.exact]\npolicy = \"exact\"\nmax_batch = 1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.int_or("serve.workers", 0), 2);
+        assert_eq!(cfg.str_or("serve.tier.exact.policy", ""), "exact");
+        assert_eq!(cfg.int_or("serve.tier.exact.max_batch", 0), 1);
+        // Duplicates across a re-opened dotted section are still errors.
+        let err =
+            parse("[serve.tier.a]\ng = 1\n[serve.tier.a]\ng = 2\n").unwrap_err();
+        assert_eq!(err.line, 4);
+    }
+
+    #[test]
+    fn line_of_tracks_key_definitions() {
+        let cfg = parse("[serve]\nworkers = 2\n\n[serve.governor]\nperiod_ms = 50\n").unwrap();
+        assert_eq!(cfg.line_of("serve.workers"), Some(2));
+        assert_eq!(cfg.line_of("serve.governor.period_ms"), Some(5));
+        assert_eq!(cfg.line_of("serve.nope"), None);
+        assert_eq!(Config::default().line_of("x"), None);
     }
 
     #[test]

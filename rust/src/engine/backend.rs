@@ -86,7 +86,7 @@ pub trait ExecBackend: Send + Sync {
 /// historical `Executor` seeding (`seed.wrapping_add(layer · 0x9E37)`)
 /// with the serving shard stream XOR-mixed in first, so results are
 /// bit-identical to the pre-trait code on both the standalone and the
-/// coordinator path.
+/// serving path.
 fn layer_seed(seed: u64, job: &LayerGemm) -> u64 {
     (seed ^ job.stream).wrapping_add(job.plan.layer_idx() as u64 * 0x9E37)
 }

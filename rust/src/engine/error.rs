@@ -5,11 +5,13 @@
 //! [`GavinaError`] instead of panicking, so a malformed request yields an
 //! error `Response` while the serving workers keep running.
 
-/// Typed error for the `gavina::engine` public API.
+/// Typed error for the `gavina::engine` and `gavina::serve` public APIs.
 ///
-/// The variants mirror the four ways the facade can fail: a configuration
-/// that cannot produce a valid engine, an artifact that cannot be read, a
-/// tensor/request with the wrong shape, and a backend execution failure.
+/// The variants mirror the ways the facade can fail: a configuration that
+/// cannot produce a valid engine, an artifact that cannot be read, a
+/// tensor/request with the wrong shape, a backend execution failure, and
+/// the serving-control outcomes (admission rejection, cancellation,
+/// missed deadlines) that a [`crate::serve::Session`] reports per ticket.
 ///
 /// ```
 /// use gavina::engine::GavinaError;
@@ -48,6 +50,24 @@ pub enum GavinaError {
     /// A backend failed to execute (reserved for pluggable backends; the
     /// built-in simulators are total).
     Backend(String),
+    /// The serving admission queue is full: `capacity` requests are
+    /// already in flight. The service stays up — back off and retry.
+    Overloaded {
+        /// The admission-queue depth that was exhausted.
+        capacity: usize,
+    },
+    /// The request was cancelled via
+    /// [`Ticket::cancel`](crate::serve::Ticket::cancel) before it
+    /// executed.
+    Cancelled,
+    /// A request exceeded its submission deadline before executing —
+    /// the service's terminal verdict on that request (a local
+    /// [`Ticket::wait_timeout`](crate::serve::Ticket::wait_timeout)
+    /// poll expiring is `Ok(None)`, not this).
+    DeadlineExceeded {
+        /// How long the request had waited when the deadline fired [ms].
+        waited_ms: u64,
+    },
 }
 
 impl GavinaError {
@@ -71,6 +91,14 @@ impl std::fmt::Display for GavinaError {
                 got,
             } => write!(f, "shape error: {what}: expected {expected}, got {got}"),
             GavinaError::Backend(msg) => write!(f, "backend error: {msg}"),
+            GavinaError::Overloaded { capacity } => write!(
+                f,
+                "service overloaded: {capacity} requests already in flight"
+            ),
+            GavinaError::Cancelled => write!(f, "request cancelled"),
+            GavinaError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms")
+            }
         }
     }
 }
@@ -100,6 +128,15 @@ mod tests {
             (
                 GavinaError::Backend("sim died".into()),
                 "backend error: sim died",
+            ),
+            (
+                GavinaError::Overloaded { capacity: 64 },
+                "service overloaded: 64 requests already in flight",
+            ),
+            (GavinaError::Cancelled, "request cancelled"),
+            (
+                GavinaError::DeadlineExceeded { waited_ms: 15 },
+                "deadline exceeded after 15 ms",
             ),
         ];
         for (e, want) in cases {

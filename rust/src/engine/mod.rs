@@ -2,7 +2,7 @@
 //! [`Engine`] built once by [`EngineBuilder`].
 //!
 //! Every entry point — CLI subcommands, examples, benches, the serving
-//! coordinator — used to hand-assemble `Executor::new(weights, …)` and
+//! layer — used to hand-assemble `Executor::new(weights, …)` and
 //! mutate its public `layer_gs` field; the engine facade replaces that
 //! borrow-laden, panic-on-misuse surface with four pieces:
 //!
@@ -45,9 +45,8 @@ mod policy;
 
 use std::sync::Arc;
 
-use crate::arch::{ArchConfig, Precision};
+use crate::arch::{ArchConfig, GavSchedule, Precision};
 use crate::config::{Config, Value};
-use crate::coordinator::{Coordinator, ServeOptions};
 use crate::dnn::exec::{ch, synth, BLOCKS_PER_STAGE, STAGES};
 use crate::dnn::weights::AnyTensor;
 use crate::dnn::{
@@ -56,6 +55,7 @@ use crate::dnn::{
 use crate::errmodel::ErrorTables;
 use crate::gls::GlsContext;
 use crate::ilp::{Allocation, GavAllocator, LayerChoices};
+use crate::serve::{ServeOptions, Service};
 use crate::util::parallel;
 
 pub use backend::{ExecBackend, FloatBackend, GavinaBackend, GlsBackend};
@@ -193,7 +193,7 @@ impl EngineBuilder {
     }
 
     /// Intra-batch worker threads for [`Engine::infer_parallel`] and the
-    /// serving coordinator (`1` = serial, `0` = one per core).
+    /// serving layer (`1` = serial, `0` = one per core).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
@@ -565,7 +565,7 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
 
 /// The immutable inference engine: share it across threads behind an
 /// `Arc`, call [`Engine::infer`] / [`Engine::infer_batched`], or start a
-/// serving [`Coordinator`] with [`Engine::serve`].
+/// QoS serving [`Service`] with [`Engine::serve`].
 pub struct Engine {
     /// The compiled data plane: weights quantized, bit-plane-packed and
     /// BN-folded exactly once, at [`EngineBuilder::build`]. Also the
@@ -656,7 +656,7 @@ impl Engine {
     /// sub-batches across the engine's `threads` scoped workers (each a
     /// deterministic [`Engine::infer_shard`] stream), and merge the
     /// results in request order. `base_stream` namespaces the shard
-    /// streams (the coordinator passes a per-worker value).
+    /// streams (the serving workers pass a per-worker value).
     pub fn infer_parallel(
         &self,
         images: &[f32],
@@ -693,11 +693,20 @@ impl Engine {
         })
     }
 
-    /// Start the serving coordinator (batcher + worker pool) over this
-    /// engine. Takes the `Arc` by value — `Arc::clone(&engine).serve(…)`
-    /// keeps a local handle alive alongside the service.
-    pub fn serve(self: Arc<Self>, opts: ServeOptions) -> Coordinator {
-        Coordinator::start(self, opts)
+    /// Start the QoS serving layer (bounded admission, tier engines,
+    /// batcher + worker pool, optional governor) over this engine. Takes
+    /// the `Arc` by value — `Arc::clone(&engine).serve(…)` keeps a local
+    /// handle alive alongside the service. Fails with a typed error when
+    /// the options are invalid or a tier policy cannot resolve.
+    pub fn serve(self: Arc<Self>, opts: ServeOptions) -> Result<Service, GavinaError> {
+        Service::start(self, opts)
+    }
+
+    /// The uniform-G schedule that best represents this engine's resolved
+    /// allocation ([`GavSchedule::representative`]) — what energy/TOP-per-W
+    /// modelling of this engine's traffic should use.
+    pub fn effective_schedule(&self) -> GavSchedule {
+        GavSchedule::representative(self.precision(), &self.layer_gs())
     }
 
     /// Per-layer sensitivity profile (paper Fig. 8a) on the given images;

@@ -1,6 +1,6 @@
 //! Serialization of calibrated error tables (`artifacts/caltables_*.bin`)
 //! so the expensive GLS calibration runs once and every downstream tool
-//! (benches, examples, the serving coordinator) loads the same tables.
+//! (benches, examples, the serving layer) loads the same tables.
 //!
 //! Format (little-endian):
 //! ```text

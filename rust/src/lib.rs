@@ -33,8 +33,9 @@
 //! * [`baseline`] — state-of-the-art comparison data + simplified TED /
 //!   fixed-LSB TEP baseline accelerator models (Table II, Fig. 1).
 //! * [`runtime`] — PJRT runtime loading the AOT `artifacts/*.hlo.txt`.
-//! * [`coordinator`] — the serving layer: request queue, batcher, DVS
-//!   mode accounting, metrics.
+//! * [`serve`] — the QoS serving layer: `Session`/`Ticket` request API,
+//!   bounded admission, per-request energy tiers, load-adaptive
+//!   undervolting governor, per-tier metrics.
 //! * [`config`] — TOML-subset run-configuration parser (no external deps).
 //! * [`util`] — deterministic PRNG and small shared helpers.
 //!
@@ -45,7 +46,6 @@
 pub mod arch;
 pub mod baseline;
 pub mod config;
-pub mod coordinator;
 pub mod dnn;
 pub mod engine;
 pub mod errmodel;
@@ -56,6 +56,7 @@ pub mod netlist;
 pub mod power;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod stats;
 pub mod util;
@@ -65,3 +66,4 @@ pub use arch::{ArchConfig, GavSchedule, Precision};
 pub use engine::{Engine, EngineBuilder, GavPolicy, GavinaError};
 pub use errmodel::ErrorTables;
 pub use power::PowerModel;
+pub use serve::{ServeOptions, Service, Session};

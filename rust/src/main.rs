@@ -8,7 +8,7 @@
 //! gavina calibrate [--quick]         GLS-calibrate error tables -> artifacts/
 //! gavina eval      -p a4w4 -g 3      ResNet-18 accuracy under GAV
 //! gavina allocate  -p a4w4 --gtar 4  ILP per-layer G allocation (§IV-D)
-//! gavina serve     -n 64             run the serving coordinator demo
+//! gavina serve     -n 64             run the QoS serving demo (tiers + governor)
 //! gavina selfcheck                   PJRT artifacts vs native cross-check
 //! ```
 //!
@@ -20,12 +20,12 @@ use std::sync::Arc;
 
 use gavina::arch::{ArchConfig, GavSchedule, Precision};
 use gavina::config::{Config, RunConfig};
-use gavina::coordinator::ServeOptions;
 use gavina::dnn;
 use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
 use gavina::errmodel::{self, CalibrationConfig};
 use gavina::gls::{DelayModel, GlsContext};
 use gavina::power::PowerModel;
+use gavina::serve::ServeOptions;
 use gavina::simulator::dvs_trace;
 
 fn usage() -> ! {
@@ -187,16 +187,6 @@ fn engine_builder(
         .seed(run.seed)
         .threads(run.threads)
         .tables_opt(tables)
-}
-
-/// The uniform-G schedule that best represents an engine's resolved
-/// allocation (exact for Exact/Uniform policies; the rounded op-unweighted
-/// mean for per-layer ones) — what the CLI's energy/TOP/sW lines model.
-fn effective_sched(engine: &gavina::engine::Engine) -> GavSchedule {
-    let gs = engine.layer_gs();
-    let mean = gs.iter().map(|&g| g as f64).sum::<f64>() / gs.len().max(1) as f64;
-    let g = (mean.round() as u32).min(engine.precision().max_g());
-    GavSchedule::two_level(engine.precision(), g)
 }
 
 fn caltables_path(run: &RunConfig) -> PathBuf {
@@ -390,7 +380,7 @@ fn cmd_eval(args: &Args) {
     let acc = gavina::stats::accuracy(&res.logits, &labels, res.classes);
     // Energy is modelled on the uniform-G schedule matching the engine's
     // *resolved* allocation (config G included), not the CLI default.
-    let sched = effective_sched(&engine);
+    let sched = engine.effective_schedule();
     let power = PowerModel::paper_calibrated();
     println!(
         "eval {} ({}) on {} images: accuracy {:.4}",
@@ -470,8 +460,8 @@ fn cmd_serve(args: &Args) {
     let weights = Arc::new(load_weights(run));
     let tables = Arc::new(load_or_calibrate_tables(run, true));
     // Load the request stream before the service starts so the metrics
-    // throughput window (coordinator start → last batch) measures
-    // serving, not disk I/O.
+    // throughput window (service start → last batch) measures serving,
+    // not disk I/O.
     let (images, _, n_imgs) = load_images(run, args.n);
     let mut builder = engine_builder(args, weights, Some(tables));
     if matches!(builder.policy_ref(), GavPolicy::IlpBudget { .. }) {
@@ -483,55 +473,109 @@ fn cmd_serve(args: &Args) {
         Some(cfg) => or_die(ServeOptions::from_config(cfg)),
         None => ServeOptions::default(),
     };
-    // `[serve] max_batch` from the config wins; otherwise the `[run]`
-    // batch knob keeps its historical meaning.
-    let config_sets_max_batch = args
-        .cfg
-        .as_ref()
-        .is_some_and(|c| c.get("serve.max_batch").is_some());
-    if !config_sets_max_batch {
-        opts.max_batch = run.batch;
-    }
-    eprintln!(
-        "coordinator: {} batch workers × {} intra-batch threads ({} backend, {})",
-        opts.workers,
-        gavina::util::parallel::resolve_threads(engine.threads()),
-        engine.backend_name(),
-        engine.policy().describe(),
-    );
-    let sched = effective_sched(&engine);
-    let coord = engine.serve(opts);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_imgs)
-        .map(|i| coord.submit(images[i * 3072..(i + 1) * 3072].to_vec()))
-        .collect();
-    let mut ok = 0;
-    for rx in rxs {
-        match rx.recv_timeout(std::time::Duration::from_secs(600)) {
-            Ok(resp) if resp.result.is_ok() => ok += 1,
-            _ => {}
+    // `[serve]` batching from the config wins; otherwise the `[run]`
+    // batch knob keeps its historical meaning for the *default* tier
+    // (never the `exact` tier — its max_batch = 1 is the determinism
+    // guarantee).
+    let config_sets_batching = args.cfg.as_ref().is_some_and(|c| {
+        c.get("serve.max_batch").is_some() || c.keys_with_prefix("serve.tier.").next().is_some()
+    });
+    if !config_sets_batching {
+        let default_tier = opts.default_tier.clone();
+        if let Some(t) = opts.tiers.iter_mut().find(|t| t.name == default_tier) {
+            t.max_batch = run.batch;
         }
     }
+    eprintln!(
+        "serve: {} workers × {} intra-batch threads, admission depth {}, {} backend, tiers [{}]{}",
+        opts.workers,
+        gavina::util::parallel::resolve_threads(engine.threads()),
+        opts.queue_depth,
+        engine.backend_name(),
+        opts.tiers
+            .iter()
+            .map(|t| format!("{} (batch {})", t.name, t.max_batch))
+            .collect::<Vec<_>>()
+            .join(", "),
+        if opts.governor.is_some() { ", governor on" } else { "" },
+    );
+    let service = or_die(Arc::clone(&engine).serve(opts));
+    let session = service.session();
+    let t0 = std::time::Instant::now();
+    let wait_ok = |t: gavina::serve::Ticket| -> bool {
+        // wait() blocks until the service answers; shutdown guarantees
+        // every accepted ticket is answered.
+        t.wait().map(|r| r.is_ok()).unwrap_or(false)
+    };
+    // Closed-loop against the bounded admission queue: when it is full,
+    // drain the oldest outstanding ticket and retry, so `-n` beyond
+    // queue_depth is served, not rejected.
+    let mut pending: std::collections::VecDeque<gavina::serve::Ticket> = Default::default();
+    let mut ok = 0usize;
+    let mut backoffs = 0usize;
+    'submit: for i in 0..n_imgs {
+        loop {
+            match session.submit(images[i * 3072..(i + 1) * 3072].to_vec()) {
+                Ok(t) => {
+                    pending.push_back(t);
+                    break;
+                }
+                Err(GavinaError::Overloaded { .. }) => {
+                    backoffs += 1;
+                    match pending.pop_front() {
+                        Some(t) => ok += wait_ok(t) as usize,
+                        // Capacity held by someone else: brief backoff.
+                        None => std::thread::sleep(std::time::Duration::from_millis(1)),
+                    }
+                }
+                Err(e) => {
+                    eprintln!("submit failed: {e}");
+                    break 'submit;
+                }
+            }
+        }
+    }
+    for t in pending {
+        ok += wait_ok(t) as usize;
+    }
     let wall = t0.elapsed().as_secs_f64();
-    let m = coord.shutdown();
-    let (p50, p95, max) = m.latency_percentiles();
+    let report = service.shutdown();
     let power = PowerModel::paper_calibrated();
     println!(
-        "served {ok}/{n_imgs} requests in {wall:.2}s ({:.1} req/s service-side)",
-        m.requests_per_sec()
+        "served {ok}/{n_imgs} requests in {wall:.2}s ({backoffs} admission backoffs)"
     );
-    println!(
-        "  latency p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
-        p50 as f64 / 1e3,
-        p95 as f64 / 1e3,
-        max as f64 / 1e3
-    );
-    println!(
-        "  accelerator: {} cycles, {:.3} mJ, {} corrupted values",
-        m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed),
-        m.energy_mj(&power, &sched),
-        m.corrupted.load(std::sync::atomic::Ordering::Relaxed),
-    );
+    for m in &report.tiers {
+        if m.requests == 0 && m.errors == 0 && m.cancelled == 0 {
+            continue;
+        }
+        // Energy is modelled per tier on its own schedule (exact runs
+        // fully guarded, aggressive at G=0; the governed tier's snapshot
+        // carries its final allocation).
+        println!(
+            "  tier {:10} {:6} reqs  {:7.1} req/s  p50 {:.1} ms  p99 {:.1} ms  max {:.1} ms  \
+             {:.3} mJ  {} corrupted",
+            m.tier,
+            m.requests,
+            m.requests_per_sec,
+            m.p50_us as f64 / 1e3,
+            m.p99_us as f64 / 1e3,
+            m.max_us as f64 / 1e3,
+            m.energy_mj(&power, &m.effective_schedule(engine.precision())),
+            m.corrupted,
+        );
+    }
+    if !report.governor.is_empty() {
+        let mean_gs: Vec<String> = report
+            .governor
+            .iter()
+            .map(|s| format!("{:.1}", s.mean_g))
+            .collect();
+        println!(
+            "  governor: {} ticks, mean-G trajectory [{}]",
+            report.governor.len(),
+            mean_gs.join(" ")
+        );
+    }
 }
 
 fn cmd_selfcheck(run: &RunConfig) {

@@ -1,0 +1,327 @@
+//! The load-adaptive undervolting governor: a serving-time control loop
+//! over the paper's §IV-D flexibility knob.
+//!
+//! GAVINA's GAV schedule trades energy for accuracy **without touching
+//! throughput** (§III: undervolted steps run at the same clock), so a
+//! serving governor does not shed load by degrading G — it spends the
+//! paper's flexibility where it pays: under heavy traffic (or a modeled
+//! power budget) the *default* tier slides toward aggressive
+//! undervolting, cutting energy per request; when load drains it climbs
+//! back toward fully guarded operation.
+//!
+//! Mechanics: at service start the governor pre-resolves a **ladder** of
+//! engine variants, one rung per G level, via
+//! [`Engine::with_policy`](crate::engine::Engine::with_policy) — PR 3's
+//! `Arc`-shared packed planes make each rung a schedule re-resolution,
+//! never a re-pack. Rungs are *per-layer* schedules: the first and last
+//! conv layers keep one extra guarded step (the classic
+//! sensitive-boundary-layer guard the error tables motivate), so a rung
+//! is `PerLayer([g+1, g, …, g, g+1])` rather than plain uniform G. Each
+//! tick the governor samples the admission-queue load fraction, steps
+//! one rung down/up past the configured thresholds, caps the result by
+//! the optional [`PowerModel`]-modeled power budget, and swaps the
+//! default tier's engine pointer (an `Arc` store — in-flight batches
+//! finish on the old schedule). Every tick appends a [`GovernorStep`] to
+//! a bounded trajectory that benches and dashboards can read back.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::{Engine, GavPolicy, GavinaError};
+use crate::power::PowerModel;
+
+use super::Shared;
+
+/// Governor configuration (the `[serve.governor]` section).
+#[derive(Clone, Debug)]
+pub struct GovernorOptions {
+    /// Control-loop tick period.
+    pub period: Duration,
+    /// Optional modeled system-power budget [mW] for the default tier:
+    /// the governor never settles on a rung whose modeled power exceeds
+    /// it.
+    pub target_power_mw: Option<f64>,
+    /// Admission load fraction at or above which the governor steps one
+    /// rung toward aggressive undervolting.
+    pub high_load: f64,
+    /// Load fraction at or below which it steps back toward guarded.
+    pub low_load: f64,
+    /// Floor for the per-layer G body (accuracy guard): the governor
+    /// never undervolts below this rung.
+    pub min_g: u32,
+}
+
+impl Default for GovernorOptions {
+    fn default() -> Self {
+        Self {
+            period: Duration::from_millis(100),
+            target_power_mw: None,
+            high_load: 0.75,
+            low_load: 0.25,
+            min_g: 0,
+        }
+    }
+}
+
+impl GovernorOptions {
+    pub(crate) fn validate(&self) -> Result<(), GavinaError> {
+        if self.period.is_zero() {
+            return Err(GavinaError::Config(
+                "[serve.governor] period must be > 0".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.low_load)
+            || !(0.0..=1.0).contains(&self.high_load)
+            || self.low_load >= self.high_load
+        {
+            return Err(GavinaError::Config(format!(
+                "[serve.governor] need 0 ≤ low_load < high_load ≤ 1 (got {} / {})",
+                self.low_load, self.high_load
+            )));
+        }
+        if let Some(p) = self.target_power_mw {
+            if !p.is_finite() || p <= 0.0 {
+                return Err(GavinaError::Config(format!(
+                    "[serve.governor] target_power_mw {p} must be positive"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One governor tick, recorded whether or not the schedule moved.
+#[derive(Clone, Debug)]
+pub struct GovernorStep {
+    /// Time since service start.
+    pub at: Duration,
+    /// Admission load fraction sampled at the tick.
+    pub load: f64,
+    /// The per-layer G schedule in force after the tick.
+    pub layer_gs: Vec<u32>,
+    /// Arithmetic mean of `layer_gs` (trajectory plots).
+    pub mean_g: f64,
+    /// Modeled system power of the schedule [mW].
+    pub modeled_power_mw: f64,
+}
+
+/// Bound on the recorded trajectory: a long-running service keeps the
+/// most recent ticks, O(1) memory.
+const TRAJECTORY_CAP: usize = 4096;
+
+/// One rung of the pre-resolved undervolting ladder.
+pub(crate) struct Rung {
+    pub(crate) engine: Arc<Engine>,
+    pub(crate) layer_gs: Vec<u32>,
+    pub(crate) mean_g: f64,
+    pub(crate) power_mw: f64,
+}
+
+/// Pre-resolve the ladder for `base`: one rung per G level in
+/// `min_g..=max_g`, sharing the base engine's packed planes.
+pub(crate) fn build_ladder(
+    base: &Arc<Engine>,
+    opts: &GovernorOptions,
+    power: &PowerModel,
+) -> Result<Vec<Rung>, GavinaError> {
+    let prec = base.precision();
+    let max_g = prec.max_g();
+    if opts.min_g > max_g {
+        return Err(GavinaError::Config(format!(
+            "[serve.governor] min_g {} exceeds G_max {max_g} for {prec}",
+            opts.min_g
+        )));
+    }
+    let n_layers = base.layer_gs().len();
+    let mut rungs = Vec::with_capacity((max_g - opts.min_g + 1) as usize);
+    for g in opts.min_g..=max_g {
+        // Per-layer guard: the boundary layers (first conv, last conv)
+        // keep one extra guarded step below full guarding.
+        let mut gs = vec![g; n_layers];
+        if g < max_g && n_layers > 0 {
+            gs[0] = g + 1;
+            gs[n_layers - 1] = g + 1;
+        }
+        let engine = if gs == base.layer_gs() {
+            Arc::clone(base)
+        } else {
+            Arc::new(base.with_policy(GavPolicy::PerLayer(gs.clone()))?)
+        };
+        let mean_g = crate::arch::GavSchedule::mean_g(&gs);
+        let power_mw = power.system_power_mw(&engine.effective_schedule());
+        rungs.push(Rung {
+            engine,
+            layer_gs: gs,
+            mean_g,
+            power_mw,
+        });
+    }
+    Ok(rungs)
+}
+
+/// The rung whose mean G is nearest the engine's current allocation —
+/// where the governor starts.
+pub(crate) fn start_rung(rungs: &[Rung], base: &Engine) -> usize {
+    let mean = crate::arch::GavSchedule::mean_g(&base.layer_gs());
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, r) in rungs.iter().enumerate() {
+        let d = (r.mean_g - mean).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The governor thread body: tick until `stop_rx` fires (or every sender
+/// is gone), adapting the default tier's engine.
+pub(crate) fn run(
+    shared: Arc<Shared>,
+    rungs: Vec<Rung>,
+    opts: GovernorOptions,
+    stop_rx: Receiver<()>,
+    trajectory: Arc<Mutex<VecDeque<GovernorStep>>>,
+    mut rung: usize,
+) {
+    loop {
+        match stop_rx.recv_timeout(opts.period) {
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        let load = shared.admission.load_fraction();
+        let mut next = rung;
+        if load >= opts.high_load && next > 0 {
+            next -= 1;
+        } else if load <= opts.low_load && next + 1 < rungs.len() {
+            next += 1;
+        }
+        // The power budget is a ceiling, not a signal: never settle on a
+        // rung whose modeled power exceeds it.
+        if let Some(budget) = opts.target_power_mw {
+            while next > 0 && rungs[next].power_mw > budget {
+                next -= 1;
+            }
+        }
+        if next != rung {
+            rung = next;
+            *shared.tiers[shared.default_tier].engine.lock().unwrap() =
+                Arc::clone(&rungs[rung].engine);
+        }
+        let step = GovernorStep {
+            at: shared.started.elapsed(),
+            load,
+            layer_gs: rungs[rung].layer_gs.clone(),
+            mean_g: rungs[rung].mean_g,
+            modeled_power_mw: rungs[rung].power_mw,
+        };
+        let mut t = trajectory.lock().unwrap();
+        if t.len() >= TRAJECTORY_CAP {
+            t.pop_front();
+        }
+        t.push_back(step);
+    }
+}
+
+/// Signal handle kept by the [`Service`](super::Service): dropping the
+/// sender also stops the thread (`recv_timeout` disconnects).
+pub(crate) type StopHandle = Sender<()>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, Precision};
+    use crate::engine::EngineBuilder;
+
+    fn base_engine(g: u32) -> Arc<Engine> {
+        Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 1)
+                .precision(Precision::new(2, 2))
+                .arch(ArchConfig::tiny())
+                .policy(GavPolicy::Uniform(g))
+                .build()
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn options_validation() {
+        GovernorOptions::default().validate().unwrap();
+        let bad = GovernorOptions {
+            low_load: 0.8,
+            high_load: 0.5,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GovernorOptions {
+            target_power_mw: Some(-1.0),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GovernorOptions {
+            period: Duration::ZERO,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn ladder_spans_min_g_to_max_and_guards_boundary_layers() {
+        let base = base_engine(1);
+        let power = PowerModel::paper_calibrated();
+        let opts = GovernorOptions::default();
+        let rungs = build_ladder(&base, &opts, &power).unwrap();
+        let max_g = base.precision().max_g();
+        assert_eq!(rungs.len(), (max_g + 1) as usize);
+        // Bottom rung: body at 0, boundary layers at 1.
+        let gs0 = &rungs[0].layer_gs;
+        assert_eq!(gs0[0], 1);
+        assert_eq!(*gs0.last().unwrap(), 1);
+        assert!(gs0[1..gs0.len() - 1].iter().all(|&g| g == 0));
+        // Top rung: fully guarded everywhere.
+        let top = rungs.last().unwrap();
+        assert!(top.layer_gs.iter().all(|&g| g == max_g));
+        // Modeled power grows monotonically with guarding.
+        for w in rungs.windows(2) {
+            assert!(w[0].power_mw <= w[1].power_mw + 1e-9);
+        }
+        // min_g floor is honored.
+        let floored = build_ladder(
+            &base,
+            &GovernorOptions {
+                min_g: 2,
+                ..Default::default()
+            },
+            &power,
+        )
+        .unwrap();
+        assert_eq!(floored.len(), (max_g - 1) as usize);
+        assert!(floored[0].layer_gs.iter().all(|&g| g >= 2));
+        // min_g beyond G_max is a config error.
+        assert!(build_ladder(
+            &base,
+            &GovernorOptions {
+                min_g: max_g + 1,
+                ..Default::default()
+            },
+            &power,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn start_rung_matches_base_allocation() {
+        let power = PowerModel::paper_calibrated();
+        let opts = GovernorOptions::default();
+        let base = base_engine(2);
+        let rungs = build_ladder(&base, &opts, &power).unwrap();
+        // Uniform G=2 (a2w2: max_g = 3) is nearest the g=2 rung.
+        assert_eq!(start_rung(&rungs, &base), 2);
+        let exact = base_engine(base.precision().max_g());
+        assert_eq!(start_rung(&build_ladder(&exact, &opts, &power).unwrap(), &exact), 3);
+    }
+}

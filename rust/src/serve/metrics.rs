@@ -1,0 +1,258 @@
+//! Per-tier serving metrics: lock-free counters, a bounded latency
+//! reservoir, and the plain-data [`MetricsSnapshot`] the public API hands
+//! out.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::arch::{GavSchedule, Precision};
+use crate::power::PowerModel;
+
+/// Latency reservoir capacity: percentiles are computed over a uniform
+/// sample of at most this many observations, so a long-running service
+/// holds O(1) memory instead of one `u64` per request ever served.
+pub(crate) const LATENCY_RESERVOIR: usize = 4096;
+
+/// Uniform reservoir sample of latency observations (Vitter's Algorithm
+/// R with a cheap xorshift index source — metrics, not cryptography).
+pub(crate) struct Reservoir {
+    pub(crate) buf: Vec<u64>,
+    pub(crate) seen: u64,
+    rng: u64,
+}
+
+impl Reservoir {
+    pub(crate) fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            seen: 0,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    pub(crate) fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.buf.len() < LATENCY_RESERVOIR {
+            self.buf.push(v);
+            return;
+        }
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        let j = self.rng % self.seen;
+        if (j as usize) < LATENCY_RESERVOIR {
+            self.buf[j as usize] = v;
+        }
+    }
+}
+
+/// Aggregated metrics of one QoS tier (internal: the public view is
+/// [`MetricsSnapshot`]).
+pub(crate) struct TierMetrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    /// Requests answered with an error `Response` (bad shape, missed
+    /// deadline, backend failure) — cancellations are counted separately.
+    errors: AtomicU64,
+    cancelled: AtomicU64,
+    sim_cycles: AtomicU64,
+    corrupted: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
+    /// Running true maximum — the one statistic a uniform reservoir
+    /// systematically loses once eviction starts.
+    max_latency_us: AtomicU64,
+    started: Instant,
+    last_record: Mutex<Option<Instant>>,
+}
+
+impl TierMetrics {
+    pub(crate) fn new(started: Instant) -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+            latencies_us: Mutex::new(Reservoir::new()),
+            max_latency_us: AtomicU64::new(0),
+            started,
+            last_record: Mutex::new(None),
+        }
+    }
+
+    pub(crate) fn record(&self, n_req: usize, lat: &[Duration], cycles: u64, corrupted: u64) {
+        self.requests.fetch_add(n_req as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.corrupted.fetch_add(corrupted, Ordering::Relaxed);
+        {
+            let mut l = self.latencies_us.lock().unwrap();
+            for d in lat {
+                let us = d.as_micros() as u64;
+                self.max_latency_us.fetch_max(us, Ordering::Relaxed);
+                l.push(us);
+            }
+        }
+        *self.last_record.lock().unwrap() = Some(Instant::now());
+    }
+
+    pub(crate) fn record_errors(&self, n: usize) {
+        self.errors.fetch_add(n as u64, Ordering::Relaxed);
+        *self.last_record.lock().unwrap() = Some(Instant::now());
+    }
+
+    pub(crate) fn record_cancelled(&self, n: usize) {
+        self.cancelled.fetch_add(n as u64, Ordering::Relaxed);
+        *self.last_record.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// A consistent-enough point-in-time copy (counters are relaxed; the
+    /// percentiles come from the bounded reservoir, the max is exact).
+    /// `layer_gs` is the tier's schedule at snapshot time.
+    pub(crate) fn snapshot(&self, tier: &str, layer_gs: Vec<u32>) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().buf.clone();
+        lat.sort_unstable();
+        let pick = |q: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * q) as usize]
+            }
+        };
+        let requests = self.requests.load(Ordering::Relaxed);
+        let requests_per_sec = match *self.last_record.lock().unwrap() {
+            Some(t) => {
+                let secs = t.duration_since(self.started).as_secs_f64();
+                if secs > 0.0 {
+                    requests as f64 / secs
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        };
+        MetricsSnapshot {
+            tier: tier.to_string(),
+            layer_gs,
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            p99_us: pick(0.99),
+            max_us: self.max_latency_us.load(Ordering::Relaxed),
+            requests_per_sec,
+        }
+    }
+}
+
+/// Point-in-time metrics of one QoS tier: plain data, safe to hold after
+/// the service is gone. Produced by
+/// [`Service::metrics`](super::Service::metrics) and
+/// [`Service::shutdown`](super::Service::shutdown).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Tier name (`exact`, `guarded`, …).
+    pub tier: String,
+    /// The per-layer G schedule the tier was running at snapshot time
+    /// (for a governed tier this moves over the service's lifetime).
+    pub layer_gs: Vec<u32>,
+    /// Requests answered with logits.
+    pub requests: u64,
+    /// Physical batches executed.
+    pub batches: u64,
+    /// Requests answered with an error `Response` (bad shape, missed
+    /// deadline, backend failure).
+    pub errors: u64,
+    /// Requests cancelled via their ticket before execution.
+    pub cancelled: u64,
+    /// Accelerator cycles simulated for this tier's traffic.
+    pub sim_cycles: u64,
+    /// Undervolting-corrupted values injected into this tier's traffic.
+    pub corrupted: u64,
+    /// End-to-end latency percentiles over a bounded reservoir [µs].
+    pub p50_us: u64,
+    /// 95th percentile latency [µs].
+    pub p95_us: u64,
+    /// 99th percentile latency [µs].
+    pub p99_us: u64,
+    /// Exact running maximum latency [µs].
+    pub max_us: u64,
+    /// Served requests per second, service start → last recorded batch.
+    pub requests_per_sec: f64,
+}
+
+impl MetricsSnapshot {
+    /// The uniform-G schedule representing this tier's allocation at
+    /// snapshot time ([`GavSchedule::representative`] over
+    /// [`MetricsSnapshot::layer_gs`]). `prec` is the serving engine's
+    /// precision.
+    pub fn effective_schedule(&self, prec: Precision) -> GavSchedule {
+        GavSchedule::representative(prec, &self.layer_gs)
+    }
+
+    /// Accelerator-side energy for this tier's served traffic [mJ],
+    /// modelled on the given schedule — typically
+    /// [`MetricsSnapshot::effective_schedule`], i.e. *this tier's* own
+    /// allocation, not the base engine's.
+    pub fn energy_mj(&self, power: &PowerModel, sched: &GavSchedule) -> f64 {
+        power.energy_mj(sched, self.sim_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_percentiles_sane() {
+        let mut r = Reservoir::new();
+        for i in 0..(LATENCY_RESERVOIR as u64 * 4) {
+            r.push(i);
+        }
+        assert_eq!(r.buf.len(), LATENCY_RESERVOIR);
+        assert_eq!(r.seen, LATENCY_RESERVOIR as u64 * 4);
+        // The sample must span the observed range, not just the prefix.
+        assert!(r.buf.iter().any(|&v| v >= LATENCY_RESERVOIR as u64));
+    }
+
+    #[test]
+    fn snapshot_orders_percentiles() {
+        let m = TierMetrics::new(Instant::now());
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        m.record(100, &lats, 1234, 5);
+        m.record_errors(2);
+        m.record_cancelled(1);
+        let s = m.snapshot("t", vec![2; 4]);
+        assert_eq!(s.tier, "t");
+        // The snapshot's energy schedule is the tier's own allocation.
+        assert_eq!(
+            s.effective_schedule(Precision::new(2, 2)).g(),
+            Some(2),
+            "representative schedule must come from the tier's layer_gs"
+        );
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.sim_cycles, 1234);
+        assert_eq!(s.corrupted, 5);
+        assert!(s.p50_us > 0 && s.p50_us <= s.p95_us);
+        assert!(s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert_eq!(s.max_us, 100_000);
+        assert!(s.requests_per_sec > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let s = TierMetrics::new(Instant::now()).snapshot("idle", Vec::new());
+        assert_eq!(s.requests, 0);
+        assert_eq!((s.p50_us, s.p99_us, s.max_us), (0, 0, 0));
+        assert_eq!(s.requests_per_sec, 0.0);
+    }
+}

@@ -1,0 +1,718 @@
+//! `gavina::serve` — the QoS serving layer: bounded admission, per-request
+//! energy tiers, and a load-adaptive undervolting governor.
+//!
+//! This module replaces the old `coordinator`'s ad-hoc types (public
+//! `Request` fields, client-stamped timestamps, an unbounded queue and
+//! one global policy frozen at build) with a typed serving surface:
+//!
+//! ```text
+//! Session::submit ──▶ bounded admission ──▶ batcher ──▶ worker pool ──▶ Ticket
+//!   (tier, deadline,    (queue_depth;        (per-tier    (N threads; each
+//!    cancellation)       Overloaded when      batches)     batch runs its
+//!                        full)                             tier's Engine)
+//!                                        governor thread ──┘
+//!                                        (adapts the default tier's
+//!                                         per-layer G under load)
+//! ```
+//!
+//! * [`Session`] — the only way in. `submit(image) -> Ticket` stamps the
+//!   arrival time service-side, owns the response channel, and carries
+//!   deadline + cancellation on the [`Ticket`].
+//! * **Bounded admission** — at `queue_depth` in-flight requests,
+//!   `submit` fails fast with [`GavinaError::Overloaded`]; the service
+//!   backpressures instead of buffering unboundedly, and never silently
+//!   drops an accepted request.
+//! * [`TierSpec`] **QoS tiers** — each tier maps to a pre-resolved
+//!   engine variant (`Engine::with_policy`, sharing packed planes) with
+//!   its own batching and [`MetricsSnapshot`]. The `exact` tier runs
+//!   `max_batch = 1`, making its logits bit-identical to a standalone
+//!   [`Engine::infer`](crate::engine::Engine::infer).
+//! * [`GovernorOptions`] **governor** — a control loop that slides the
+//!   default tier along a pre-resolved per-layer-G ladder under observed
+//!   load or a modeled power budget, recording a [`GovernorStep`]
+//!   trajectory.
+//!
+//! Start a service with [`Engine::serve`](crate::engine::Engine::serve)
+//! or [`Service::start`]; stop it with [`Service::shutdown`], which
+//! drains every accepted ticket before returning the final
+//! [`ServeReport`].
+
+mod governor;
+mod metrics;
+mod session;
+mod tier;
+
+pub use governor::{GovernorOptions, GovernorStep};
+pub use metrics::MetricsSnapshot;
+pub use session::{Response, Session, SubmitOptions, Ticket};
+pub use tier::{ServeOptions, TierSpec};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dnn::IMAGE_LEN;
+use crate::engine::{Engine, GavinaError};
+use crate::power::PowerModel;
+
+use metrics::TierMetrics;
+use session::{Admission, Request};
+
+/// Messages into the batcher thread.
+pub(crate) enum Msg {
+    /// `(tier index, request)`.
+    Req(usize, Request),
+    Shutdown,
+}
+
+/// Sentinel tier index the batcher sends to poison one worker.
+const POISON: usize = usize::MAX;
+
+/// One tier at runtime: its (swappable) engine, batching knobs, metrics.
+pub(crate) struct TierRuntime {
+    pub(crate) name: Arc<str>,
+    /// Swapped by the governor (default tier only); workers clone the
+    /// `Arc` per batch, so in-flight batches finish on the old schedule.
+    pub(crate) engine: Mutex<Arc<Engine>>,
+    pub(crate) max_batch: usize,
+    pub(crate) batch_timeout: Duration,
+    pub(crate) metrics: TierMetrics,
+}
+
+/// State shared by sessions, batcher, workers and the governor.
+pub(crate) struct Shared {
+    pub(crate) admission: Arc<Admission>,
+    pub(crate) tiers: Vec<TierRuntime>,
+    pub(crate) default_tier: usize,
+    /// Submissions rejected at admission ([`GavinaError::Overloaded`]).
+    pub(crate) rejected: AtomicU64,
+    /// Set (SeqCst) *before* the `Shutdown` message is sent, and
+    /// re-checked by `submit` *after* its own send: a submit that
+    /// observes `closed == false` post-send is guaranteed FIFO-ahead of
+    /// the `Shutdown` message, so every `Ok` ticket really is drained.
+    pub(crate) closed: AtomicBool,
+    pub(crate) started: Instant,
+}
+
+impl Shared {
+    pub(crate) fn tier_index(&self, name: &str) -> Option<usize> {
+        self.tiers.iter().position(|t| &*t.name == name)
+    }
+
+    pub(crate) fn tier_names(&self) -> Vec<String> {
+        self.tiers.iter().map(|t| t.name.to_string()).collect()
+    }
+}
+
+/// The final report [`Service::shutdown`] returns: per-tier metrics, the
+/// admission-rejection count, and the governor's recorded trajectory.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// One snapshot per configured tier, in tier order.
+    pub tiers: Vec<MetricsSnapshot>,
+    /// Submissions rejected with [`GavinaError::Overloaded`].
+    pub rejected: u64,
+    /// Governor ticks (empty when the governor was off).
+    pub governor: Vec<GovernorStep>,
+}
+
+impl ServeReport {
+    /// The snapshot for a named tier.
+    pub fn tier(&self, name: &str) -> Option<&MetricsSnapshot> {
+        self.tiers.iter().find(|t| t.tier == name)
+    }
+
+    /// Total requests served across tiers.
+    pub fn requests(&self) -> u64 {
+        self.tiers.iter().map(|t| t.requests).sum()
+    }
+}
+
+/// The running service: batcher + worker pool + optional governor over a
+/// shared [`Engine`]. Create client handles with [`Service::session`].
+pub struct Service {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    governor: Option<(governor::StopHandle, std::thread::JoinHandle<()>)>,
+    trajectory: Arc<Mutex<std::collections::VecDeque<GovernorStep>>>,
+}
+
+impl Service {
+    /// Validate `opts`, pre-resolve every tier's engine variant (and the
+    /// governor's ladder), and start the batcher + worker pool (also
+    /// reachable as [`Engine::serve`](crate::engine::Engine::serve)).
+    pub fn start(engine: Arc<Engine>, opts: ServeOptions) -> Result<Self, GavinaError> {
+        opts.validate()?;
+        let started = Instant::now();
+        let mut tiers = Vec::with_capacity(opts.tiers.len());
+        for spec in &opts.tiers {
+            let tier_engine = match &spec.policy {
+                None => Arc::clone(&engine),
+                Some(p) if p == engine.policy() => Arc::clone(&engine),
+                // Re-resolves the schedules only; packed planes are
+                // shared with the base engine (PR 3).
+                Some(p) => Arc::new(engine.with_policy(p.clone())?),
+            };
+            tiers.push(TierRuntime {
+                name: Arc::from(spec.name.as_str()),
+                engine: Mutex::new(tier_engine),
+                max_batch: spec.max_batch,
+                batch_timeout: spec.batch_timeout,
+                metrics: TierMetrics::new(started),
+            });
+        }
+        let default_tier = opts
+            .tiers
+            .iter()
+            .position(|t| t.name == opts.default_tier)
+            .expect("validated: default_tier exists");
+        let shared = Arc::new(Shared {
+            admission: Arc::new(Admission::new(opts.queue_depth)),
+            tiers,
+            default_tier,
+            rejected: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            started,
+        });
+
+        // Resolve the governor's ladder before any thread spawns, so a
+        // bad governor config fails fast with nothing to tear down.
+        let ladder = match &opts.governor {
+            None => None,
+            Some(gopts) => {
+                let base = Arc::clone(&shared.tiers[default_tier].engine.lock().unwrap());
+                let power = PowerModel::paper_calibrated();
+                let rungs = governor::build_ladder(&base, gopts, &power)?;
+                let rung0 = governor::start_rung(&rungs, &base);
+                Some((gopts.clone(), rungs, rung0))
+            }
+        };
+
+        let (tx, rx) = channel::<Msg>();
+        let (work_tx, work_rx) = channel::<(usize, Vec<Request>)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut workers = Vec::with_capacity(opts.workers);
+        for wi in 0..opts.workers {
+            let shared = Arc::clone(&shared);
+            let work_rx = Arc::clone(&work_rx);
+            workers.push(std::thread::spawn(move || {
+                loop {
+                    let msg = { work_rx.lock().unwrap().recv() };
+                    let Ok((ti, batch)) = msg else { break };
+                    if ti == POISON {
+                        break;
+                    }
+                    run_batch(&shared, ti, wi as u64, batch);
+                }
+            }));
+        }
+
+        let batcher_shared = Arc::clone(&shared);
+        let n_workers = opts.workers;
+        let batcher = std::thread::spawn(move || {
+            batcher_loop(rx, work_tx, &batcher_shared, n_workers);
+        });
+
+        let trajectory = Arc::new(Mutex::new(std::collections::VecDeque::new()));
+        let governor = ladder.map(|(g_opts, rungs, rung0)| {
+            let (stop_tx, stop_rx) = channel::<()>();
+            let g_shared = Arc::clone(&shared);
+            let g_traj = Arc::clone(&trajectory);
+            let handle = std::thread::spawn(move || {
+                governor::run(g_shared, rungs, g_opts, stop_rx, g_traj, rung0);
+            });
+            (stop_tx, handle)
+        });
+
+        Ok(Self {
+            tx,
+            shared,
+            batcher: Some(batcher),
+            workers,
+            governor,
+            trajectory,
+        })
+    }
+
+    /// A client handle (cheap to clone, one per producer thread).
+    pub fn session(&self) -> Session {
+        Session {
+            tx: self.tx.clone(),
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Point-in-time metrics for every tier, in tier order.
+    pub fn metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shared
+            .tiers
+            .iter()
+            .map(|t| t.metrics.snapshot(&t.name, t.engine.lock().unwrap().layer_gs()))
+            .collect()
+    }
+
+    /// Point-in-time metrics for one named tier.
+    pub fn tier_metrics(&self, name: &str) -> Option<MetricsSnapshot> {
+        self.shared.tier_index(name).map(|i| {
+            let t = &self.shared.tiers[i];
+            t.metrics.snapshot(name, t.engine.lock().unwrap().layer_gs())
+        })
+    }
+
+    /// Submissions rejected at admission so far.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Accepted-but-unanswered requests right now.
+    pub fn in_flight(&self) -> usize {
+        self.shared.admission.in_flight()
+    }
+
+    /// The governor trajectory recorded so far (empty when off). This
+    /// deep-clones the bounded trajectory — for cheap polling (progress
+    /// displays, load generators) use [`Service::governor_ticks`].
+    pub fn governor_trajectory(&self) -> Vec<GovernorStep> {
+        self.trajectory.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// How many governor ticks are currently retained — an O(1) read
+    /// for cheap polling (saturates at the trajectory's 4096-step
+    /// retention bound, like the history itself).
+    pub fn governor_ticks(&self) -> usize {
+        self.trajectory.lock().unwrap().len()
+    }
+
+    /// The per-layer G schedule a tier is currently running.
+    pub fn tier_layer_gs(&self, name: &str) -> Option<Vec<u32>> {
+        self.shared
+            .tier_index(name)
+            .map(|i| self.shared.tiers[i].engine.lock().unwrap().layer_gs())
+    }
+
+    /// Stop the governor, drain **every accepted ticket** (pending
+    /// batches are flushed and executed, never dropped), join all
+    /// threads, and return the final [`ServeReport`].
+    pub fn shutdown(mut self) -> ServeReport {
+        if let Some((stop, handle)) = self.governor.take() {
+            let _ = stop.send(());
+            let _ = handle.join();
+        }
+        // Order matters: close admission-for-new-submits *before* the
+        // Shutdown message, so `Session::submit`'s post-send re-check
+        // can never hand out a ticket the batcher won't see.
+        self.shared.closed.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        ServeReport {
+            tiers: self.metrics(),
+            rejected: self.rejected(),
+            governor: self.governor_trajectory(),
+        }
+    }
+}
+
+/// The batcher thread: groups requests into per-tier batches bounded by
+/// each tier's `max_batch` / `batch_timeout`, because the accelerator
+/// amortizes its A0/B0 plane streams over the `L` dimension.
+fn batcher_loop(
+    rx: Receiver<Msg>,
+    work_tx: Sender<(usize, Vec<Request>)>,
+    shared: &Shared,
+    workers: usize,
+) {
+    let n_tiers = shared.tiers.len();
+    let mut pending: Vec<Vec<Request>> = (0..n_tiers).map(|_| Vec::new()).collect();
+    let mut deadlines: Vec<Option<Instant>> = vec![None; n_tiers];
+    loop {
+        let timeout = deadlines
+            .iter()
+            .flatten()
+            .min()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_secs(3600));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(ti, r)) => {
+                if pending[ti].is_empty() {
+                    deadlines[ti] = Some(Instant::now() + shared.tiers[ti].batch_timeout);
+                }
+                pending[ti].push(r);
+                if pending[ti].len() >= shared.tiers[ti].max_batch {
+                    let _ = work_tx.send((ti, std::mem::take(&mut pending[ti])));
+                    deadlines[ti] = None;
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                // Accepted tickets racing shutdown: pull everything that
+                // already made it into the channel before draining.
+                while let Ok(msg) = rx.try_recv() {
+                    if let Msg::Req(ti, r) = msg {
+                        pending[ti].push(r);
+                    }
+                }
+                for (ti, batch) in pending.iter_mut().enumerate() {
+                    if !batch.is_empty() {
+                        let _ = work_tx.send((ti, std::mem::take(batch)));
+                    }
+                }
+                // Poison the pool: one sentinel per worker, FIFO-after
+                // the flushed batches, so every batch executes first.
+                for _ in 0..workers {
+                    let _ = work_tx.send((POISON, Vec::new()));
+                }
+                break;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // Sweep expired partial batches after *every* wakeup, not just
+        // on recv timeouts — with continuous traffic to other tiers,
+        // recv_timeout keeps returning messages and the timeout arm
+        // alone would starve an expired tier's flush indefinitely.
+        let now = Instant::now();
+        for ti in 0..n_tiers {
+            if deadlines[ti].is_some_and(|d| d <= now) {
+                if !pending[ti].is_empty() {
+                    let _ = work_tx.send((ti, std::mem::take(&mut pending[ti])));
+                }
+                deadlines[ti] = None;
+            }
+        }
+    }
+}
+
+/// Answer one request: the admission permit is released *before* the
+/// response is sent, so a client that resubmits the moment its response
+/// arrives is guaranteed a free slot (no spurious `Overloaded`).
+/// Returns the end-to-end latency.
+fn respond(
+    r: Request,
+    result: Result<Vec<f32>, GavinaError>,
+    batch_size: usize,
+    tier: &Arc<str>,
+) -> Duration {
+    let Request {
+        submitted,
+        resp,
+        _permit: permit,
+        ..
+    } = r;
+    let latency = submitted.elapsed();
+    drop(permit);
+    let _ = resp.send(Response::new(result, latency, batch_size, Arc::clone(tier)));
+    latency
+}
+
+/// Execute one tier batch on a worker thread. Cancelled, deadline-missed
+/// and malformed requests get per-request error [`Response`]s and never
+/// reach the executor; the rest proceed. Worker threads must survive
+/// arbitrary client input.
+fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
+    let tier = &shared.tiers[ti];
+    let engine = { Arc::clone(&tier.engine.lock().unwrap()) };
+
+    let mut good: Vec<Request> = Vec::with_capacity(batch.len());
+    let mut dropped: Vec<(Request, GavinaError)> = Vec::new();
+    for r in batch {
+        if r.cancelled.load(Ordering::Relaxed) {
+            dropped.push((r, GavinaError::Cancelled));
+        } else if r
+            .deadline
+            .is_some_and(|d| r.submitted.elapsed() > d)
+        {
+            let waited_ms = r.submitted.elapsed().as_millis() as u64;
+            dropped.push((r, GavinaError::DeadlineExceeded { waited_ms }));
+        } else if r.image.len() != IMAGE_LEN {
+            let got = r.image.len();
+            dropped.push((
+                r,
+                GavinaError::Shape {
+                    what: "request image".into(),
+                    expected: IMAGE_LEN,
+                    got,
+                },
+            ));
+        } else {
+            good.push(r);
+        }
+    }
+    // Every response from one physical batch reports the same
+    // batch_size: the number of requests that actually executed.
+    let n = good.len();
+    let mut cancelled = 0usize;
+    let mut errors = 0usize;
+    for (r, e) in dropped {
+        if matches!(e, GavinaError::Cancelled) {
+            cancelled += 1;
+        } else {
+            errors += 1;
+        }
+        respond(r, Err(e), n, &tier.name);
+    }
+    if cancelled > 0 {
+        tier.metrics.record_cancelled(cancelled);
+    }
+    if errors > 0 {
+        tier.metrics.record_errors(errors);
+    }
+    if good.is_empty() {
+        return;
+    }
+
+    let mut images = Vec::with_capacity(n * IMAGE_LEN);
+    for r in &good {
+        images.extend_from_slice(&r.image);
+    }
+    match engine.infer_parallel(&images, n, worker_id.wrapping_mul(0xD1F)) {
+        Ok(result) => {
+            let classes = result.classes;
+            let mut lats = Vec::with_capacity(n);
+            for (i, r) in good.into_iter().enumerate() {
+                lats.push(respond(
+                    r,
+                    Ok(result.logits[i * classes..(i + 1) * classes].to_vec()),
+                    n,
+                    &tier.name,
+                ));
+            }
+            tier.metrics
+                .record(n, &lats, result.stats.cycles, result.stats.corrupted);
+        }
+        Err(e) => {
+            // Shouldn't happen (shapes were validated above), but a
+            // failing backend must not kill the worker either.
+            tier.metrics.record_errors(n);
+            for r in good {
+                respond(r, Err(e.clone()), n, &tier.name);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, Precision};
+    use crate::engine::{EngineBuilder, GavPolicy};
+    use crate::util::Prng;
+
+    fn small_engine(threads: usize) -> Arc<Engine> {
+        Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 1)
+                .precision(Precision::new(2, 2))
+                .arch(ArchConfig::tiny())
+                .policy(GavPolicy::Exact)
+                .seed(1)
+                .threads(threads)
+                .build()
+                .unwrap(),
+        )
+    }
+
+    fn one_tier_opts(max_batch: usize, timeout: Duration) -> ServeOptions {
+        ServeOptions {
+            workers: 2,
+            queue_depth: 64,
+            default_tier: "guarded".into(),
+            tiers: vec![TierSpec {
+                name: "guarded".into(),
+                policy: None,
+                max_batch,
+                batch_timeout: timeout,
+            }],
+            governor: None,
+        }
+    }
+
+    fn rand_image(rng: &mut Prng) -> Vec<f32> {
+        (0..IMAGE_LEN).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let service = small_engine(1)
+            .serve(one_tier_opts(4, Duration::from_millis(5)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(2);
+        let mut tickets = Vec::new();
+        for _ in 0..10 {
+            tickets.push(session.submit(rand_image(&mut rng)).unwrap());
+        }
+        for t in tickets {
+            let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+            assert!(resp.batch_size() >= 1 && resp.batch_size() <= 4);
+            assert_eq!(resp.tier(), "guarded");
+            assert!(resp.latency() > Duration::ZERO);
+            let logits = resp.expect_logits("good request");
+            assert_eq!(logits.len(), 10);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        let report = service.shutdown();
+        let m = report.tier("guarded").unwrap();
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.errors, 0);
+        assert!(m.batches >= 3); // max_batch 4
+        assert!(m.sim_cycles > 0);
+        assert!(m.p50_us > 0 && m.p95_us >= m.p50_us && m.p99_us >= m.p95_us);
+        assert!(m.max_us >= m.p99_us);
+        assert!(m.requests_per_sec > 0.0);
+        assert_eq!(report.rejected, 0);
+        assert!(report.governor.is_empty());
+    }
+
+    #[test]
+    fn bad_request_gets_error_response_and_workers_survive() {
+        let service = small_engine(1)
+            .serve(one_tier_opts(4, Duration::from_millis(5)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(3);
+        let mut good = Vec::new();
+        for _ in 0..3 {
+            good.push(session.submit(rand_image(&mut rng)).unwrap());
+        }
+        let bad_ticket = session.submit(vec![0.5; 100]).unwrap(); // short image
+        for _ in 0..7 {
+            good.push(session.submit(rand_image(&mut rng)).unwrap());
+        }
+        let bad = bad_ticket
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("error response");
+        match bad.result() {
+            Err(GavinaError::Shape { expected, got, .. }) => {
+                assert_eq!(*expected, IMAGE_LEN);
+                assert_eq!(*got, 100);
+            }
+            other => panic!("expected shape error, got {other:?}"),
+        }
+        for t in good {
+            let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+            assert_eq!(resp.expect_logits("good request").len(), 10);
+        }
+        let report = service.shutdown();
+        let m = report.tier("guarded").unwrap();
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.errors, 1);
+    }
+
+    #[test]
+    fn batching_respects_max_batch_and_intra_batch_threads() {
+        let service = small_engine(2)
+            .serve(one_tier_opts(2, Duration::from_millis(5)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(4);
+        let tickets: Vec<_> = (0..6)
+            .map(|_| session.submit(rand_image(&mut rng)).unwrap())
+            .collect();
+        for t in tickets {
+            let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+            assert!(resp.batch_size() <= 2);
+            assert_eq!(resp.expect_logits("good request").len(), 10);
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        // max_batch never reached, timeout never fires: the pending
+        // sub-batch must still drain at shutdown.
+        let service = small_engine(1)
+            .serve(one_tier_opts(64, Duration::from_secs(3600)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(6);
+        let ticket = session.submit(rand_image(&mut rng)).unwrap();
+        let handle = std::thread::spawn(move || service.shutdown());
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("flushed");
+        assert_eq!(resp.expect_logits("flushed request").len(), 10);
+        let report = handle.join().unwrap();
+        assert_eq!(report.requests(), 1);
+    }
+
+    #[test]
+    fn cancellation_yields_typed_cancelled_response() {
+        // Long batch timeout: the request sits in the batcher until
+        // shutdown flushes it, by which point it is cancelled.
+        let service = small_engine(1)
+            .serve(one_tier_opts(64, Duration::from_secs(3600)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(8);
+        let ticket = session.submit(rand_image(&mut rng)).unwrap();
+        ticket.cancel();
+        let handle = std::thread::spawn(move || service.shutdown());
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("cancelled response");
+        assert!(matches!(resp.result(), Err(GavinaError::Cancelled)));
+        let report = handle.join().unwrap();
+        let m = report.tier("guarded").unwrap();
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.requests, 0);
+    }
+
+    #[test]
+    fn deadline_expired_requests_get_typed_response() {
+        let service = small_engine(1)
+            .serve(one_tier_opts(64, Duration::from_millis(30)))
+            .unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(9);
+        // A deadline that has certainly passed by the time the batch
+        // timeout (30 ms) flushes it.
+        let ticket = session
+            .submit_with(
+                rand_image(&mut rng),
+                SubmitOptions::new().deadline(Duration::from_millis(1)),
+            )
+            .unwrap();
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("deadline response");
+        match resp.result() {
+            Err(GavinaError::DeadlineExceeded { waited_ms }) => assert!(*waited_ms >= 1),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn submit_routes_to_named_tier_and_unknown_tier_is_typed() {
+        let mut opts = one_tier_opts(4, Duration::from_millis(5));
+        opts.tiers
+            .push(TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1));
+        let service = small_engine(1).serve(opts).unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(11);
+        let t = session
+            .submit_with(rand_image(&mut rng), SubmitOptions::new().tier("exact"))
+            .unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+        assert_eq!(resp.tier(), "exact");
+        assert_eq!(resp.batch_size(), 1);
+        match session.submit_with(rand_image(&mut rng), SubmitOptions::new().tier("nope")) {
+            Err(GavinaError::Config(msg)) => assert!(msg.contains("unknown QoS tier")),
+            other => panic!("expected config error, got {other:?}"),
+        }
+        let report = service.shutdown();
+        assert_eq!(report.tier("exact").unwrap().requests, 1);
+    }
+}

@@ -1,0 +1,381 @@
+//! The client-facing half of the serving API: [`Session`] handles,
+//! admission control, [`Ticket`]s and [`Response`]s.
+//!
+//! A [`Session`] is the only way requests enter the service. `submit`
+//! owns everything the old `coordinator::Request` left to the client:
+//! the arrival timestamp is stamped here (latency can no longer be
+//! forged or skewed by the caller), the response channel is private, and
+//! deadlines/cancellation ride on the returned [`Ticket`].
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::GavinaError;
+
+use super::{Msg, Shared};
+
+/// The bounded admission gate: a counting semaphore over every request
+/// the service has accepted but not yet answered. When `capacity`
+/// requests are in flight, [`Session::submit`] fails fast with
+/// [`GavinaError::Overloaded`] instead of buffering unboundedly.
+pub(crate) struct Admission {
+    available: AtomicUsize,
+    capacity: usize,
+}
+
+impl Admission {
+    pub(crate) fn new(capacity: usize) -> Self {
+        Self {
+            available: AtomicUsize::new(capacity),
+            capacity,
+        }
+    }
+
+    /// Associated fn (not a method): the permit must hold its own
+    /// `Arc<Admission>` so release-on-drop outlives any one holder.
+    pub(crate) fn try_acquire(this: &Arc<Self>) -> Option<Permit> {
+        let mut cur = this.available.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return None;
+            }
+            match this.available.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Permit(Arc::clone(this))),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn release(&self) {
+        self.available.fetch_add(1, Ordering::Release);
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Accepted-but-unanswered requests right now.
+    pub(crate) fn in_flight(&self) -> usize {
+        self.capacity
+            .saturating_sub(self.available.load(Ordering::Relaxed))
+    }
+
+    /// `in_flight / capacity` — the governor's load signal.
+    pub(crate) fn load_fraction(&self) -> f64 {
+        self.in_flight() as f64 / self.capacity.max(1) as f64
+    }
+}
+
+/// RAII admission permit: released when the request it rode in on is
+/// dropped — which happens on every exit path (response sent, send
+/// failure, worker teardown), so capacity can never leak.
+pub(crate) struct Permit(Arc<Admission>);
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+/// One accepted request, internal to the serving pipeline. Clients only
+/// ever see the [`Ticket`]; every field here is owned by the service.
+pub(crate) struct Request {
+    pub(crate) image: Vec<f32>,
+    /// Stamped inside [`Session::submit`] — never client-supplied.
+    pub(crate) submitted: Instant,
+    /// Optional execution deadline, measured from `submitted`.
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) cancelled: Arc<AtomicBool>,
+    pub(crate) resp: Sender<Response>,
+    /// Held (not read) so admission capacity frees exactly when the
+    /// request leaves the pipeline.
+    pub(crate) _permit: Permit,
+}
+
+/// Per-request submission options: QoS tier selection and a deadline.
+///
+/// ```
+/// use std::time::Duration;
+/// use gavina::serve::SubmitOptions;
+///
+/// let opts = SubmitOptions::new()
+///     .tier("exact")
+///     .deadline(Duration::from_millis(250));
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    pub(crate) tier: Option<String>,
+    pub(crate) deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Route the request to a named QoS tier instead of the default one.
+    pub fn tier(mut self, name: &str) -> Self {
+        self.tier = Some(name.to_string());
+        self
+    }
+
+    /// Drop the request (with a typed [`GavinaError::DeadlineExceeded`]
+    /// response) if it has not started executing within `d` of submit.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// A client handle onto a running [`Service`](super::Service). Cheap to
+/// clone; hand one to every producer thread.
+#[derive(Clone)]
+pub struct Session {
+    pub(crate) tx: Sender<Msg>,
+    pub(crate) shared: Arc<Shared>,
+}
+
+impl Session {
+    /// Submit one image (flat NHWC, `32·32·3` floats in `[0, 1]`) to the
+    /// default QoS tier. Admission is bounded: when `queue_depth`
+    /// requests are already in flight this returns
+    /// [`GavinaError::Overloaded`] immediately — the service never
+    /// buffers unboundedly and never silently drops an accepted request.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use gavina::arch::{ArchConfig, Precision};
+    /// use gavina::engine::EngineBuilder;
+    /// use gavina::serve::ServeOptions;
+    ///
+    /// let engine = Arc::new(
+    ///     EngineBuilder::new()
+    ///         .synthetic_weights(0.125, 1)
+    ///         .precision(Precision::new(2, 2))
+    ///         .arch(ArchConfig::tiny())
+    ///         .build()
+    ///         .unwrap(),
+    /// );
+    /// let service = engine.serve(ServeOptions::default()).unwrap();
+    /// let session = service.session();
+    ///
+    /// let ticket = session.submit(vec![0.5; 32 * 32 * 3]).unwrap();
+    /// let logits = ticket.wait().unwrap().expect_logits("served");
+    /// assert_eq!(logits.len(), 10);
+    /// service.shutdown();
+    /// ```
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, GavinaError> {
+        self.submit_with(image, SubmitOptions::default())
+    }
+
+    /// [`Session::submit`] with per-request options (tier, deadline).
+    pub fn submit_with(
+        &self,
+        image: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, GavinaError> {
+        let tier = match &opts.tier {
+            None => self.shared.default_tier,
+            Some(name) => self.shared.tier_index(name).ok_or_else(|| {
+                GavinaError::Config(format!(
+                    "unknown QoS tier '{name}' (configured: {})",
+                    self.shared.tier_names().join(", ")
+                ))
+            })?,
+        };
+        let permit = match Admission::try_acquire(&self.shared.admission) {
+            Some(p) => p,
+            None => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(GavinaError::Overloaded {
+                    capacity: self.shared.admission.capacity(),
+                });
+            }
+        };
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let (resp_tx, resp_rx) = channel();
+        let req = Request {
+            image,
+            submitted: Instant::now(),
+            deadline: opts.deadline,
+            cancelled: Arc::clone(&cancelled),
+            resp: resp_tx,
+            _permit: permit,
+        };
+        // A failed send drops the request: the permit releases and the
+        // caller gets a typed error instead of a ticket that never fires.
+        self.tx
+            .send(Msg::Req(tier, req))
+            .map_err(|_| GavinaError::Backend("serving pipeline is shut down".into()))?;
+        // Re-check the shutdown flag *after* the send: if it is still
+        // unset here, our message is FIFO-ahead of the Shutdown message
+        // (the flag is stored before Shutdown is sent), so the batcher
+        // is guaranteed to drain this ticket. If it is set, the request
+        // may have raced past the batcher's final drain — report the
+        // shutdown instead of handing out a ticket that might never
+        // fire (the admission permit is released either way).
+        if self.shared.closed.load(Ordering::SeqCst) {
+            return Err(GavinaError::Backend(
+                "serving pipeline is shut down".into(),
+            ));
+        }
+        Ok(Ticket {
+            rx: resp_rx,
+            cancelled,
+        })
+    }
+}
+
+/// The handle for one accepted request: wait for the [`Response`] or
+/// cancel. Dropping the ticket abandons the response (the request still
+/// executes unless cancelled first).
+pub struct Ticket {
+    rx: Receiver<Response>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl Ticket {
+    /// Block until the response arrives. Errors only if the service was
+    /// torn down without answering (which
+    /// [`Service::shutdown`](super::Service::shutdown) never does for
+    /// accepted tickets).
+    pub fn wait(self) -> Result<Response, GavinaError> {
+        self.rx
+            .recv()
+            .map_err(|_| GavinaError::Backend("serving pipeline is shut down".into()))
+    }
+
+    /// Block for at most `d`. `Ok(Some(response))` when it arrived,
+    /// `Ok(None)` when the response is still pending after `d` — the
+    /// ticket stays valid, poll again — and `Err` when the service was
+    /// torn down without answering. A local poll timeout is deliberately
+    /// *not* [`GavinaError::DeadlineExceeded`]: that variant is the
+    /// service's terminal verdict on a request's submission deadline,
+    /// and conflating the two would make callers abandon tickets whose
+    /// response is still coming.
+    pub fn wait_timeout(&self, d: Duration) -> Result<Option<Response>, GavinaError> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Ok(Some(r)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(GavinaError::Backend("serving pipeline is shut down".into()))
+            }
+        }
+    }
+
+    /// Request cancellation: if the request has not started executing,
+    /// it is answered with [`GavinaError::Cancelled`] instead of running.
+    /// Requests already inside a batch complete normally.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The response to one request: class logits (or a typed error) plus
+/// tracing info. Internals are private — latency and batch size are
+/// measured by the service, never client-assembled.
+#[derive(Clone, Debug)]
+pub struct Response {
+    result: Result<Vec<f32>, GavinaError>,
+    latency: Duration,
+    batch_size: usize,
+    tier: Arc<str>,
+}
+
+impl Response {
+    pub(crate) fn new(
+        result: Result<Vec<f32>, GavinaError>,
+        latency: Duration,
+        batch_size: usize,
+        tier: Arc<str>,
+    ) -> Self {
+        Self {
+            result,
+            latency,
+            batch_size,
+            tier,
+        }
+    }
+
+    /// Logits on success; the typed error otherwise.
+    pub fn result(&self) -> Result<&[f32], &GavinaError> {
+        match &self.result {
+            Ok(l) => Ok(l.as_slice()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Consume into the owned result.
+    pub fn into_result(self) -> Result<Vec<f32>, GavinaError> {
+        self.result
+    }
+
+    /// Whether the request produced logits.
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    /// End-to-end latency, submit (service-stamped) → response.
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+
+    /// How many requests executed in this response's physical batch.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// The QoS tier that served this request.
+    pub fn tier(&self) -> &str {
+        &self.tier
+    }
+
+    /// The logits, or a panic with the typed error (tests / demos).
+    pub fn expect_logits(self, msg: &str) -> Vec<f32> {
+        match self.result {
+            Ok(l) => l,
+            Err(e) => panic!("{msg}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_is_a_counting_semaphore() {
+        let adm = Arc::new(Admission::new(2));
+        assert_eq!(adm.capacity(), 2);
+        assert_eq!(adm.in_flight(), 0);
+        let p1 = Admission::try_acquire(&adm).expect("first permit");
+        let p2 = Admission::try_acquire(&adm).expect("second permit");
+        assert_eq!(adm.in_flight(), 2);
+        assert!((adm.load_fraction() - 1.0).abs() < 1e-12);
+        assert!(Admission::try_acquire(&adm).is_none(), "capacity exhausted");
+        drop(p1);
+        assert_eq!(adm.in_flight(), 1);
+        let p3 = Admission::try_acquire(&adm).expect("freed capacity is reusable");
+        drop(p2);
+        drop(p3);
+        assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
+    fn submit_options_builder() {
+        let o = SubmitOptions::new()
+            .tier("exact")
+            .deadline(Duration::from_millis(5));
+        assert_eq!(o.tier.as_deref(), Some("exact"));
+        assert_eq!(o.deadline, Some(Duration::from_millis(5)));
+        let d = SubmitOptions::default();
+        assert!(d.tier.is_none() && d.deadline.is_none());
+    }
+}

@@ -1,0 +1,640 @@
+//! QoS tiers and the `[serve]` configuration surface.
+//!
+//! A **tier** is a named energy/accuracy operating point: a
+//! [`GavPolicy`] (resolved once at service start via
+//! [`Engine::with_policy`](crate::engine::Engine::with_policy), sharing
+//! the packed weight planes) plus its own batching knobs and metrics.
+//! The built-in trio mirrors the paper's flexibility axis:
+//!
+//! * `exact` — fully guarded, `max_batch = 1`: per-request activation
+//!   quantization, so served logits are **bit-identical** to a
+//!   standalone [`Engine::infer`](crate::engine::Engine::infer) call
+//!   regardless of batch co-tenants. The reproducibility tier.
+//! * `guarded` — the base engine's own policy, normal batching. The
+//!   balanced default.
+//! * `aggressive` — `G = 0` everywhere (every LSB plane-combination
+//!   undervolted), large batches. The energy-optimal tier; the governor
+//!   moves the *default* tier toward it under load.
+//!
+//! ## Config schema
+//!
+//! ```toml
+//! [serve]
+//! workers = 2              # batch worker threads (>= 1)
+//! queue_depth = 64         # bounded admission: max in-flight requests
+//! default_tier = "guarded"
+//! max_batch = 8            # global batching defaults...
+//! batch_timeout_ms = 20    # ...tiers may override below
+//!
+//! [serve.tier.exact]
+//! policy = "exact"
+//! max_batch = 1
+//!
+//! [serve.tier.guarded]
+//! policy = "uniform"
+//! g = 3
+//!
+//! [serve.tier.aggressive]
+//! policy = "uniform"
+//! g = 0
+//! max_batch = 16
+//! batch_timeout_ms = 5
+//!
+//! [serve.governor]         # present => load-adaptive governor enabled
+//! period_ms = 100
+//! target_power_mw = 25.0   # optional modeled power budget
+//! high_load = 0.75
+//! low_load = 0.25
+//! min_g = 0
+//! ```
+//!
+//! Tier policies: `exact`, `base` (the engine's own policy as built),
+//! `uniform` (needs `g`), `per_layer` (needs `layer_gs`). `ilp` is
+//! rejected here — it needs a profile set, so resolve it on the
+//! [`EngineBuilder`](crate::engine::EngineBuilder) instead. Unknown or
+//! ill-typed keys are typed [`GavinaError::Config`] errors that name the
+//! offending config line.
+
+use std::time::Duration;
+
+use crate::config::{Config, Value};
+use crate::engine::{GavPolicy, GavinaError};
+
+use super::governor::GovernorOptions;
+
+/// One QoS tier: a named policy + batching operating point.
+#[derive(Clone, Debug)]
+pub struct TierSpec {
+    /// Tier name, the key clients pass to
+    /// [`SubmitOptions::tier`](super::SubmitOptions::tier).
+    pub name: String,
+    /// `None` = the base engine's own policy (as built); `Some(p)` is
+    /// resolved via `Engine::with_policy` at service start, sharing the
+    /// packed weight planes.
+    pub policy: Option<GavPolicy>,
+    /// Largest batch handed to one worker (1 = per-request execution).
+    pub max_batch: usize,
+    /// Deadline after which a partial batch is flushed.
+    pub batch_timeout: Duration,
+}
+
+impl TierSpec {
+    /// A tier with the default batching knobs (`max_batch 8`, 20 ms).
+    pub fn new(name: &str, policy: Option<GavPolicy>) -> Self {
+        Self {
+            name: name.to_string(),
+            policy,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(20),
+        }
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn batch_timeout(mut self, d: Duration) -> Self {
+        self.batch_timeout = d;
+        self
+    }
+}
+
+/// Service configuration: admission bound, worker pool, QoS tiers and
+/// the optional governor. Everything model/accelerator-side (precision,
+/// error tables, intra-batch threads) lives on the
+/// [`Engine`](crate::engine::Engine).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Batch worker threads (each drains whole batches).
+    pub workers: usize,
+    /// Bounded admission: the maximum number of accepted-but-unanswered
+    /// requests. At the bound, `submit` fails fast with
+    /// [`GavinaError::Overloaded`].
+    pub queue_depth: usize,
+    /// Name of the tier `submit` routes to when no tier is given; the
+    /// governor (when enabled) adapts this tier's per-layer G.
+    pub default_tier: String,
+    /// The QoS tiers (at least one; names must be unique).
+    pub tiers: Vec<TierSpec>,
+    /// Load-adaptive undervolting governor for the default tier.
+    pub governor: Option<GovernorOptions>,
+}
+
+impl Default for ServeOptions {
+    /// The built-in `exact` / `guarded` / `aggressive` trio (see the
+    /// [module docs](self)), two workers, admission depth 64, governor
+    /// off.
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 64,
+            default_tier: "guarded".into(),
+            tiers: vec![
+                TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1),
+                TierSpec::new("guarded", None),
+                TierSpec::new("aggressive", Some(GavPolicy::Uniform(0)))
+                    .max_batch(16)
+                    .batch_timeout(Duration::from_millis(5)),
+            ],
+            governor: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Structural validation shared by the builder and config paths —
+    /// `Service::start` calls this, so a hand-built `ServeOptions` gets
+    /// the same checks as a parsed one.
+    pub fn validate(&self) -> Result<(), GavinaError> {
+        if self.workers == 0 {
+            return Err(GavinaError::Config(
+                "[serve] workers must be ≥ 1 (0 workers would never serve)".into(),
+            ));
+        }
+        if self.queue_depth == 0 {
+            return Err(GavinaError::Config(
+                "[serve] queue_depth must be ≥ 1 (0 would reject every request)".into(),
+            ));
+        }
+        if self.tiers.is_empty() {
+            return Err(GavinaError::Config(
+                "[serve] at least one QoS tier is required".into(),
+            ));
+        }
+        for (i, t) in self.tiers.iter().enumerate() {
+            if t.name.is_empty() {
+                return Err(GavinaError::Config("[serve] tier names must be non-empty".into()));
+            }
+            if t.max_batch == 0 {
+                return Err(GavinaError::Config(format!(
+                    "[serve] tier '{}' max_batch must be ≥ 1",
+                    t.name
+                )));
+            }
+            if self.tiers[..i].iter().any(|o| o.name == t.name) {
+                return Err(GavinaError::Config(format!(
+                    "[serve] duplicate tier name '{}'",
+                    t.name
+                )));
+            }
+            if matches!(t.policy, Some(GavPolicy::IlpBudget { .. })) {
+                return Err(GavinaError::Config(format!(
+                    "[serve] tier '{}': IlpBudget needs a profile set — resolve it on the \
+                     EngineBuilder and use policy \"base\"",
+                    t.name
+                )));
+            }
+        }
+        if !self.tiers.iter().any(|t| t.name == self.default_tier) {
+            return Err(GavinaError::Config(format!(
+                "[serve] default_tier '{}' is not a configured tier (have: {})",
+                self.default_tier,
+                self.tiers
+                    .iter()
+                    .map(|t| t.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )));
+        }
+        if let Some(g) = &self.governor {
+            g.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Load from the `[serve]`, `[serve.tier.*]` and `[serve.governor]`
+    /// sections of a parsed config (see the [module docs](self) for the
+    /// schema). Unknown keys, ill-typed values and out-of-range numbers
+    /// are [`GavinaError::Config`] errors carrying the config line.
+    pub fn from_config(cfg: &Config) -> Result<Self, GavinaError> {
+        const KNOWN_TOP: &[&str] =
+            &["workers", "queue_depth", "max_batch", "batch_timeout_ms", "default_tier"];
+        const KNOWN_TIER: &[&str] = &["policy", "g", "layer_gs", "max_batch", "batch_timeout_ms"];
+        const KNOWN_GOV: &[&str] =
+            &["period_ms", "target_power_mw", "high_load", "low_load", "min_g"];
+
+        // Error helper: every diagnostic names the config line when the
+        // key came from a file (mirrors the parser's duplicate-key
+        // errors).
+        let bad = |key: &str, msg: String| -> GavinaError {
+            match cfg.line_of(&format!("serve.{key}")) {
+                Some(line) => GavinaError::Config(format!("[serve] {msg} (config line {line})")),
+                None => GavinaError::Config(format!("[serve] {msg}")),
+            }
+        };
+
+        // Section-header pass: a bare `[serve.governor]` enables the
+        // governor with all defaults, a bare `[serve.tier.x]` names a
+        // tier (which then fails the needs-policy check instead of being
+        // silently ignored), and a typoed `[serve.bogus]` sub-section is
+        // a hard error.
+        let mut tier_names: Vec<String> = Vec::new();
+        let mut has_governor = false;
+        for (sect, line) in cfg.sections_with_prefix("serve.") {
+            if let Some(name) = sect.strip_prefix("tier.") {
+                if name.is_empty() || name.contains('.') {
+                    return Err(GavinaError::Config(format!(
+                        "[serve] tier sections are [serve.tier.<name>]; got \
+                         [serve.{sect}] (config line {line})"
+                    )));
+                }
+                if !tier_names.iter().any(|n| n == name) {
+                    tier_names.push(name.to_string());
+                }
+            } else if sect == "governor" {
+                has_governor = true;
+            } else {
+                return Err(GavinaError::Config(format!(
+                    "unknown section [serve.{sect}] (config line {line}; want \
+                     [serve.tier.<name>] or [serve.governor])"
+                )));
+            }
+        }
+
+        // Key inventory pass: reject unknown keys up front, collect tier
+        // names (BTreeMap iteration => sorted, deterministic order).
+        for (key, _) in cfg.keys_with_prefix("serve.") {
+            if let Some(rest) = key.strip_prefix("tier.") {
+                let Some((name, tkey)) = rest.split_once('.') else {
+                    return Err(bad(
+                        key,
+                        format!("tier keys are [serve.tier.<name>] key = …; got '{key}'"),
+                    ));
+                };
+                if !KNOWN_TIER.contains(&tkey) {
+                    return Err(bad(
+                        key,
+                        format!(
+                            "unknown tier key '{tkey}' for tier '{name}' (known: {})",
+                            KNOWN_TIER.join(", ")
+                        ),
+                    ));
+                }
+                if !tier_names.iter().any(|n| n == name) {
+                    tier_names.push(name.to_string());
+                }
+            } else if let Some(gkey) = key.strip_prefix("governor.") {
+                if !KNOWN_GOV.contains(&gkey) {
+                    return Err(bad(
+                        key,
+                        format!("unknown governor key '{gkey}' (known: {})", KNOWN_GOV.join(", ")),
+                    ));
+                }
+                has_governor = true;
+            } else if !KNOWN_TOP.contains(&key) {
+                return Err(bad(
+                    key,
+                    format!(
+                        "unknown key '{key}' (known: {}; plus tier.<name>.* and governor.*)",
+                        KNOWN_TOP.join(", ")
+                    ),
+                ));
+            }
+        }
+
+        // Typed scalar loaders (all line-numbered on failure).
+        let int_ge = |key: &str, default: i64, min: i64| -> Result<i64, GavinaError> {
+            match cfg.get(&format!("serve.{key}")) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_int()
+                    .filter(|&i| i >= min)
+                    .ok_or_else(|| bad(key, format!("'{key}' must be an integer ≥ {min}"))),
+            }
+        };
+        let float_opt = |key: &str| -> Result<Option<f64>, GavinaError> {
+            match cfg.get(&format!("serve.{key}")) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_float()
+                    .map(Some)
+                    .ok_or_else(|| bad(key, format!("'{key}' must be a number"))),
+            }
+        };
+        let str_opt = |key: &str| -> Result<Option<String>, GavinaError> {
+            match cfg.get(&format!("serve.{key}")) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_str()
+                    .map(|s| Some(s.to_string()))
+                    .ok_or_else(|| bad(key, format!("'{key}' must be a string"))),
+            }
+        };
+
+        let d = ServeOptions::default();
+        let workers = int_ge("workers", d.workers as i64, 1)? as usize;
+        let queue_depth = int_ge("queue_depth", d.queue_depth as i64, 1)? as usize;
+        let global_batch = int_ge("max_batch", 8, 1)? as usize;
+        let global_timeout_ms = int_ge("batch_timeout_ms", 20, 1)? as u64;
+
+        let tiers = if tier_names.is_empty() {
+            // No [serve.tier.*] sections: the built-in trio, with the
+            // global batching knobs (when given) applied to every tier —
+            // except the exact tier's max_batch = 1, which is its
+            // bit-identical-to-`Engine::infer` guarantee.
+            let mut tiers = d.tiers;
+            if cfg.get("serve.max_batch").is_some() {
+                for t in &mut tiers {
+                    if t.name != "exact" {
+                        t.max_batch = global_batch;
+                    }
+                }
+            }
+            if cfg.get("serve.batch_timeout_ms").is_some() {
+                for t in &mut tiers {
+                    t.batch_timeout = Duration::from_millis(global_timeout_ms);
+                }
+            }
+            tiers
+        } else {
+            let mut tiers = Vec::with_capacity(tier_names.len());
+            for name in &tier_names {
+                let k = |suffix: &str| format!("tier.{name}.{suffix}");
+                let pol_key = k("policy");
+                let pol = str_opt(&pol_key)?.ok_or_else(|| {
+                    bad(
+                        &pol_key,
+                        format!("tier '{name}' needs policy = \"exact|base|uniform|per_layer\""),
+                    )
+                })?;
+                let g_key = k("g");
+                let g = match cfg.get(&format!("serve.{g_key}")) {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_int().and_then(|i| u32::try_from(i).ok()).ok_or_else(|| {
+                            bad(&g_key, format!("'{g_key}' must be a non-negative integer"))
+                        })?,
+                    ),
+                };
+                let lgs_key = k("layer_gs");
+                let layer_gs = match cfg.get(&format!("serve.{lgs_key}")) {
+                    None => None,
+                    Some(Value::Array(xs)) => Some(
+                        xs.iter()
+                            .map(|x| x.as_int().and_then(|i| u32::try_from(i).ok()))
+                            .collect::<Option<Vec<u32>>>()
+                            .ok_or_else(|| {
+                                bad(
+                                    &lgs_key,
+                                    format!("'{lgs_key}' must be an array of non-negative integers"),
+                                )
+                            })?,
+                    ),
+                    Some(_) => {
+                        return Err(bad(&lgs_key, format!("'{lgs_key}' must be an array")))
+                    }
+                };
+                let policy = match pol.as_str() {
+                    "exact" => Some(GavPolicy::Exact),
+                    "base" => None,
+                    "uniform" => Some(GavPolicy::Uniform(g.ok_or_else(|| {
+                        bad(&pol_key, format!("tier '{name}' policy \"uniform\" needs g"))
+                    })?)),
+                    "per_layer" => Some(GavPolicy::PerLayer(layer_gs.clone().ok_or_else(
+                        || {
+                            bad(
+                                &pol_key,
+                                format!("tier '{name}' policy \"per_layer\" needs layer_gs = [..]"),
+                            )
+                        },
+                    )?)),
+                    "ilp" => {
+                        return Err(bad(
+                            &pol_key,
+                            format!(
+                                "tier '{name}' policy \"ilp\" needs a profile set — resolve it \
+                                 on the EngineBuilder and use \"base\""
+                            ),
+                        ))
+                    }
+                    other => {
+                        return Err(bad(
+                            &pol_key,
+                            format!(
+                                "tier '{name}' policy '{other}' (want exact|base|uniform|per_layer)"
+                            ),
+                        ))
+                    }
+                };
+                // A G knob the chosen policy would silently drop is
+                // exactly the typo class this loader exists to reject.
+                if g.is_some() && pol != "uniform" {
+                    return Err(bad(
+                        &g_key,
+                        format!("tier '{name}' sets g but policy \"{pol}\" ignores it"),
+                    ));
+                }
+                if layer_gs.is_some() && pol != "per_layer" {
+                    return Err(bad(
+                        &lgs_key,
+                        format!("tier '{name}' sets layer_gs but policy \"{pol}\" ignores it"),
+                    ));
+                }
+                let max_batch = int_ge(&k("max_batch"), global_batch as i64, 1)? as usize;
+                let timeout_ms =
+                    int_ge(&k("batch_timeout_ms"), global_timeout_ms as i64, 1)? as u64;
+                tiers.push(TierSpec {
+                    name: name.clone(),
+                    policy,
+                    max_batch,
+                    batch_timeout: Duration::from_millis(timeout_ms),
+                });
+            }
+            tiers
+        };
+
+        let default_tier = match str_opt("default_tier")? {
+            Some(name) => name,
+            None if tiers.iter().any(|t| t.name == "guarded") => "guarded".into(),
+            None => tiers[0].name.clone(),
+        };
+
+        let governor = if has_governor {
+            let gd = GovernorOptions::default();
+            let float_or = |key: &str, dflt: f64| -> Result<f64, GavinaError> {
+                Ok(float_opt(key)?.unwrap_or(dflt))
+            };
+            Some(GovernorOptions {
+                period: Duration::from_millis(int_ge(
+                    "governor.period_ms",
+                    gd.period.as_millis() as i64,
+                    1,
+                )? as u64),
+                target_power_mw: float_opt("governor.target_power_mw")?,
+                high_load: float_or("governor.high_load", gd.high_load)?,
+                low_load: float_or("governor.low_load", gd.low_load)?,
+                min_g: int_ge("governor.min_g", gd.min_g as i64, 0)? as u32,
+            })
+        } else {
+            None
+        };
+
+        let opts = ServeOptions {
+            workers,
+            queue_depth,
+            default_tier,
+            tiers,
+            governor,
+        };
+        opts.validate()?;
+        Ok(opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse;
+
+    #[test]
+    fn default_options_validate() {
+        let d = ServeOptions::default();
+        d.validate().unwrap();
+        assert_eq!(d.tiers.len(), 3);
+        assert_eq!(d.tiers[0].name, "exact");
+        assert_eq!(d.tiers[0].max_batch, 1, "exact tier is per-request");
+        assert_eq!(d.default_tier, "guarded");
+    }
+
+    #[test]
+    fn legacy_flat_serve_section_still_loads() {
+        let cfg = parse("[serve]\nworkers = 3\nmax_batch = 16\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.workers, 3);
+        // Global batching applies to the built-in tiers — except exact,
+        // whose max_batch = 1 is its determinism guarantee.
+        assert!(opts
+            .tiers
+            .iter()
+            .all(|t| t.max_batch == 16 || t.name == "exact"));
+        assert_eq!(opts.tiers[0].max_batch, 1);
+        assert_eq!(opts.tiers.len(), 3);
+        assert!(opts.governor.is_none());
+    }
+
+    #[test]
+    fn tier_sections_build_tiers() {
+        let cfg = parse(
+            "[serve]\nqueue_depth = 8\ndefault_tier = \"fast\"\n\
+             [serve.tier.fast]\npolicy = \"uniform\"\ng = 1\nmax_batch = 4\n\
+             [serve.tier.gold]\npolicy = \"exact\"\nbatch_timeout_ms = 5\n\
+             [serve.tier.own]\npolicy = \"base\"\n",
+        )
+        .unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.queue_depth, 8);
+        assert_eq!(opts.default_tier, "fast");
+        // Sorted by name (BTreeMap order): fast, gold, own.
+        assert_eq!(opts.tiers[0].name, "fast");
+        assert_eq!(opts.tiers[0].policy, Some(GavPolicy::Uniform(1)));
+        assert_eq!(opts.tiers[0].max_batch, 4);
+        assert_eq!(opts.tiers[1].policy, Some(GavPolicy::Exact));
+        assert_eq!(opts.tiers[1].batch_timeout, Duration::from_millis(5));
+        assert_eq!(opts.tiers[2].policy, None);
+    }
+
+    #[test]
+    fn unknown_and_illtyped_keys_are_line_numbered_errors() {
+        let cfg = parse("[serve]\nworkers = 2\nworkerz = 3\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown key 'workerz'"), "{msg}");
+        assert!(msg.contains("line 3"), "{msg}");
+
+        let cfg = parse("[serve.tier.fast]\npolcy = \"exact\"\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown tier key 'polcy'"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+
+        let cfg = parse("[serve.governor]\nperiodms = 10\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown governor key 'periodms'"), "{err}");
+
+        // workers = 0 is an explicit error, not a silent default.
+        let cfg = parse("[serve]\nworkers = 0\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("≥ 1"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn tier_policy_mismatches_are_rejected() {
+        // uniform without g.
+        let cfg = parse("[serve.tier.t]\npolicy = \"uniform\"\n").unwrap();
+        assert!(ServeOptions::from_config(&cfg).is_err());
+        // g set but ignored by the policy.
+        let cfg = parse("[serve.tier.t]\npolicy = \"exact\"\ng = 2\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("ignores it"), "{err}");
+        // ilp tiers must go through the EngineBuilder.
+        let cfg = parse("[serve.tier.t]\npolicy = \"ilp\"\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("profile set"), "{err}");
+        // per_layer loads its array.
+        let cfg =
+            parse("[serve.tier.t]\npolicy = \"per_layer\"\nlayer_gs = [1, 2, 3]\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.tiers[0].policy, Some(GavPolicy::PerLayer(vec![1, 2, 3])));
+    }
+
+    #[test]
+    fn default_tier_must_exist_and_governor_loads() {
+        let cfg = parse(
+            "[serve]\ndefault_tier = \"nope\"\n[serve.tier.t]\npolicy = \"exact\"\n",
+        )
+        .unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("default_tier 'nope'"), "{err}");
+
+        let cfg = parse(
+            "[serve.governor]\nperiod_ms = 50\ntarget_power_mw = 25.0\nhigh_load = 0.8\n",
+        )
+        .unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        let g = opts.governor.expect("governor section enables it");
+        assert_eq!(g.period, Duration::from_millis(50));
+        assert_eq!(g.target_power_mw, Some(25.0));
+        assert!((g.high_load - 0.8).abs() < 1e-12);
+        // Defaults fill the rest.
+        assert!((g.low_load - GovernorOptions::default().low_load).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bare_sections_are_observed_not_silently_dropped() {
+        // A bare [serve.governor] header enables the governor with all
+        // defaults — "presence enables", even with zero keys.
+        let cfg = parse("[serve.governor]\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        let g = opts.governor.expect("bare section enables governor");
+        assert_eq!(g.period, GovernorOptions::default().period);
+
+        // A bare tier section is a named tier missing its policy — a
+        // loud error, not a silently ignored header.
+        let cfg = parse("[serve.tier.fast]\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("needs policy"), "{err}");
+
+        // Typoed sub-sections are hard errors with the header line.
+        let cfg = parse("[serve]\nworkers = 1\n[serve.bogus]\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown section [serve.bogus]"), "{err}");
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_structural_mistakes() {
+        let base = ServeOptions::default;
+        assert!(ServeOptions { workers: 0, ..base() }.validate().is_err());
+        assert!(ServeOptions { queue_depth: 0, ..base() }.validate().is_err());
+        assert!(ServeOptions { default_tier: "none".into(), ..base() }
+            .validate()
+            .is_err());
+        let mut o = base();
+        o.tiers.push(TierSpec::new("exact", None));
+        assert!(o.validate().unwrap_err().to_string().contains("duplicate"));
+        let mut o = base();
+        o.tiers[1].policy = Some(GavPolicy::IlpBudget { gtar: 1.0 });
+        assert!(o.validate().is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Integration tests for the `gavina::serve` QoS surface:
+//!
+//! * a full admission queue yields a typed `Overloaded` error — the
+//!   service stays up and workers stay alive,
+//! * `shutdown()` drains every *accepted* ticket,
+//! * the `exact` tier's served logits are bit-identical to
+//!   `Engine::infer` on the same images, regardless of traffic around
+//!   them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gavina::arch::{ArchConfig, Precision};
+use gavina::engine::{Engine, EngineBuilder, GavPolicy, GavinaError};
+use gavina::serve::{ServeOptions, SubmitOptions, TierSpec};
+use gavina::util::Prng;
+
+const IMAGE_LEN: usize = 32 * 32 * 3;
+
+fn tiny_engine(policy: GavPolicy) -> Arc<Engine> {
+    Arc::new(
+        EngineBuilder::new()
+            .synthetic_weights(0.125, 1)
+            .precision(Precision::new(2, 2))
+            .arch(ArchConfig::tiny())
+            .policy(policy)
+            .seed(9)
+            .build()
+            .unwrap(),
+    )
+}
+
+fn rand_images(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|_| (0..IMAGE_LEN).map(|_| rng.next_f32()).collect())
+        .collect()
+}
+
+#[test]
+fn full_admission_queue_is_typed_overloaded_and_drains_on_shutdown() {
+    // A batch that never dispatches (max_batch and timeout both out of
+    // reach) pins every accepted request in flight, so admission fills
+    // deterministically.
+    let opts = ServeOptions {
+        workers: 2,
+        queue_depth: 4,
+        default_tier: "guarded".into(),
+        tiers: vec![TierSpec {
+            name: "guarded".into(),
+            policy: None,
+            max_batch: 64,
+            batch_timeout: Duration::from_secs(3600),
+        }],
+        governor: None,
+    };
+    let service = tiny_engine(GavPolicy::Exact).serve(opts).unwrap();
+    let session = service.session();
+    let images = rand_images(2, 4);
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|img| session.submit(img.clone()).expect("within capacity"))
+        .collect();
+    assert_eq!(service.in_flight(), 4);
+
+    // The 5th submit must be a typed rejection — never a panic, a block,
+    // or a silent drop.
+    match session.submit(images[0].clone()) {
+        Err(GavinaError::Overloaded { capacity }) => assert_eq!(capacity, 4),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert_eq!(service.rejected(), 1);
+
+    // The service is still up: shutdown drains every *accepted* ticket
+    // (the pinned batch flushes and executes; workers were alive to take
+    // it).
+    let handle = std::thread::spawn(move || service.shutdown());
+    for t in &tickets {
+        let resp = t
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("accepted ticket must be answered");
+        assert_eq!(resp.expect_logits("drained request").len(), 10);
+    }
+    let report = handle.join().unwrap();
+    assert_eq!(report.requests(), 4, "all accepted tickets served");
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.tier("guarded").unwrap().errors, 0);
+}
+
+#[test]
+fn capacity_frees_after_responses() {
+    let opts = ServeOptions {
+        workers: 1,
+        queue_depth: 1,
+        default_tier: "guarded".into(),
+        tiers: vec![TierSpec {
+            name: "guarded".into(),
+            policy: None,
+            max_batch: 1,
+            batch_timeout: Duration::from_millis(1),
+        }],
+        governor: None,
+    };
+    let service = tiny_engine(GavPolicy::Exact).serve(opts).unwrap();
+    let session = service.session();
+    let images = rand_images(3, 3);
+    // Sequential submit/wait cycles through a depth-1 queue: each
+    // response must free its admission slot for the next request.
+    for img in &images {
+        let t = session.submit(img.clone()).expect("slot free after response");
+        let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("served");
+        assert_eq!(resp.expect_logits("served").len(), 10);
+    }
+    let report = service.shutdown();
+    assert_eq!(report.requests(), 3);
+    assert_eq!(report.rejected, 0);
+}
+
+#[test]
+fn exact_tier_is_bit_identical_to_engine_infer() {
+    // Base engine undervolts (uniform G=1); the exact tier pre-resolves
+    // a fully-guarded variant sharing its packed planes and runs
+    // max_batch = 1, so per-request activation quantization matches a
+    // standalone single-image infer exactly.
+    let engine = tiny_engine(GavPolicy::Uniform(1));
+    let opts = ServeOptions {
+        workers: 2,
+        queue_depth: 64,
+        default_tier: "guarded".into(),
+        tiers: vec![
+            TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1),
+            TierSpec::new("guarded", None)
+                .max_batch(4)
+                .batch_timeout(Duration::from_millis(2)),
+        ],
+        governor: None,
+    };
+    let service = Arc::clone(&engine).serve(opts).unwrap();
+    let session = service.session();
+
+    let images = rand_images(5, 6);
+    // Interleave exact-tier requests with guarded traffic so exact
+    // requests would land in mixed batches if the tier didn't isolate
+    // them.
+    let mut exact_tickets = Vec::new();
+    for img in &images {
+        let _ = session.submit(img.clone()).unwrap(); // guarded noise
+        exact_tickets.push(
+            session
+                .submit_with(img.clone(), SubmitOptions::new().tier("exact"))
+                .unwrap(),
+        );
+    }
+
+    // The reference: a standalone fully-guarded engine over the same
+    // weights, one image per call.
+    let reference = tiny_engine(GavPolicy::Exact);
+    for (img, t) in images.iter().zip(exact_tickets) {
+        let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+        assert_eq!(resp.tier(), "exact");
+        assert_eq!(resp.batch_size(), 1);
+        let served = resp.expect_logits("exact request");
+        let expect = reference.infer(img, 1).unwrap().logits;
+        assert_eq!(
+            served, expect,
+            "exact tier must be bit-identical to Engine::infer"
+        );
+    }
+    service.shutdown();
+}
+
+#[test]
+fn governed_service_swaps_schedules_under_pinned_load() {
+    use gavina::serve::GovernorOptions;
+    // Pin high load (pending batch never dispatches), let the governor
+    // tick a few times, and watch the default tier's live schedule step
+    // toward aggressive undervolting.
+    let opts = ServeOptions {
+        workers: 1,
+        queue_depth: 8,
+        default_tier: "guarded".into(),
+        tiers: vec![TierSpec {
+            name: "guarded".into(),
+            policy: None,
+            max_batch: 64,
+            batch_timeout: Duration::from_secs(3600),
+        }],
+        governor: Some(GovernorOptions {
+            period: Duration::from_millis(5),
+            high_load: 0.6,
+            low_load: 0.2,
+            ..Default::default()
+        }),
+    };
+    let engine = tiny_engine(GavPolicy::Exact);
+    let max_g = engine.precision().max_g();
+    let service = Arc::clone(&engine).serve(opts).unwrap();
+    let session = service.session();
+    let before = service.tier_layer_gs("guarded").unwrap();
+    assert_eq!(before, vec![max_g; before.len()]);
+
+    let images = rand_images(7, 6);
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|img| session.submit(img.clone()).unwrap())
+        .collect();
+    // load = 6/8 = 0.75 ≥ 0.6: the governor must step down, one rung per
+    // period. Wait until the recorded trajectory holds at least two
+    // distinct schedules (i.e. it actually moved while load was pinned).
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let traj = service.governor_trajectory();
+        let mut seen: Vec<Vec<u32>> = Vec::new();
+        for s in &traj {
+            if !seen.contains(&s.layer_gs) {
+                seen.push(s.layer_gs.clone());
+            }
+        }
+        if seen.len() >= 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "governor never adapted under pinned load"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let now_gs = service.tier_layer_gs("guarded").unwrap();
+    assert!(
+        now_gs.iter().sum::<u32>() < before.iter().sum::<u32>(),
+        "under load the schedule must move toward lower G"
+    );
+    let handle = std::thread::spawn(move || service.shutdown());
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("drained")
+            .expect_logits("drained request");
+    }
+    let report = handle.join().unwrap();
+    assert!(!report.governor.is_empty());
+    // The trajectory itself records the movement.
+    let first = &report.governor.first().unwrap().layer_gs;
+    let distinct = report
+        .governor
+        .iter()
+        .any(|s| &s.layer_gs != first);
+    assert!(distinct, "trajectory must contain at least two schedules");
+}
