@@ -2,6 +2,10 @@
 //!
 //! * bit-packed binary-plane GEMM (u64 AND+popcount) — bit-MACs/ms
 //! * multithreaded bit-serial GEMM, single vs `--threads N` — bit-MACs/ms
+//! * fused plane-interleaved kernel vs the reference step-sequence
+//!   kernel at a4w4/a8w8, serial + MT — speedup lines plus a structured
+//!   `BENCH_hotpath.json` artifact (kernel, precision, threads,
+//!   bit-MACs/s) that CI uploads so the perf trajectory is tracked
 //! * full bit-serial tile GEMM (pack + 16 steps + recombine)
 //! * error-model injection throughput — values/ms
 //! * cycle-simulator end-to-end GEMM — MACs/ms
@@ -39,6 +43,16 @@ fn arg_threads() -> usize {
     }
 }
 
+/// Time `reps` runs of one GEMM kernel; returns (total seconds, result).
+fn time_gemm(reps: usize, mut f: impl FnMut() -> Vec<i64>) -> (f64, Vec<i64>) {
+    let t0 = std::time::Instant::now();
+    let mut out = Vec::new();
+    for _ in 0..reps {
+        out = f();
+    }
+    (t0.elapsed().as_secs_f64(), out)
+}
+
 fn main() {
     let quick = common::quick();
     let threads = gavina::util::parallel::resolve_threads(arg_threads());
@@ -62,18 +76,22 @@ fn main() {
     std::hint::black_box(&out);
 
     // ---- multithreaded bit-serial GEMM (row-block tiling) ---------------
+    // Operands pre-converted to the fused kernel's interleaved layout
+    // outside the timed loops, so the speedup column measures the kernel
+    // rather than the one-time layout conversion.
     {
+        use gavina::quant::InterleavedPlanes;
         let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 128) };
         let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
-        let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
-        let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+        let pa = InterleavedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+        let pb = InterleavedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
         let reps = if quick { 3 } else { 10 };
         let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
 
         let t0 = std::time::Instant::now();
         let mut serial = Vec::new();
         for _ in 0..reps {
-            serial = gavina::gemm::bitserial_gemm(&pa, &pb);
+            serial = gavina::gemm::kernel::fused_gemm(&pa, &pb);
         }
         let secs_1 = t0.elapsed().as_secs_f64();
         rate(
@@ -86,7 +104,7 @@ fn main() {
         let t0 = std::time::Instant::now();
         let mut tiled = Vec::new();
         for _ in 0..reps {
-            tiled = gavina::gemm::bitserial_gemm_mt(&pa, &pb, threads);
+            tiled = gavina::gemm::kernel::fused_gemm_mt(&pa, &pb, threads);
         }
         let secs_t = t0.elapsed().as_secs_f64();
         rate(
@@ -104,6 +122,72 @@ fn main() {
         assert_eq!(
             serial, tiled,
             "multithreaded GEMM must be bit-exact with the serial kernel"
+        );
+    }
+
+    // ---- fused vs reference kernel (+ BENCH_hotpath.json artifact) ------
+    {
+        use gavina::quant::InterleavedPlanes;
+        let mut entries: Vec<String> = Vec::new();
+        let mut speedups: Vec<String> = Vec::new();
+        let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 128) };
+        for prec in [Precision::new(4, 4), Precision::new(8, 8)] {
+            let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
+            let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+            let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+            let ia = InterleavedPlanes::from_packed(&pa);
+            let ib = InterleavedPlanes::from_packed(&pb);
+            let reps = if quick { 2 } else { 5 };
+            let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
+            let mut entry = |kernel: &str, th: usize, secs: f64| {
+                entries.push(format!(
+                    "    {{\"kernel\": \"{kernel}\", \"precision\": \"{}\", \"threads\": {th}, \
+                     \"ms\": {:.3}, \"bitmacs_per_s\": {:.0}}}",
+                    prec.tag(),
+                    secs * 1e3 / reps as f64,
+                    bitmacs / secs.max(1e-12)
+                ));
+            };
+            let (s_ref1, r_ref1) = time_gemm(reps, || gavina::gemm::bitserial_gemm_ref(&pa, &pb));
+            entry("reference", 1, s_ref1);
+            let (s_fus1, r_fus1) = time_gemm(reps, || gavina::gemm::kernel::fused_gemm(&ia, &ib));
+            entry("fused", 1, s_fus1);
+            let (s_reft, r_reft) =
+                time_gemm(reps, || gavina::gemm::bitserial_gemm_ref_mt(&pa, &pb, threads));
+            entry("reference", threads, s_reft);
+            let (s_fust, r_fust) =
+                time_gemm(reps, || gavina::gemm::kernel::fused_gemm_mt(&ia, &ib, threads));
+            entry("fused", threads, s_fust);
+            assert_eq!(r_ref1, r_fus1, "fused must be bit-identical to the reference kernel");
+            assert_eq!(r_ref1, r_reft, "reference MT must match serial");
+            assert_eq!(r_ref1, r_fust, "fused MT must match serial");
+            for (th, s_ref, s_fus) in [(1, s_ref1, s_fus1), (threads, s_reft, s_fust)] {
+                println!(
+                    "[perf] {:44} {:>11.2}x (ref {:.3} -> fused {:.3} ms, {th} thr)",
+                    format!("fused vs reference {} {c}x{l}x{k}", prec.tag()),
+                    s_ref / s_fus.max(1e-12),
+                    s_ref * 1e3 / reps as f64,
+                    s_fus * 1e3 / reps as f64,
+                );
+                speedups.push(format!(
+                    "    {{\"precision\": \"{}\", \"threads\": {th}, \
+                     \"fused_over_reference\": {:.3}}}",
+                    prec.tag(),
+                    s_ref / s_fus.max(1e-12)
+                ));
+            }
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"quick\": {quick},\n  \"threads\": {threads},\n  \
+             \"entries\": [\n{}\n  ],\n  \"fused_vs_reference\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n"),
+            speedups.join(",\n")
+        );
+        std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+        println!(
+            "[perf] {:44} {:>12} entries -> BENCH_hotpath.json",
+            "structured bench artifact",
+            entries.len()
         );
     }
 

@@ -1,6 +1,9 @@
 //! Thread-scaling sweep of the bit-serial GEMM hot path: throughput of
-//! [`gavina::gemm::bitserial_gemm_mt`] at 1/2/4/… workers against the
-//! serial kernel, with a bit-exactness check at every point.
+//! the fused micro-kernel ([`gavina::gemm::kernel::fused_gemm_mt`]) at
+//! 1/2/4/… workers against the serial kernel, with a bit-exactness check
+//! at every point. Operands are pre-converted to the interleaved layout
+//! outside the timed loops so the scaling column measures the kernel,
+//! not the one-time layout conversion.
 //!
 //! ```bash
 //! cargo bench --bench scaling -- [--quick]
@@ -9,7 +12,7 @@
 mod common;
 
 use gavina::arch::Precision;
-use gavina::quant::PackedPlanes;
+use gavina::quant::InterleavedPlanes;
 use gavina::util::parallel::resolve_threads;
 use gavina::util::Prng;
 use gavina::workload::gemm_workload;
@@ -27,14 +30,14 @@ fn main() {
         reps
     ));
     let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
-    let pa = PackedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
-    let pb = PackedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+    let pa = InterleavedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+    let pb = InterleavedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
     let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
 
     let t0 = std::time::Instant::now();
     let mut reference = Vec::new();
     for _ in 0..reps {
-        reference = gavina::gemm::bitserial_gemm(&pa, &pb);
+        reference = gavina::gemm::kernel::fused_gemm(&pa, &pb);
     }
     let secs_serial = t0.elapsed().as_secs_f64();
     println!(
@@ -57,7 +60,7 @@ fn main() {
         let t0 = std::time::Instant::now();
         let mut out = Vec::new();
         for _ in 0..reps {
-            out = gavina::gemm::bitserial_gemm_mt(&pa, &pb, t);
+            out = gavina::gemm::kernel::fused_gemm_mt(&pa, &pb, t);
         }
         let secs = t0.elapsed().as_secs_f64();
         if t == 1 {

@@ -81,6 +81,15 @@ impl Precision {
         }
     }
 
+    /// Signed shift-weight of step `(ba, bb)`:
+    /// [`Self::step_sign`]` · 2^(ba+bb)` — the factor the L0/L1
+    /// shift-accumulate applies to that step's iPE outputs. The single
+    /// definition shared by `recombine`, the reference kernels, the fused
+    /// kernel's step table and the simulator's streamed accumulate.
+    pub fn step_weight(&self, ba: u8, bb: u8) -> i64 {
+        self.step_sign(ba, bb) << (ba as u32 + bb as u32)
+    }
+
     /// The four precisions evaluated throughout the paper.
     pub const EVAL_SET: [Precision; 4] = [
         Precision::new(2, 2),
@@ -220,6 +229,11 @@ mod tests {
         assert_eq!(p.step_sign(0, 3), -1); // b MSB only
         assert_eq!(p.step_sign(3, 3), 1); // both MSBs: negatives cancel
         assert_eq!(p.step_sign(1, 2), 1);
+        // step_weight folds the sign with the significance shift.
+        assert_eq!(p.step_weight(3, 0), -8);
+        assert_eq!(p.step_weight(0, 3), -8);
+        assert_eq!(p.step_weight(3, 3), 64);
+        assert_eq!(p.step_weight(1, 2), 8);
     }
 
     #[test]

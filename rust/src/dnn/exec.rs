@@ -34,7 +34,7 @@ use super::tensor::Tensor;
 use super::weights::TensorMap;
 use crate::arch::Precision;
 use crate::engine::backend::{ExecBackend, LayerGemm};
-use crate::quant::PackedPlanes;
+use crate::quant::InterleavedPlanes;
 
 /// Elements of one 32×32×3 input image.
 pub const IMAGE_LEN: usize = 32 * 32 * 3;
@@ -243,10 +243,11 @@ impl<'a> Executor<'a> {
                     .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32)),
             );
 
-            // Pack the A-side planes once per layer; B was packed at
-            // build() and lives in the plan. Then the integer GEMM
-            // through the pluggable backend.
-            let pa = PackedPlanes::from_a_matrix(qa, c_dim, l_dim, prec.a_bits);
+            // Pack the A-side planes once per layer, directly in the
+            // plane-interleaved layout the fused kernel consumes; B was
+            // packed (in both layouts) at build() and lives in the plan.
+            // Then the integer GEMM through the pluggable backend.
+            let pa = InterleavedPlanes::from_a_matrix(qa, c_dim, l_dim, prec.a_bits);
             self.backend.run_layer_gemm(&LayerGemm {
                 a: &pa,
                 plan,
@@ -319,16 +320,10 @@ impl<'a> Executor<'a> {
         let fc = &model.fc;
         let (cin_fc, classes) = (fc.fc_in, fc.classes);
         assert_eq!(gap.dims, vec![n, cin_fc]);
-        let mut logits = vec![0.0f32; n * classes];
-        for ni in 0..n {
-            for k in 0..classes {
-                let mut acc = fc.b[k];
-                for ci in 0..cin_fc {
-                    acc += gap.data[ni * cin_fc + ci] * fc.w[ci * classes + k];
-                }
-                logits[ni * classes + k] = acc;
-            }
-        }
+        // Register-blocked head on the same micro-kernel blocking as the
+        // conv GEMMs — bit-identical to the scalar triple loop (each
+        // logit still accumulates in ascending-ci order from its bias).
+        let logits = crate::gemm::kernel::dense_affine(&gap.data, &fc.w, &fc.b, n, cin_fc, classes);
         ForwardResult {
             logits,
             n,

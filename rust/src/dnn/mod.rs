@@ -9,6 +9,6 @@ pub mod tensor;
 pub mod weights;
 
 pub use exec::{conv_layer_names, Executor, ForwardResult, ForwardStats, IMAGE_LEN};
-pub use plan::{BnFold, LayerPlan, PlannedModel};
+pub use plan::{BnFold, LayerPlan, PlannedModel, MAX_REDUCTION_DIM};
 pub use tensor::Tensor;
 pub use weights::{load_eval_set, load_tensors, EvalSet, TensorMap};

@@ -29,7 +29,14 @@ use super::exec::{conv_layer_names, BLOCKS_PER_STAGE, STAGES};
 use super::lower::{weights_to_b, ConvGeom};
 use super::weights::{AnyTensor, TensorMap};
 use crate::arch::{GavSchedule, Precision};
-use crate::quant::PackedPlanes;
+use crate::quant::{InterleavedPlanes, PackedPlanes};
+
+/// Hard ceiling on the reduction axis `C = k·k·cin` of one lowered GEMM:
+/// one iPE output is a popcount over C, carried in `u16` step buffers by
+/// the reference kernel and the cycle simulator — a larger C would
+/// silently truncate into wrong logits. `EngineBuilder::build()` rejects
+/// oversized reductions with a typed error; the kernels debug-assert it.
+pub const MAX_REDUCTION_DIM: usize = u16::MAX as usize;
 
 /// Batch-norm constants folded to a per-channel affine at build time.
 ///
@@ -93,8 +100,13 @@ struct LayerData {
     /// Conv→GEMM geometry at batch size 1; [`LayerPlan::geom`] rescales
     /// the batch-dependent `n`/`L` axis per request.
     geom1: ConvGeom,
-    /// Quantized weights `B[K, C]` packed as bit-planes — the B0 image.
+    /// Quantized weights `B[K, C]` packed as bit-planes — the B0 image
+    /// (the step-sequence form the simulator carves tiles from).
     packed_b: PackedPlanes,
+    /// The same planes re-laid plane-interleaved for the fused exact
+    /// kernel ([`crate::gemm::kernel`]) — built once here so the exact
+    /// path never converts at request time.
+    inter_b: InterleavedPlanes,
     /// Per-output-channel weight quantization scales.
     wscales: Vec<f32>,
     /// Folded BN constants.
@@ -127,6 +139,7 @@ impl LayerPlan {
         layer_idx: usize,
     ) -> Self {
         let packed_b = PackedPlanes::from_b_matrix(b, k_dim, c_dim, sched.precision().b_bits);
+        let inter_b = InterleavedPlanes::from_packed(&packed_b);
         let geom1 = ConvGeom::from_dims(1, 1, 1, &[1, 1, c_dim, k_dim], 1);
         Self {
             layer_idx,
@@ -135,6 +148,7 @@ impl LayerPlan {
                 name: "gemm".into(),
                 geom1,
                 packed_b,
+                inter_b,
                 wscales: vec![1.0; k_dim],
                 bn: BnFold::identity(k_dim),
             }),
@@ -167,9 +181,16 @@ impl LayerPlan {
         &self.data.name
     }
 
-    /// The pre-packed weight bit-planes `B[K, C]`.
+    /// The pre-packed weight bit-planes `B[K, C]` (plane-major — the
+    /// simulator's tile-carving form).
     pub fn packed_b(&self) -> &PackedPlanes {
         &self.data.packed_b
+    }
+
+    /// The same weight planes in the plane-interleaved layout the fused
+    /// exact kernel consumes (built once at lowering).
+    pub fn interleaved_b(&self) -> &InterleavedPlanes {
+        &self.data.inter_b
     }
 
     /// Per-output-channel weight quantization scales.
@@ -258,7 +279,15 @@ fn lower_layer(
             ((v / sw[k]).round() as i32).clamp(-hi_w as i32, hi_w as i32)
         })
         .collect();
+    // The engine builder pre-validates this with a typed error; lowering
+    // re-asserts it so standalone `Executor::new` users cannot silently
+    // truncate iPE popcounts either.
+    assert!(
+        c_dim <= MAX_REDUCTION_DIM,
+        "{conv}: reduction axis {c_dim} exceeds the bit-serial data path's {MAX_REDUCTION_DIM}"
+    );
     let packed_b = PackedPlanes::from_b_matrix(&qb, k_dim, c_dim, prec.b_bits);
+    let inter_b = InterleavedPlanes::from_packed(&packed_b);
 
     let (_, scale) = wf32(weights, &format!("{bn_name}/scale"));
     let (_, bias) = wf32(weights, &format!("{bn_name}/bias"));
@@ -274,6 +303,7 @@ fn lower_layer(
             name: conv.to_string(),
             geom1,
             packed_b,
+            inter_b,
             wscales: sw,
             bn,
         }),
@@ -510,6 +540,24 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn interleaved_b_is_the_packed_b_relaid() {
+        // Both weight-plane layouts are built at lowering from the same
+        // quantized integers; they must stay bit-equivalent.
+        let prec = Precision::new(3, 3);
+        let weights = synthetic_weights(0.125, 5);
+        let gs = vec![prec.max_g(); conv_layer_names().len()];
+        let model = PlannedModel::lower(&weights, 0.125, prec, &gs);
+        for plan in model.plans() {
+            assert_eq!(
+                plan.interleaved_b(),
+                &InterleavedPlanes::from_packed(plan.packed_b()),
+                "{}",
+                plan.name()
+            );
+        }
     }
 
     #[test]

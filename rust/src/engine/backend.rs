@@ -15,9 +15,13 @@
 //!
 //! Since the compile-once refactor a backend consumes **pre-packed
 //! bit-planes** only: [`LayerGemm`] carries the activation planes (packed
-//! once per layer per request) and a [`LayerPlan`] whose weight planes
-//! were packed exactly once at `EngineBuilder::build()`. No backend
-//! quantizes or bit-plane-packs anything per request.
+//! once per layer per request, directly in the plane-interleaved layout
+//! the fused exact kernel consumes) and a [`LayerPlan`] whose weight
+//! planes were packed exactly once at `EngineBuilder::build()` in both
+//! layouts. No backend quantizes or bit-plane-packs anything per request;
+//! the simulator backends re-lay the activation planes plane-major once
+//! per GEMM (their step-sequence tile carving needs that form — a linear
+//! pass, negligible against cycle-level simulation).
 //!
 //! Determinism contract: a backend must derive all randomness from
 //! `(its own seed, job.stream, job.plan.layer_idx())` so that identical
@@ -29,15 +33,16 @@ use crate::arch::ArchConfig;
 use crate::dnn::plan::LayerPlan;
 use crate::errmodel::ErrorTables;
 use crate::gls::GlsContext;
-use crate::quant::PackedPlanes;
+use crate::quant::InterleavedPlanes;
 use crate::simulator::GavinaSim;
 
 /// One convolution-lowered integer GEMM, as handed to a backend: packed
 /// activation planes × a compiled layer plan.
 pub struct LayerGemm<'a> {
     /// Activation bit-planes `[C, L]` (im2col output, quantized and
-    /// packed once per layer by the executor).
-    pub a: &'a PackedPlanes,
+    /// packed once per layer by the executor — plane-interleaved, the
+    /// fused kernel's layout).
+    pub a: &'a InterleavedPlanes,
     /// The compiled layer: weight bit-planes `[K, C]` packed at
     /// `build()`, the resolved [`GavSchedule`](crate::arch::GavSchedule)
     /// for the layer's G, and the layer index that seeds the per-layer
@@ -91,10 +96,12 @@ fn layer_seed(seed: u64, job: &LayerGemm) -> u64 {
     (seed ^ job.stream).wrapping_add(job.plan.layer_idx() as u64 * 0x9E37)
 }
 
-/// Exact fake-quant reference (no hardware model). Runs the packed
-/// bit-serial popcount GEMM, which is exactly equal to the plain integer
-/// GEMM (`gemm::bitserial_gemm == gemm::gemm_exact`, property-tested in
-/// [`crate::gemm`]).
+/// Exact fake-quant reference (no hardware model). Runs the fused
+/// plane-interleaved bit-serial kernel — one pass over memory — which is
+/// exactly equal to the plain integer GEMM
+/// (`gemm::kernel::fused_gemm == gemm::gemm_exact`, property-tested in
+/// [`crate::gemm::kernel`]). Both operands already arrive in the fused
+/// kernel's layout: nothing is converted, packed or copied here.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FloatBackend;
 
@@ -105,7 +112,7 @@ impl ExecBackend for FloatBackend {
 
     fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
         BackendGemm {
-            p: crate::gemm::bitserial_gemm(job.a, job.plan.packed_b()),
+            p: crate::gemm::kernel::fused_gemm(job.a, job.plan.interleaved_b()),
             counters: GemmCounters::default(),
         }
     }
@@ -136,7 +143,11 @@ impl ExecBackend for GavinaBackend {
             self.tables.as_deref(),
             layer_seed(self.seed, job),
         );
-        let rep = sim.run_planes(job.a, job.plan.packed_b(), job.plan.sched());
+        // The simulator carves step-sequence tiles out of plane-major
+        // operands; re-lay the activation planes once (bit-identical to
+        // packing them plane-major in the first place).
+        let pa = job.a.to_packed();
+        let rep = sim.run_planes(&pa, job.plan.packed_b(), job.plan.sched());
         BackendGemm {
             p: rep.p,
             counters: GemmCounters {
@@ -165,7 +176,8 @@ impl ExecBackend for GlsBackend {
 
     fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
         let mut sim = GavinaSim::new_gls(self.arch.clone(), &self.ctx, layer_seed(self.seed, job));
-        let rep = sim.run_planes(job.a, job.plan.packed_b(), job.plan.sched());
+        let pa = job.a.to_packed();
+        let rep = sim.run_planes(&pa, job.plan.packed_b(), job.plan.sched());
         BackendGemm {
             p: rep.p,
             counters: GemmCounters {
@@ -193,9 +205,9 @@ mod tests {
         k: usize,
         prec: Precision,
         layer_idx: usize,
-    ) -> (PackedPlanes, LayerPlan) {
+    ) -> (InterleavedPlanes, LayerPlan) {
         (
-            PackedPlanes::from_a_matrix(a, c, l, prec.a_bits),
+            InterleavedPlanes::from_a_matrix(a, c, l, prec.a_bits),
             LayerPlan::for_gemm(b, k, c, GavSchedule::all_guarded(prec), layer_idx),
         )
     }
@@ -237,7 +249,7 @@ mod tests {
         // Same (seed, stream, layer) => identical; different stream =>
         // the derived seed differs (the serving-shard contract).
         let prec = Precision::new(2, 2);
-        let pa = PackedPlanes::from_a_matrix(&[0], 1, 1, prec.a_bits);
+        let pa = InterleavedPlanes::from_a_matrix(&[0], 1, 1, prec.a_bits);
         let plan = LayerPlan::for_gemm(&[0], 1, 1, GavSchedule::all_guarded(prec), 5);
         assert_eq!(
             layer_seed(

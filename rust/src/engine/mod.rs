@@ -495,6 +495,7 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
                 "{name} has shape {dims:?}, want [k,k,{cin},{cout}]"
             )));
         }
+        check_reduction_dim(name, dims)?;
         Ok(())
     };
     // BN tensors must match the conv's output width — lowering folds
@@ -519,6 +520,7 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
             "conv0/w has shape {d0:?}, want [k,k,3,{c0}] at width_mult {width_mult}"
         )));
     }
+    check_reduction_dim("conv0/w", d0)?;
     need_bn("bn0", c0)?;
     let mut cin = c0;
     for (si, (c, stride)) in STAGES.iter().enumerate() {
@@ -558,6 +560,23 @@ fn validate_weights(weights: &TensorMap, width_mult: f64) -> Result<(), GavinaEr
     if fb.iter().product::<usize>() != classes {
         return Err(GavinaError::Config(format!(
             "fc/b has shape {fb:?}, want [{classes}]"
+        )));
+    }
+    Ok(())
+}
+
+/// The reduction axis `C = k·k·cin` a conv lowers to must fit the
+/// bit-serial data path's `u16` iPE outputs
+/// ([`crate::dnn::MAX_REDUCTION_DIM`]) — an oversized reduction would
+/// silently truncate popcounts into wrong logits, so it must fail here at
+/// `build()` with a typed error.
+fn check_reduction_dim(name: &str, dims: &[usize]) -> Result<(), GavinaError> {
+    let c_dim = dims[0] * dims[1] * dims[2];
+    if c_dim > crate::dnn::MAX_REDUCTION_DIM {
+        return Err(GavinaError::Config(format!(
+            "{name}: reduction axis k·k·cin = {c_dim} exceeds the bit-serial \
+             data path's maximum of {} (u16 iPE outputs would truncate)",
+            crate::dnn::MAX_REDUCTION_DIM
         )));
     }
     Ok(())
@@ -871,6 +890,17 @@ mod tests {
             .policy(GavPolicy::IlpBudget { gtar: 1.0 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn oversized_reduction_axis_is_a_typed_build_error() {
+        // A 3×3 conv over ≤ 7281 input channels fits the u16 iPE
+        // outputs; beyond that, build() must fail typed, not truncate.
+        assert!(check_reduction_dim("x/w", &[3, 3, 512, 64]).is_ok());
+        assert!(check_reduction_dim("x/w", &[3, 3, 7281, 64]).is_ok());
+        let err = check_reduction_dim("x/w", &[3, 3, 8000, 64]).unwrap_err();
+        assert!(matches!(err, GavinaError::Config(_)));
+        assert!(err.to_string().contains("reduction axis"), "{err}");
     }
 
     #[test]

@@ -223,8 +223,6 @@ impl ErrorTables {
 
     /// [`Self::inject`] with an explicit per-step undervolt mask.
     pub fn inject_masked(&self, seq: &mut [Vec<u16>], approx: &[bool], rng: &mut Prng) -> u64 {
-        let p = self.params;
-        let s = self.sampler();
         let n = seq.first().map_or(0, Vec::len);
         let mut prev: Vec<u16> = vec![0; n];
         let mut modified = 0u64;
@@ -234,15 +232,35 @@ impl ErrorTables {
                 prev.copy_from_slice(step);
                 continue;
             }
-            for (i, v) in step.iter_mut().enumerate() {
-                let exact = *v;
-                let pbin = p.prev_bin(prev[i]);
-                prev[i] = exact;
-                let flips = sample_flips(p, s, exact, pbin, rng);
-                if flips != 0 {
-                    *v = exact ^ flips as u16;
-                    modified += 1;
-                }
+            modified += self.inject_step(step, &mut prev, rng);
+        }
+        modified
+    }
+
+    /// Inject errors onto **one** undervolted step in place: exactly the
+    /// per-approx-step body of [`Self::inject_masked`], factored out so
+    /// the cycle simulator can stream steps through a single reused
+    /// buffer (fusing the guarded steps) instead of materializing the
+    /// full sequence; also the per-step building block of the multi-level
+    /// injector ([`crate::errmodel::MultiLevelTables`]). `prev` must hold
+    /// the previous step's *exact* iPE
+    /// outputs (zeros before the first step; a guarded step's outputs
+    /// verbatim) and is updated to this step's exact outputs. The RNG
+    /// consumption order is identical to the sequence path, so streamed
+    /// and materialized injection are bit-identical.
+    pub fn inject_step(&self, step: &mut [u16], prev: &mut [u16], rng: &mut Prng) -> u64 {
+        let p = self.params;
+        let s = self.sampler();
+        debug_assert_eq!(step.len(), prev.len());
+        let mut modified = 0u64;
+        for (v, pv) in step.iter_mut().zip(prev.iter_mut()) {
+            let exact = *v;
+            let pbin = p.prev_bin(*pv);
+            *pv = exact;
+            let flips = sample_flips(p, s, exact, pbin, rng);
+            if flips != 0 {
+                *v = exact ^ flips as u16;
+                modified += 1;
             }
         }
         modified
@@ -381,6 +399,52 @@ mod tests {
                 assert_ne!(step, o, "approx step {s} should be hit at p=0.9");
             }
         }
+    }
+
+    #[test]
+    fn streamed_inject_step_matches_sequence_injection() {
+        // inject_step is the simulator's streaming entry point: walking
+        // the steps with one reused buffer (guarded steps only copied
+        // into `prev`) must consume the same RNG and produce the same
+        // corrupted values as the materialized inject_masked sequence.
+        let p = params();
+        let mut t = ErrorTables::zeroed(p);
+        for bit in 0..p.s_bits {
+            for exact in 0..=p.c_dim as u16 {
+                for pbin in 0..p.p_bins {
+                    for cond in 0..p.n_cond(bit) {
+                        t.set_prob(bit, exact, pbin, cond, 0.2);
+                    }
+                }
+            }
+        }
+        let prec = Precision::new(4, 4);
+        let sched = GavSchedule::two_level(prec, 3);
+        let approx = sched.approx_mask();
+        let mut vals = Prng::new(40);
+        let exact_seq: Vec<Vec<u16>> = (0..prec.steps())
+            .map(|_| (0..16).map(|_| vals.int_in(0, p.c_dim as i64) as u16).collect())
+            .collect();
+
+        let mut seq = exact_seq.clone();
+        let mut rng_a = Prng::new(41);
+        let n_seq = t.inject_masked(&mut seq, &approx, &mut rng_a);
+
+        let mut rng_b = Prng::new(41);
+        let mut prev = vec![0u16; 16];
+        let mut cur = vec![0u16; 16];
+        let mut n_stream = 0u64;
+        for (s, step) in exact_seq.iter().enumerate() {
+            cur.copy_from_slice(step);
+            if approx[s] {
+                n_stream += t.inject_step(&mut cur, &mut prev, &mut rng_b);
+                assert_eq!(cur, seq[s], "approx step {s}");
+            } else {
+                prev.copy_from_slice(&cur);
+            }
+        }
+        assert_eq!(n_seq, n_stream);
+        assert!(n_seq > 0, "test must actually inject");
     }
 
     #[test]

@@ -44,8 +44,11 @@ impl MultiLevelTables {
         }
     }
 
-    /// Inject errors step by step, each from its level's tables. Returns
-    /// the number of modified values. Semantics per step are identical to
+    /// Inject errors step by step, each from its level's tables
+    /// ([`ErrorTables::inject_step`] — the previous-value dependency is
+    /// on each step's *exact* output, which `inject_step` records into
+    /// `prev` before corrupting). Returns the number of modified values.
+    /// Semantics per step are identical to
     /// [`ErrorTables::inject_masked`] (prev carried across all steps,
     /// guarded steps exact).
     pub fn inject(&self, seq: &mut [Vec<u16>], sched: &GavSchedule, rng: &mut Prng) -> u64 {
@@ -58,33 +61,10 @@ impl MultiLevelTables {
                 VoltageMode::Approximate => Some(&self.levels[0].1),
                 VoltageMode::Level(i) => Some(&self.levels[i as usize].1),
             };
-            // The previous-value dependency is on the *exact* output
-            // (what the iPE registers launched), not the corrupted sample
-            // — snapshot before injection.
-            let exact_snapshot = step.clone();
-            if let Some(tables) = tables {
-                modified += tables.inject_step(step, &prev, rng);
-            }
-            prev = exact_snapshot;
-        }
-        modified
-    }
-}
-
-impl ErrorTables {
-    /// Inject one step given the previous *exact* outputs (building block
-    /// for the multi-level injector). Returns modified count.
-    pub(crate) fn inject_step(&self, step: &mut [u16], prev: &[u16], rng: &mut Prng) -> u64 {
-        let p = self.params;
-        let s = self.sampler();
-        let mut modified = 0;
-        for (i, v) in step.iter_mut().enumerate() {
-            let exact = *v;
-            let pbin = p.prev_bin(prev[i]);
-            let flips = super::sample_flips(p, s, exact, pbin, rng);
-            if flips != 0 {
-                *v = exact ^ flips as u16;
-                modified += 1;
+            match tables {
+                Some(tables) => modified += tables.inject_step(step, &mut prev, rng),
+                // Guarded step: exact by definition, only feeds `prev`.
+                None => prev.copy_from_slice(step),
             }
         }
         modified

@@ -1,0 +1,400 @@
+//! The fused plane-interleaved bit-serial GEMM micro-kernel.
+//!
+//! The reference composition ([`super::bitserial_gemm_ref`]) mirrors the
+//! hardware's control flow: one binary-plane GEMM per `(ba, bb)`
+//! significance step — `a_bits × b_bits` full passes over the packed
+//! operands (64 at a8w8), each materializing a `[K, L]` `u16` step buffer
+//! that a separate shift-accumulate pass then folds into the `i64`
+//! product. The paper's energy/error argument only needs that per-step
+//! output *sequence* on undervolted steps; the exact compute path is free
+//! to exploit that the bit-serial decomposition is associative over
+//! significance steps and fuse the whole loop.
+//!
+//! This kernel does exactly that, over [`InterleavedPlanes`] operands
+//! (`[vec][word][plane]` — every plane of one 64-element C-chunk
+//! adjacent): per C-word it loads the A-side and B-side plane words once
+//! and accumulates `sign · (popcount << (ba + bb))` directly into a
+//! `KR × LR` register block of `i64` accumulators. One pass over memory
+//! total, no step buffer, and each loaded B word is reused across `LR`
+//! columns (each A word across `KR` rows).
+//!
+//! Bit-identical to [`super::gemm_exact`] / the reference kernels by the
+//! associativity of exact `i64` addition — property-tested here across
+//! random shapes, precisions 2–8 and thread counts, plus the a8w8
+//! worst-case accumulator tile.
+
+use crate::arch::Precision;
+use crate::quant::InterleavedPlanes;
+use crate::util::parallel;
+
+/// K-row height of the register block.
+pub const KR: usize = 4;
+/// L-column width of the register block (also the class-block width of
+/// [`dense_affine`]).
+pub const LR: usize = 4;
+
+/// One significance step resolved to plane indices and its signed
+/// shift-weight `sign(ba, bb) · 2^(ba+bb)`.
+#[derive(Clone, Copy, Debug)]
+struct PlaneStep {
+    a_plane: usize,
+    b_plane: usize,
+    weight: i64,
+}
+
+/// Resolve the controller-order steps `include(t)` selects into plane
+/// pairs + weights.
+fn plane_steps(prec: Precision, include: impl Fn(usize) -> bool) -> Vec<PlaneStep> {
+    prec.step_order()
+        .enumerate()
+        .filter(|&(t, _)| include(t))
+        .map(|(_, (ba, bb))| PlaneStep {
+            a_plane: ba as usize,
+            b_plane: bb as usize,
+            weight: prec.step_weight(ba, bb),
+        })
+        .collect()
+}
+
+/// Row-block worker: computes output rows `k0 ..` of the fused GEMM into
+/// `out_block` (a `[rows, L]` row-major slice of the full `[K, L]`
+/// output), restricted to the given significance steps.
+fn fused_rows(
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    steps: &[PlaneStep],
+    k0: usize,
+    out_block: &mut [i64],
+) {
+    let l_dim = a.n_vecs;
+    if out_block.is_empty() || l_dim == 0 {
+        return;
+    }
+    debug_assert_eq!(a.c_dim, b.c_dim);
+    debug_assert_eq!(out_block.len() % l_dim, 0);
+    let words = a.words;
+    let (pa, pb) = (a.bits as usize, b.bits as usize);
+    let rows = out_block.len() / l_dim;
+    let mut kb = 0usize;
+    while kb < rows {
+        let krn = KR.min(rows - kb);
+        let mut b_vecs: [&[u64]; KR] = [&[]; KR];
+        for (kr, slot) in b_vecs.iter_mut().enumerate().take(krn) {
+            *slot = b.vec_words(k0 + kb + kr);
+        }
+        let mut lb = 0usize;
+        while lb < l_dim {
+            let lrn = LR.min(l_dim - lb);
+            let mut a_vecs: [&[u64]; LR] = [&[]; LR];
+            for (lr, slot) in a_vecs.iter_mut().enumerate().take(lrn) {
+                *slot = a.vec_words(lb + lr);
+            }
+            let mut acc = [[0i64; LR]; KR];
+            for w in 0..words {
+                let (wa, wb) = (w * pa, w * pb);
+                for (bv, arow) in b_vecs.iter().zip(acc.iter_mut()).take(krn) {
+                    let bw = &bv[wb..wb + pb];
+                    for (av, av_acc) in a_vecs.iter().zip(arow.iter_mut()).take(lrn) {
+                        let aw = &av[wa..wa + pa];
+                        let mut s = 0i64;
+                        for st in steps {
+                            s += st.weight
+                                * ((aw[st.a_plane] & bw[st.b_plane]).count_ones() as i64);
+                        }
+                        *av_acc += s;
+                    }
+                }
+            }
+            for (kr, arow) in acc.iter().enumerate().take(krn) {
+                let orow = &mut out_block[(kb + kr) * l_dim + lb..(kb + kr) * l_dim + lb + lrn];
+                orow.copy_from_slice(&arow[..lrn]);
+            }
+            lb += LR;
+        }
+        kb += KR;
+    }
+}
+
+fn fused_gemm_steps(a: &InterleavedPlanes, b: &InterleavedPlanes, steps: &[PlaneStep]) -> Vec<i64> {
+    assert_eq!(a.c_dim, b.c_dim, "reduction axis mismatch");
+    let mut p = vec![0i64; b.n_vecs * a.n_vecs];
+    if !steps.is_empty() {
+        fused_rows(a, b, steps, 0, &mut p);
+    }
+    p
+}
+
+/// Full exact fused bit-serial GEMM `P[K, L] = B[K, C] · A[C, L]` over
+/// interleaved planes — one pass over memory instead of
+/// `a_bits × b_bits`. Must equal [`super::gemm_exact`] on the operands
+/// the planes encode.
+pub fn fused_gemm(a: &InterleavedPlanes, b: &InterleavedPlanes) -> Vec<i64> {
+    let prec = Precision::new(a.bits, b.bits);
+    fused_gemm_steps(a, b, &plane_steps(prec, |_| true))
+}
+
+/// [`fused_gemm`] restricted to the controller-order steps where
+/// `include[t]` is true — how the cycle simulator fuses the guarded
+/// (non-GAV) steps of a tile while still materializing the undervolted
+/// steps for error injection. The excluded steps contribute zero.
+pub fn fused_gemm_masked(
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    include: &[bool],
+) -> Vec<i64> {
+    let prec = Precision::new(a.bits, b.bits);
+    assert_eq!(include.len(), prec.steps(), "step mask vs precision");
+    fused_gemm_steps(a, b, &plane_steps(prec, |t| include[t]))
+}
+
+/// [`fused_gemm`] tiled across K-row blocks on up to `threads` scoped
+/// workers (the same row-block scheme as
+/// [`super::bitserial_gemm_ref_mt`]). Bit-exact with the serial kernel:
+/// every output row runs the identical row worker.
+pub fn fused_gemm_mt(a: &InterleavedPlanes, b: &InterleavedPlanes, threads: usize) -> Vec<i64> {
+    assert_eq!(a.c_dim, b.c_dim, "reduction axis mismatch");
+    let prec = Precision::new(a.bits, b.bits);
+    let l_dim = a.n_vecs;
+    let mut p = vec![0i64; b.n_vecs * l_dim];
+    if p.is_empty() {
+        return p;
+    }
+    let steps = plane_steps(prec, |_| true);
+    parallel::parallel_spans_mut(&mut p, l_dim, threads, |start, block| {
+        fused_rows(a, b, &steps, start / l_dim, block);
+    });
+    p
+}
+
+/// Register-blocked dense affine `out[n, classes] = x[n, cin] · w[cin,
+/// classes] + bias` — the float classifier head on the same micro-kernel
+/// blocking: one pass over each input row per `LR`-wide class block
+/// instead of one pass per class. Each output is still accumulated in
+/// ascending-`ci` order starting from its bias, so the result is
+/// bit-identical to the scalar triple loop (f32 addition order per output
+/// is unchanged; only independent outputs are batched).
+pub fn dense_affine(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    cin: usize,
+    classes: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), n * cin);
+    assert_eq!(w.len(), cin * classes);
+    assert_eq!(bias.len(), classes);
+    let mut out = vec![0.0f32; n * classes];
+    if classes == 0 {
+        return out;
+    }
+    for ni in 0..n {
+        let xrow = &x[ni * cin..(ni + 1) * cin];
+        let orow = &mut out[ni * classes..(ni + 1) * classes];
+        let mut k0 = 0usize;
+        while k0 < classes {
+            let kn = LR.min(classes - k0);
+            let mut acc = [0.0f32; LR];
+            acc[..kn].copy_from_slice(&bias[k0..k0 + kn]);
+            for (ci, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[ci * classes + k0..ci * classes + k0 + kn];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+            orow[k0..k0 + kn].copy_from_slice(&acc[..kn]);
+            k0 += LR;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{bitserial_gemm_ref, bitserial_gemm_ref_mt, gemm_exact, ipe_sequence};
+    use crate::quant::PackedPlanes;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    fn rand_mat(rng: &mut Prng, n: usize, bits: u8) -> Vec<i32> {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(-hi - 1, hi) as i32).collect()
+    }
+
+    fn operands(
+        a: &[i32],
+        b: &[i32],
+        c: usize,
+        l: usize,
+        k: usize,
+        a_bits: u8,
+        b_bits: u8,
+    ) -> (
+        PackedPlanes,
+        PackedPlanes,
+        InterleavedPlanes,
+        InterleavedPlanes,
+    ) {
+        let pa = PackedPlanes::from_a_matrix(a, c, l, a_bits);
+        let pb = PackedPlanes::from_b_matrix(b, k, c, b_bits);
+        let ia = InterleavedPlanes::from_packed(&pa);
+        let ib = InterleavedPlanes::from_packed(&pb);
+        (pa, pb, ia, ib)
+    }
+
+    #[test]
+    fn fused_matches_reference_across_shape_matrix() {
+        // The satellite matrix: boundary shapes (c = 1, 64, 65 — word
+        // boundaries; l = 1 — a partial register block everywhere),
+        // asymmetric precisions, and serial + MT at 1/2/64 threads.
+        let shapes = [(1usize, 1usize, 1usize), (64, 1, 5), (65, 4, 7), (64, 5, 4)];
+        let precs = [(2u8, 5u8), (5, 2), (3, 8), (8, 3)];
+        let mut rng = Prng::new(0xF0);
+        for &(c, l, k) in &shapes {
+            for &(a_bits, b_bits) in &precs {
+                let a = rand_mat(&mut rng, c * l, a_bits);
+                let b = rand_mat(&mut rng, k * c, b_bits);
+                let (pa, pb, ia, ib) = operands(&a, &b, c, l, k, a_bits, b_bits);
+                let exact = gemm_exact(&a, &b, c, l, k);
+                assert_eq!(bitserial_gemm_ref(&pa, &pb), exact, "ref a{a_bits}w{b_bits} c={c}");
+                assert_eq!(
+                    fused_gemm(&ia, &ib),
+                    exact,
+                    "fused a{a_bits}w{b_bits} c={c} l={l} k={k}"
+                );
+                for threads in [1usize, 2, 64] {
+                    assert_eq!(
+                        fused_gemm_mt(&ia, &ib, threads),
+                        exact,
+                        "fused mt={threads} a{a_bits}w{b_bits} c={c} l={l} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_reference_random() {
+        check("fused == reference == exact GEMM", 50, |rng| {
+            let a_bits = rng.int_in(2, 8) as u8;
+            let b_bits = rng.int_in(2, 8) as u8;
+            let c = rng.int_in(1, 200) as usize;
+            let l = rng.int_in(1, 11) as usize;
+            let k = rng.int_in(1, 19) as usize;
+            let a = rand_mat(rng, c * l, a_bits);
+            let b = rand_mat(rng, k * c, b_bits);
+            let (pa, pb, ia, ib) = operands(&a, &b, c, l, k, a_bits, b_bits);
+            let exact = gemm_exact(&a, &b, c, l, k);
+            let fused = fused_gemm(&ia, &ib);
+            assert_eq!(fused, exact, "a{a_bits}w{b_bits} c={c} l={l} k={k}");
+            assert_eq!(fused, bitserial_gemm_ref(&pa, &pb));
+            let threads = rng.int_in(1, 8) as usize;
+            assert_eq!(fused, fused_gemm_mt(&ia, &ib, threads), "threads={threads}");
+            assert_eq!(fused, bitserial_gemm_ref_mt(&pa, &pb, threads));
+        });
+    }
+
+    #[test]
+    fn masked_fusion_matches_masked_recombine() {
+        // fused_gemm_masked over a random step subset must equal summing
+        // exactly those steps of the iPE sequence with their weights —
+        // the identity the simulator's guarded-step fusion rests on.
+        check("masked fused == masked recombine", 30, |rng| {
+            let a_bits = rng.int_in(2, 6) as u8;
+            let b_bits = rng.int_in(2, 6) as u8;
+            let prec = Precision::new(a_bits, b_bits);
+            let c = rng.int_in(1, 120) as usize;
+            let l = rng.int_in(1, 6) as usize;
+            let k = rng.int_in(1, 9) as usize;
+            let a = rand_mat(rng, c * l, a_bits);
+            let b = rand_mat(rng, k * c, b_bits);
+            let (pa, pb, ia, ib) = operands(&a, &b, c, l, k, a_bits, b_bits);
+            let include: Vec<bool> = (0..prec.steps()).map(|_| rng.chance(0.5)).collect();
+            let masked = fused_gemm_masked(&ia, &ib, &include);
+            let seq = ipe_sequence(&pa, &pb);
+            let mut want = vec![0i64; k * l];
+            for (t, (ba, bb)) in prec.step_order().enumerate() {
+                if !include[t] {
+                    continue;
+                }
+                let w = prec.step_weight(ba, bb);
+                for (pi, &s) in want.iter_mut().zip(&seq[t]) {
+                    *pi += w * s as i64;
+                }
+            }
+            assert_eq!(masked, want, "a{a_bits}w{b_bits} include={include:?}");
+            // The two mask halves must sum to the full product.
+            let excl: Vec<bool> = include.iter().map(|&x| !x).collect();
+            let other = fused_gemm_masked(&ia, &ib, &excl);
+            let full = fused_gemm(&ia, &ib);
+            let sum: Vec<i64> = masked.iter().zip(&other).map(|(x, y)| x + y).collect();
+            assert_eq!(sum, full);
+        });
+    }
+
+    #[test]
+    fn paper_tile_shape_worst_case_accumulators_a8w8() {
+        // The paper's full hardware tile at a8w8 with every operand at
+        // the most negative code (-128): the widest partial products the
+        // fused i64 register accumulators must carry, all same-signed so
+        // nothing cancels early.
+        let (c, l, k) = (576, 8, 16);
+        let a = vec![-128i32; c * l];
+        let b = vec![-128i32; k * c];
+        let (_, _, ia, ib) = operands(&a, &b, c, l, k, 8, 8);
+        let fused = fused_gemm(&ia, &ib);
+        // (-128 · -128) summed over C = 16384 · 576 per output.
+        assert!(fused.iter().all(|&v| v == 16384 * 576));
+        assert_eq!(fused, gemm_exact(&a, &b, c, l, k));
+        // And a random a8w8 tile for good measure (the
+        // `paper_tile_shape_exactness` analogue for the fused kernel).
+        let mut rng = Prng::new(31);
+        let a = rand_mat(&mut rng, c * l, 8);
+        let b = rand_mat(&mut rng, k * c, 8);
+        let (_, _, ia, ib) = operands(&a, &b, c, l, k, 8, 8);
+        assert_eq!(fused_gemm(&ia, &ib), gemm_exact(&a, &b, c, l, k));
+        assert_eq!(fused_gemm_mt(&ia, &ib, 4), gemm_exact(&a, &b, c, l, k));
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let ia = InterleavedPlanes::zeroed(2, 0, 4);
+        let ib = InterleavedPlanes::zeroed(2, 3, 4);
+        assert!(fused_gemm(&ia, &ib).is_empty());
+        assert!(fused_gemm_mt(&ia, &ib, 4).is_empty());
+        let ia = InterleavedPlanes::zeroed(2, 2, 4);
+        let ib = InterleavedPlanes::zeroed(2, 0, 4);
+        assert!(fused_gemm(&ia, &ib).is_empty());
+        // All-excluded mask: a zero product of the right shape.
+        let ia = InterleavedPlanes::from_a_matrix(&[1, -1, 1, -1], 2, 2, 2);
+        let ib = InterleavedPlanes::from_b_matrix(&[1, 1, -1, 1, 0, 1], 3, 2, 2);
+        assert_eq!(fused_gemm_masked(&ia, &ib, &[false; 4]), vec![0i64; 6]);
+    }
+
+    #[test]
+    fn dense_affine_matches_scalar_loop_bitwise() {
+        check("dense_affine == scalar fc loop", 40, |rng| {
+            let n = rng.int_in(1, 5) as usize;
+            let cin = rng.int_in(1, 40) as usize;
+            let classes = rng.int_in(1, 13) as usize;
+            let x: Vec<f32> = (0..n * cin).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+            let w: Vec<f32> = (0..cin * classes).map(|_| rng.next_f32() - 0.5).collect();
+            let bias: Vec<f32> = (0..classes).map(|_| rng.next_f32() - 0.5).collect();
+            let got = dense_affine(&x, &w, &bias, n, cin, classes);
+            for ni in 0..n {
+                for k in 0..classes {
+                    let mut acc = bias[k];
+                    for ci in 0..cin {
+                        acc += x[ni * cin + ci] * w[ci * classes + k];
+                    }
+                    assert_eq!(
+                        got[ni * classes + k].to_bits(),
+                        acc.to_bits(),
+                        "n={ni} k={k} cin={cin} classes={classes}"
+                    );
+                }
+            }
+        });
+    }
+}

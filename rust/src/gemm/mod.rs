@@ -13,20 +13,37 @@
 //! pipeline (error model, DNN executor) runs on.
 //!
 //! `recombine` implements the L0/L1 shift-accumulate with the
-//! two's-complement sign rule; `bitserial_gemm` composes the two and must
-//! equal the plain integer GEMM (property-tested below — the same identity
-//! `pytest` checks for the Pallas kernel).
+//! two's-complement sign rule; `bitserial_gemm_ref` composes the two.
 //!
 //! Since the compile-once data plane, operands arrive **pre-packed**: the
 //! B-side planes come from a [`crate::dnn::LayerPlan`] (packed once at
 //! `EngineBuilder::build()`), the A-side planes are packed once per layer
 //! per request by the executor, and the cycle simulator carves hardware
 //! tiles out of them with [`PackedPlanes::extract_tile`] instead of
-//! re-packing dense tiles. `bitserial_gemm` is also the float reference
-//! backend's compute path (exactly equal to [`gemm_exact`]).
+//! re-packing dense tiles.
+//!
+//! Two exact compute paths coexist:
+//!
+//! * the **fused** micro-kernel ([`kernel`]) — the default:
+//!   plane-interleaved operands, the whole `a_bits × b_bits` significance
+//!   loop in one pass over memory, `i64` register-block accumulation.
+//!   [`bitserial_gemm`]/[`bitserial_gemm_mt`] route here (re-laying
+//!   plane-major operands once); the executor and `LayerPlan` feed it
+//!   interleaved operands directly with no conversion at all.
+//! * the **reference** step-sequence path ([`bitserial_gemm_ref`],
+//!   [`ipe_sequence`] + [`recombine`]) — one pass per step, `u16` step
+//!   buffers. It mirrors the hardware's per-cycle control flow, which is
+//!   why the cycle simulator keeps it for undervolted steps (error
+//!   injection consumes per-step iPE outputs), and it is the ground truth
+//!   the fused kernel is property-tested against.
+//!
+//! Both equal the plain integer GEMM ([`gemm_exact`]) bit for bit — the
+//! same identity `pytest` checks for the Pallas kernel.
+
+pub mod kernel;
 
 use crate::arch::Precision;
-use crate::quant::PackedPlanes;
+use crate::quant::{InterleavedPlanes, PackedPlanes};
 use crate::util::parallel;
 
 /// Plain integer GEMM reference: `P[K,L] = B[K,C] · A[C,L]` in i64.
@@ -66,10 +83,20 @@ fn binary_plane_gemm_rows(
     if l_dim == 0 || out_block.is_empty() {
         return;
     }
+    debug_assert!(
+        a.c_dim <= u16::MAX as usize,
+        "iPE output (popcount over C={}) would truncate in u16",
+        a.c_dim
+    );
+    // The whole A plane, sliced per column below — hoisted out of the K
+    // loop, which used to re-derive the same `vec_words` slice (plane
+    // base + bounds checks) for every output row.
+    let apw = a.plane_words(a_plane);
+    let words = a.words;
     for (dk, orow) in out_block.chunks_mut(l_dim).enumerate() {
         let bw = b.vec_words(b_plane, k0 + dk);
         for (l, o) in orow.iter_mut().enumerate() {
-            let aw = a.vec_words(a_plane, l);
+            let aw = &apw[l * words..(l + 1) * words];
             let mut acc = 0u32;
             for (x, y) in aw.iter().zip(bw) {
                 acc += (x & y).count_ones();
@@ -117,16 +144,24 @@ pub fn binary_plane_gemm_mt(
     });
 }
 
+/// Stream the exact iPE output sequence step by step through
+/// `f(t, step)` in controller order, reusing **one** step buffer — for
+/// callers that consume each step immediately, instead of materializing
+/// the full `a_bits × b_bits × K × L` sequence [`ipe_sequence`] returns.
+pub fn for_each_ipe_step(a: &PackedPlanes, b: &PackedPlanes, mut f: impl FnMut(usize, &[u16])) {
+    let prec = Precision::new(a.bits, b.bits);
+    let mut step = vec![0u16; b.n_vecs * a.n_vecs];
+    for (t, (ba, bb)) in prec.step_order().enumerate() {
+        binary_plane_gemm(a, ba, b, bb, &mut step);
+        f(t, &step);
+    }
+}
+
 /// The exact iPE output sequence of one tile in controller order
 /// (bb outer, ba inner): `seq[t][k·L + l]`, `t = bb·a_bits + ba`.
 pub fn ipe_sequence(a: &PackedPlanes, b: &PackedPlanes) -> Vec<Vec<u16>> {
-    let prec = Precision::new(a.bits, b.bits);
-    let mut seq = Vec::with_capacity(prec.steps());
-    for (ba, bb) in prec.step_order() {
-        let mut out = vec![0u16; b.n_vecs * a.n_vecs];
-        binary_plane_gemm(a, ba, b, bb, &mut out);
-        seq.push(out);
-    }
+    let mut seq = Vec::with_capacity(Precision::new(a.bits, b.bits).steps());
+    for_each_ipe_step(a, b, |_, step| seq.push(step.to_vec()));
     seq
 }
 
@@ -137,12 +172,11 @@ pub fn recombine(seq: &[Vec<u16>], prec: Precision) -> Vec<i64> {
     let n = seq[0].len();
     let mut p = vec![0i64; n];
     for (t, (ba, bb)) in prec.step_order().enumerate() {
-        let sign = prec.step_sign(ba, bb);
-        let shift = ba as u32 + bb as u32;
+        let w = prec.step_weight(ba, bb);
         let step = &seq[t];
         debug_assert_eq!(step.len(), n);
         for (pi, &s) in p.iter_mut().zip(step) {
-            *pi += sign * ((s as i64) << shift);
+            *pi += w * s as i64;
         }
     }
     p
@@ -150,27 +184,56 @@ pub fn recombine(seq: &[Vec<u16>], prec: Precision) -> Vec<i64> {
 
 /// Full exact bit-serial GEMM over packed planes; must equal
 /// [`gemm_exact`] on the operands the planes encode.
+///
+/// Routed through the fused plane-interleaved micro-kernel
+/// ([`kernel::fused_gemm`]): the operands are re-laid out once, then the
+/// whole significance loop runs in one pass over memory. Call sites that
+/// already hold [`InterleavedPlanes`] (the executor, `LayerPlan`) should
+/// call the kernel directly and skip even that conversion.
 pub fn bitserial_gemm(a: &PackedPlanes, b: &PackedPlanes) -> Vec<i64> {
-    let prec = Precision::new(a.bits, b.bits);
-    let mut p = vec![0i64; b.n_vecs * a.n_vecs];
-    let mut step = vec![0u16; p.len()];
-    for (ba, bb) in prec.step_order() {
-        binary_plane_gemm(a, ba, b, bb, &mut step);
-        let sign = prec.step_sign(ba, bb);
-        let shift = ba as u32 + bb as u32;
-        for (pi, &s) in p.iter_mut().zip(&step) {
-            *pi += sign * ((s as i64) << shift);
-        }
-    }
-    p
+    kernel::fused_gemm(
+        &InterleavedPlanes::from_packed(a),
+        &InterleavedPlanes::from_packed(b),
+    )
 }
 
 /// [`bitserial_gemm`] tiled across K-row blocks on up to `threads` scoped
 /// workers — the L3 hot path at serving scale. Each worker runs the full
-/// bit-significance loop over its own rows of `B` and writes its own rows
-/// of `P`, so there is no cross-thread reduction and the result is
-/// bit-exact with the serial path (property-tested below).
+/// fused kernel over its own rows of `B` and writes its own rows of `P`,
+/// so there is no cross-thread reduction and the result is bit-exact with
+/// the serial path (property-tested below).
 pub fn bitserial_gemm_mt(a: &PackedPlanes, b: &PackedPlanes, threads: usize) -> Vec<i64> {
+    kernel::fused_gemm_mt(
+        &InterleavedPlanes::from_packed(a),
+        &InterleavedPlanes::from_packed(b),
+        threads,
+    )
+}
+
+/// Reference bit-serial composition: one [`binary_plane_gemm`] pass per
+/// `(ba, bb)` step (streamed through [`for_each_ipe_step`]'s single
+/// reused buffer), shift-accumulated exactly like the L0/L1 hardware.
+/// Kept as the ground truth the fused kernel is pinned against.
+pub fn bitserial_gemm_ref(a: &PackedPlanes, b: &PackedPlanes) -> Vec<i64> {
+    let prec = Precision::new(a.bits, b.bits);
+    let wts: Vec<i64> = prec
+        .step_order()
+        .map(|(ba, bb)| prec.step_weight(ba, bb))
+        .collect();
+    let mut p = vec![0i64; b.n_vecs * a.n_vecs];
+    for_each_ipe_step(a, b, |t, step| {
+        let w = wts[t];
+        for (pi, &s) in p.iter_mut().zip(step) {
+            *pi += w * s as i64;
+        }
+    });
+    p
+}
+
+/// [`bitserial_gemm_ref`] tiled across K-row blocks (the reference
+/// multithreaded path; the fused [`bitserial_gemm_mt`] uses the same
+/// row-block scheme).
+pub fn bitserial_gemm_ref_mt(a: &PackedPlanes, b: &PackedPlanes, threads: usize) -> Vec<i64> {
     let prec = Precision::new(a.bits, b.bits);
     let l_dim = a.n_vecs;
     let mut p = vec![0i64; b.n_vecs * l_dim];
@@ -182,10 +245,9 @@ pub fn bitserial_gemm_mt(a: &PackedPlanes, b: &PackedPlanes, threads: usize) -> 
         let mut step = vec![0u16; block.len()];
         for (ba, bb) in prec.step_order() {
             binary_plane_gemm_rows(a, ba, b, bb, k0, &mut step);
-            let sign = prec.step_sign(ba, bb);
-            let shift = ba as u32 + bb as u32;
+            let w = prec.step_weight(ba, bb);
             for (pi, &s) in block.iter_mut().zip(&step) {
-                *pi += sign * ((s as i64) << shift);
+                *pi += w * s as i64;
             }
         }
     });
@@ -221,10 +283,16 @@ mod tests {
             let b = rand_mat(rng, k * c, b_bits);
             let pa = PackedPlanes::from_a_matrix(&a, c, l, a_bits);
             let pb = PackedPlanes::from_b_matrix(&b, k, c, b_bits);
+            let exact = gemm_exact(&a, &b, c, l, k);
             assert_eq!(
                 bitserial_gemm(&pa, &pb),
-                gemm_exact(&a, &b, c, l, k),
+                exact,
                 "a{a_bits}w{b_bits} c={c} l={l} k={k}"
+            );
+            assert_eq!(
+                bitserial_gemm_ref(&pa, &pb),
+                exact,
+                "ref a{a_bits}w{b_bits} c={c} l={l} k={k}"
             );
         });
     }
@@ -298,11 +366,17 @@ mod tests {
             let pa = PackedPlanes::from_a_matrix(&a, c, l, a_bits);
             let pb = PackedPlanes::from_b_matrix(&b, k, c, b_bits);
             let serial = bitserial_gemm(&pa, &pb);
+            assert_eq!(serial, bitserial_gemm_ref(&pa, &pb), "fused vs ref c={c} l={l} k={k}");
             for threads in [1usize, 2, 3, 64] {
                 assert_eq!(
                     bitserial_gemm_mt(&pa, &pb, threads),
                     serial,
                     "bitserial_gemm_mt threads={threads} c={c} l={l} k={k}"
+                );
+                assert_eq!(
+                    bitserial_gemm_ref_mt(&pa, &pb, threads),
+                    serial,
+                    "bitserial_gemm_ref_mt threads={threads} c={c} l={l} k={k}"
                 );
             }
             let mut out_s = vec![0u16; k * l];

@@ -1,0 +1,225 @@
+//! Plane-interleaved bit-packed storage — the operand layout of the fused
+//! bit-serial micro-kernel ([`crate::gemm::kernel`]).
+//!
+//! [`PackedPlanes`] stores `data[plane][vec][word]`: perfect for the
+//! step-sequence compute path (one significance plane per simulated
+//! cycle), but the exact software path walks **all** `a_bits × b_bits`
+//! plane combinations, so the plane-major layout forces one full pass
+//! over memory per combination. [`InterleavedPlanes`] transposes the
+//! layout to `data[vec][word][plane]`: every plane of one 64-element
+//! C-chunk sits in adjacent words, so the fused kernel loads each chunk's
+//! plane words once and retires the whole significance loop out of
+//! registers — one pass over memory total.
+//!
+//! The bit content is identical to [`PackedPlanes`] (same word-wise pack,
+//! LSB = lowest `c`, zero padding past `C`); the two layouts convert
+//! losslessly in either direction (property-tested below).
+
+use super::{pack_chunk, PackedPlanes};
+
+/// Bit-planes of one integer matrix, packed along the reduction axis and
+/// stored plane-interleaved: `data[vec][word][plane]`, flattened
+/// row-major.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InterleavedPlanes {
+    /// Number of bit-planes (the operand precision).
+    pub bits: u8,
+    /// Number of packed vectors (L for activations, K for weights).
+    pub n_vecs: usize,
+    /// Logical length of the reduction axis (C).
+    pub c_dim: usize,
+    /// u64 words per packed vector per plane: `ceil(C / 64)`.
+    pub words: usize,
+    data: Vec<u64>,
+}
+
+impl InterleavedPlanes {
+    /// All-zero planes.
+    pub fn zeroed(bits: u8, n_vecs: usize, c_dim: usize) -> Self {
+        let words = c_dim.div_ceil(64);
+        Self {
+            bits,
+            n_vecs,
+            c_dim,
+            words,
+            data: vec![0u64; n_vecs * words * bits as usize],
+        }
+    }
+
+    #[inline]
+    fn chunk_index(&self, vec: usize, word: usize) -> usize {
+        (vec * self.words + word) * self.bits as usize
+    }
+
+    /// Pack an activation matrix `A[C, L]` (row-major, C rows) directly
+    /// into interleaved per-column planes — same word-wise pack as
+    /// [`PackedPlanes::from_a_matrix`], different store layout, so the
+    /// executor's scratch arena never materializes the plane-major form.
+    pub fn from_a_matrix(a: &[i32], c_dim: usize, l_dim: usize, bits: u8) -> Self {
+        assert_eq!(a.len(), c_dim * l_dim);
+        let mut p = Self::zeroed(bits, l_dim, c_dim);
+        for l in 0..l_dim {
+            for w in 0..p.words {
+                let c0 = w * 64;
+                let cn = 64.min(c_dim - c0);
+                let acc = pack_chunk((0..cn).map(|dc| a[(c0 + dc) * l_dim + l]), bits);
+                let base = p.chunk_index(l, w);
+                p.data[base..base + bits as usize].copy_from_slice(&acc[..bits as usize]);
+            }
+        }
+        p
+    }
+
+    /// Pack a weight matrix `B[K, C]` (row-major, K rows) directly into
+    /// interleaved per-row planes.
+    pub fn from_b_matrix(b: &[i32], k_dim: usize, c_dim: usize, bits: u8) -> Self {
+        assert_eq!(b.len(), k_dim * c_dim);
+        let mut p = Self::zeroed(bits, k_dim, c_dim);
+        for k in 0..k_dim {
+            let row = &b[k * c_dim..(k + 1) * c_dim];
+            for w in 0..p.words {
+                let c0 = w * 64;
+                let cn = 64.min(c_dim - c0);
+                let acc = pack_chunk(row[c0..c0 + cn].iter().copied(), bits);
+                let base = p.chunk_index(k, w);
+                p.data[base..base + bits as usize].copy_from_slice(&acc[..bits as usize]);
+            }
+        }
+        p
+    }
+
+    /// Re-lay plane-major planes into the interleaved form (one linear
+    /// pass; the bit content is untouched).
+    pub fn from_packed(p: &PackedPlanes) -> Self {
+        let mut out = Self::zeroed(p.bits, p.n_vecs, p.c_dim);
+        for vec in 0..p.n_vecs {
+            for plane in 0..p.bits {
+                let src = p.vec_words(plane, vec);
+                for (w, &word) in src.iter().enumerate() {
+                    let idx = out.chunk_index(vec, w) + plane as usize;
+                    out.data[idx] = word;
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert back to the plane-major layout (the step-sequence path and
+    /// the simulator's tile carving consume that form).
+    pub fn to_packed(&self) -> PackedPlanes {
+        let mut out = PackedPlanes::zeroed(self.bits, self.n_vecs, self.c_dim);
+        for vec in 0..self.n_vecs {
+            for w in 0..self.words {
+                let base = self.chunk_index(vec, w);
+                for plane in 0..self.bits {
+                    out.set_word(plane, vec, w, self.data[base + plane as usize]);
+                }
+            }
+        }
+        out
+    }
+
+    /// The packed words of one vector, chunk-major: chunk `w` holds the
+    /// `bits` plane words of C positions `64·w .. 64·w+63` at
+    /// `[w·bits .. (w+1)·bits]` (length `words · bits`).
+    #[inline]
+    pub fn vec_words(&self, vec: usize) -> &[u64] {
+        let start = self.chunk_index(vec, 0);
+        &self.data[start..start + self.words * self.bits as usize]
+    }
+
+    /// Read back a single logical bit (tests).
+    #[inline]
+    pub fn bit(&self, plane: u8, vec: usize, c: usize) -> u32 {
+        let w = self.data[self.chunk_index(vec, c / 64) + plane as usize];
+        ((w >> (c % 64)) & 1) as u32
+    }
+
+    /// Total memory footprint of the packed planes in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    fn rand_mat(rng: &mut Prng, n: usize, bits: u8) -> Vec<i32> {
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(-hi - 1, hi) as i32).collect()
+    }
+
+    #[test]
+    fn direct_pack_equals_conversion_from_packed() {
+        check("interleaved direct pack == from_packed", 50, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let (c, l) = (rng.int_in(1, 200) as usize, rng.int_in(1, 9) as usize);
+            let a = rand_mat(rng, c * l, bits);
+            let direct = InterleavedPlanes::from_a_matrix(&a, c, l, bits);
+            let via = InterleavedPlanes::from_packed(&PackedPlanes::from_a_matrix(&a, c, l, bits));
+            assert_eq!(direct, via, "A c={c} l={l} bits={bits}");
+            let (k, c) = (rng.int_in(1, 9) as usize, rng.int_in(1, 200) as usize);
+            let b = rand_mat(rng, k * c, bits);
+            let direct = InterleavedPlanes::from_b_matrix(&b, k, c, bits);
+            let via = InterleavedPlanes::from_packed(&PackedPlanes::from_b_matrix(&b, k, c, bits));
+            assert_eq!(direct, via, "B k={k} c={c} bits={bits}");
+        });
+    }
+
+    #[test]
+    fn roundtrips_to_packed_losslessly() {
+        check("interleaved <-> packed roundtrip", 50, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let (c, l) = (rng.int_in(1, 200) as usize, rng.int_in(1, 9) as usize);
+            let a = rand_mat(rng, c * l, bits);
+            let packed = PackedPlanes::from_a_matrix(&a, c, l, bits);
+            let inter = InterleavedPlanes::from_packed(&packed);
+            assert_eq!(inter.to_packed(), packed, "c={c} l={l} bits={bits}");
+        });
+    }
+
+    #[test]
+    fn layout_is_plane_interleaved_per_chunk() {
+        // All planes of one 64-element C-chunk must be adjacent: chunk w
+        // of vec v sits at vec_words(v)[w*bits .. (w+1)*bits].
+        let mut rng = Prng::new(7);
+        let (c, l, bits) = (130, 3, 4); // 3 words, last one partial
+        let a = rand_mat(&mut rng, c * l, bits);
+        let packed = PackedPlanes::from_a_matrix(&a, c, l, bits);
+        let inter = InterleavedPlanes::from_a_matrix(&a, c, l, bits);
+        assert_eq!(inter.words, 3);
+        for v in 0..l {
+            let vw = inter.vec_words(v);
+            assert_eq!(vw.len(), inter.words * bits as usize);
+            for w in 0..inter.words {
+                for plane in 0..bits {
+                    assert_eq!(
+                        vw[w * bits as usize + plane as usize],
+                        packed.vec_words(plane, v)[w],
+                        "v={v} w={w} plane={plane}"
+                    );
+                }
+            }
+        }
+        // Bit readback agrees with the plane-major form.
+        for v in 0..l {
+            for ci in 0..c {
+                for plane in 0..bits {
+                    assert_eq!(inter.bit(plane, v, ci), packed.bit(plane, v, ci));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zeroed_shapes() {
+        let z = InterleavedPlanes::zeroed(3, 4, 70);
+        assert_eq!(z.words, 2);
+        assert_eq!(z.nbytes(), 4 * 2 * 3 * 8);
+        assert_eq!(z.vec_words(3).len(), 6);
+        assert!(z.vec_words(0).iter().all(|&w| w == 0));
+    }
+}

@@ -1,7 +1,9 @@
 //! Quantization substrate: uniform symmetric quantization (§IV-B, ref.
 //! [27]) and the bit-serial data layout of GAVINA's A0/B0 memories —
 //! two's-complement bit-plane slicing and bit-packed planes for the u64
-//! popcount hot path.
+//! popcount hot path, in two layouts: plane-major [`PackedPlanes`] (the
+//! step-sequence/simulator form) and plane-interleaved
+//! [`InterleavedPlanes`] (the fused exact kernel's form).
 //!
 //! Conventions (shared with `python/compile/kernels/ref.py`):
 //! * Symmetric signed range for `bits`: `[-(2^(b-1)-1), 2^(b-1)-1]`
@@ -9,9 +11,36 @@
 //! * Bit-plane `i` holds bit `i` of the two's-complement encoding over
 //!   `bits` bits (LSB first); the MSB plane carries weight `-2^(bits-1)`.
 
+pub mod interleaved;
 pub mod packed;
 
+pub use interleaved::InterleavedPlanes;
 pub use packed::PackedPlanes;
+
+/// Word-wise bit-plane slice of one ≤64-element reduction chunk: returns
+/// `acc` with `acc[plane]` holding bit `plane` of each value, LSB of the
+/// word = first value. The single packing inner loop shared by both
+/// storage layouts ([`PackedPlanes`], [`InterleavedPlanes`]) and both
+/// operand orientations — ~10× faster than per-bit read-modify-write
+/// because each plane word is built in a register and stored once.
+#[inline]
+pub(crate) fn pack_chunk(vals: impl Iterator<Item = i32>, bits: u8) -> [u64; 8] {
+    let mask = if bits >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << bits) - 1
+    };
+    let mut acc = [0u64; 8]; // bits ≤ 8
+    for (dc, v) in vals.enumerate() {
+        debug_assert!(fits(v, bits), "{v} does not fit in {bits} bits");
+        debug_assert!(dc < 64);
+        let u = (v as u32) & mask;
+        for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
+            *word |= (((u >> plane) & 1) as u64) << dc;
+        }
+    }
+    acc
+}
 
 /// Symmetric signed integer range for `bits` bits.
 pub fn quant_range(bits: u8) -> (i32, i32) {

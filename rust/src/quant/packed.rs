@@ -12,7 +12,7 @@
 //! 64 consecutive `c` positions, LSB = lowest `c`. Trailing bits of the
 //! last word are zero (AND with zeros contributes nothing to popcount).
 
-use super::fits;
+use super::pack_chunk;
 
 /// Bit-planes of one integer matrix, packed along the reduction axis.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -34,26 +34,13 @@ impl PackedPlanes {
     pub fn from_a_matrix(a: &[i32], c_dim: usize, l_dim: usize, bits: u8) -> Self {
         assert_eq!(a.len(), c_dim * l_dim);
         let mut p = Self::zeroed(bits, l_dim, c_dim);
-        // Word-wise pack: accumulate 64 consecutive c positions per column
-        // into local words before a single store per (plane, vec, word) —
-        // ~10x faster than per-bit read-modify-write (§Perf).
-        let mask = if bits >= 32 {
-            u32::MAX
-        } else {
-            (1u32 << bits) - 1
-        };
+        // Word-wise pack ([`pack_chunk`]): one register-built store per
+        // (plane, vec, word) — ~10x faster than per-bit RMW (§Perf).
         for l in 0..l_dim {
             for w in 0..p.words {
                 let c0 = w * 64;
                 let cn = 64.min(c_dim - c0);
-                let mut acc = [0u64; 8]; // bits ≤ 8
-                for dc in 0..cn {
-                    let v = (a[(c0 + dc) * l_dim + l] as u32) & mask;
-                    debug_assert!(fits(a[(c0 + dc) * l_dim + l], bits));
-                    for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
-                        *word |= (((v >> plane) & 1) as u64) << dc;
-                    }
-                }
+                let acc = pack_chunk((0..cn).map(|dc| a[(c0 + dc) * l_dim + l]), bits);
                 for plane in 0..bits {
                     let idx = p.word_index(plane, l, w);
                     p.data[idx] = acc[plane as usize];
@@ -68,24 +55,12 @@ impl PackedPlanes {
     pub fn from_b_matrix(b: &[i32], k_dim: usize, c_dim: usize, bits: u8) -> Self {
         assert_eq!(b.len(), k_dim * c_dim);
         let mut p = Self::zeroed(bits, k_dim, c_dim);
-        let mask = if bits >= 32 {
-            u32::MAX
-        } else {
-            (1u32 << bits) - 1
-        };
         for k in 0..k_dim {
             let row = &b[k * c_dim..(k + 1) * c_dim];
             for w in 0..p.words {
                 let c0 = w * 64;
                 let cn = 64.min(c_dim - c0);
-                let mut acc = [0u64; 8];
-                for (dc, &bv) in row[c0..c0 + cn].iter().enumerate() {
-                    debug_assert!(fits(bv, bits));
-                    let v = (bv as u32) & mask;
-                    for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
-                        *word |= (((v >> plane) & 1) as u64) << dc;
-                    }
-                }
+                let acc = pack_chunk(row[c0..c0 + cn].iter().copied(), bits);
                 for plane in 0..bits {
                     let idx = p.word_index(plane, k, w);
                     p.data[idx] = acc[plane as usize];
@@ -110,6 +85,15 @@ impl PackedPlanes {
     #[inline]
     fn word_index(&self, plane: u8, vec: usize, word: usize) -> usize {
         (plane as usize * self.n_vecs + vec) * self.words + word
+    }
+
+    /// Overwrite one packed word (the interleaved↔plane-major layout
+    /// conversion in [`crate::quant::InterleavedPlanes`] writes through
+    /// this; the packing constructors keep their batched stores).
+    #[inline]
+    pub(crate) fn set_word(&mut self, plane: u8, vec: usize, word: usize, value: u64) {
+        let idx = self.word_index(plane, vec, word);
+        self.data[idx] = value;
     }
 
     /// The packed words of one vector of one plane (length [`Self::words`]).

@@ -23,7 +23,7 @@ use crate::arch::{ArchConfig, GavSchedule, VoltageMode};
 use crate::errmodel::ErrorTables;
 use crate::gemm;
 use crate::power::PowerModel;
-use crate::quant::PackedPlanes;
+use crate::quant::{InterleavedPlanes, PackedPlanes};
 use crate::util::{ceil_div, Prng};
 
 /// A GEMM job: `P[K,L] = B[K,C] · A[C,L]` at a precision/schedule.
@@ -184,56 +184,136 @@ impl<'t> GavinaSim<'t> {
         let mut n_tiles = 0u64;
         let mut corrupted = 0u64;
 
+        // Resolved once per job: the fused micro-kernel retires every
+        // guarded (exact) step of a tile in one pass over memory; only
+        // steps that are undervolted — or feed the error model's `prev`
+        // conditioning of an undervolted successor — still materialize a
+        // per-step iPE output buffer.
+        let guard_mask: Vec<bool> = approx_mask.iter().map(|&x| !x).collect();
+        let need_step: Vec<bool> = (0..approx_mask.len())
+            .map(|t| approx_mask[t] || approx_mask.get(t + 1).copied().unwrap_or(false))
+            .collect();
+        // One step buffer + one `prev` buffer, reused across every step
+        // of every tile (tiles are always the full array shape).
+        let tile_n = arch.k_dim * arch.l_dim;
+        let mut cur = vec![0u16; tile_n];
+        let mut prev = vec![0u16; tile_n];
+
+        // Will any tile take a fused path? Fully guarded schedules always
+        // do; with undervolted steps, GLS runs full step sequences and a
+        // fully undervolted Tables schedule has no guarded steps left to
+        // fuse — interleaved tile copies are built only when some fused
+        // work will actually consume them.
+        let n_guarded_per_tile = approx_mask.len() as u64 - n_approx_per_tile;
+        let fusing = n_approx_per_tile == 0
+            || match &self.errors {
+                ErrorSource::None => true,
+                ErrorSource::Tables(_) => n_guarded_per_tile > 0,
+                ErrorSource::Gls(_) => false,
+            };
+
         // Carve every operand tile exactly once: A tiles depend on
         // (lo, co) and are revisited every K-row, B tiles depend on
-        // (ko, co) and are revisited every L-column. The A-tile cache
-        // costs about as much memory as the packed A matrix itself.
-        let a_tiles: Vec<PackedPlanes> = (0..lt * ct)
+        // (ko, co) and are revisited every L-column. Fusing runs keep
+        // each tile in both layouts — plane-major for the step-sequence
+        // path, interleaved for the fused kernel — so the A-tile cache
+        // costs up to twice the packed A matrix.
+        let a_tiles: Vec<(PackedPlanes, Option<InterleavedPlanes>)> = (0..lt * ct)
             .map(|i| {
                 let (lo, co) = (i / ct, i % ct);
-                a.extract_tile(co * arch.c_dim, arch.c_dim, lo * arch.l_dim, arch.l_dim)
+                let t = a.extract_tile(co * arch.c_dim, arch.c_dim, lo * arch.l_dim, arch.l_dim);
+                let ti = fusing.then(|| InterleavedPlanes::from_packed(&t));
+                (t, ti)
             })
             .collect();
 
         // Controller loop: output tile (ko, lo) outer, C-chunk inner (the
         // P memory accumulates partial sums across C-chunks).
         for ko in 0..kt {
-            let b_tiles: Vec<PackedPlanes> = (0..ct)
-                .map(|co| b.extract_tile(co * arch.c_dim, arch.c_dim, ko * arch.k_dim, arch.k_dim))
+            let b_tiles: Vec<(PackedPlanes, Option<InterleavedPlanes>)> = (0..ct)
+                .map(|co| {
+                    let t =
+                        b.extract_tile(co * arch.c_dim, arch.c_dim, ko * arch.k_dim, arch.k_dim);
+                    let ti = fusing.then(|| InterleavedPlanes::from_packed(&t));
+                    (t, ti)
+                })
                 .collect();
             for lo in 0..lt {
                 for co in 0..ct {
                     n_tiles += 1;
-                    let pa = &a_tiles[lo * ct + co];
-                    let pb = &b_tiles[co];
-                    // Parallel Array + L0: one bit-plane GEMM per cycle.
-                    let seq = match &self.errors {
-                        // A fully guarded schedule is exact by definition —
-                        // skip the (possibly very expensive) error source.
-                        _ if n_approx_per_tile == 0 => gemm::ipe_sequence(pa, pb),
-                        ErrorSource::None => gemm::ipe_sequence(pa, pb),
-                        ErrorSource::Tables(tables) => {
-                            let mut seq = gemm::ipe_sequence(pa, pb);
-                            let mut tile_rng = self.rng.fork(n_tiles);
-                            corrupted +=
-                                tables.inject_masked(&mut seq, &approx_mask, &mut tile_rng);
-                            seq
-                        }
-                        ErrorSource::Gls(ctx) => {
-                            let mut tg = crate::gls::TileGls::new(ctx, self.arch.clone());
-                            let trace = tg.run_tile(pa, pb, sched);
-                            corrupted += trace
-                                .exact
-                                .iter()
-                                .zip(&trace.sampled)
-                                .flat_map(|(e, s)| e.iter().zip(s))
-                                .filter(|(e, s)| e != s)
-                                .count() as u64;
-                            trace.sampled
+                    let (pa, ia) = &a_tiles[lo * ct + co];
+                    let (pb, ib) = &b_tiles[co];
+                    // Every arm below that fuses runs only when `fusing`
+                    // is true, i.e. the interleaved copies exist.
+                    let inter = || {
+                        (
+                            ia.as_ref().expect("interleaved A tile on fusing path"),
+                            ib.as_ref().expect("interleaved B tile on fusing path"),
+                        )
+                    };
+                    let tile_p: Vec<i64> = if n_approx_per_tile == 0 {
+                        // A fully guarded schedule is exact by definition
+                        // — the whole significance loop fuses, whatever
+                        // the error source (skipping a possibly very
+                        // expensive GLS run).
+                        let (ia, ib) = inter();
+                        gemm::kernel::fused_gemm(ia, ib)
+                    } else {
+                        match &self.errors {
+                            ErrorSource::None => {
+                                let (ia, ib) = inter();
+                                gemm::kernel::fused_gemm(ia, ib)
+                            }
+                            ErrorSource::Tables(tables) => {
+                                let mut tile_rng = self.rng.fork(n_tiles);
+                                // Guarded steps in one fused pass; the
+                                // undervolted LSB combinations stream
+                                // through the reused step buffer, with
+                                // `prev` tracking the exact outputs the
+                                // injection LUT conditions on.
+                                let mut tile_p = if n_guarded_per_tile > 0 {
+                                    let (ia, ib) = inter();
+                                    gemm::kernel::fused_gemm_masked(ia, ib, &guard_mask)
+                                } else {
+                                    // Fully undervolted: every step is
+                                    // materialized + injected below.
+                                    vec![0i64; tile_n]
+                                };
+                                prev.fill(0);
+                                for (t, (ba, bb)) in prec.step_order().enumerate() {
+                                    if !need_step[t] {
+                                        continue;
+                                    }
+                                    gemm::binary_plane_gemm(pa, ba, pb, bb, &mut cur);
+                                    if approx_mask[t] {
+                                        corrupted +=
+                                            tables.inject_step(&mut cur, &mut prev, &mut tile_rng);
+                                        // L1 shift-accumulate of the
+                                        // (possibly corrupted) step.
+                                        let w = prec.step_weight(ba, bb);
+                                        for (pi, &s) in tile_p.iter_mut().zip(&cur) {
+                                            *pi += w * s as i64;
+                                        }
+                                    } else {
+                                        prev.copy_from_slice(&cur);
+                                    }
+                                }
+                                tile_p
+                            }
+                            ErrorSource::Gls(ctx) => {
+                                let mut tg = crate::gls::TileGls::new(ctx, self.arch.clone());
+                                let trace = tg.run_tile(pa, pb, sched);
+                                corrupted += trace
+                                    .exact
+                                    .iter()
+                                    .zip(&trace.sampled)
+                                    .flat_map(|(e, s)| e.iter().zip(s))
+                                    .filter(|(e, s)| e != s)
+                                    .count() as u64;
+                                gemm::recombine(&trace.sampled, prec)
+                            }
                         }
                     };
-                    // L1 shift-accumulate into the P memory region.
-                    let tile_p = gemm::recombine(&seq, prec);
                     self.accumulate(&mut p, &tile_p, l, k, lo, ko);
                 }
             }

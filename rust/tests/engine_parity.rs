@@ -27,7 +27,7 @@ use gavina::dnn::{
 use gavina::engine::backend::{ExecBackend, LayerGemm};
 use gavina::engine::{EngineBuilder, FloatBackend, GavPolicy, GavinaBackend};
 use gavina::errmodel::{ErrorTables, ModelParams};
-use gavina::quant::PackedPlanes;
+use gavina::quant::InterleavedPlanes;
 use gavina::util::Prng;
 
 const WM: f64 = 0.125;
@@ -167,7 +167,10 @@ fn per_request_qconv(
         .collect();
 
     // --- per-request packing of BOTH operands, then the backend GEMM ---
-    let pa = PackedPlanes::from_a_matrix(&qa, c_dim, l_dim, prec.a_bits);
+    // (The operand layout moved to the fused kernel's interleaved form;
+    // the packed bit content — what injection and the GEMM consume — is
+    // identical, property-tested in `quant::interleaved`.)
+    let pa = InterleavedPlanes::from_a_matrix(&qa, c_dim, l_dim, prec.a_bits);
     let plan = LayerPlan::for_gemm(
         &qb,
         k_dim,
