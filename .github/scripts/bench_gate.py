@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the hotpath bench artifact.
+
+Usage: bench_gate.py BASELINE CURRENT
+
+Compares ``bitmacs_per_s`` per (kernel, precision, threads) key in
+CURRENT (``BENCH_hotpath.json``) against the committed BASELINE floors
+(``rust/BENCH_baseline.json``) and exits non-zero when
+
+* a key present in both regresses more than ``tolerance`` (default 15%)
+  below its baseline, or
+* the active SIMD fused kernel fails to beat the scalar fused kernel at
+  the same (precision, threads=1) — the whole point of the SIMD path.
+
+Prints a GitHub-flavoured markdown delta table; pipe it into
+``$GITHUB_STEP_SUMMARY``. Baseline keys missing from the current run
+(e.g. an AVX-512 floor on an AVX2-only runner, NEON floors on x86) only
+warn: the shared runner fleet is heterogeneous.
+"""
+
+import json
+import sys
+
+
+def key_map(doc):
+    return {
+        (e["kernel"], e["precision"], e["threads"]): float(e["bitmacs_per_s"])
+        for e in doc["entries"]
+        if "bitmacs_per_s" in e
+    }
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: bench_gate.py BASELINE CURRENT", file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        cur = json.load(f)
+    tol = float(base.get("tolerance", 0.15))
+    bmap, cmap = key_map(base), key_map(cur)
+    failures, warnings = [], []
+
+    print(f"### hotpath perf gate (tolerance {tol:.0%})\n")
+    dispatch = cur.get("dispatch", {})
+    if dispatch:
+        print(
+            f"active kernel `{dispatch.get('kernel', '?')}`, "
+            f"block `{dispatch.get('block_c_words', '?')}x"
+            f"{dispatch.get('block_l_cols', '?')}`, "
+            f"available `{dispatch.get('available', '?')}`\n"
+        )
+    print("| kernel | precision | threads | baseline bit-MACs/s | current | delta | verdict |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(set(bmap) | set(cmap)):
+        k, p, t = key
+        b, c = bmap.get(key), cmap.get(key)
+        if b is None:
+            print(f"| {k} | {p} | {t} | — | {c:.3g} | — | new key (no floor yet) |")
+            continue
+        if c is None:
+            warnings.append(f"baseline key {key} not produced by this host")
+            print(f"| {k} | {p} | {t} | {b:.3g} | — | — | not run on this host |")
+            continue
+        delta = c / b - 1.0
+        ok = c >= b * (1.0 - tol)
+        if not ok:
+            failures.append(f"{key}: {c:.3g} vs floor {b:.3g} ({delta:+.1%})")
+        verdict = "ok" if ok else f"**REGRESSION >{tol:.0%}**"
+        print(f"| {k} | {p} | {t} | {b:.3g} | {c:.3g} | {delta:+.1%} | {verdict} |")
+
+    # The selected SIMD kernel must beat the scalar fused kernel
+    # single-threaded on the same precision.
+    simd_keys = [
+        k for k in cmap if k[0].startswith("fused-") and k[0] != "fused-scalar" and k[2] == 1
+    ]
+    for key in sorted(simd_keys):
+        scalar_key = ("fused-scalar", key[1], 1)
+        if scalar_key not in cmap:
+            continue
+        ratio = cmap[key] / cmap[scalar_key]
+        line = f"{key[0]} over fused-scalar @ {key[1]} (1 thread): {ratio:.2f}x"
+        if ratio <= 1.0:
+            failures.append("SIMD kernel not faster than scalar: " + line)
+        print(f"\n{line}")
+
+    for w in warnings:
+        print(f"\n> warning: {w}")
+    if failures:
+        print("\n**perf gate FAILED:**\n")
+        for f_ in failures:
+            print(f"- {f_}")
+        return 1
+    print("\nperf gate passed: all produced keys within tolerance of their floors")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -126,10 +126,33 @@ fn main() {
     }
 
     // ---- fused vs reference kernel (+ BENCH_hotpath.json artifact) ------
+    // Times the scalar fused kernel (always) and the active SIMD path
+    // (when the host has one) against the step-sequence reference, per
+    // precision, serial + MT — and records which kernel/block the
+    // dispatcher picked so the perf trajectory in CI knows *which* path
+    // each number came from.
     {
+        use gavina::gemm::kernel::{fused_gemm_mt_with, fused_gemm_with};
+        use gavina::gemm::simd::{self, KernelKind};
         use gavina::quant::InterleavedPlanes;
+        let active = simd::active();
+        let block = simd::block_shape();
+        let avail: Vec<&str> = simd::available().iter().map(|k| k.name()).collect();
+        println!(
+            "[perf] {:44} {:>12} (block {}x{}, available: {})",
+            "kernel dispatch",
+            active.name(),
+            block.c_words,
+            block.l_cols,
+            avail.join("+")
+        );
+        let mut kinds = vec![KernelKind::Scalar];
+        if active != KernelKind::Scalar {
+            kinds.push(active);
+        }
         let mut entries: Vec<String> = Vec::new();
         let mut speedups: Vec<String> = Vec::new();
+        let mut simd_ratios: Vec<String> = Vec::new();
         let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 128) };
         for prec in [Precision::new(4, 4), Precision::new(8, 8)] {
             let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
@@ -150,38 +173,69 @@ fn main() {
             };
             let (s_ref1, r_ref1) = time_gemm(reps, || gavina::gemm::bitserial_gemm_ref(&pa, &pb));
             entry("reference", 1, s_ref1);
-            let (s_fus1, r_fus1) = time_gemm(reps, || gavina::gemm::kernel::fused_gemm(&ia, &ib));
-            entry("fused", 1, s_fus1);
             let (s_reft, r_reft) =
                 time_gemm(reps, || gavina::gemm::bitserial_gemm_ref_mt(&pa, &pb, threads));
             entry("reference", threads, s_reft);
-            let (s_fust, r_fust) =
-                time_gemm(reps, || gavina::gemm::kernel::fused_gemm_mt(&ia, &ib, threads));
-            entry("fused", threads, s_fust);
-            assert_eq!(r_ref1, r_fus1, "fused must be bit-identical to the reference kernel");
             assert_eq!(r_ref1, r_reft, "reference MT must match serial");
-            assert_eq!(r_ref1, r_fust, "fused MT must match serial");
-            for (th, s_ref, s_fus) in [(1, s_ref1, s_fus1), (threads, s_reft, s_fust)] {
-                println!(
-                    "[perf] {:44} {:>11.2}x (ref {:.3} -> fused {:.3} ms, {th} thr)",
-                    format!("fused vs reference {} {c}x{l}x{k}", prec.tag()),
-                    s_ref / s_fus.max(1e-12),
-                    s_ref * 1e3 / reps as f64,
-                    s_fus * 1e3 / reps as f64,
+            let mut timed: Vec<(KernelKind, f64)> = Vec::new();
+            for &kind in &kinds {
+                let name = format!("fused-{kind}");
+                let (s_fus1, r_fus1) = time_gemm(reps, || fused_gemm_with(kind, &ia, &ib));
+                entry(&name, 1, s_fus1);
+                let (s_fust, r_fust) =
+                    time_gemm(reps, || fused_gemm_mt_with(kind, &ia, &ib, threads));
+                entry(&name, threads, s_fust);
+                assert_eq!(
+                    r_ref1, r_fus1,
+                    "fused[{kind}] must be bit-identical to the reference kernel"
                 );
-                speedups.push(format!(
-                    "    {{\"precision\": \"{}\", \"threads\": {th}, \
-                     \"fused_over_reference\": {:.3}}}",
+                assert_eq!(r_ref1, r_fust, "fused[{kind}] MT must match serial");
+                for (th, s_ref, s_fus) in [(1, s_ref1, s_fus1), (threads, s_reft, s_fust)] {
+                    println!(
+                        "[perf] {:44} {:>11.2}x (ref {:.3} -> fused {:.3} ms, {th} thr)",
+                        format!("fused[{kind}] vs reference {} {c}x{l}x{k}", prec.tag()),
+                        s_ref / s_fus.max(1e-12),
+                        s_ref * 1e3 / reps as f64,
+                        s_fus * 1e3 / reps as f64,
+                    );
+                    speedups.push(format!(
+                        "    {{\"kernel\": \"{name}\", \"precision\": \"{}\", \"threads\": {th}, \
+                         \"fused_over_reference\": {:.3}}}",
+                        prec.tag(),
+                        s_ref / s_fus.max(1e-12)
+                    ));
+                }
+                timed.push((kind, s_fus1));
+            }
+            if let [(_, s_sc1), (ks, s_simd1)] = timed[..] {
+                println!(
+                    "[perf] {:44} {:>11.2}x (scalar {:.3} -> {ks} {:.3} ms, 1 thr)",
+                    format!("simd over scalar {} {c}x{l}x{k}", prec.tag()),
+                    s_sc1 / s_simd1.max(1e-12),
+                    s_sc1 * 1e3 / reps as f64,
+                    s_simd1 * 1e3 / reps as f64,
+                );
+                simd_ratios.push(format!(
+                    "    {{\"kernel\": \"fused-{ks}\", \"precision\": \"{}\", \"threads\": 1, \
+                     \"simd_over_scalar\": {:.3}}}",
                     prec.tag(),
-                    s_ref / s_fus.max(1e-12)
+                    s_sc1 / s_simd1.max(1e-12)
                 ));
             }
         }
         let json = format!(
             "{{\n  \"bench\": \"hotpath\",\n  \"quick\": {quick},\n  \"threads\": {threads},\n  \
-             \"entries\": [\n{}\n  ],\n  \"fused_vs_reference\": [\n{}\n  ]\n}}\n",
+             \"dispatch\": {{\"kernel\": \"{}\", \"block_c_words\": {}, \"block_l_cols\": {}, \
+             \"available\": \"{}\"}},\n  \
+             \"entries\": [\n{}\n  ],\n  \"fused_vs_reference\": [\n{}\n  ],\n  \
+             \"simd_over_scalar\": [\n{}\n  ]\n}}\n",
+            active.name(),
+            block.c_words,
+            block.l_cols,
+            avail.join("+"),
             entries.join(",\n"),
-            speedups.join(",\n")
+            speedups.join(",\n"),
+            simd_ratios.join(",\n")
         );
         std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
         println!(

@@ -34,6 +34,30 @@ fn main() {
     let pb = InterleavedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
     let bitmacs = gavina::gemm::bit_macs(c, l, k, prec) as f64 * reps as f64;
 
+    let active = gavina::gemm::simd::active();
+    let block = gavina::gemm::simd::block_shape();
+    println!(
+        "kernel dispatch: {active} (block {}x{}, set GAVINA_KERNEL to override)",
+        block.c_words, block.l_cols
+    );
+
+    // Forced-scalar serial contrast so the table's SIMD uplift (and any
+    // regression in it) is visible in every CI artifact.
+    let t0 = std::time::Instant::now();
+    let mut scalar = Vec::new();
+    for _ in 0..reps {
+        scalar = gavina::gemm::kernel::fused_gemm_with(
+            gavina::gemm::simd::KernelKind::Scalar,
+            &pa,
+            &pb,
+        );
+    }
+    let secs_scalar = t0.elapsed().as_secs_f64();
+    println!(
+        "forced-scalar serial kernel: {:>10.1} bit-MAC/ms",
+        bitmacs / secs_scalar / 1e3
+    );
+
     let t0 = std::time::Instant::now();
     let mut reference = Vec::new();
     for _ in 0..reps {
@@ -41,8 +65,13 @@ fn main() {
     }
     let secs_serial = t0.elapsed().as_secs_f64();
     println!(
-        "serial kernel: {:>10.1} bit-MAC/ms",
-        bitmacs / secs_serial / 1e3
+        "serial kernel ({active}): {:>10.1} bit-MAC/ms ({:.2}x over scalar)",
+        bitmacs / secs_serial / 1e3,
+        secs_scalar / secs_serial.max(1e-12)
+    );
+    assert_eq!(
+        scalar, reference,
+        "scalar and dispatched kernels must be bit-identical"
     );
 
     let cores = resolve_threads(0);

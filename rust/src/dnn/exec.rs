@@ -130,13 +130,27 @@ pub struct ForwardResult {
     pub stats: ForwardStats,
 }
 
-/// Reusable scratch buffers: im2col and activation quantization output.
-#[derive(Default)]
+/// Reusable scratch buffers: im2col, activation quantization output and
+/// the packed A-side planes.
 struct Scratch {
     /// im2col patch matrix `A[C, L]` (f32).
     af: Vec<f32>,
     /// Quantized activations (same layout).
     qa: Vec<i32>,
+    /// A-side planes packed straight into the fused kernel's interleaved
+    /// layout, one reused allocation across layers and requests
+    /// ([`InterleavedPlanes::repack_a`]).
+    ia: InterleavedPlanes,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self {
+            af: Vec::new(),
+            qa: Vec::new(),
+            ia: InterleavedPlanes::zeroed(2, 0, 0),
+        }
+    }
 }
 
 thread_local! {
@@ -235,7 +249,7 @@ impl<'a> Executor<'a> {
         let sa = x.robust_amax().max(1e-8) / hi_a;
         let out = SCRATCH.with(|cell| {
             let mut scratch = cell.borrow_mut();
-            let Scratch { af, qa } = &mut *scratch;
+            let Scratch { af, qa, ia } = &mut *scratch;
             im2col_into(x, &g, af);
             qa.clear();
             qa.extend(
@@ -244,12 +258,13 @@ impl<'a> Executor<'a> {
             );
 
             // Pack the A-side planes once per layer, directly in the
-            // plane-interleaved layout the fused kernel consumes; B was
-            // packed (in both layouts) at build() and lives in the plan.
-            // Then the integer GEMM through the pluggable backend.
-            let pa = InterleavedPlanes::from_a_matrix(qa, c_dim, l_dim, prec.a_bits);
+            // plane-interleaved layout the fused kernel consumes and into
+            // the reused scratch allocation; B was packed (in both
+            // layouts) at build() and lives in the plan. Then the integer
+            // GEMM through the pluggable backend.
+            ia.repack_a(qa, c_dim, l_dim, prec.a_bits);
             self.backend.run_layer_gemm(&LayerGemm {
-                a: &pa,
+                a: ia,
                 plan,
                 stream: self.stream,
             })

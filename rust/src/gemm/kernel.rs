@@ -22,7 +22,14 @@
 //! associativity of exact `i64` addition — property-tested here across
 //! random shapes, precisions 2–8 and thread counts, plus the a8w8
 //! worst-case accumulator tile.
+//!
+//! The scalar register-block kernel below is the always-on ground truth;
+//! the public entry points dispatch to the SIMD paths in [`super::simd`]
+//! when the host has one (override with `GAVINA_KERNEL`, or call the
+//! `_with` variants to pin a path explicitly — that is how the property
+//! tests here run the identical matrix once per available kernel).
 
+use super::simd::{self, KernelKind};
 use crate::arch::Precision;
 use crate::quant::InterleavedPlanes;
 use crate::util::parallel;
@@ -36,15 +43,15 @@ pub const LR: usize = 4;
 /// One significance step resolved to plane indices and its signed
 /// shift-weight `sign(ba, bb) · 2^(ba+bb)`.
 #[derive(Clone, Copy, Debug)]
-struct PlaneStep {
-    a_plane: usize,
-    b_plane: usize,
-    weight: i64,
+pub(crate) struct PlaneStep {
+    pub(crate) a_plane: usize,
+    pub(crate) b_plane: usize,
+    pub(crate) weight: i64,
 }
 
 /// Resolve the controller-order steps `include(t)` selects into plane
 /// pairs + weights.
-fn plane_steps(prec: Precision, include: impl Fn(usize) -> bool) -> Vec<PlaneStep> {
+pub(crate) fn plane_steps(prec: Precision, include: impl Fn(usize) -> bool) -> Vec<PlaneStep> {
     prec.step_order()
         .enumerate()
         .filter(|&(t, _)| include(t))
@@ -58,8 +65,26 @@ fn plane_steps(prec: Precision, include: impl Fn(usize) -> bool) -> Vec<PlaneSte
 
 /// Row-block worker: computes output rows `k0 ..` of the fused GEMM into
 /// `out_block` (a `[rows, L]` row-major slice of the full `[K, L]`
-/// output), restricted to the given significance steps.
+/// output), restricted to the given significance steps, on the requested
+/// kernel path.
 fn fused_rows(
+    kind: KernelKind,
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    steps: &[PlaneStep],
+    k0: usize,
+    out_block: &mut [i64],
+) {
+    if kind == KernelKind::Scalar {
+        fused_rows_scalar(a, b, steps, k0, out_block);
+    } else {
+        simd::fused_rows_shaped(kind, simd::block_shape(), a, b, steps, k0, out_block);
+    }
+}
+
+/// The scalar `KR × LR` register-block row worker — the ground truth the
+/// SIMD paths are pinned against.
+fn fused_rows_scalar(
     a: &InterleavedPlanes,
     b: &InterleavedPlanes,
     steps: &[PlaneStep],
@@ -115,22 +140,43 @@ fn fused_rows(
     }
 }
 
-fn fused_gemm_steps(a: &InterleavedPlanes, b: &InterleavedPlanes, steps: &[PlaneStep]) -> Vec<i64> {
+fn fused_gemm_steps(
+    kind: KernelKind,
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    steps: &[PlaneStep],
+) -> Vec<i64> {
     assert_eq!(a.c_dim, b.c_dim, "reduction axis mismatch");
     let mut p = vec![0i64; b.n_vecs * a.n_vecs];
     if !steps.is_empty() {
-        fused_rows(a, b, steps, 0, &mut p);
+        fused_rows(kind, a, b, steps, 0, &mut p);
     }
     p
 }
 
+fn assert_runnable(kind: KernelKind) {
+    assert!(
+        simd::is_available(kind),
+        "kernel '{}' is not available on this host",
+        kind.name()
+    );
+}
+
 /// Full exact fused bit-serial GEMM `P[K, L] = B[K, C] · A[C, L]` over
 /// interleaved planes — one pass over memory instead of
-/// `a_bits × b_bits`. Must equal [`super::gemm_exact`] on the operands
-/// the planes encode.
+/// `a_bits × b_bits`, on the process-wide [`simd::active`] kernel path.
+/// Must equal [`super::gemm_exact`] on the operands the planes encode.
 pub fn fused_gemm(a: &InterleavedPlanes, b: &InterleavedPlanes) -> Vec<i64> {
+    fused_gemm_with(simd::active(), a, b)
+}
+
+/// [`fused_gemm`] on an explicit kernel path — the per-kernel property
+/// tests and the bench's scalar-vs-SIMD comparison. Panics if `kind` is
+/// not available on this host.
+pub fn fused_gemm_with(kind: KernelKind, a: &InterleavedPlanes, b: &InterleavedPlanes) -> Vec<i64> {
+    assert_runnable(kind);
     let prec = Precision::new(a.bits, b.bits);
-    fused_gemm_steps(a, b, &plane_steps(prec, |_| true))
+    fused_gemm_steps(kind, a, b, &plane_steps(prec, |_| true))
 }
 
 /// [`fused_gemm`] restricted to the controller-order steps where
@@ -142,9 +188,22 @@ pub fn fused_gemm_masked(
     b: &InterleavedPlanes,
     include: &[bool],
 ) -> Vec<i64> {
+    fused_gemm_masked_with(simd::active(), a, b, include)
+}
+
+/// [`fused_gemm_masked`] on an explicit kernel path. The SIMD paths run
+/// masked steps through the same include-mask lane tables as full GEMMs,
+/// so the mask costs nothing extra.
+pub fn fused_gemm_masked_with(
+    kind: KernelKind,
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    include: &[bool],
+) -> Vec<i64> {
+    assert_runnable(kind);
     let prec = Precision::new(a.bits, b.bits);
     assert_eq!(include.len(), prec.steps(), "step mask vs precision");
-    fused_gemm_steps(a, b, &plane_steps(prec, |t| include[t]))
+    fused_gemm_steps(kind, a, b, &plane_steps(prec, |t| include[t]))
 }
 
 /// [`fused_gemm`] tiled across K-row blocks on up to `threads` scoped
@@ -152,6 +211,17 @@ pub fn fused_gemm_masked(
 /// [`super::bitserial_gemm_ref_mt`]). Bit-exact with the serial kernel:
 /// every output row runs the identical row worker.
 pub fn fused_gemm_mt(a: &InterleavedPlanes, b: &InterleavedPlanes, threads: usize) -> Vec<i64> {
+    fused_gemm_mt_with(simd::active(), a, b, threads)
+}
+
+/// [`fused_gemm_mt`] on an explicit kernel path.
+pub fn fused_gemm_mt_with(
+    kind: KernelKind,
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    threads: usize,
+) -> Vec<i64> {
+    assert_runnable(kind);
     assert_eq!(a.c_dim, b.c_dim, "reduction axis mismatch");
     let prec = Precision::new(a.bits, b.bits);
     let l_dim = a.n_vecs;
@@ -161,18 +231,20 @@ pub fn fused_gemm_mt(a: &InterleavedPlanes, b: &InterleavedPlanes, threads: usiz
     }
     let steps = plane_steps(prec, |_| true);
     parallel::parallel_spans_mut(&mut p, l_dim, threads, |start, block| {
-        fused_rows(a, b, &steps, start / l_dim, block);
+        fused_rows(kind, a, b, &steps, start / l_dim, block);
     });
     p
 }
 
 /// Register-blocked dense affine `out[n, classes] = x[n, cin] · w[cin,
 /// classes] + bias` — the float classifier head on the same micro-kernel
-/// blocking: one pass over each input row per `LR`-wide class block
-/// instead of one pass per class. Each output is still accumulated in
-/// ascending-`ci` order starting from its bias, so the result is
-/// bit-identical to the scalar triple loop (f32 addition order per output
-/// is unchanged; only independent outputs are batched).
+/// blocking: one pass over each input row per class block instead of one
+/// pass per class, on the process-wide [`simd::active`] kernel path.
+/// Each output is still accumulated in ascending-`ci` order starting
+/// from its bias, so the result is bit-identical to the scalar triple
+/// loop (f32 addition order per output is unchanged; only independent
+/// outputs are batched — and the SIMD block uses separate multiply and
+/// add, never an FMA, to keep the per-term rounding identical too).
 pub fn dense_affine(
     x: &[f32],
     w: &[f32],
@@ -181,6 +253,21 @@ pub fn dense_affine(
     cin: usize,
     classes: usize,
 ) -> Vec<f32> {
+    dense_affine_with(simd::active(), x, w, bias, n, cin, classes)
+}
+
+/// [`dense_affine`] on an explicit kernel path. Panics if `kind` is not
+/// available on this host.
+pub fn dense_affine_with(
+    kind: KernelKind,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    cin: usize,
+    classes: usize,
+) -> Vec<f32> {
+    assert_runnable(kind);
     assert_eq!(x.len(), n * cin);
     assert_eq!(w.len(), cin * classes);
     assert_eq!(bias.len(), classes);
@@ -188,10 +275,31 @@ pub fn dense_affine(
     if classes == 0 {
         return out;
     }
+    let vw = kind.f32_lanes();
     for ni in 0..n {
         let xrow = &x[ni * cin..(ni + 1) * cin];
         let orow = &mut out[ni * classes..(ni + 1) * classes];
         let mut k0 = 0usize;
+        // Full vector-width class blocks on the SIMD path …
+        while vw > 0 && k0 + vw <= classes {
+            // SAFETY: the class block [k0, k0 + vw) is in bounds for
+            // every w row, for bias and for orow (k0 + vw ≤ classes);
+            // `kind` availability was asserted above.
+            unsafe {
+                simd::affine_cols(
+                    kind,
+                    xrow.as_ptr(),
+                    w.as_ptr().add(k0),
+                    classes,
+                    cin,
+                    bias.as_ptr().add(k0),
+                    orow.as_mut_ptr().add(k0),
+                );
+            }
+            k0 += vw;
+        }
+        // … and the scalar `LR`-wide register block for the remainder
+        // (the whole row when `kind` is scalar).
         while k0 < classes {
             let kn = LR.min(classes - k0);
             let mut acc = [0.0f32; LR];
@@ -245,11 +353,21 @@ mod tests {
 
     #[test]
     fn fused_matches_reference_across_shape_matrix() {
-        // The satellite matrix: boundary shapes (c = 1, 64, 65 — word
-        // boundaries; l = 1 — a partial register block everywhere),
-        // asymmetric precisions, and serial + MT at 1/2/64 threads.
-        let shapes = [(1usize, 1usize, 1usize), (64, 1, 5), (65, 4, 7), (64, 5, 4)];
-        let precs = [(2u8, 5u8), (5, 2), (3, 8), (8, 3)];
+        // The satellite matrix, run once per available kernel path:
+        // boundary shapes (c = 1, 64, 65, 130 — word boundaries and a
+        // partial final word; l = 1 — a partial register block
+        // everywhere), asymmetric precisions including 3/5/7 bits (not
+        // divisible by any vector lane count, so every SIMD path
+        // exercises dead lanes), and serial + MT at 1/2/64 threads.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (64, 1, 5),
+            (65, 4, 7),
+            (64, 5, 4),
+            (130, 9, 3),
+        ];
+        let precs = [(2u8, 5u8), (5, 2), (3, 8), (8, 3), (7, 3), (4, 7)];
+        let kinds = simd::available();
         let mut rng = Prng::new(0xF0);
         for &(c, l, k) in &shapes {
             for &(a_bits, b_bits) in &precs {
@@ -258,17 +376,19 @@ mod tests {
                 let (pa, pb, ia, ib) = operands(&a, &b, c, l, k, a_bits, b_bits);
                 let exact = gemm_exact(&a, &b, c, l, k);
                 assert_eq!(bitserial_gemm_ref(&pa, &pb), exact, "ref a{a_bits}w{b_bits} c={c}");
-                assert_eq!(
-                    fused_gemm(&ia, &ib),
-                    exact,
-                    "fused a{a_bits}w{b_bits} c={c} l={l} k={k}"
-                );
-                for threads in [1usize, 2, 64] {
+                for &kind in &kinds {
                     assert_eq!(
-                        fused_gemm_mt(&ia, &ib, threads),
+                        fused_gemm_with(kind, &ia, &ib),
                         exact,
-                        "fused mt={threads} a{a_bits}w{b_bits} c={c} l={l} k={k}"
+                        "fused[{kind}] a{a_bits}w{b_bits} c={c} l={l} k={k}"
                     );
+                    for threads in [1usize, 2, 64] {
+                        assert_eq!(
+                            fused_gemm_mt_with(kind, &ia, &ib, threads),
+                            exact,
+                            "fused[{kind}] mt={threads} a{a_bits}w{b_bits} c={c} l={l} k={k}"
+                        );
+                    }
                 }
             }
         }
@@ -292,6 +412,13 @@ mod tests {
             let threads = rng.int_in(1, 8) as usize;
             assert_eq!(fused, fused_gemm_mt(&ia, &ib, threads), "threads={threads}");
             assert_eq!(fused, bitserial_gemm_ref_mt(&pa, &pb, threads));
+            for kind in simd::available() {
+                assert_eq!(
+                    fused_gemm_with(kind, &ia, &ib),
+                    exact,
+                    "kind={kind} a{a_bits}w{b_bits} c={c} l={l} k={k}"
+                );
+            }
         });
     }
 
@@ -312,6 +439,15 @@ mod tests {
             let (pa, pb, ia, ib) = operands(&a, &b, c, l, k, a_bits, b_bits);
             let include: Vec<bool> = (0..prec.steps()).map(|_| rng.chance(0.5)).collect();
             let masked = fused_gemm_masked(&ia, &ib, &include);
+            // Every kernel path must agree on the masked product too (the
+            // SIMD paths fold the mask into their include-lane tables).
+            for kind in simd::available() {
+                assert_eq!(
+                    fused_gemm_masked_with(kind, &ia, &ib, &include),
+                    masked,
+                    "kind={kind} a{a_bits}w{b_bits}"
+                );
+            }
             let seq = ipe_sequence(&pa, &pb);
             let mut want = vec![0i64; k * l];
             for (t, (ba, bb)) in prec.step_order().enumerate() {
@@ -334,27 +470,34 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy fixed-shape tile; covered by the property matrix")]
     fn paper_tile_shape_worst_case_accumulators_a8w8() {
         // The paper's full hardware tile at a8w8 with every operand at
         // the most negative code (-128): the widest partial products the
         // fused i64 register accumulators must carry, all same-signed so
-        // nothing cancels early.
+        // nothing cancels early. Run on every kernel path — this is the
+        // accumulator-width worst case for the SIMD lane sums too.
         let (c, l, k) = (576, 8, 16);
         let a = vec![-128i32; c * l];
         let b = vec![-128i32; k * c];
         let (_, _, ia, ib) = operands(&a, &b, c, l, k, 8, 8);
-        let fused = fused_gemm(&ia, &ib);
-        // (-128 · -128) summed over C = 16384 · 576 per output.
-        assert!(fused.iter().all(|&v| v == 16384 * 576));
-        assert_eq!(fused, gemm_exact(&a, &b, c, l, k));
+        for kind in simd::available() {
+            let fused = fused_gemm_with(kind, &ia, &ib);
+            // (-128 · -128) summed over C = 16384 · 576 per output.
+            assert!(fused.iter().all(|&v| v == 16384 * 576), "kind={kind}");
+            assert_eq!(fused, gemm_exact(&a, &b, c, l, k), "kind={kind}");
+        }
         // And a random a8w8 tile for good measure (the
         // `paper_tile_shape_exactness` analogue for the fused kernel).
         let mut rng = Prng::new(31);
         let a = rand_mat(&mut rng, c * l, 8);
         let b = rand_mat(&mut rng, k * c, 8);
         let (_, _, ia, ib) = operands(&a, &b, c, l, k, 8, 8);
-        assert_eq!(fused_gemm(&ia, &ib), gemm_exact(&a, &b, c, l, k));
-        assert_eq!(fused_gemm_mt(&ia, &ib, 4), gemm_exact(&a, &b, c, l, k));
+        let exact = gemm_exact(&a, &b, c, l, k);
+        for kind in simd::available() {
+            assert_eq!(fused_gemm_with(kind, &ia, &ib), exact, "kind={kind}");
+            assert_eq!(fused_gemm_mt_with(kind, &ia, &ib, 4), exact, "kind={kind}");
+        }
     }
 
     #[test]
@@ -395,6 +538,37 @@ mod tests {
                     );
                 }
             }
+            // Every kernel path must produce the identical f32 bits: the
+            // SIMD column blocks use separate mul + add (no FMA) in the
+            // same ascending-ci order.
+            for kind in simd::available() {
+                let via = dense_affine_with(kind, &x, &w, &bias, n, cin, classes);
+                assert!(
+                    got.iter().zip(&via).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "kind={kind} n={n} cin={cin} classes={classes}"
+                );
+            }
         });
+    }
+
+    #[test]
+    fn dense_affine_vector_width_boundaries() {
+        // Class counts straddling the 4- and 8-wide SIMD column blocks
+        // (and their remainders) all reduce to the same bits.
+        let mut rng = Prng::new(0xAF1);
+        let (n, cin) = (3usize, 17usize);
+        let x: Vec<f32> = (0..n * cin).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        for classes in [1usize, 3, 4, 5, 7, 8, 9, 15, 16, 17] {
+            let w: Vec<f32> = (0..cin * classes).map(|_| rng.next_f32() - 0.5).collect();
+            let bias: Vec<f32> = (0..classes).map(|_| rng.next_f32() - 0.5).collect();
+            let scalar = dense_affine_with(KernelKind::Scalar, &x, &w, &bias, n, cin, classes);
+            for kind in simd::available() {
+                let via = dense_affine_with(kind, &x, &w, &bias, n, cin, classes);
+                assert!(
+                    scalar.iter().zip(&via).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "kind={kind} classes={classes}"
+                );
+            }
+        }
     }
 }

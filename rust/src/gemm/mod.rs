@@ -41,6 +41,7 @@
 //! same identity `pytest` checks for the Pallas kernel.
 
 pub mod kernel;
+pub mod simd;
 
 use crate::arch::Precision;
 use crate::quant::{InterleavedPlanes, PackedPlanes};
@@ -334,6 +335,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy fixed-shape tile; property tests cover the identity")]
     fn all_ones_saturates_popcount() {
         // A = all -1 (all bits set), B = all -1: every iPE output = C.
         let (c, l, k) = (576, 8, 16);
@@ -388,6 +390,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy fixed-shape tile; property tests cover the identity")]
     fn mt_gemm_matches_exact_integer_gemm() {
         let mut rng = Prng::new(77);
         let (c, l, k) = (576, 8, 64);
@@ -399,6 +402,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy fixed-shape tile; property tests cover the identity")]
     fn paper_tile_shape_exactness() {
         // The paper's full hardware tile at a8w8 — the widest case the
         // accumulators must carry.

@@ -1,0 +1,94 @@
+//! AArch64 NEON dots for the fused bit-serial kernel: `and` + `cnt`
+//! (per-byte popcount) with pairwise widening adds up to u64 lanes, plus
+//! the NEON `dense_affine` column block. Lane semantics come from
+//! [`super::StepTables`]; pointer and tail-pad contracts are documented
+//! on the dispatchers in `super`.
+
+use std::arch::aarch64::*;
+
+use super::StepTables;
+
+/// NEON weighted plane dot over one reduction strip: 2 A-plane lanes per
+/// vector (up to 4 chunks for a8), per-lane popcount via
+/// `cnt` → `vpaddlq_u8/u16/u32`, weighted fold with `vshlq_u64` and the
+/// `(x ^ sign) − sign` trick into i64 lane accumulators.
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::dot` and has verified NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_neon(
+    a: *const u64,
+    b: *const u64,
+    words: usize,
+    pa: usize,
+    pb: usize,
+    tab: &StepTables,
+) -> i64 {
+    debug_assert_eq!(tab.lanes, 2);
+    let chunks = tab.chunks;
+    debug_assert!(chunks <= 4 && pb <= 8);
+    // Hoist the lane tables out of the strip loop (loop-invariant).
+    let mut shv = [vdupq_n_s64(0); 32];
+    let mut sgv = [vdupq_n_s64(0); 32];
+    let mut inv = [vdupq_n_u64(0); 32];
+    for bp in 0..pb {
+        for ch in 0..chunks {
+            let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
+            shv[i] = vld1q_s64(tab.shifts.as_ptr().add(r) as *const i64);
+            sgv[i] = vld1q_s64(tab.signs.as_ptr().add(r) as *const i64);
+            inv[i] = vld1q_u64(tab.incs.as_ptr().add(r));
+        }
+    }
+    let mut acc = [vdupq_n_s64(0); 4];
+    for w in 0..words {
+        let aw = a.add(w * pa);
+        let bw = b.add(w * pb);
+        for bp in 0..pb {
+            let bv = vdupq_n_u64(*bw.add(bp));
+            for ch in 0..chunks {
+                let i = bp * chunks + ch;
+                let av = vld1q_u64(aw.add(ch * 2));
+                let anded = vandq_u64(av, bv);
+                let pop = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(
+                    anded,
+                )))));
+                let v = vreinterpretq_s64_u64(vshlq_u64(vandq_u64(pop, inv[i]), shv[i]));
+                let v = vsubq_s64(veorq_s64(v, sgv[i]), sgv[i]);
+                acc[ch] = vaddq_s64(acc[ch], v);
+            }
+        }
+    }
+    let mut total = 0i64;
+    for &acc_ch in acc.iter().take(chunks) {
+        total += vaddvq_s64(acc_ch);
+    }
+    total
+}
+
+/// NEON `dense_affine` column block over 4 output classes: broadcast each
+/// input, multiply by the 4-wide weight row, then add — two separate
+/// roundings per term (no fused multiply-add), exactly like the scalar
+/// `acc += x * w`, so every lane is bit-identical to the scalar loop.
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::affine_cols` and has verified
+/// NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn affine_cols4_neon(
+    x: *const f32,
+    w: *const f32,
+    stride: usize,
+    cin: usize,
+    bias: *const f32,
+    out: *mut f32,
+) {
+    let mut acc = vld1q_f32(bias);
+    for ci in 0..cin {
+        let xv = vdupq_n_f32(*x.add(ci));
+        let wv = vld1q_f32(w.add(ci * stride));
+        acc = vaddq_f32(acc, vmulq_f32(xv, wv));
+    }
+    vst1q_f32(out, acc);
+}

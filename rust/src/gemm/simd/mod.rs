@@ -1,0 +1,541 @@
+//! Runtime-dispatched SIMD backends for the fused bit-serial micro-kernel.
+//!
+//! The fused kernel's inner operation — AND + popcount between every
+//! `(a_plane, b_plane)` pair of one 64-element C-chunk, weighted by
+//! `sign · 2^(ba+bb)` — is exactly the shape vector ISAs popcount
+//! fastest, and the interleaved layout (`[vec][word][plane]`, see
+//! [`crate::quant::InterleavedPlanes`]) already stores all A-planes of a
+//! chunk contiguously. So the vector axis here is the **plane axis**: one
+//! load grabs `LANES` A-plane words, one broadcast splats a B-plane word,
+//! and a single AND + per-lane popcount retires `LANES` significance
+//! steps at once. Per-lane shift/sign/include tables ([`StepTables`])
+//! then fold the step weights in-register, with lanes past `a_bits` (and
+//! masked-out steps) zeroed by their include mask — full, masked and
+//! multithreaded GEMM all run the same code path.
+//!
+//! One implementation is selected **once per process** by [`active`], in
+//! detection order AVX-512 → AVX2 → NEON → scalar:
+//!
+//! | kind | ISA | per-lane popcount | u64 lanes |
+//! |------|-----|-------------------|-----------|
+//! | `avx512` | AVX-512F + AVX-512-VPOPCNTDQ | `vpopcntq` | 8 |
+//! | `avx2` | AVX2 | `vpshufb` nibble LUT + `vpsadbw` (Mula) | 4 |
+//! | `neon` | AArch64 NEON | `cnt` + pairwise widening adds | 2 |
+//! | `scalar` | portable | `u64::count_ones` | 1 |
+//!
+//! `GAVINA_KERNEL=scalar|avx2|avx512|neon` overrides detection (the CI
+//! matrix pins its forced-scalar job with it); requesting a kernel the
+//! host cannot run aborts loudly rather than silently falling back.
+//! `GAVINA_BLOCK=<c_words>x<l_cols>` likewise pins the cache-block shape
+//! that [`block_shape`] otherwise autotunes at first use.
+//!
+//! Every SIMD path is pinned bit-identical to the scalar kernel by the
+//! per-kernel property matrix in [`super::kernel`]; exactness never
+//! depends on which path ran (the outputs are exact `i64` sums, so any
+//! lane/block order is the same sum).
+
+#[cfg(target_arch = "aarch64")]
+mod aarch64;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+use super::kernel::{plane_steps, PlaneStep};
+use crate::quant::InterleavedPlanes;
+
+/// One fused-kernel implementation, selectable at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable `u64::count_ones` register-block kernel — always
+    /// available, and the ground truth every SIMD path is tested against.
+    Scalar,
+    /// 256-bit AVX2: `vpand` + the `vpshufb` nibble-LUT popcount.
+    Avx2,
+    /// 512-bit AVX-512: native `vpopcntq` (needs AVX-512-VPOPCNTDQ), all
+    /// 8 planes of an a8 operand in one vector.
+    Avx512,
+    /// 128-bit NEON: `and` + `cnt` with pairwise widening adds.
+    Neon,
+}
+
+impl KernelKind {
+    /// Stable lowercase name — the `GAVINA_KERNEL` vocabulary and the
+    /// kernel tag in `BENCH_hotpath.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`Self::name`] (the values `GAVINA_KERNEL` accepts).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "avx512" => Some(KernelKind::Avx512),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    /// `u64` bit-plane lanes one vector of this ISA carries.
+    pub fn lanes(self) -> usize {
+        match self {
+            KernelKind::Scalar => 1,
+            KernelKind::Avx2 => 4,
+            KernelKind::Avx512 => 8,
+            KernelKind::Neon => 2,
+        }
+    }
+
+    /// f32 lanes of the vectorized `dense_affine` column block (0 means
+    /// the scalar path handles everything).
+    pub(crate) fn f32_lanes(self) -> usize {
+        match self {
+            KernelKind::Scalar => 0,
+            KernelKind::Avx2 | KernelKind::Avx512 => 8,
+            KernelKind::Neon => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Detection preference order (best first); [`KernelKind::Scalar`] is the
+/// implicit fallback.
+const PREFERENCE: [KernelKind; 3] = [KernelKind::Avx512, KernelKind::Avx2, KernelKind::Neon];
+
+/// Can this host execute `kind`?
+pub fn is_available(kind: KernelKind) -> bool {
+    match kind {
+        KernelKind::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx512 => {
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Every kernel this host can run — [`KernelKind::Scalar`] first, then
+/// the detected SIMD paths in preference order. The per-kernel property
+/// tests in [`super::kernel`] iterate this.
+pub fn available() -> Vec<KernelKind> {
+    let mut v = vec![KernelKind::Scalar];
+    v.extend(PREFERENCE.iter().copied().filter(|&k| is_available(k)));
+    v
+}
+
+fn detect_best() -> KernelKind {
+    PREFERENCE
+        .into_iter()
+        .find(|&k| is_available(k))
+        .unwrap_or(KernelKind::Scalar)
+}
+
+/// The kernel the exported entry points ([`super::kernel::fused_gemm`]
+/// and friends) run on, resolved once per process: the `GAVINA_KERNEL`
+/// override if set and non-empty (it must name an available kernel — an
+/// impossible request panics rather than silently falling back), else
+/// the best detected path.
+pub fn active() -> KernelKind {
+    static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("GAVINA_KERNEL") {
+        Ok(s) if !s.trim().is_empty() => {
+            let kind = KernelKind::parse(&s).unwrap_or_else(|| {
+                panic!("GAVINA_KERNEL='{s}': expected scalar|avx2|avx512|neon")
+            });
+            assert!(
+                is_available(kind),
+                "GAVINA_KERNEL={} requested but this host cannot run it",
+                kind.name()
+            );
+            kind
+        }
+        _ => detect_best(),
+    })
+}
+
+/// Cache-block shape of the SIMD loop nest: the fused GEMM walks
+/// `c_words`-word slices of the reduction axis (an L1-resident strip of
+/// plane data) across `l_cols` output columns at a time (the A-panel a
+/// B-row is reused against before it leaves L2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    /// 64-element C-chunks per reduction strip.
+    pub c_words: usize,
+    /// Output columns sharing one resident A-panel.
+    pub l_cols: usize,
+}
+
+impl BlockShape {
+    /// The fallback shape (also what Miri and scalar-only hosts report):
+    /// an 8 KiB-per-vector a8 reduction strip × 8 columns ≈ 64 KiB panel.
+    pub const DEFAULT: BlockShape = BlockShape {
+        c_words: 128,
+        l_cols: 8,
+    };
+}
+
+/// Candidate shapes the first-use autotuner times.
+const CANDIDATES: [BlockShape; 3] = [
+    BlockShape {
+        c_words: 64,
+        l_cols: 8,
+    },
+    BlockShape {
+        c_words: 128,
+        l_cols: 8,
+    },
+    BlockShape {
+        c_words: 256,
+        l_cols: 16,
+    },
+];
+
+/// The block shape the SIMD loop nest runs with, resolved once per
+/// process: `GAVINA_BLOCK=<c_words>x<l_cols>` if set, else the fastest
+/// candidate by a one-shot timing of a synthetic a4w4 tile on the active
+/// kernel (≲ 10 ms, amortized over the process). Scalar-only hosts and
+/// Miri (which has no clock) skip the timing and report
+/// [`BlockShape::DEFAULT`].
+pub fn block_shape() -> BlockShape {
+    static SHAPE: OnceLock<BlockShape> = OnceLock::new();
+    *SHAPE.get_or_init(|| {
+        if let Ok(s) = std::env::var("GAVINA_BLOCK") {
+            if !s.trim().is_empty() {
+                return parse_block(&s).unwrap_or_else(|| {
+                    panic!("GAVINA_BLOCK='{s}': expected <c_words>x<l_cols>, e.g. 128x8")
+                });
+            }
+        }
+        let kind = active();
+        if kind == KernelKind::Scalar || cfg!(miri) {
+            return BlockShape::DEFAULT;
+        }
+        autotune(kind)
+    })
+}
+
+fn parse_block(s: &str) -> Option<BlockShape> {
+    let (c, l) = s.trim().split_once('x')?;
+    let c_words: usize = c.trim().parse().ok()?;
+    let l_cols: usize = l.trim().parse().ok()?;
+    if c_words == 0 || l_cols == 0 {
+        return None;
+    }
+    Some(BlockShape { c_words, l_cols })
+}
+
+/// Time each candidate on a synthetic tile big enough to spill L1 and
+/// keep the fastest. Deliberately tiny: the point is to pick between
+/// *cache* strategies per target at first use, not to run a full search.
+fn autotune(kind: KernelKind) -> BlockShape {
+    use crate::arch::Precision;
+    use crate::util::Prng;
+    let prec = Precision::new(4, 4);
+    let (c, l, k) = (16384usize, 16usize, 8usize);
+    let mut rng = Prng::new(0xB10C);
+    let a: Vec<i32> = (0..c * l).map(|_| rng.int_in(-7, 7) as i32).collect();
+    let b: Vec<i32> = (0..k * c).map(|_| rng.int_in(-7, 7) as i32).collect();
+    let ia = InterleavedPlanes::from_a_matrix(&a, c, l, prec.a_bits);
+    let ib = InterleavedPlanes::from_b_matrix(&b, k, c, prec.b_bits);
+    let steps = plane_steps(prec, |_| true);
+    let mut out = vec![0i64; k * l];
+    let mut best = (BlockShape::DEFAULT, f64::INFINITY);
+    for &shape in &CANDIDATES {
+        // One warm-up, then keep the best of two reps (least noise).
+        fused_rows_shaped(kind, shape, &ia, &ib, &steps, 0, &mut out);
+        let mut secs = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = std::time::Instant::now();
+            fused_rows_shaped(kind, shape, &ia, &ib, &steps, 0, &mut out);
+            secs = secs.min(t0.elapsed().as_secs_f64());
+        }
+        if secs < best.1 {
+            best = (shape, secs);
+        }
+    }
+    best.0
+}
+
+/// Per-`(b_plane, lane-chunk)` lane tables encoding the significance-step
+/// grid for the SIMD dots: left-shift counts `ba + bb`, sign masks
+/// (all-ones where `step_weight < 0`) and include masks (all-ones where
+/// the step participates; zero both for masked-out steps and for padding
+/// lanes past `a_bits`). Built once per GEMM from the same `PlaneStep`
+/// list the scalar kernel walks, so the two paths cannot disagree about
+/// a step's weight.
+pub(crate) struct StepTables {
+    pub(crate) lanes: usize,
+    pub(crate) chunks: usize,
+    pub(crate) shifts: Vec<u64>,
+    pub(crate) signs: Vec<u64>,
+    pub(crate) incs: Vec<u64>,
+}
+
+impl StepTables {
+    pub(crate) fn new(steps: &[PlaneStep], pa: usize, pb: usize, lanes: usize) -> Self {
+        debug_assert!(lanes > 1 && lanes <= 8);
+        let chunks = pa.div_ceil(lanes);
+        let n = pb * chunks * lanes;
+        let mut shifts = vec![0u64; n];
+        let mut signs = vec![0u64; n];
+        let mut incs = vec![0u64; n];
+        for st in steps {
+            debug_assert!(st.a_plane < pa && st.b_plane < pb);
+            let idx = (st.b_plane * chunks + st.a_plane / lanes) * lanes + st.a_plane % lanes;
+            let sh = (st.a_plane + st.b_plane) as u32;
+            debug_assert_eq!(
+                st.weight.unsigned_abs(),
+                1u64 << sh,
+                "step weight must be ±2^(ba+bb)"
+            );
+            shifts[idx] = sh as u64;
+            signs[idx] = if st.weight < 0 { u64::MAX } else { 0 };
+            incs[idx] = u64::MAX;
+        }
+        Self {
+            lanes,
+            chunks,
+            shifts,
+            signs,
+            incs,
+        }
+    }
+
+    /// Flat index of `(b_plane, chunk)`'s first lane.
+    #[inline]
+    pub(crate) fn row(&self, bp: usize, chunk: usize) -> usize {
+        (bp * self.chunks + chunk) * self.lanes
+    }
+}
+
+/// SIMD row-block worker — the vector analogue of the scalar
+/// `fused_rows`: computes output rows `k0 ..` of the fused GEMM into
+/// `out_block` with `shape` cache blocking, dispatching each reduction
+/// strip to `kind`'s dot kernel.
+///
+/// Exactness: every output is an exact `i64` sum of step contributions,
+/// and integer addition is associative and commutative, so any blocking
+/// and lane order yields the identical value to the scalar kernel.
+pub(crate) fn fused_rows_shaped(
+    kind: KernelKind,
+    shape: BlockShape,
+    a: &InterleavedPlanes,
+    b: &InterleavedPlanes,
+    steps: &[PlaneStep],
+    k0: usize,
+    out_block: &mut [i64],
+) {
+    let l_dim = a.n_vecs;
+    if out_block.is_empty() || l_dim == 0 {
+        return;
+    }
+    debug_assert_eq!(a.c_dim, b.c_dim);
+    debug_assert_eq!(out_block.len() % l_dim, 0);
+    let words = a.words;
+    let (pa, pb) = (a.bits as usize, b.bits as usize);
+    let rows = out_block.len() / l_dim;
+    out_block.fill(0);
+    if words == 0 {
+        return;
+    }
+    let tab = StepTables::new(steps, pa, pb, kind.lanes());
+    // Pointers derive from the *padded* backing store (`raw`), not from
+    // per-vector subslices: the last partial-chunk load of a strip may
+    // read up to `lanes − 1` words past the strip's A-plane words, which
+    // the InterleavedPlanes tail pad keeps inside the borrow (see the
+    // layout contract in `quant::interleaved`).
+    let araw = a.raw();
+    let braw = b.raw();
+    assert!(kind.lanes() <= InterleavedPlanes::TAIL_PAD_WORDS + 1);
+    let (a_stride, b_stride) = (words * pa, words * pb);
+    for lb0 in (0..l_dim).step_by(shape.l_cols) {
+        let lbn = shape.l_cols.min(l_dim - lb0);
+        for cb0 in (0..words).step_by(shape.c_words) {
+            let cbn = shape.c_words.min(words - cb0);
+            for r in 0..rows {
+                let b_off = (k0 + r) * b_stride + cb0 * pb;
+                for dl in 0..lbn {
+                    let a_off = (lb0 + dl) * a_stride + cb0 * pa;
+                    // SAFETY: `a_off`/`b_off` index live words; the dot
+                    // reads at most `cbn·pa + lanes − 2` A words past
+                    // `a_off` and `cbn·pb − 1` B words past `b_off`, all
+                    // within `raw()` (tail-pad contract). `kind` was
+                    // checked available by the public `_with` entry.
+                    let v = unsafe {
+                        dot(
+                            kind,
+                            araw.as_ptr().add(a_off),
+                            braw.as_ptr().add(b_off),
+                            cbn,
+                            pa,
+                            pb,
+                            &tab,
+                        )
+                    };
+                    out_block[r * l_dim + lb0 + dl] += v;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one reduction-strip dot product to `kind`'s ISA module.
+///
+/// # Safety
+///
+/// `kind` must be SIMD (not scalar) and available on this host; `a`/`b`
+/// must point at `words` interleaved chunks of `pa`/`pb` plane words
+/// each, with at least `kind.lanes() − 1` readable words past the final
+/// A chunk (the tail-pad contract of `InterleavedPlanes`); `tab` must be
+/// built with `kind.lanes()` lanes for the same `pa`/`pb`.
+#[inline]
+unsafe fn dot(
+    kind: KernelKind,
+    a: *const u64,
+    b: *const u64,
+    words: usize,
+    pa: usize,
+    pb: usize,
+    tab: &StepTables,
+) -> i64 {
+    let _ = (a, b, words, pa, pb, tab);
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => x86::dot_avx2(a, b, words, pa, pb, tab),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx512 => x86::dot_avx512(a, b, words, pa, pb, tab),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => aarch64::dot_neon(a, b, words, pa, pb, tab),
+        _ => unreachable!("no SIMD dot for kernel '{}' on this target", kind.name()),
+    }
+}
+
+/// Vectorized `dense_affine` column block: `out[0..f32_lanes] = bias +
+/// Σ_ci x[ci] · w[ci · stride + ..]`, with one multiply **then** one add
+/// per term (never an FMA), so each lane reproduces the scalar
+/// accumulation's rounding sequence bit for bit.
+///
+/// # Safety
+///
+/// `kind` must be SIMD, available, with `f32_lanes() > 0`; `x` must have
+/// `cin` readable f32s, `w` at least `(cin − 1) · stride + f32_lanes()`,
+/// and `bias`/`out` at least `f32_lanes()`.
+pub(crate) unsafe fn affine_cols(
+    kind: KernelKind,
+    x: *const f32,
+    w: *const f32,
+    stride: usize,
+    cin: usize,
+    bias: *const f32,
+    out: *mut f32,
+) {
+    let _ = (x, w, stride, cin, bias, out);
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 | KernelKind::Avx512 => {
+            x86::affine_cols8_avx(x, w, stride, cin, bias, out)
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => aarch64::affine_cols4_neon(x, w, stride, cin, bias, out),
+        _ => unreachable!("no SIMD affine for kernel '{}' on this target", kind.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+
+    #[test]
+    fn scalar_always_available_and_active_is_available() {
+        assert!(is_available(KernelKind::Scalar));
+        let av = available();
+        assert_eq!(av[0], KernelKind::Scalar);
+        assert!(av.contains(&active()), "active kernel must be available");
+        for k in av {
+            assert!(is_available(k), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for k in [
+            KernelKind::Scalar,
+            KernelKind::Avx2,
+            KernelKind::Avx512,
+            KernelKind::Neon,
+        ] {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!(KernelKind::parse(" AVX2 "), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("mmx"), None);
+        assert_eq!(KernelKind::parse(""), None);
+    }
+
+    #[test]
+    fn block_shape_parses_and_resolves() {
+        assert_eq!(
+            parse_block("128x8"),
+            Some(BlockShape {
+                c_words: 128,
+                l_cols: 8
+            })
+        );
+        assert_eq!(
+            parse_block(" 64 x 4 "),
+            Some(BlockShape {
+                c_words: 64,
+                l_cols: 4
+            })
+        );
+        assert_eq!(parse_block("0x4"), None);
+        assert_eq!(parse_block("abc"), None);
+        let s = block_shape();
+        assert!(s.c_words > 0 && s.l_cols > 0);
+    }
+
+    #[test]
+    fn step_tables_encode_the_weight_grid() {
+        // Every (ba, bb) lane carries shift = ba + bb and the sign of the
+        // step weight; dead lanes past a_bits are excluded.
+        let prec = Precision::new(3, 5);
+        let steps = plane_steps(prec, |_| true);
+        let tab = StepTables::new(&steps, 3, 5, 4);
+        assert_eq!(tab.chunks, 1);
+        for bb in 0..5usize {
+            for ba in 0..4usize {
+                let idx = tab.row(bb, 0) + ba;
+                if ba >= 3 {
+                    assert_eq!(tab.incs[idx], 0, "dead lane must be excluded");
+                    continue;
+                }
+                assert_eq!(tab.incs[idx], u64::MAX);
+                assert_eq!(tab.shifts[idx], (ba + bb) as u64);
+                let w = prec.step_weight(ba as u8, bb as u8);
+                assert_eq!(tab.signs[idx] == u64::MAX, w < 0, "ba={ba} bb={bb}");
+            }
+        }
+        // A masked subset zeroes exactly the excluded steps' lanes.
+        let masked = plane_steps(prec, |t| t % 2 == 0);
+        let mtab = StepTables::new(&masked, 3, 5, 4);
+        let n_inc = mtab.incs.iter().filter(|&&m| m == u64::MAX).count();
+        assert_eq!(n_inc, masked.len());
+    }
+}

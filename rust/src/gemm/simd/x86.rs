@@ -1,0 +1,155 @@
+//! x86-64 dots for the fused bit-serial kernel: AVX2 (`vpand` + the
+//! `vpshufb` nibble-LUT popcount + `vpsllvq` weighted fold) and AVX-512
+//! (native `vpopcntq` when AVX-512-VPOPCNTDQ is present), plus the AVX
+//! `dense_affine` column block. Lane semantics come from
+//! [`super::StepTables`]; pointer and tail-pad contracts are documented
+//! on the dispatchers in `super`.
+
+use std::arch::x86_64::*;
+
+use super::StepTables;
+
+/// Per-u64-lane popcount of a 256-bit vector (AVX2 has no `vpopcntq`):
+/// two `vpshufb` nibble-LUT lookups summed per 8-byte group by `vpsadbw`
+/// — the classic Mula algorithm.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn popcnt_epi64_avx2(v: __m256i) -> __m256i {
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3,
+        3, 4,
+    );
+    let low = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+    let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// AVX2 weighted plane dot over one reduction strip: 4 A-plane lanes per
+/// vector, one broadcast per B-plane word, per-lane
+/// `(popcount & inc) << shift` folded with the sign trick
+/// `(x ^ sign) − sign` into i64 lane accumulators; one horizontal
+/// reduction per strip.
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::dot` and has verified AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_avx2(
+    a: *const u64,
+    b: *const u64,
+    words: usize,
+    pa: usize,
+    pb: usize,
+    tab: &StepTables,
+) -> i64 {
+    debug_assert_eq!(tab.lanes, 4);
+    let chunks = tab.chunks;
+    debug_assert!(chunks <= 2 && pb <= 8);
+    // Hoist the lane tables out of the strip loop (loop-invariant).
+    let mut shv = [_mm256_setzero_si256(); 16];
+    let mut sgv = [_mm256_setzero_si256(); 16];
+    let mut inv = [_mm256_setzero_si256(); 16];
+    for bp in 0..pb {
+        for ch in 0..chunks {
+            let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
+            shv[i] = _mm256_loadu_si256(tab.shifts.as_ptr().add(r) as *const __m256i);
+            sgv[i] = _mm256_loadu_si256(tab.signs.as_ptr().add(r) as *const __m256i);
+            inv[i] = _mm256_loadu_si256(tab.incs.as_ptr().add(r) as *const __m256i);
+        }
+    }
+    let mut acc = [_mm256_setzero_si256(); 2];
+    for w in 0..words {
+        let aw = a.add(w * pa);
+        let bw = b.add(w * pb);
+        for bp in 0..pb {
+            let bv = _mm256_set1_epi64x(*bw.add(bp) as i64);
+            for ch in 0..chunks {
+                let i = bp * chunks + ch;
+                let av = _mm256_loadu_si256(aw.add(ch * 4) as *const __m256i);
+                let pop = popcnt_epi64_avx2(_mm256_and_si256(av, bv));
+                let v = _mm256_sllv_epi64(_mm256_and_si256(pop, inv[i]), shv[i]);
+                let v = _mm256_sub_epi64(_mm256_xor_si256(v, sgv[i]), sgv[i]);
+                acc[ch] = _mm256_add_epi64(acc[ch], v);
+            }
+        }
+    }
+    let mut lanes = [0i64; 4];
+    let mut total = 0i64;
+    for &acc_ch in acc.iter().take(chunks) {
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc_ch);
+        total += lanes.iter().sum::<i64>();
+    }
+    total
+}
+
+/// AVX-512 weighted plane dot: all (up to) 8 A-planes of a chunk in one
+/// vector, native `vpopcntq`, single reducing accumulator.
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::dot` and has verified
+/// AVX-512F + AVX-512-VPOPCNTDQ.
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+pub(crate) unsafe fn dot_avx512(
+    a: *const u64,
+    b: *const u64,
+    words: usize,
+    pa: usize,
+    pb: usize,
+    tab: &StepTables,
+) -> i64 {
+    debug_assert_eq!(tab.lanes, 8);
+    debug_assert_eq!(tab.chunks, 1);
+    debug_assert!(pb <= 8);
+    let mut shv = [_mm512_setzero_si512(); 8];
+    let mut sgv = [_mm512_setzero_si512(); 8];
+    let mut inv = [_mm512_setzero_si512(); 8];
+    for bp in 0..pb {
+        let r = tab.row(bp, 0);
+        shv[bp] = _mm512_loadu_epi64(tab.shifts.as_ptr().add(r) as *const i64);
+        sgv[bp] = _mm512_loadu_epi64(tab.signs.as_ptr().add(r) as *const i64);
+        inv[bp] = _mm512_loadu_epi64(tab.incs.as_ptr().add(r) as *const i64);
+    }
+    let mut acc = _mm512_setzero_si512();
+    for w in 0..words {
+        let av = _mm512_loadu_epi64(a.add(w * pa) as *const i64);
+        let bw = b.add(w * pb);
+        for bp in 0..pb {
+            let bv = _mm512_set1_epi64(*bw.add(bp) as i64);
+            let pop = _mm512_popcnt_epi64(_mm512_and_si512(av, bv));
+            let v = _mm512_sllv_epi64(_mm512_and_si512(pop, inv[bp]), shv[bp]);
+            let v = _mm512_sub_epi64(_mm512_xor_si512(v, sgv[bp]), sgv[bp]);
+            acc = _mm512_add_epi64(acc, v);
+        }
+    }
+    _mm512_reduce_add_epi64(acc)
+}
+
+/// AVX `dense_affine` column block over 8 output classes: broadcast each
+/// input, multiply by the 8-wide weight row, then add — two separate
+/// roundings per term, exactly like the scalar `acc += x * w`, so every
+/// lane is bit-identical to the scalar loop.
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::affine_cols` and has verified
+/// AVX2 (which implies AVX).
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn affine_cols8_avx(
+    x: *const f32,
+    w: *const f32,
+    stride: usize,
+    cin: usize,
+    bias: *const f32,
+    out: *mut f32,
+) {
+    let mut acc = _mm256_loadu_ps(bias);
+    for ci in 0..cin {
+        let xv = _mm256_set1_ps(*x.add(ci));
+        let wv = _mm256_loadu_ps(w.add(ci * stride));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+    }
+    _mm256_storeu_ps(out, acc);
+}

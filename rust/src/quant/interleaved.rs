@@ -14,6 +14,23 @@
 //! The bit content is identical to [`PackedPlanes`] (same word-wise pack,
 //! LSB = lowest `c`, zero padding past `C`); the two layouts convert
 //! losslessly in either direction (property-tested below).
+//!
+//! ## Alignment / padding contract (what the SIMD kernels rely on)
+//!
+//! * The backing store is one contiguous `Vec<u64>`, so every chunk and
+//!   every plane word is 8-byte aligned; the vector kernels use unaligned
+//!   loads (`loadu` / `vld1q`) and need nothing stronger.
+//! * [`InterleavedPlanes::TAIL_PAD_WORDS`] zero words are appended past
+//!   the last logical word. A vector load of `LANES` plane words that
+//!   starts at the final chunk of the final vector may read up to
+//!   `LANES − 1` words past the logical end (`LANES ≤ 8`); the pad keeps
+//!   those reads inside the allocation, and because pad words are zero
+//!   they contribute nothing to any AND+popcount.
+//! * Padding — both the tail pad and the unused high bits of a partial
+//!   final chunk — is always zero. [`InterleavedPlanes::zeroed`] zeroes
+//!   everything up front and the packing paths only OR bits in; the
+//!   reuse path ([`InterleavedPlanes::repack_a`]) re-zeroes before
+//!   packing. Asserted by the layout tests below.
 
 use super::{pack_chunk, PackedPlanes};
 
@@ -34,7 +51,13 @@ pub struct InterleavedPlanes {
 }
 
 impl InterleavedPlanes {
-    /// All-zero planes.
+    /// Zero words appended past the last logical word so the SIMD
+    /// kernels' widest partial-chunk load (8 lanes → up to 7 words of
+    /// overread) stays inside the allocation. Always zero; see the
+    /// layout contract in the module docs.
+    pub const TAIL_PAD_WORDS: usize = 7;
+
+    /// All-zero planes (including the tail pad).
     pub fn zeroed(bits: u8, n_vecs: usize, c_dim: usize) -> Self {
         let words = c_dim.div_ceil(64);
         Self {
@@ -42,7 +65,7 @@ impl InterleavedPlanes {
             n_vecs,
             c_dim,
             words,
-            data: vec![0u64; n_vecs * words * bits as usize],
+            data: vec![0u64; n_vecs * words * bits as usize + Self::TAIL_PAD_WORDS],
         }
     }
 
@@ -56,18 +79,43 @@ impl InterleavedPlanes {
     /// [`PackedPlanes::from_a_matrix`], different store layout, so the
     /// executor's scratch arena never materializes the plane-major form.
     pub fn from_a_matrix(a: &[i32], c_dim: usize, l_dim: usize, bits: u8) -> Self {
-        assert_eq!(a.len(), c_dim * l_dim);
         let mut p = Self::zeroed(bits, l_dim, c_dim);
+        p.fill_a(a);
+        p
+    }
+
+    /// Re-pack an activation matrix into this value, reusing its
+    /// allocation — the executor's per-layer scratch path. Equivalent to
+    /// `*self = Self::from_a_matrix(a, c_dim, l_dim, bits)` without the
+    /// allocation churn (property-tested below, including shape changes
+    /// and dirty prior contents).
+    pub fn repack_a(&mut self, a: &[i32], c_dim: usize, l_dim: usize, bits: u8) {
+        self.bits = bits;
+        self.n_vecs = l_dim;
+        self.c_dim = c_dim;
+        self.words = c_dim.div_ceil(64);
+        // clear + resize zeroes every retained word (stale bits from a
+        // previous, larger layer must not survive), keeping capacity.
+        self.data.clear();
+        self.data
+            .resize(l_dim * self.words * bits as usize + Self::TAIL_PAD_WORDS, 0);
+        self.fill_a(a);
+    }
+
+    /// The shared `A[C, L]` packing loop of [`Self::from_a_matrix`] /
+    /// [`Self::repack_a`]; `self` must be correctly shaped and all-zero.
+    fn fill_a(&mut self, a: &[i32]) {
+        assert_eq!(a.len(), self.c_dim * self.n_vecs);
+        let (c_dim, l_dim, bits) = (self.c_dim, self.n_vecs, self.bits);
         for l in 0..l_dim {
-            for w in 0..p.words {
+            for w in 0..self.words {
                 let c0 = w * 64;
                 let cn = 64.min(c_dim - c0);
                 let acc = pack_chunk((0..cn).map(|dc| a[(c0 + dc) * l_dim + l]), bits);
-                let base = p.chunk_index(l, w);
-                p.data[base..base + bits as usize].copy_from_slice(&acc[..bits as usize]);
+                let base = self.chunk_index(l, w);
+                self.data[base..base + bits as usize].copy_from_slice(&acc[..bits as usize]);
             }
         }
-        p
     }
 
     /// Pack a weight matrix `B[K, C]` (row-major, K rows) directly into
@@ -135,9 +183,25 @@ impl InterleavedPlanes {
         ((w >> (c % 64)) & 1) as u32
     }
 
-    /// Total memory footprint of the packed planes in bytes.
+    /// Logical memory footprint of the packed planes in bytes (excluding
+    /// the constant tail pad).
     pub fn nbytes(&self) -> usize {
-        self.data.len() * 8
+        (self.data.len() - Self::TAIL_PAD_WORDS) * 8
+    }
+
+    /// The full padded backing store — **including** the
+    /// [`Self::TAIL_PAD_WORDS`] trailing zero words. The SIMD kernels
+    /// derive their pointers from this slice rather than from
+    /// [`Self::vec_words`], so a partial-chunk vector load that runs past
+    /// a vector's last plane word stays inside one live borrow of one
+    /// allocation (in bounds and Miri-clean by construction).
+    #[inline]
+    pub(crate) fn raw(&self) -> &[u64] {
+        debug_assert_eq!(
+            self.data.len(),
+            self.n_vecs * self.words * self.bits as usize + Self::TAIL_PAD_WORDS
+        );
+        &self.data
     }
 }
 
@@ -221,5 +285,39 @@ mod tests {
         assert_eq!(z.nbytes(), 4 * 2 * 3 * 8);
         assert_eq!(z.vec_words(3).len(), 6);
         assert!(z.vec_words(0).iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn tail_pad_is_present_and_zero() {
+        let mut rng = Prng::new(11);
+        let (c, l, bits) = (130, 3, 5);
+        let a = rand_mat(&mut rng, c * l, bits);
+        let p = InterleavedPlanes::from_a_matrix(&a, c, l, bits);
+        let raw = p.raw();
+        let logical = p.n_vecs * p.words * p.bits as usize;
+        assert_eq!(raw.len(), logical + InterleavedPlanes::TAIL_PAD_WORDS);
+        assert!(raw[logical..].iter().all(|&w| w == 0), "pad must be zero");
+        // Partial final chunk: bits past C are zero too.
+        for plane in 0..bits {
+            for v in 0..l {
+                let last = p.vec_words(v)[2 * bits as usize + plane as usize];
+                assert_eq!(last >> (c - 128), 0, "high bits past C must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn repack_matches_fresh_pack_across_shape_changes() {
+        check("repack_a == from_a_matrix", 40, |rng| {
+            let mut buf = InterleavedPlanes::zeroed(2, 0, 0);
+            for _ in 0..3 {
+                let bits = rng.int_in(2, 8) as u8;
+                let (c, l) = (rng.int_in(1, 200) as usize, rng.int_in(1, 9) as usize);
+                let a = rand_mat(rng, c * l, bits);
+                buf.repack_a(&a, c, l, bits);
+                let fresh = InterleavedPlanes::from_a_matrix(&a, c, l, bits);
+                assert_eq!(buf, fresh, "c={c} l={l} bits={bits}");
+            }
+        });
     }
 }
