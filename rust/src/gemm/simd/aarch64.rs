@@ -28,42 +28,50 @@ pub(crate) unsafe fn dot_neon(
     debug_assert_eq!(tab.lanes, 2);
     let chunks = tab.chunks;
     debug_assert!(chunks <= 4 && pb <= 8);
-    // Hoist the lane tables out of the strip loop (loop-invariant).
-    let mut shv = [vdupq_n_s64(0); 32];
-    let mut sgv = [vdupq_n_s64(0); 32];
-    let mut inv = [vdupq_n_u64(0); 32];
-    for bp in 0..pb {
-        for ch in 0..chunks {
-            let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
-            shv[i] = vld1q_s64(tab.shifts.as_ptr().add(r) as *const i64);
-            sgv[i] = vld1q_s64(tab.signs.as_ptr().add(r) as *const i64);
-            inv[i] = vld1q_u64(tab.incs.as_ptr().add(r));
-        }
-    }
-    let mut acc = [vdupq_n_s64(0); 4];
-    for w in 0..words {
-        let aw = a.add(w * pa);
-        let bw = b.add(w * pb);
+    // SAFETY: the `super::dot` contract the caller upholds.
+    // - Provenance/bounds: `a` is valid for `words * pa` u64 reads and `b`
+    //   for `words * pb`; every `aw.add(ch * 2)` 2-lane load stays inside
+    //   the plane-interleaved buffer because its `TAIL_PAD_WORDS` zeroed
+    //   tail covers the `chunks * 2 >= pa` lane overread of the last word.
+    // - Table bounds: `tab.row(bp, ch)` indexes `shifts`/`signs`/`incs`
+    //   rows padded to 2 u64 lanes, so each 128-bit load is in bounds.
+    unsafe {
+        // Hoist the lane tables out of the strip loop (loop-invariant).
+        let mut shv = [vdupq_n_s64(0); 32];
+        let mut sgv = [vdupq_n_s64(0); 32];
+        let mut inv = [vdupq_n_u64(0); 32];
         for bp in 0..pb {
-            let bv = vdupq_n_u64(*bw.add(bp));
             for ch in 0..chunks {
-                let i = bp * chunks + ch;
-                let av = vld1q_u64(aw.add(ch * 2));
-                let anded = vandq_u64(av, bv);
-                let pop = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(
-                    anded,
-                )))));
-                let v = vreinterpretq_s64_u64(vshlq_u64(vandq_u64(pop, inv[i]), shv[i]));
-                let v = vsubq_s64(veorq_s64(v, sgv[i]), sgv[i]);
-                acc[ch] = vaddq_s64(acc[ch], v);
+                let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
+                shv[i] = vld1q_s64(tab.shifts.as_ptr().add(r).cast());
+                sgv[i] = vld1q_s64(tab.signs.as_ptr().add(r).cast());
+                inv[i] = vld1q_u64(tab.incs.as_ptr().add(r));
             }
         }
+        let mut acc = [vdupq_n_s64(0); 4];
+        for w in 0..words {
+            let aw = a.add(w * pa);
+            let bw = b.add(w * pb);
+            for bp in 0..pb {
+                let bv = vdupq_n_u64(*bw.add(bp));
+                for ch in 0..chunks {
+                    let i = bp * chunks + ch;
+                    let av = vld1q_u64(aw.add(ch * 2));
+                    let anded = vandq_u64(av, bv);
+                    let bytes = vcntq_u8(vreinterpretq_u8_u64(anded));
+                    let pop = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes)));
+                    let v = vreinterpretq_s64_u64(vshlq_u64(vandq_u64(pop, inv[i]), shv[i]));
+                    let v = vsubq_s64(veorq_s64(v, sgv[i]), sgv[i]);
+                    acc[ch] = vaddq_s64(acc[ch], v);
+                }
+            }
+        }
+        let mut total = 0i64;
+        for &acc_ch in acc.iter().take(chunks) {
+            total += vaddvq_s64(acc_ch);
+        }
+        total
     }
-    let mut total = 0i64;
-    for &acc_ch in acc.iter().take(chunks) {
-        total += vaddvq_s64(acc_ch);
-    }
-    total
 }
 
 /// NEON `dense_affine` column block over 4 output classes: broadcast each
@@ -84,11 +92,17 @@ pub(crate) unsafe fn affine_cols4_neon(
     bias: *const f32,
     out: *mut f32,
 ) {
-    let mut acc = vld1q_f32(bias);
-    for ci in 0..cin {
-        let xv = vdupq_n_f32(*x.add(ci));
-        let wv = vld1q_f32(w.add(ci * stride));
-        acc = vaddq_f32(acc, vmulq_f32(xv, wv));
+    // SAFETY: the `super::affine_cols` contract the caller upholds:
+    // `x` is valid for `cin` f32 reads, `bias` and `out` for 4 each, and
+    // `w.add(ci * stride)` for 4 reads at every `ci < cin` — the caller
+    // only takes this path when a full 4-column block is in bounds.
+    unsafe {
+        let mut acc = vld1q_f32(bias);
+        for ci in 0..cin {
+            let xv = vdupq_n_f32(*x.add(ci));
+            let wv = vld1q_f32(w.add(ci * stride));
+            acc = vaddq_f32(acc, vmulq_f32(xv, wv));
+        }
+        vst1q_f32(out, acc);
     }
-    vst1q_f32(out, acc);
 }

@@ -415,14 +415,20 @@ unsafe fn dot(
     tab: &StepTables,
 ) -> i64 {
     let _ = (a, b, words, pa, pb, tab);
-    match kind {
-        #[cfg(target_arch = "x86_64")]
-        KernelKind::Avx2 => x86::dot_avx2(a, b, words, pa, pb, tab),
-        #[cfg(target_arch = "x86_64")]
-        KernelKind::Avx512 => x86::dot_avx512(a, b, words, pa, pb, tab),
-        #[cfg(target_arch = "aarch64")]
-        KernelKind::Neon => aarch64::dot_neon(a, b, words, pa, pb, tab),
-        _ => unreachable!("no SIMD dot for kernel '{}' on this target", kind.name()),
+    // SAFETY: this fn's contract is forwarded verbatim to the ISA callee —
+    // the caller guarantees `kind` is available on this host (so the
+    // callee's `target_feature` precondition holds) and that the pointer,
+    // tail-pad and `tab` obligations above are met.
+    unsafe {
+        match kind {
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => x86::dot_avx2(a, b, words, pa, pb, tab),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx512 => x86::dot_avx512(a, b, words, pa, pb, tab),
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => aarch64::dot_neon(a, b, words, pa, pb, tab),
+            _ => unreachable!("no SIMD dot for kernel '{}' on this target", kind.name()),
+        }
     }
 }
 
@@ -446,14 +452,20 @@ pub(crate) unsafe fn affine_cols(
     out: *mut f32,
 ) {
     let _ = (x, w, stride, cin, bias, out);
-    match kind {
-        #[cfg(target_arch = "x86_64")]
-        KernelKind::Avx2 | KernelKind::Avx512 => {
-            x86::affine_cols8_avx(x, w, stride, cin, bias, out)
+    // SAFETY: this fn's contract is forwarded verbatim to the ISA callee —
+    // the caller guarantees `kind` is available with `f32_lanes() > 0`
+    // (so the callee's `target_feature` precondition holds) and that
+    // `x`/`w`/`bias`/`out` cover the lane counts documented above.
+    unsafe {
+        match kind {
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 | KernelKind::Avx512 => {
+                x86::affine_cols8_avx(x, w, stride, cin, bias, out)
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => aarch64::affine_cols4_neon(x, w, stride, cin, bias, out),
+            _ => unreachable!("no SIMD affine for kernel '{}' on this target", kind.name()),
         }
-        #[cfg(target_arch = "aarch64")]
-        KernelKind::Neon => aarch64::affine_cols4_neon(x, w, stride, cin, bias, out),
-        _ => unreachable!("no SIMD affine for kernel '{}' on this target", kind.name()),
     }
 }
 

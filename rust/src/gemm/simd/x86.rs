@@ -11,10 +11,12 @@ use super::StepTables;
 
 /// Per-u64-lane popcount of a 256-bit vector (AVX2 has no `vpopcntq`):
 /// two `vpshufb` nibble-LUT lookups summed per 8-byte group by `vpsadbw`
-/// — the classic Mula algorithm.
+/// — the classic Mula algorithm. Safe fn: every intrinsic here is pure
+/// register arithmetic, unsafe only without AVX2 — which the
+/// `target_feature` attribute guarantees to the body.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn popcnt_epi64_avx2(v: __m256i) -> __m256i {
+fn popcnt_epi64_avx2(v: __m256i) -> __m256i {
     let lut = _mm256_setr_epi8(
         0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3,
         3, 4,
@@ -47,41 +49,51 @@ pub(crate) unsafe fn dot_avx2(
     debug_assert_eq!(tab.lanes, 4);
     let chunks = tab.chunks;
     debug_assert!(chunks <= 2 && pb <= 8);
-    // Hoist the lane tables out of the strip loop (loop-invariant).
-    let mut shv = [_mm256_setzero_si256(); 16];
-    let mut sgv = [_mm256_setzero_si256(); 16];
-    let mut inv = [_mm256_setzero_si256(); 16];
-    for bp in 0..pb {
-        for ch in 0..chunks {
-            let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
-            shv[i] = _mm256_loadu_si256(tab.shifts.as_ptr().add(r) as *const __m256i);
-            sgv[i] = _mm256_loadu_si256(tab.signs.as_ptr().add(r) as *const __m256i);
-            inv[i] = _mm256_loadu_si256(tab.incs.as_ptr().add(r) as *const __m256i);
-        }
-    }
-    let mut acc = [_mm256_setzero_si256(); 2];
-    for w in 0..words {
-        let aw = a.add(w * pa);
-        let bw = b.add(w * pb);
+    // SAFETY: the `super::dot` contract the caller upholds.
+    // - Provenance/bounds: `a` is valid for `words * pa` u64 reads and `b`
+    //   for `words * pb`; every `aw.add(ch * 4)` 4-lane load stays inside
+    //   the plane-interleaved buffer because its `TAIL_PAD_WORDS` zeroed
+    //   tail covers the `chunks * 4 >= pa` lane overread of the last word.
+    // - Table bounds: `tab.row(bp, ch)` indexes `shifts`/`signs`/`incs`
+    //   rows padded to 4 i64 lanes, so each 256-bit load is in bounds.
+    // - `lanes` is a local `[i64; 4]`, exactly one 256-bit store wide.
+    unsafe {
+        // Hoist the lane tables out of the strip loop (loop-invariant).
+        let mut shv = [_mm256_setzero_si256(); 16];
+        let mut sgv = [_mm256_setzero_si256(); 16];
+        let mut inv = [_mm256_setzero_si256(); 16];
         for bp in 0..pb {
-            let bv = _mm256_set1_epi64x(*bw.add(bp) as i64);
             for ch in 0..chunks {
-                let i = bp * chunks + ch;
-                let av = _mm256_loadu_si256(aw.add(ch * 4) as *const __m256i);
-                let pop = popcnt_epi64_avx2(_mm256_and_si256(av, bv));
-                let v = _mm256_sllv_epi64(_mm256_and_si256(pop, inv[i]), shv[i]);
-                let v = _mm256_sub_epi64(_mm256_xor_si256(v, sgv[i]), sgv[i]);
-                acc[ch] = _mm256_add_epi64(acc[ch], v);
+                let (i, r) = (bp * chunks + ch, tab.row(bp, ch));
+                shv[i] = _mm256_loadu_si256(tab.shifts.as_ptr().add(r).cast());
+                sgv[i] = _mm256_loadu_si256(tab.signs.as_ptr().add(r).cast());
+                inv[i] = _mm256_loadu_si256(tab.incs.as_ptr().add(r).cast());
             }
         }
+        let mut acc = [_mm256_setzero_si256(); 2];
+        for w in 0..words {
+            let aw = a.add(w * pa);
+            let bw = b.add(w * pb);
+            for bp in 0..pb {
+                let bv = _mm256_set1_epi64x(*bw.add(bp) as i64);
+                for ch in 0..chunks {
+                    let i = bp * chunks + ch;
+                    let av = _mm256_loadu_si256(aw.add(ch * 4).cast());
+                    let pop = popcnt_epi64_avx2(_mm256_and_si256(av, bv));
+                    let v = _mm256_sllv_epi64(_mm256_and_si256(pop, inv[i]), shv[i]);
+                    let v = _mm256_sub_epi64(_mm256_xor_si256(v, sgv[i]), sgv[i]);
+                    acc[ch] = _mm256_add_epi64(acc[ch], v);
+                }
+            }
+        }
+        let mut lanes = [0i64; 4];
+        let mut total = 0i64;
+        for &acc_ch in acc.iter().take(chunks) {
+            _mm256_storeu_si256(lanes.as_mut_ptr().cast(), acc_ch);
+            total += lanes.iter().sum::<i64>();
+        }
+        total
     }
-    let mut lanes = [0i64; 4];
-    let mut total = 0i64;
-    for &acc_ch in acc.iter().take(chunks) {
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc_ch);
-        total += lanes.iter().sum::<i64>();
-    }
-    total
 }
 
 /// AVX-512 weighted plane dot: all (up to) 8 A-planes of a chunk in one
@@ -103,28 +115,37 @@ pub(crate) unsafe fn dot_avx512(
     debug_assert_eq!(tab.lanes, 8);
     debug_assert_eq!(tab.chunks, 1);
     debug_assert!(pb <= 8);
-    let mut shv = [_mm512_setzero_si512(); 8];
-    let mut sgv = [_mm512_setzero_si512(); 8];
-    let mut inv = [_mm512_setzero_si512(); 8];
-    for bp in 0..pb {
-        let r = tab.row(bp, 0);
-        shv[bp] = _mm512_loadu_epi64(tab.shifts.as_ptr().add(r) as *const i64);
-        sgv[bp] = _mm512_loadu_epi64(tab.signs.as_ptr().add(r) as *const i64);
-        inv[bp] = _mm512_loadu_epi64(tab.incs.as_ptr().add(r) as *const i64);
-    }
-    let mut acc = _mm512_setzero_si512();
-    for w in 0..words {
-        let av = _mm512_loadu_epi64(a.add(w * pa) as *const i64);
-        let bw = b.add(w * pb);
+    // SAFETY: the `super::dot` contract the caller upholds.
+    // - Provenance/bounds: `a` is valid for `words * pa` u64 reads and `b`
+    //   for `words * pb`; the single 8-lane load per word stays inside the
+    //   plane-interleaved buffer because its `TAIL_PAD_WORDS` zeroed tail
+    //   covers the `8 >= pa` lane overread of the last word.
+    // - Table bounds: `tab.row(bp, 0)` indexes `shifts`/`signs`/`incs`
+    //   rows padded to 8 i64 lanes, so each 512-bit load is in bounds.
+    unsafe {
+        let mut shv = [_mm512_setzero_si512(); 8];
+        let mut sgv = [_mm512_setzero_si512(); 8];
+        let mut inv = [_mm512_setzero_si512(); 8];
         for bp in 0..pb {
-            let bv = _mm512_set1_epi64(*bw.add(bp) as i64);
-            let pop = _mm512_popcnt_epi64(_mm512_and_si512(av, bv));
-            let v = _mm512_sllv_epi64(_mm512_and_si512(pop, inv[bp]), shv[bp]);
-            let v = _mm512_sub_epi64(_mm512_xor_si512(v, sgv[bp]), sgv[bp]);
-            acc = _mm512_add_epi64(acc, v);
+            let r = tab.row(bp, 0);
+            shv[bp] = _mm512_loadu_epi64(tab.shifts.as_ptr().add(r).cast());
+            sgv[bp] = _mm512_loadu_epi64(tab.signs.as_ptr().add(r).cast());
+            inv[bp] = _mm512_loadu_epi64(tab.incs.as_ptr().add(r).cast());
         }
+        let mut acc = _mm512_setzero_si512();
+        for w in 0..words {
+            let av = _mm512_loadu_epi64(a.add(w * pa).cast());
+            let bw = b.add(w * pb);
+            for bp in 0..pb {
+                let bv = _mm512_set1_epi64(*bw.add(bp) as i64);
+                let pop = _mm512_popcnt_epi64(_mm512_and_si512(av, bv));
+                let v = _mm512_sllv_epi64(_mm512_and_si512(pop, inv[bp]), shv[bp]);
+                let v = _mm512_sub_epi64(_mm512_xor_si512(v, sgv[bp]), sgv[bp]);
+                acc = _mm512_add_epi64(acc, v);
+            }
+        }
+        _mm512_reduce_add_epi64(acc)
     }
-    _mm512_reduce_add_epi64(acc)
 }
 
 /// AVX `dense_affine` column block over 8 output classes: broadcast each
@@ -145,11 +166,17 @@ pub(crate) unsafe fn affine_cols8_avx(
     bias: *const f32,
     out: *mut f32,
 ) {
-    let mut acc = _mm256_loadu_ps(bias);
-    for ci in 0..cin {
-        let xv = _mm256_set1_ps(*x.add(ci));
-        let wv = _mm256_loadu_ps(w.add(ci * stride));
-        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+    // SAFETY: the `super::affine_cols` contract the caller upholds:
+    // `x` is valid for `cin` f32 reads, `bias` and `out` for 8 each, and
+    // `w.add(ci * stride)` for 8 reads at every `ci < cin` — the caller
+    // only takes this path when a full 8-column block is in bounds.
+    unsafe {
+        let mut acc = _mm256_loadu_ps(bias);
+        for ci in 0..cin {
+            let xv = _mm256_set1_ps(*x.add(ci));
+            let wv = _mm256_loadu_ps(w.add(ci * stride));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+        }
+        _mm256_storeu_ps(out, acc);
     }
-    _mm256_storeu_ps(out, acc);
 }

@@ -43,6 +43,12 @@
 //! AOT-lowers the L1/L2 kernels to HLO text and trains the benchmark
 //! weights; the binary in `rust/src/main.rs` is self-contained afterwards.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification, even inside `unsafe fn` bodies —
+// enforced here, by clippy's `undocumented_unsafe_blocks` in CI, and by
+// `gavina-xtask check` (rules `unsafe-doc` / `unsafe-scope`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod arch;
 pub mod baseline;
 pub mod config;

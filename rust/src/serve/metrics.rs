@@ -1,6 +1,11 @@
 //! Per-tier serving metrics: lock-free counters, a bounded latency
 //! reservoir, and the plain-data [`MetricsSnapshot`] the public API hands
 //! out.
+//!
+//! Every atomic in this module is a monotonic statistics counter that is
+//! only ever read to build a snapshot — no control flow or data is
+//! synchronized on these values, so relaxed ordering is correct
+//! file-wide. gavina-lint: allow(relaxed-order)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

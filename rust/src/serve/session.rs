@@ -36,6 +36,8 @@ impl Admission {
     /// Associated fn (not a method): the permit must hold its own
     /// `Arc<Admission>` so release-on-drop outlives any one holder.
     pub(crate) fn try_acquire(this: &Arc<Self>) -> Option<Permit> {
+        // Relaxed: only the initial CAS guess — a stale read is corrected
+        // by the compare-exchange loop. gavina-lint: allow(relaxed-order)
         let mut cur = this.available.load(Ordering::Relaxed);
         loop {
             if cur == 0 {
@@ -45,6 +47,8 @@ impl Admission {
                 cur,
                 cur - 1,
                 Ordering::AcqRel,
+                // Failure load only re-seeds the retry; no data is
+                // published on it. gavina-lint: allow(relaxed-order)
                 Ordering::Relaxed,
             ) {
                 Ok(_) => return Some(Permit(Arc::clone(this))),
@@ -63,8 +67,10 @@ impl Admission {
 
     /// Accepted-but-unanswered requests right now.
     pub(crate) fn in_flight(&self) -> usize {
-        self.capacity
-            .saturating_sub(self.available.load(Ordering::Relaxed))
+        // Relaxed: monitoring snapshot only — nothing is synchronized on
+        // this read. gavina-lint: allow(relaxed-order)
+        let available = self.available.load(Ordering::Relaxed);
+        self.capacity.saturating_sub(available)
     }
 
     /// `in_flight / capacity` — the governor's load signal.
@@ -193,6 +199,8 @@ impl Session {
         let permit = match Admission::try_acquire(&self.shared.admission) {
             Some(p) => p,
             None => {
+                // Relaxed: monotonic statistics counter, read only for
+                // reporting. gavina-lint: allow(relaxed-order)
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(GavinaError::Overloaded {
                     capacity: self.shared.admission.capacity(),
@@ -274,6 +282,9 @@ impl Ticket {
     /// it is answered with [`GavinaError::Cancelled`] instead of running.
     /// Requests already inside a batch complete normally.
     pub fn cancel(&self) {
+        // Relaxed: best-effort flag — a batch that misses the store runs
+        // the request normally, which the cancellation contract allows.
+        // gavina-lint: allow(relaxed-order)
         self.cancelled.store(true, Ordering::Relaxed);
     }
 }
@@ -366,6 +377,42 @@ mod tests {
         drop(p2);
         drop(p3);
         assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
+    fn admission_survives_concurrent_acquire_release_storms() {
+        // Hammer the compare-exchange loop from many threads (this also
+        // runs under the CI ThreadSanitizer job): capacity must never be
+        // oversubscribed while permits churn, and every dropped permit
+        // must return its slot.
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 500;
+        let adm = Arc::new(Admission::new(3));
+        let granted = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let adm = Arc::clone(&adm);
+            let granted = Arc::clone(&granted);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..ROUNDS {
+                    let Some(permit) = Admission::try_acquire(&adm) else {
+                        std::hint::spin_loop();
+                        continue;
+                    };
+                    granted.fetch_add(1, Ordering::SeqCst);
+                    // We hold one permit, so the gate is neither empty
+                    // nor past its capacity.
+                    let seen = adm.in_flight();
+                    assert!((1..=adm.capacity()).contains(&seen));
+                    drop(permit);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(adm.in_flight(), 0, "every permit must release on drop");
+        assert!(granted.load(Ordering::SeqCst) > 0, "some acquires must win");
     }
 
     #[test]

@@ -115,6 +115,8 @@ where
 
 #[cfg(test)]
 mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
     use super::*;
     use crate::util::Prng;
 
@@ -191,6 +193,59 @@ mod tests {
             span.fill(7);
         });
         assert_eq!(one, vec![7; 6]);
+    }
+
+    #[test]
+    fn map_order_is_deterministic_under_jittered_interleavings() {
+        // Loom-style interleaving stress (this also runs under the CI
+        // ThreadSanitizer job): a spin delay keyed off the item value and
+        // the round makes workers finish in a different real-time order
+        // every run, yet the join-in-spawn-order reduction must keep
+        // every run byte-equal to the serial map.
+        let items: Vec<u64> = (0..97).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x.wrapping_mul(0x9E37)).collect();
+        for round in 0..16u64 {
+            let completions = AtomicUsize::new(0);
+            let out = parallel_map(&items, 8, |_, &x| {
+                let spins = (x.wrapping_mul(round + 1) % 64) * 50;
+                for _ in 0..spins {
+                    std::hint::spin_loop();
+                }
+                completions.fetch_add(1, Ordering::SeqCst);
+                x.wrapping_mul(0x9E37)
+            });
+            assert_eq!(completions.load(Ordering::SeqCst), items.len());
+            assert_eq!(out, serial, "round={round}");
+        }
+    }
+
+    #[test]
+    fn spans_race_stress_writes_every_cell_exactly_once() {
+        // Disjoint-ownership stress (this also runs under the CI
+        // ThreadSanitizer job): every worker bumps a shared counter and
+        // increments each cell of its span under jittered timing. After
+        // the scope joins, each cell must have been written exactly once
+        // and the counter must equal the span count — no lost updates,
+        // no overlapping spans.
+        let align = 8;
+        let rows = 61;
+        for round in 0..16usize {
+            let spans_run = AtomicUsize::new(0);
+            let mut data = vec![0u32; rows * align];
+            parallel_spans_mut(&mut data, align, 8, |start, span| {
+                let spins = (start.wrapping_mul(round + 1) % 64) * 50;
+                for _ in 0..spins {
+                    std::hint::spin_loop();
+                }
+                spans_run.fetch_add(1, Ordering::SeqCst);
+                for v in span.iter_mut() {
+                    *v += 1;
+                }
+            });
+            // 61 rows over 8 workers -> ceil(61 / 8) = 8 spans.
+            assert_eq!(spans_run.load(Ordering::SeqCst), 8);
+            assert!(data.iter().all(|&v| v == 1), "each cell exactly once");
+        }
     }
 
     #[test]

@@ -1,0 +1,747 @@
+//! Repo-contract static analysis for the GAVINA crate: `gavina-xtask check`.
+//!
+//! Several of the crate's core invariants — bit-exactness of the SIMD
+//! kernels (never an FMA, scalar ground truth), the SAFETY story of every
+//! `unsafe` site, the std-only dependency policy, the concurrency
+//! discipline of the serving layer — are contracts clippy cannot express.
+//! This crate parses the sources line-wise (comments and string literals
+//! separated from code, so prose never trips a code rule) and enforces
+//! them as machine-checked rules with `file:line` diagnostics.
+//!
+//! | rule id | contract |
+//! |---|---|
+//! | `unsafe-doc` | every line introducing `unsafe` carries a `SAFETY:` comment |
+//! | `unsafe-scope` | `unsafe` only in the audited module allowlist |
+//! | `no-fma` | no `mul_add` / FMA intrinsics anywhere (bit-exactness) |
+//! | `float-accum` | float intrinsics in `gemm/simd/` ISA files only in `affine*` fns |
+//! | `feature-guard` | every `#[target_feature]` feature is runtime-detected in the dispatch |
+//! | `spawn-scope` | `thread::spawn`/`scope` in the library only in `util/parallel.rs` + `serve/` |
+//! | `relaxed-order` | `Ordering::Relaxed` in the library only where explicitly annotated |
+//! | `static-mut` | no `static mut`, ever |
+//! | `dep-guard` | no external (non-`path`) dependencies in any `Cargo.toml` |
+//!
+//! Escape hatch: `gavina-lint: allow(<rule>, …)` in a comment on the same
+//! or the immediately preceding line; in a `//!` inner-doc line it grants
+//! file scope. Annotations are only read from comments, never from code.
+//!
+//! The checker does not scan its own sources (`rust/xtask/`): rule
+//! patterns appear there as string literals and test fixtures. Its
+//! manifest *is* covered by `dep-guard`.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One enforced contract. Stable ids are the `gavina-lint: allow(..)`
+/// vocabulary and the tag in every diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    UnsafeDoc,
+    UnsafeScope,
+    NoFma,
+    FloatAccum,
+    FeatureGuard,
+    SpawnScope,
+    RelaxedOrder,
+    StaticMut,
+    DepGuard,
+}
+
+/// Every rule, in diagnostic-id order.
+pub const ALL_RULES: [Rule; 9] = [
+    Rule::UnsafeDoc,
+    Rule::UnsafeScope,
+    Rule::NoFma,
+    Rule::FloatAccum,
+    Rule::FeatureGuard,
+    Rule::SpawnScope,
+    Rule::RelaxedOrder,
+    Rule::StaticMut,
+    Rule::DepGuard,
+];
+
+impl Rule {
+    /// Stable lowercase id used in diagnostics and `allow(..)` annotations.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::UnsafeDoc => "unsafe-doc",
+            Rule::UnsafeScope => "unsafe-scope",
+            Rule::NoFma => "no-fma",
+            Rule::FloatAccum => "float-accum",
+            Rule::FeatureGuard => "feature-guard",
+            Rule::SpawnScope => "spawn-scope",
+            Rule::RelaxedOrder => "relaxed-order",
+            Rule::StaticMut => "static-mut",
+            Rule::DepGuard => "dep-guard",
+        }
+    }
+
+    /// One-line description (the `list` subcommand and the README table).
+    pub fn describe(self) -> &'static str {
+        match self {
+            Rule::UnsafeDoc => "every `unsafe` site carries a SAFETY: comment",
+            Rule::UnsafeScope => "unsafe only in gemm/simd/, gemm/kernel.rs, quant/interleaved.rs",
+            Rule::NoFma => "no mul_add / FMA intrinsics anywhere (bit-exactness contract)",
+            Rule::FloatAccum => "float intrinsics in SIMD ISA files only inside affine* fns",
+            Rule::FeatureGuard => "#[target_feature] must be runtime-detected in simd/mod.rs",
+            Rule::SpawnScope => "thread::spawn/scope in src/ only in util/parallel.rs and serve/",
+            Rule::RelaxedOrder => "Ordering::Relaxed in src/ needs a gavina-lint allow annotation",
+            Rule::StaticMut => "`static mut` is forbidden",
+            Rule::DepGuard => "Cargo.toml deps must be internal path deps (std-only policy)",
+        }
+    }
+}
+
+/// One contract violation, pointing at a source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-root-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+/// What `run_check` covered, plus everything it found.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// `.rs` files scanned.
+    pub sources: usize,
+    /// `Cargo.toml` manifests scanned.
+    pub manifests: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+// ---------------------------------------------------------------------
+// Line model: code with comments removed and string contents blanked,
+// plus the comment text — so code rules never fire on prose or literals
+// and annotations are only honored inside comments.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+/// Split source text into per-line (code, comment) views. Handles `//`
+/// and (nested) `/* */` comments spanning lines, string literals (their
+/// contents are blanked from the code view) and char literals. String
+/// state deliberately resets at line ends: multi-line literals stay in
+/// the code view, which at worst produces a diagnostic the escape hatch
+/// can answer — never a silently skipped rule.
+fn split_lines(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut block_depth = 0usize;
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut in_str = false;
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if block_depth > 0 {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+                continue;
+            }
+            if in_str {
+                if c == '\\' {
+                    code.push(' ');
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        in_str = false;
+                        code.push('"');
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            match c {
+                '"' => {
+                    in_str = true;
+                    code.push('"');
+                    i += 1;
+                }
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    comment.extend(&chars[i + 2..]);
+                    break;
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    block_depth += 1;
+                    i += 2;
+                }
+                '\'' => {
+                    // Char literal ('x', '\n', '\u{..}') vs lifetime ('a).
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push(' ');
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                _ => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(Line { code, comment });
+    }
+    out
+}
+
+/// Rule ids named by `gavina-lint: allow(a, b)` markers in `text`.
+fn annotations(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(p) = rest.find("gavina-lint:") {
+        rest = &rest[p + "gavina-lint:".len()..];
+        let Some(q) = rest.find("allow(") else { break };
+        let tail = &rest[q + "allow(".len()..];
+        let Some(e) = tail.find(')') else { break };
+        out.extend(tail[..e].split(',').map(str::trim));
+        rest = &tail[e + 1..];
+    }
+    out
+}
+
+/// Does a whole-word occurrence of `tok` appear in `code`? Word
+/// characters are ASCII alphanumerics and `_`, so `unsafe` does not
+/// match inside `unsafe_op_in_unsafe_fn`.
+fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(tok) {
+        let p = start + p;
+        let before = p == 0 || {
+            let c = bytes[p - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        let end = p + tok.len();
+        let after = end >= bytes.len() || {
+            let c = bytes[end];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if before && after {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Every `"quoted"` span in `raw` (used on lines already known to carry a
+/// `target_feature` attribute or a `feature_detected!` call).
+fn quoted_strings(raw: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = raw;
+    while let Some(p) = rest.find('"') {
+        let tail = &rest[p + 1..];
+        let Some(q) = tail.find('"') else { break };
+        out.push(&tail[..q]);
+        rest = &tail[q + 1..];
+    }
+    out
+}
+
+struct SourceView<'a> {
+    raw: Vec<&'a str>,
+    lines: Vec<Line>,
+    file_allows: Vec<String>,
+}
+
+impl<'a> SourceView<'a> {
+    fn new(text: &'a str) -> Self {
+        let raw: Vec<&str> = text.lines().collect();
+        let lines = split_lines(text);
+        let mut file_allows = Vec::new();
+        for (r, l) in raw.iter().zip(&lines) {
+            if r.trim_start().starts_with("//!") {
+                file_allows.extend(annotations(&l.comment).iter().map(|s| s.to_string()));
+            }
+        }
+        Self {
+            raw,
+            lines,
+            file_allows,
+        }
+    }
+
+    /// Is `rule` allowed at line index `i` (same line, the line above, or
+    /// file scope)?
+    fn allowed(&self, i: usize, rule: Rule) -> bool {
+        let id = rule.id();
+        if self.file_allows.iter().any(|a| a.as_str() == id) {
+            return true;
+        }
+        if annotations(&self.lines[i].comment).contains(&id) {
+            return true;
+        }
+        i > 0 && annotations(&self.lines[i - 1].comment).contains(&id)
+    }
+
+    /// Does the `unsafe` introduced at line `i` carry a SAFETY comment —
+    /// on the same line, or in the contiguous run of comment / attribute
+    /// / blank lines directly above (doc `# Safety` sections included)?
+    fn has_safety_comment(&self, i: usize) -> bool {
+        let hit = |l: &Line| l.comment.to_ascii_lowercase().contains("safety");
+        if hit(&self.lines[i]) {
+            return true;
+        }
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            if hit(&self.lines[j]) {
+                return true;
+            }
+            let code = self.lines[j].code.trim();
+            if !code.is_empty() && !code.starts_with("#[") && !code.starts_with("#!") {
+                return false;
+            }
+        }
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scoping: which rules watch which paths. Labels are repo-root-relative.
+// ---------------------------------------------------------------------
+
+/// Modules audited for `unsafe` (PR 6's SIMD hot path and the layouts it
+/// reads). Everything else must stay safe code.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/gemm/simd/",
+    "rust/src/gemm/kernel.rs",
+    "rust/src/quant/interleaved.rs",
+];
+
+/// The only library homes for thread creation: the scoped worker pool and
+/// the serving layer.
+const SPAWN_ALLOWLIST: &[&str] = &["rust/src/util/parallel.rs", "rust/src/serve/"];
+
+fn in_allowlist(label: &str, list: &[&str]) -> bool {
+    for p in list {
+        if label == *p || (p.ends_with('/') && label.starts_with(*p)) {
+            return true;
+        }
+    }
+    false
+}
+
+fn in_library(label: &str) -> bool {
+    label.starts_with("rust/src/")
+}
+
+fn is_simd_isa_file(label: &str) -> bool {
+    label.starts_with("rust/src/gemm/simd/") && !label.ends_with("/mod.rs")
+}
+
+/// Substrings whose presence in code means a fused multiply-add: the
+/// float method, the x86 `*fmadd*` intrinsic family, the NEON `vfma*`
+/// family. Matching code only (never comments or string literals).
+const FMA_PATTERNS: &[&str] = &["mul_add", "fmadd", "vfma"];
+
+/// Float vector-intrinsic call markers for the `float-accum` rule.
+const FLOAT_INTRINSIC_PATTERNS: &[&str] = &["_ps(", "_pd(", "_f32(", "_f64("];
+
+/// Name of the fn a line belongs to, tracked line-wise: updated whenever
+/// a `fn <ident>` definition appears in the code view.
+fn update_current_fn(code: &str, current: &mut String) {
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find("fn ") {
+        let p = start + p;
+        let boundary = p == 0 || {
+            let c = code.as_bytes()[p - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        let name: String = code[p + 3..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if boundary && !name.is_empty() {
+            *current = name;
+        }
+        start = p + 3;
+    }
+}
+
+/// Run every per-file source rule on one file. Pure function of
+/// `(label, text)` so fixtures can drive it directly in tests.
+pub fn check_source(label: &str, text: &str) -> Vec<Diagnostic> {
+    let view = SourceView::new(text);
+    let mut diags = Vec::new();
+    let mut push = |line: usize, rule: Rule, message: String| {
+        diags.push(Diagnostic {
+            file: label.to_string(),
+            line: line + 1,
+            rule,
+            message,
+        });
+    };
+    let mut current_fn = String::new();
+    for (i, line) in view.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        update_current_fn(code, &mut current_fn);
+
+        if has_token(code, "unsafe") {
+            if !view.allowed(i, Rule::UnsafeDoc) && !view.has_safety_comment(i) {
+                push(
+                    i,
+                    Rule::UnsafeDoc,
+                    "`unsafe` without a `// SAFETY:` comment stating the upheld invariant".into(),
+                );
+            }
+            if !in_allowlist(label, UNSAFE_ALLOWLIST) && !view.allowed(i, Rule::UnsafeScope) {
+                push(
+                    i,
+                    Rule::UnsafeScope,
+                    format!(
+                        "`unsafe` outside the audited allowlist ({})",
+                        UNSAFE_ALLOWLIST.join(", ")
+                    ),
+                );
+            }
+        }
+
+        if let Some(pat) = FMA_PATTERNS.iter().find(|&&p| code.contains(p)) {
+            if !view.allowed(i, Rule::NoFma) {
+                push(
+                    i,
+                    Rule::NoFma,
+                    format!(
+                        "fused multiply-add (`{pat}`) breaks the bit-exactness contract: \
+                         use separate mul + add"
+                    ),
+                );
+            }
+        }
+
+        if is_simd_isa_file(label)
+            && FLOAT_INTRINSIC_PATTERNS.iter().any(|p| code.contains(p))
+            && !current_fn.contains("affine")
+            && !view.allowed(i, Rule::FloatAccum)
+        {
+            push(
+                i,
+                Rule::FloatAccum,
+                format!(
+                    "float intrinsic in fn `{current_fn}`: float accumulation in SIMD ISA \
+                     files is only documented for the dense_affine (`affine*`) mul+add path"
+                ),
+            );
+        }
+
+        if in_library(label)
+            && (code.contains("thread::spawn") || code.contains("thread::scope"))
+            && !in_allowlist(label, SPAWN_ALLOWLIST)
+            && !view.allowed(i, Rule::SpawnScope)
+        {
+            push(
+                i,
+                Rule::SpawnScope,
+                format!(
+                    "thread creation outside the sanctioned homes ({})",
+                    SPAWN_ALLOWLIST.join(", ")
+                ),
+            );
+        }
+
+        if in_library(label)
+            && code.contains("Ordering::Relaxed")
+            && !view.allowed(i, Rule::RelaxedOrder)
+        {
+            push(
+                i,
+                Rule::RelaxedOrder,
+                "Ordering::Relaxed needs a `gavina-lint: allow(relaxed-order)` annotation \
+                 justifying why no stronger ordering is required"
+                    .into(),
+            );
+        }
+
+        if code.contains("static mut") && !view.allowed(i, Rule::StaticMut) {
+            push(
+                i,
+                Rule::StaticMut,
+                "`static mut` is forbidden: use OnceLock / atomics / Mutex".into(),
+            );
+        }
+    }
+    diags
+}
+
+/// `feature-guard`: every feature named by a `#[target_feature(enable =
+/// "…")]` attribute in the SIMD files must be runtime-detected in the
+/// dispatch file (`gemm/simd/mod.rs`), directly or via the implication
+/// closure below (detecting `avx2` proves `avx`).
+pub fn check_feature_guards(files: &[(String, String)]) -> Vec<Diagnostic> {
+    const IMPLIES: &[(&str, &[&str])] = &[("avx2", &["avx"]), ("avx512f", &["avx2", "avx"])];
+    fn contains_str(v: &[String], s: &str) -> bool {
+        v.iter().any(|x| x.as_str() == s)
+    }
+    let mut detected: Vec<String> = Vec::new();
+    for (label, text) in files {
+        if !label.ends_with("gemm/simd/mod.rs") {
+            continue;
+        }
+        let lines = split_lines(text);
+        for (raw, line) in text.lines().zip(&lines) {
+            if line.code.contains("feature_detected") {
+                detected.extend(quoted_strings(raw).iter().map(|s| s.to_string()));
+            }
+        }
+    }
+    // Transitive closure over the implication map.
+    loop {
+        let mut grew = false;
+        for &(have, implied) in IMPLIES {
+            if contains_str(&detected, have) {
+                for &f in implied {
+                    if !contains_str(&detected, f) {
+                        detected.push(f.to_string());
+                        grew = true;
+                    }
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    let mut diags = Vec::new();
+    for (label, text) in files {
+        if !label.contains("gemm/simd/") {
+            continue;
+        }
+        let view = SourceView::new(text);
+        for (i, line) in view.lines.iter().enumerate() {
+            if !has_token(&line.code, "target_feature") {
+                continue;
+            }
+            let feats = quoted_strings(view.raw[i]);
+            for feat in feats.iter().flat_map(|s| s.split(',')) {
+                let feat = feat.trim();
+                if feat.is_empty() || contains_str(&detected, feat) {
+                    continue;
+                }
+                if view.allowed(i, Rule::FeatureGuard) {
+                    continue;
+                }
+                diags.push(Diagnostic {
+                    file: label.clone(),
+                    line: i + 1,
+                    rule: Rule::FeatureGuard,
+                    message: format!(
+                        "target_feature `{feat}` has no matching runtime-detection guard \
+                         in gemm/simd/mod.rs (is_*_feature_detected!)"
+                    ),
+                });
+            }
+        }
+    }
+    diags
+}
+
+/// `dep-guard`: scan one `Cargo.toml`. Any entry in a `*dependencies*`
+/// section must be an internal `path` dependency (or `workspace = true`,
+/// which resolves to a `[workspace.dependencies]` table that is itself
+/// scanned). Everything else violates the std-only policy.
+pub fn check_manifest(label: &str, text: &str) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let raws: Vec<&str> = text.lines().collect();
+    let allowed = |i: usize| {
+        annotations(raws[i]).contains(&Rule::DepGuard.id())
+            || (i > 0 && annotations(raws[i - 1]).contains(&Rule::DepGuard.id()))
+    };
+    let mut push = |line: usize, name: &str| {
+        diags.push(Diagnostic {
+            file: label.to_string(),
+            line: line + 1,
+            rule: Rule::DepGuard,
+            message: format!(
+                "external dependency `{name}` violates the std-only policy \
+                 (only internal `path` dependencies are allowed)"
+            ),
+        });
+    };
+    let dep_kinds = ["dependencies", "dev-dependencies", "build-dependencies"];
+    let mut in_dep_section = false;
+    // `[dependencies.foo]`-style single-dep table: (header line, name,
+    // saw a `path` key, header carried an allow annotation).
+    let mut pending: Option<(usize, String, bool, bool)> = None;
+    for (i, raw) in raws.iter().enumerate() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            if let Some((hl, name, has_path, ann)) = pending.take() {
+                if !has_path && !ann {
+                    push(hl, &name);
+                }
+            }
+            in_dep_section = false;
+            let Some(end) = line.find(']') else { continue };
+            let sect = &line[1..end];
+            let segs: Vec<&str> = sect.split('.').collect();
+            if let Some(pos) = segs.iter().position(|s| dep_kinds.contains(s)) {
+                if pos + 1 == segs.len() {
+                    in_dep_section = true;
+                } else {
+                    let name = segs[pos + 1..].join(".");
+                    pending = Some((i, name, false, allowed(i)));
+                }
+            }
+            continue;
+        }
+        if let Some(p) = pending.as_mut() {
+            if line.starts_with("path") && line.contains('=') {
+                p.2 = true;
+            }
+            continue;
+        }
+        if !in_dep_section || line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some(eq) = line.find('=') else { continue };
+        let name = line[..eq].trim().trim_matches('"');
+        let value = &line[eq + 1..];
+        let internal = value.contains("path =") || value.contains("path=");
+        let via_workspace = value.contains("workspace = true") || value.contains("workspace=true");
+        if !internal && !via_workspace && !allowed(i) {
+            push(i, name);
+        }
+    }
+    if let Some((hl, name, has_path, ann)) = pending.take() {
+        if !has_path && !ann {
+            push(hl, &name);
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Tree walking.
+// ---------------------------------------------------------------------
+
+fn walk(
+    dir: &Path,
+    want_ext: Option<&str>,
+    want_name: Option<&str>,
+    out: &mut Vec<PathBuf>,
+) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "target" || name == ".git" || name == "xtask" {
+                continue;
+            }
+            walk(&path, want_ext, want_name, out)?;
+            continue;
+        }
+        let ext = path.extension().and_then(|x| x.to_str());
+        if want_ext.is_some_and(|e| ext == Some(e)) || want_name.is_some_and(|n| name == n) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn label_for(repo_root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(repo_root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Run the whole contract check over the repository tree: source rules
+/// on `rust/src`, `rust/tests`, `rust/benches` and `examples/`,
+/// `feature-guard` across `gemm/simd/`, and `dep-guard` on every
+/// `Cargo.toml` under `rust/` (the xtask's own manifest included).
+pub fn run_check(repo_root: &Path) -> io::Result<CheckReport> {
+    let mut report = CheckReport::default();
+    let mut rs_files = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        let dir = repo_root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, Some("rs"), None, &mut rs_files)?;
+        }
+    }
+    let mut sources = Vec::with_capacity(rs_files.len());
+    for path in &rs_files {
+        sources.push((label_for(repo_root, path), fs::read_to_string(path)?));
+    }
+    report.sources = sources.len();
+    for (label, text) in &sources {
+        report.diagnostics.extend(check_source(label, text));
+    }
+    let mut simd: Vec<(String, String)> = Vec::new();
+    for (label, text) in &sources {
+        if label.contains("gemm/simd/") {
+            simd.push((label.clone(), text.clone()));
+        }
+    }
+    report.diagnostics.extend(check_feature_guards(&simd));
+
+    let mut manifests = Vec::new();
+    let rust_dir = repo_root.join("rust");
+    if rust_dir.is_dir() {
+        // Note: `walk` skips `xtask/` for sources; collect its manifest
+        // explicitly so dep-guard still covers it.
+        walk(&rust_dir, None, Some("Cargo.toml"), &mut manifests)?;
+        let xtask_manifest = rust_dir.join("xtask/Cargo.toml");
+        if xtask_manifest.is_file() {
+            manifests.push(xtask_manifest);
+        }
+    }
+    manifests.sort();
+    manifests.dedup();
+    report.manifests = manifests.len();
+    for path in &manifests {
+        let label = label_for(repo_root, path);
+        report
+            .diagnostics
+            .extend(check_manifest(&label, &fs::read_to_string(path)?));
+    }
+
+    report.diagnostics.sort_by_key(|d| (d.file.clone(), d.line, d.rule));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests;

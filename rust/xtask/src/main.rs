@@ -1,0 +1,73 @@
+//! CLI for the repo-contract checks: `cargo run -p gavina-xtask -- check`.
+//!
+//! Subcommands: `check` (default) scans the tree and exits non-zero on
+//! any violation; `list` prints every rule id with its one-line
+//! contract. `--root <dir>` overrides the repo root (the default is
+//! derived from this crate's manifest location, so the binary works from
+//! any working directory).
+
+use std::env;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use gavina_xtask::{run_check, ALL_RULES};
+
+const USAGE: &str = "usage: gavina-xtask [check|list] [--root <repo-root>]";
+
+/// xtask lives at `<repo>/rust/xtask`; the repo root is two levels up.
+fn default_root() -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    match manifest.parent().and_then(Path::parent) {
+        Some(root) => root.to_path_buf(),
+        None => PathBuf::from("."),
+    }
+}
+
+fn main() -> ExitCode {
+    let mut cmd = String::from("check");
+    let mut root = default_root();
+    let mut args = env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "check" | "list" => cmd = arg,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root needs a value\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if cmd == "list" {
+        for rule in ALL_RULES {
+            println!("{:<14} {}", rule.id(), rule.describe());
+        }
+        return ExitCode::SUCCESS;
+    }
+    let report = match run_check(&root) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("gavina-xtask: scanning {} failed: {err}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for diag in &report.diagnostics {
+        println!("{diag}");
+    }
+    println!(
+        "gavina-xtask check: {} sources + {} manifests scanned, {} violation(s)",
+        report.sources,
+        report.manifests,
+        report.diagnostics.len()
+    );
+    if report.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
