@@ -2,15 +2,24 @@
 """CI perf-regression gate over the hotpath bench artifact.
 
 Usage: bench_gate.py BASELINE CURRENT
+       bench_gate.py --serve BASELINE SERVE_JSON
 
-Compares ``bitmacs_per_s`` per (kernel, precision, threads) key in
-CURRENT (``BENCH_hotpath.json``) against the committed BASELINE floors
-(``rust/BENCH_baseline.json``) and exits non-zero when
+Default mode compares ``bitmacs_per_s`` per (kernel, precision, threads)
+key in CURRENT (``BENCH_hotpath.json``) against the committed BASELINE
+floors (``rust/BENCH_baseline.json``) and exits non-zero when
 
 * a key present in both regresses more than ``tolerance`` (default 15%)
   below its baseline, or
 * the active SIMD fused kernel fails to beat the scalar fused kernel at
   the same (precision, threads=1) — the whole point of the SIMD path.
+
+``--serve`` mode gates the serving replica sweep
+(``BENCH_serve.json``): the baseline may carry an optional
+``serve_floors`` list of ``{"replicas": R, "throughput_rps": floor}``
+entries; each is compared against the sweep point with the same replica
+count (same tolerance). When the baseline has no ``serve_floors``
+section the gate is a no-op that still prints the observed sweep, so
+the floors can be ratcheted in later from real artifact runs.
 
 Prints a GitHub-flavoured markdown delta table; pipe it into
 ``$GITHUB_STEP_SUMMARY``. Baseline keys missing from the current run
@@ -30,9 +39,53 @@ def key_map(doc):
     }
 
 
+def serve_gate(baseline_path, serve_path):
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(serve_path) as f:
+        cur = json.load(f)
+    tol = float(base.get("tolerance", 0.15))
+    floors = {int(e["replicas"]): float(e["throughput_rps"]) for e in base.get("serve_floors", [])}
+    points = {int(e["replicas"]): float(e["throughput_rps"]) for e in cur.get("entries", [])}
+
+    print(f"### serve throughput gate (tolerance {tol:.0%})\n")
+    print("| replicas | floor rps | current rps | delta | verdict |")
+    print("|---|---|---|---|---|")
+    failures = []
+    for r in sorted(points):
+        c = points[r]
+        b = floors.get(r)
+        if b is None:
+            print(f"| {r} | — | {c:.1f} | — | no floor committed |")
+            continue
+        delta = c / b - 1.0
+        ok = c >= b * (1.0 - tol)
+        if not ok:
+            failures.append(f"replicas={r}: {c:.1f} rps vs floor {b:.1f} ({delta:+.1%})")
+        verdict = "ok" if ok else f"**REGRESSION >{tol:.0%}**"
+        print(f"| {r} | {b:.1f} | {c:.1f} | {delta:+.1%} | {verdict} |")
+    for r in sorted(set(floors) - set(points)):
+        print(f"\n> warning: serve floor for replicas={r} not produced by this run")
+    if failures:
+        print("\n**serve gate FAILED:**\n")
+        for f_ in failures:
+            print(f"- {f_}")
+        return 1
+    if not floors:
+        print("\nno serve_floors in baseline — observational only, gate passes")
+    else:
+        print("\nserve gate passed: all swept replica counts within tolerance of their floors")
+    return 0
+
+
 def main():
+    if len(sys.argv) == 4 and sys.argv[1] == "--serve":
+        return serve_gate(sys.argv[2], sys.argv[3])
     if len(sys.argv) != 3:
-        print("usage: bench_gate.py BASELINE CURRENT", file=sys.stderr)
+        print(
+            "usage: bench_gate.py BASELINE CURRENT | bench_gate.py --serve BASELINE SERVE_JSON",
+            file=sys.stderr,
+        )
         return 2
     with open(sys.argv[1]) as f:
         base = json.load(f)

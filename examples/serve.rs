@@ -81,7 +81,7 @@ fn main() {
 
     // Three QoS tiers + the governor on the default (guarded) tier.
     let opts = ServeOptions {
-        workers: 4,
+        replicas: 2,
         queue_depth: 256,
         governor: Some(GovernorOptions {
             period: Duration::from_millis(20),
@@ -90,9 +90,9 @@ fn main() {
         ..Default::default()
     };
     println!(
-        "starting service: {} workers × {} intra-batch threads, admission depth {}, \
+        "starting service: {} replicas/tier × {} intra-batch threads, admission depth {}, \
          tiers [{}], governor on, {prec} ({})",
-        opts.workers,
+        opts.replicas,
         gavina::util::parallel::resolve_threads(engine.threads()),
         opts.queue_depth,
         opts.tiers

@@ -1,13 +1,18 @@
-//! Closed-loop serving bench: per-tier latency percentiles and
-//! throughput under a low → high → low load ramp, plus the governor's
-//! per-layer-G trajectory across the ramp.
+//! Closed-loop serving bench, two parts:
 //!
-//! The load generator keeps a fixed number of requests outstanding
-//! (closed loop) per phase; the governor watches the admission-queue
-//! load fraction and slides the default tier along its undervolting
-//! ladder — the bench asserts it visits at least two distinct per-layer
-//! schedules, which is the paper's §IV-D flexibility exercised at
-//! serving time.
+//! 1. **Governor ramp** — per-tier latency percentiles and throughput
+//!    under a low → high → low load ramp, plus the governor's
+//!    per-layer-G trajectory across the ramp. Asserts the governor
+//!    visits at least two distinct schedules (the paper's §IV-D
+//!    flexibility exercised at serving time).
+//! 2. **Replica sweep** — the same mixed three-tier traffic pushed
+//!    through 1 / 2 / 4 / 8 replicas per tier (continuous batching +
+//!    work-stealing, no governor), emitting a structured
+//!    `BENCH_serve.json` artifact (throughput, per-tier p50/p99, steal
+//!    counts) that CI uploads and gates on. Asserts aggregate
+//!    throughput does not degrade from 1 → 4 replicas and the exact
+//!    tier's p99 under mixed load stays bounded relative to the
+//!    single-replica run.
 //!
 //! Flags: `--quick` (CI-sized run).
 
@@ -18,7 +23,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use gavina::arch::{ArchConfig, Precision};
-use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
+use gavina::engine::{Engine, EngineBuilder, GavPolicy, GavinaError};
 use gavina::serve::{
     GovernorOptions, ServeOptions, Service, Session, SubmitOptions, Ticket, TierSpec,
 };
@@ -90,33 +95,18 @@ fn run_phase(
     (served, rejected)
 }
 
-fn main() {
-    let quick = common::quick();
-    let prec = Precision::new(2, 2);
-    let engine = Arc::new(
-        EngineBuilder::new()
-            .synthetic_weights(0.125, 0x5E)
-            .precision(prec)
-            .arch(ArchConfig::tiny())
-            .policy(GavPolicy::Uniform(2))
-            .seed(3)
-            .build()
-            .expect("engine config"),
-    );
-
+fn governor_ramp(engine: &Arc<Engine>, quick: bool) {
     let queue_depth = 16;
     let opts = ServeOptions {
-        workers: 2,
+        replicas: 1,
         queue_depth,
+        steal: true,
+        steal_reserve: 2,
         default_tier: "guarded".into(),
         tiers: vec![
-            TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1),
-            TierSpec::new("guarded", None)
-                .max_batch(4)
-                .batch_timeout(Duration::from_millis(4)),
-            TierSpec::new("aggressive", Some(GavPolicy::Uniform(0)))
-                .max_batch(8)
-                .batch_timeout(Duration::from_millis(2)),
+            TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(4),
+            TierSpec::new("guarded", None).max_batch(4),
+            TierSpec::new("aggressive", Some(GavPolicy::Uniform(0))).max_batch(8),
         ],
         governor: Some(GovernorOptions {
             period: Duration::from_millis(15),
@@ -126,7 +116,8 @@ fn main() {
         }),
     };
     println!(
-        "[serve] closed-loop bench: {prec}, queue_depth {queue_depth}, governor period 15 ms"
+        "[serve] closed-loop bench: {}, queue_depth {queue_depth}, governor period 15 ms",
+        engine.precision()
     );
 
     let mut rng = Prng::new(0x5EED);
@@ -134,7 +125,7 @@ fn main() {
         .map(|_| (0..32 * 32 * 3).map(|_| rng.next_f32()).collect())
         .collect();
 
-    let service = Arc::clone(&engine).serve(opts).expect("serve options");
+    let service = Arc::clone(engine).serve(opts).expect("serve options");
     let session = service.session();
 
     // Load ramp: low → high → low concurrency, relative to queue_depth
@@ -161,7 +152,7 @@ fn main() {
     for m in &report.tiers {
         println!(
             "[serve] tier {:10} {:5} reqs {:8.1} req/s  p50 {:7.2} ms  p99 {:7.2} ms  \
-             max {:7.2} ms  {} batches",
+             max {:7.2} ms  {} batches  {} steals",
             m.tier,
             m.requests,
             m.requests_per_sec,
@@ -169,6 +160,7 @@ fn main() {
             m.p99_us as f64 / 1e3,
             m.max_us as f64 / 1e3,
             m.batches,
+            m.steals,
         );
     }
     println!(
@@ -204,4 +196,188 @@ fn main() {
          across the load ramp (saw {})",
         distinct.len()
     );
+}
+
+/// One sweep point's results, for the JSON artifact and the asserts.
+struct SweepPoint {
+    replicas: usize,
+    throughput_rps: f64,
+    steals: u64,
+    exact_p99_us: u64,
+    tier_lines: Vec<String>,
+}
+
+/// Push `n_requests` of mixed three-tier traffic through a fresh
+/// service (no governor) and measure aggregate throughput.
+fn sweep_point(
+    engine: &Arc<Engine>,
+    images: &[Vec<f32>],
+    replicas: usize,
+    n_requests: usize,
+) -> SweepPoint {
+    let opts = ServeOptions {
+        replicas,
+        queue_depth: 64,
+        steal: true,
+        steal_reserve: 2,
+        default_tier: "guarded".into(),
+        tiers: vec![
+            TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(4),
+            TierSpec::new("guarded", None).max_batch(8),
+            TierSpec::new("aggressive", Some(GavPolicy::Uniform(0))).max_batch(16),
+        ],
+        governor: None,
+    };
+    let service = Arc::clone(engine).serve(opts).expect("serve options");
+    let session = service.session();
+    let concurrency = 12usize;
+    let mut outstanding: VecDeque<Ticket> = VecDeque::new();
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    let mut sent = 0usize;
+    let mut i = 0usize;
+    while sent < n_requests {
+        let image = images[i % images.len()].clone();
+        // Mixed load: every 8th request exact, every 3rd aggressive,
+        // the rest on the default tier.
+        let res = if i % 8 == 0 {
+            session.submit_with(image, SubmitOptions::new().tier("exact"))
+        } else if i % 3 == 0 {
+            session.submit_with(image, SubmitOptions::new().tier("aggressive"))
+        } else {
+            session.submit(image)
+        };
+        i += 1;
+        match res {
+            Ok(t) => {
+                outstanding.push_back(t);
+                sent += 1;
+            }
+            Err(GavinaError::Overloaded { .. }) => {
+                if let Some(t) = outstanding.pop_front() {
+                    t.wait().expect("response");
+                    served += 1;
+                }
+            }
+            Err(e) => panic!("submit failed: {e}"),
+        }
+        while outstanding.len() >= concurrency {
+            let t = outstanding.pop_front().expect("nonempty");
+            t.wait().expect("response");
+            served += 1;
+        }
+    }
+    for t in outstanding {
+        t.wait().expect("response");
+        served += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = service.shutdown();
+    assert_eq!(served, n_requests, "closed loop must answer every request");
+    let exact_p99_us = report.tier("exact").map(|m| m.p99_us).unwrap_or(0);
+    let tier_lines = report
+        .tiers
+        .iter()
+        .map(|m| {
+            format!(
+                "      {{\"tier\": \"{}\", \"requests\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+                 \"batches\": {}, \"steals\": {}}}",
+                m.tier, m.requests, m.p50_us, m.p99_us, m.batches, m.steals
+            )
+        })
+        .collect();
+    SweepPoint {
+        replicas,
+        throughput_rps: served as f64 / wall,
+        steals: report.steals(),
+        exact_p99_us,
+        tier_lines,
+    }
+}
+
+fn replica_sweep(engine: &Arc<Engine>, quick: bool) {
+    let mut rng = Prng::new(0xB00);
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.next_f32()).collect())
+        .collect();
+    let n_requests = if quick { 160 } else { 640 };
+    println!("[serve] replica sweep: {n_requests} mixed requests per point, concurrency 12");
+
+    let mut points = Vec::new();
+    for replicas in [1usize, 2, 4, 8] {
+        let p = sweep_point(engine, &images, replicas, n_requests);
+        println!(
+            "[serve] replica sweep replicas={} throughput {:8.1} rps  exact p99 {:7.2} ms  \
+             {} steals",
+            p.replicas,
+            p.throughput_rps,
+            p.exact_p99_us as f64 / 1e3,
+            p.steals,
+        );
+        points.push(p);
+    }
+
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\n      \"replicas\": {},\n      \"throughput_rps\": {:.1},\n      \
+                 \"steals\": {},\n      \"exact_p99_us\": {},\n      \"tiers\": [\n{}\n      ]\n    }}",
+                p.replicas,
+                p.throughput_rps,
+                p.steals,
+                p.exact_p99_us,
+                p.tier_lines.join(",\n")
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve_replica_sweep\",\n  \"quick\": {},\n  \
+         \"n_requests\": {},\n  \"concurrency\": 12,\n  \"entries\": [\n{}\n  ]\n}}\n",
+        quick,
+        n_requests,
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
+    println!(
+        "[serve] structured bench artifact: {} sweep points -> BENCH_serve.json",
+        points.len()
+    );
+
+    // Scaling gates, deliberately tolerant — CI machines are noisy and
+    // the tiny model saturates quickly. Throughput must not *degrade*
+    // from sharding (1 → 4 replicas), and the exact tier's tail under
+    // mixed load must stay in the same regime as the single-replica run.
+    let thr1 = points[0].throughput_rps;
+    let thr4 = points[2].throughput_rps;
+    assert!(
+        thr4 >= thr1 * 0.9,
+        "4-replica throughput must not degrade vs 1 replica: {thr4:.1} vs {thr1:.1} rps"
+    );
+    let p99_1 = points[0].exact_p99_us as f64;
+    let p99_4 = points[2].exact_p99_us as f64;
+    assert!(
+        p99_4 <= p99_1 * 2.0 + 25_000.0,
+        "exact-tier p99 under mixed load blew up with 4 replicas: \
+         {:.2} ms vs {:.2} ms at 1 replica",
+        p99_4 / 1e3,
+        p99_1 / 1e3
+    );
+}
+
+fn main() {
+    let quick = common::quick();
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .synthetic_weights(0.125, 0x5E)
+            .precision(Precision::new(2, 2))
+            .arch(ArchConfig::tiny())
+            .policy(GavPolicy::Uniform(2))
+            .seed(3)
+            .threads(1)
+            .build()
+            .expect("engine config"),
+    );
+    governor_ramp(&engine, quick);
+    replica_sweep(&engine, quick);
 }

@@ -30,7 +30,7 @@ use std::cell::RefCell;
 
 use super::lower::im2col_into;
 use super::plan::{LayerPlan, PlannedModel};
-use super::tensor::Tensor;
+use super::tensor::{robust_amax_slice, Tensor};
 use super::weights::TensorMap;
 use crate::arch::Precision;
 use crate::engine::backend::{ExecBackend, LayerGemm};
@@ -118,6 +118,24 @@ impl ForwardStats {
             self.layer_dims.clone_from(&other.layer_dims);
         }
     }
+}
+
+/// Granularity of the activation quantization scale.
+///
+/// `PerBatch` is the historical path: one robust range over the whole
+/// batch tensor, so an image's integers depend on which images share its
+/// batch. `PerImage` derives an independent scale per image, which makes
+/// batching **bit-transparent**: a row packed into a cross-request batch
+/// quantizes to exactly the integers it would get alone, so a packed
+/// guarded GEMM equals per-request execution row for row (GEMM columns
+/// never mix images). The serve plane's continuous batcher rides on
+/// `PerImage` ([`Executor::forward_rows`]); `forward` keeps `PerBatch`
+/// so standalone numerics are bit-identical to every earlier release.
+/// For `n == 1` the two are the same computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ActQuant {
+    PerBatch,
+    PerImage,
 }
 
 /// One forward pass result.
@@ -230,10 +248,20 @@ impl<'a> Executor<'a> {
     }
 
     /// Quantize activations, run one planned conv through the backend,
-    /// and apply the fused dequant + folded-BN (+ ReLU) epilogue. The
-    /// arithmetic matches the old per-request path bit for bit: same
-    /// quantization expressions, same f32 operation order per element.
-    fn qconv(&self, x: &Tensor, plan: &LayerPlan, relu: bool, stats: &mut ForwardStats) -> Tensor {
+    /// and apply the fused dequant + folded-BN (+ ReLU) epilogue. With
+    /// [`ActQuant::PerBatch`] the arithmetic matches the old per-request
+    /// path bit for bit: same quantization expressions, same f32
+    /// operation order per element. With [`ActQuant::PerImage`] each
+    /// image gets its own robust scale (same expressions applied to its
+    /// sub-slice), so the result per image is independent of the batch.
+    fn qconv(
+        &self,
+        x: &Tensor,
+        plan: &LayerPlan,
+        relu: bool,
+        stats: &mut ForwardStats,
+        q: ActQuant,
+    ) -> Tensor {
         let prec = self.model().prec();
         let g = plan.geom(x.dims[0]);
         debug_assert_eq!(
@@ -243,19 +271,45 @@ impl<'a> Executor<'a> {
             plan.name()
         );
         let (c_dim, l_dim, k_dim) = (g.c_dim(), g.l_dim(), g.k_dim());
+        // Output pixels per image: column `l = (n·oh + ohi)·ow + owi` of
+        // the im2col matrix belongs to image `l / ohw`.
+        let ohw = g.oh * g.ow;
 
-        // --- activation quantization (per tensor, robust range) ---
+        // --- activation quantization (robust range; one scale for the
+        //     whole batch, or one per image) ---
         let hi_a = ((1i32 << (prec.a_bits - 1)) - 1) as f32;
-        let sa = x.robust_amax().max(1e-8) / hi_a;
+        let sa: Vec<f32> = match q {
+            ActQuant::PerBatch => vec![x.robust_amax().max(1e-8) / hi_a],
+            ActQuant::PerImage => {
+                let per = x.data.len() / g.n;
+                (0..g.n)
+                    .map(|i| robust_amax_slice(&x.data[i * per..(i + 1) * per]).max(1e-8) / hi_a)
+                    .collect()
+            }
+        };
         let out = SCRATCH.with(|cell| {
             let mut scratch = cell.borrow_mut();
             let Scratch { af, qa, ia } = &mut *scratch;
             im2col_into(x, &g, af);
             qa.clear();
-            qa.extend(
-                af.iter()
-                    .map(|&v| ((v / sa).round() as i32).clamp(-hi_a as i32, hi_a as i32)),
-            );
+            match q {
+                ActQuant::PerBatch => {
+                    let s = sa[0];
+                    qa.extend(
+                        af.iter()
+                            .map(|&v| ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32)),
+                    );
+                }
+                ActQuant::PerImage => {
+                    // A is `[C, L]` row-major (`a[c·L + l]`), so the image
+                    // owning element `idx` is `(idx % l_dim) / ohw`.
+                    qa.reserve(af.len());
+                    qa.extend(af.iter().enumerate().map(|(idx, &v)| {
+                        let s = sa[(idx % l_dim) / ohw];
+                        ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32)
+                    }));
+                }
+            }
 
             // Pack the A-side planes once per layer, directly in the
             // plane-interleaved layout the fused kernel consumes and into
@@ -282,37 +336,73 @@ impl<'a> Executor<'a> {
         let bn = plan.bn();
         let mut y = Tensor::zeros(vec![g.n, g.oh, g.ow, g.cout]);
         for k in 0..k_dim {
-            let s = sa * sw[k];
-            for l in 0..l_dim {
-                let v = bn.apply(k, out.p[k * l_dim + l] as f32 * s);
-                // l = (n·oh + ohi)·ow + owi ; NHWC index = l·cout + k.
-                y.data[l * g.cout + k] = if relu && v < 0.0 { 0.0 } else { v };
+            match q {
+                ActQuant::PerBatch => {
+                    let s = sa[0] * sw[k];
+                    for l in 0..l_dim {
+                        let v = bn.apply(k, out.p[k * l_dim + l] as f32 * s);
+                        // l = (n·oh + ohi)·ow + owi ; NHWC index = l·cout + k.
+                        y.data[l * g.cout + k] = if relu && v < 0.0 { 0.0 } else { v };
+                    }
+                }
+                ActQuant::PerImage => {
+                    for l in 0..l_dim {
+                        let s = sa[l / ohw] * sw[k];
+                        let v = bn.apply(k, out.p[k * l_dim + l] as f32 * s);
+                        y.data[l * g.cout + k] = if relu && v < 0.0 { 0.0 } else { v };
+                    }
+                }
             }
         }
         y
     }
 
-    /// Forward one batch of NHWC images in `[0, 1]`.
+    /// Forward one batch of NHWC images in `[0, 1]`, with the historical
+    /// per-batch activation scales (an image's integers depend on its
+    /// batch mates — bit-identical to every earlier release).
     pub fn forward(&self, images: &[f32], n: usize) -> ForwardResult {
         assert_eq!(images.len(), n * IMAGE_LEN);
+        let x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
+        self.forward_tensor(x, n, ActQuant::PerBatch)
+    }
+
+    /// Forward a cross-request packed batch: one GEMM A-side over all
+    /// rows, but **per-image** activation scales, so every row's logits
+    /// are bit-identical to forwarding that row alone (under a
+    /// deterministic backend — guarded schedules or the float
+    /// reference). This is the serve plane's continuous-batching entry
+    /// point: requests from different sessions can share a batch without
+    /// coupling their numerics.
+    pub fn forward_rows(&self, rows: &[&[f32]]) -> ForwardResult {
+        let n = rows.len();
+        assert!(n > 0, "forward_rows needs at least one row");
+        let mut data = Vec::with_capacity(n * IMAGE_LEN);
+        for r in rows {
+            assert_eq!(r.len(), IMAGE_LEN);
+            data.extend_from_slice(r);
+        }
+        let x = Tensor::new(vec![n, 32, 32, 3], data);
+        self.forward_tensor(x, n, ActQuant::PerImage)
+    }
+
+    fn forward_tensor(&self, mut x: Tensor, n: usize, q: ActQuant) -> ForwardResult {
         let model = self.model();
         let plans = model.plans();
         let mut stats = ForwardStats::default();
         let mut layer = 0usize;
-        let mut x = Tensor::new(vec![n, 32, 32, 3], images.to_vec());
 
-        x = self.qconv(&x, &plans[layer], true, &mut stats);
+        x = self.qconv(&x, &plans[layer], true, &mut stats, q);
         layer += 1;
         for _si in 0..STAGES.len() {
             for _bi in 0..BLOCKS_PER_STAGE {
-                let y = self.qconv(&x, &plans[layer], true, &mut stats);
+                let y = self.qconv(&x, &plans[layer], true, &mut stats, q);
                 layer += 1;
-                let mut y = self.qconv(&y, &plans[layer], false, &mut stats);
+                let mut y = self.qconv(&y, &plans[layer], false, &mut stats, q);
                 layer += 1;
                 // The lowering emits a `…/down` plan right after conv2
                 // exactly when the block has a projection shortcut.
                 let sc = if plans.get(layer).is_some_and(|p| p.name().ends_with("/down")) {
-                    let sc = self.qconv(&x, &plans[layer], false, &mut stats);
+                    let sc = self.qconv(&x, &plans[layer], false, &mut stats, q);
                     layer += 1;
                     sc
                 } else {
@@ -328,9 +418,22 @@ impl<'a> Executor<'a> {
         // GAP -> fake-quant -> fc (fc itself stays in float, as in Python).
         let mut gap = x.global_avg_pool();
         let hi_a = ((1i32 << (model.prec().a_bits - 1)) - 1) as f32;
-        let sa = gap.robust_amax().max(1e-8) / hi_a;
-        for v in &mut gap.data {
-            *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
+        match q {
+            ActQuant::PerBatch => {
+                let sa = gap.robust_amax().max(1e-8) / hi_a;
+                for v in &mut gap.data {
+                    *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
+                }
+            }
+            ActQuant::PerImage => {
+                let c = gap.dims[1];
+                for i in 0..n {
+                    let sa = robust_amax_slice(&gap.data[i * c..(i + 1) * c]).max(1e-8) / hi_a;
+                    for v in &mut gap.data[i * c..(i + 1) * c] {
+                        *v = ((*v / sa).round()).clamp(-hi_a, hi_a) * sa;
+                    }
+                }
+            }
         }
         let fc = &model.fc;
         let (cin_fc, classes) = (fc.fc_in, fc.classes);
@@ -523,6 +626,55 @@ mod tests {
         let again = planned.forward(&imgs, 2);
         assert_eq!(a.logits, again.logits);
         assert_eq!(a.stats, again.stats);
+    }
+
+    #[test]
+    fn forward_rows_singleton_matches_forward_bit_for_bit() {
+        // For n == 1 the per-image and per-batch scale are the same
+        // computation, so the packed-rows entry point must be exactly the
+        // standalone path.
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 21);
+        let mut rng = Prng::new(22);
+        let imgs = rand_images(&mut rng, 1);
+        let sim = GavinaBackend {
+            arch: ArchConfig::tiny(),
+            tables: None,
+            seed: 23,
+        };
+        let ex = Executor::new(&weights, wm, Precision::new(4, 4), &sim);
+        let alone = ex.forward(&imgs, 1);
+        let packed = ex.forward_rows(&[&imgs]);
+        assert_eq!(alone.logits, packed.logits);
+    }
+
+    #[test]
+    fn forward_rows_packed_batch_equals_per_row_results() {
+        // The whole point of per-image activation scales: a cross-request
+        // packed batch must produce, row for row, exactly the logits each
+        // row gets on its own — under a deterministic (guarded) backend.
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 31);
+        let mut rng = Prng::new(32);
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| rand_images(&mut rng, 1)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let sim = GavinaBackend {
+            arch: ArchConfig::tiny(),
+            tables: None,
+            seed: 33,
+        };
+        let ex = Executor::new(&weights, wm, Precision::new(2, 2), &sim);
+        let packed = ex.forward_rows(&refs);
+        assert_eq!(packed.n, 3);
+        let classes = packed.classes;
+        for (i, row) in rows.iter().enumerate() {
+            let alone = ex.forward(row, 1);
+            assert_eq!(
+                packed.logits[i * classes..(i + 1) * classes],
+                alone.logits[..],
+                "row {i} must be unaffected by its batch mates"
+            );
+        }
     }
 
     #[test]

@@ -43,22 +43,7 @@ impl Tensor {
     /// mirrors `python/compile/model.py::act_amax` exactly so both
     /// executors quantize to the same integers.
     pub fn robust_amax(&self) -> f32 {
-        if self.data.is_empty() {
-            return 1e-8;
-        }
-        let n = self.data.len() as f64;
-        let mut maxa = 0.0f64;
-        let mut sum = 0.0f64;
-        let mut sum2 = 0.0f64;
-        for &v in &self.data {
-            let a = v.abs() as f64;
-            maxa = maxa.max(a);
-            sum += a;
-            sum2 += a * a;
-        }
-        let mu = sum / n;
-        let var = (sum2 / n - mu * mu).max(0.0);
-        (maxa.min(mu + 6.0 * var.sqrt())) as f32
+        robust_amax_slice(&self.data)
     }
 
     /// Element-wise ReLU in place.
@@ -97,6 +82,30 @@ impl Tensor {
     }
 }
 
+/// Slice form of [`Tensor::robust_amax`], exposed so per-image
+/// activation quantization (`dnn::exec::forward_rows`) can scale each
+/// image's sub-slice with bit-identical arithmetic to the whole-tensor
+/// path: same f64 accumulation, same `min(max|x|, mean|x| + 6·std|x|)`
+/// cap, same `1e-8` empty fallback.
+pub fn robust_amax_slice(data: &[f32]) -> f32 {
+    if data.is_empty() {
+        return 1e-8;
+    }
+    let n = data.len() as f64;
+    let mut maxa = 0.0f64;
+    let mut sum = 0.0f64;
+    let mut sum2 = 0.0f64;
+    for &v in data {
+        let a = v.abs() as f64;
+        maxa = maxa.max(a);
+        sum += a;
+        sum2 += a * a;
+    }
+    let mu = sum / n;
+    let var = (sum2 / n - mu * mu).max(0.0);
+    (maxa.min(mu + 6.0 * var.sqrt())) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +126,14 @@ mod tests {
         let t = Tensor::new(vec![4], vec![0.5, -1.0, 0.75, 0.25]);
         // std is large relative to the spread: cap doesn't bite.
         assert!((t.robust_amax() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn robust_amax_slice_matches_tensor_form() {
+        let data = vec![0.3f32, -2.0, 0.9, 4.5, -0.1, 0.0, 1.25];
+        let t = Tensor::new(vec![7], data.clone());
+        assert_eq!(t.robust_amax().to_bits(), robust_amax_slice(&data).to_bits());
+        assert_eq!(robust_amax_slice(&[]), 1e-8);
     }
 
     #[test]

@@ -712,6 +712,76 @@ impl Engine {
         })
     }
 
+    fn check_rows(&self, rows: &[&[f32]]) -> Result<(), GavinaError> {
+        if rows.is_empty() {
+            return Err(GavinaError::Config("cannot infer on zero images".into()));
+        }
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != IMAGE_LEN {
+                return Err(GavinaError::Shape {
+                    what: format!("packed row {i}"),
+                    expected: IMAGE_LEN,
+                    got: r.len(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward a cross-request packed batch: the rows share one GEMM
+    /// A-side per layer, but activations are quantized with **per-image**
+    /// scales, so each row's logits are bit-identical to running that row
+    /// alone through [`Engine::infer_shard`] with the same `stream`
+    /// (columns of the lowered GEMM never mix images). This is what lets
+    /// the serve plane's continuous batcher pack requests from different
+    /// sessions — including exact-tier traffic — into one batch without
+    /// coupling their numerics.
+    pub fn infer_rows(&self, rows: &[&[f32]], stream: u64) -> Result<ForwardResult, GavinaError> {
+        self.check_rows(rows)?;
+        let mut ex = self.executor();
+        ex.stream = stream;
+        Ok(ex.forward_rows(rows))
+    }
+
+    /// [`Engine::infer_rows`] split into contiguous sub-batches across
+    /// the engine's `threads` scoped workers, with the same per-chunk
+    /// stream derivation as [`Engine::infer_parallel`], merged in request
+    /// order.
+    pub fn infer_rows_parallel(
+        &self,
+        rows: &[&[f32]],
+        base_stream: u64,
+    ) -> Result<ForwardResult, GavinaError> {
+        self.check_rows(rows)?;
+        let n = rows.len();
+        let threads = parallel::resolve_threads(self.threads);
+        if threads <= 1 || n <= 1 {
+            return self.infer_rows(rows, base_stream);
+        }
+        let chunk = n.div_ceil(threads.min(n));
+        let starts: Vec<usize> = (0..n).step_by(chunk).collect();
+        let parts = parallel::parallel_map(&starts, starts.len(), |ci, &i0| {
+            let bn = chunk.min(n - i0);
+            let mut ex = self.executor();
+            ex.stream = base_stream ^ (ci as u64).wrapping_mul(0x9E37_79B9);
+            ex.forward_rows(&rows[i0..i0 + bn])
+        });
+        let mut logits = Vec::with_capacity(n * 10);
+        let mut stats = ForwardStats::default();
+        let mut classes = 0;
+        for part in parts {
+            logits.extend_from_slice(&part.logits);
+            classes = part.classes;
+            stats.absorb(&part.stats);
+        }
+        Ok(ForwardResult {
+            logits,
+            n,
+            classes,
+            stats,
+        })
+    }
+
     /// Start the QoS serving layer (bounded admission, tier engines,
     /// batcher + worker pool, optional governor) over this engine. Takes
     /// the `Arc` by value — `Arc::clone(&engine).serve(…)` keeps a local
@@ -1031,5 +1101,58 @@ mod tests {
         let again = engine.infer_parallel(&images, n, 0).unwrap();
         assert_eq!(par.logits, again.logits);
         assert_eq!(par.stats.cycles, again.stats.cycles);
+    }
+
+    #[test]
+    fn infer_rows_packed_batch_equals_per_request_under_exact() {
+        // Continuous-batching contract: a cross-request packed batch
+        // under a deterministic policy equals per-request inference row
+        // for row — per-image activation scales make batching
+        // bit-transparent.
+        let engine = tiny_builder().policy(GavPolicy::Exact).build().unwrap();
+        let mut rng = Prng::new(40);
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| rand_images(&mut rng, 1)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let packed = engine.infer_rows(&refs, 7).unwrap();
+        let classes = packed.classes;
+        for (i, row) in rows.iter().enumerate() {
+            let alone = engine.infer(row, 1).unwrap();
+            assert_eq!(
+                packed.logits[i * classes..(i + 1) * classes],
+                alone.logits[..],
+                "packed row {i} must equal standalone infer"
+            );
+        }
+        // Bad row shapes are typed errors, not panics.
+        let bad: Vec<&[f32]> = vec![&rows[0][..100]];
+        assert!(matches!(
+            engine.infer_rows(&bad, 0),
+            Err(GavinaError::Shape { .. })
+        ));
+        let none: Vec<&[f32]> = Vec::new();
+        assert!(engine.infer_rows(&none, 0).is_err());
+    }
+
+    #[test]
+    fn infer_rows_parallel_matches_serial_rows_partition() {
+        // The threaded rows path must reproduce the serial per-chunk
+        // streams exactly, like infer_parallel does for flat batches.
+        let engine = tiny_builder().threads(2).build().unwrap();
+        let n = 5;
+        let mut rng = Prng::new(41);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| rand_images(&mut rng, 1)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let par = engine.infer_rows_parallel(&refs, 5).unwrap();
+
+        let chunk = n.div_ceil(2);
+        let mut expect = Vec::new();
+        for (ci, i0) in (0..n).step_by(chunk).enumerate() {
+            let bn = chunk.min(n - i0);
+            let out = engine
+                .infer_rows(&refs[i0..i0 + bn], 5 ^ (ci as u64).wrapping_mul(0x9E37_79B9))
+                .unwrap();
+            expect.extend_from_slice(&out.logits);
+        }
+        assert_eq!(par.logits, expect);
     }
 }

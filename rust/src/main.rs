@@ -474,9 +474,9 @@ fn cmd_serve(args: &Args) {
         None => ServeOptions::default(),
     };
     // `[serve]` batching from the config wins; otherwise the `[run]`
-    // batch knob keeps its historical meaning for the *default* tier
-    // (never the `exact` tier — its max_batch = 1 is the determinism
-    // guarantee).
+    // batch knob keeps its historical meaning for the *default* tier.
+    // (Exact tiers batch too now: per-image activation quantization is
+    // the determinism guarantee, not max_batch = 1.)
     let config_sets_batching = args.cfg.as_ref().is_some_and(|c| {
         c.get("serve.max_batch").is_some() || c.keys_with_prefix("serve.tier.").next().is_some()
     });
@@ -487,8 +487,8 @@ fn cmd_serve(args: &Args) {
         }
     }
     eprintln!(
-        "serve: {} workers × {} intra-batch threads, admission depth {}, {} backend, tiers [{}]{}",
-        opts.workers,
+        "serve: {} replicas/tier × {} intra-batch threads, admission depth {}, {} backend, tiers [{}]{}",
+        opts.replicas,
         gavina::util::parallel::resolve_threads(engine.threads()),
         opts.queue_depth,
         engine.backend_name(),

@@ -1,0 +1,250 @@
+//! The serve plane's dispatch core: per-replica bounded deques with
+//! continuous batching and cross-tier work-stealing.
+//!
+//! One [`Dispatch`] replaces the old batcher thread + single `work_tx`
+//! channel. Every tier owns `replicas` FIFO lanes (`VecDeque<Request>`),
+//! all guarded by **one** mutex together with the `closed` flag — so the
+//! submit/shutdown race that previously needed a post-send `SeqCst`
+//! re-check is impossible by construction: a submit either enqueues
+//! before `close()` takes the lock (and is drained), or observes
+//! `closed` and returns a typed error. The critical sections are
+//! pointer-sized pushes/pops, orders of magnitude shorter than the
+//! millisecond-scale batches workers execute, so one lock is not a
+//! scalability concern — batch *formation* is what must be cheap, and it
+//! is O(replicas) pops.
+//!
+//! **Continuous batching**: there are no `batch_timeout` windows. The
+//! moment a worker is idle it claims *everything* queued for its home
+//! tier (own lane first, then sibling lanes) up to the tier's
+//! `max_batch`, and runs it as one packed GEMM A-side. A lone request
+//! never waits for a barrier; a burst packs densely.
+//!
+//! **Work-stealing**: a worker whose home tier is empty takes up to one
+//! batch from another tier's lane *tails* (newest first — the classic
+//! owner-FIFO/thief-LIFO split) and runs it on the *victim's* engine, so
+//! an aggressive-tier backlog cannot idle the exact tier's replicas or
+//! vice versa. Tiers whose engine is fully guarded (`GavPolicy::Exact`)
+//! are protected victims: thieves leave at least `steal_reserve`
+//! requests behind so exact-tier work keeps its dedicated, predictable
+//! lanes under mixed load. During shutdown draining, stealing is
+//! unconditionally enabled (and reserves waived) so every accepted
+//! request is answered no matter which worker gets to it first.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::engine::GavinaError;
+
+use super::session::Request;
+
+/// A batch a worker claimed: which tier it belongs to (and must execute
+/// on), and whether it was stolen from a foreign tier.
+pub(crate) struct Claimed {
+    pub(crate) tier: usize,
+    pub(crate) stolen: bool,
+    pub(crate) batch: Vec<Request>,
+}
+
+struct DispatchInner {
+    /// `queues[tier * replicas + replica]` — one FIFO lane per replica.
+    queues: Vec<VecDeque<Request>>,
+    /// Round-robin cursor per tier for tie-breaking submit placement.
+    rr: Vec<usize>,
+    closed: bool,
+}
+
+/// All queue state of the serve plane (see the module docs).
+pub(crate) struct Dispatch {
+    inner: Mutex<DispatchInner>,
+    cv: Condvar,
+    replicas: usize,
+    steal: bool,
+    steal_reserve: usize,
+    /// Per-tier batch bound (continuous batching claims up to this).
+    max_batch: Vec<usize>,
+    /// Per-tier steal protection (exact-policy tiers).
+    protected: Vec<bool>,
+}
+
+impl Dispatch {
+    pub(crate) fn new(
+        replicas: usize,
+        steal: bool,
+        steal_reserve: usize,
+        max_batch: Vec<usize>,
+        protected: Vec<bool>,
+    ) -> Self {
+        let n_tiers = max_batch.len();
+        debug_assert_eq!(protected.len(), n_tiers);
+        debug_assert!(replicas >= 1);
+        Self {
+            inner: Mutex::new(DispatchInner {
+                queues: (0..n_tiers * replicas).map(|_| VecDeque::new()).collect(),
+                rr: vec![0; n_tiers],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            replicas,
+            steal,
+            steal_reserve,
+            max_batch,
+            protected,
+        }
+    }
+
+    pub(crate) fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Enqueue one accepted request onto the shortest of its tier's
+    /// lanes (ties broken round-robin). Fails with a typed error after
+    /// [`Dispatch::close`] — the request (and its admission permit) is
+    /// dropped, never stranded: the `closed` flag lives under the same
+    /// lock as the queues, so there is no submit/shutdown race window.
+    pub(crate) fn submit(&self, tier: usize, req: Request) -> Result<(), GavinaError> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.closed {
+                return Err(GavinaError::Backend("serving pipeline is shut down".into()));
+            }
+            let base = tier * self.replicas;
+            let rr = inner.rr[tier];
+            let mut best = 0usize;
+            let mut best_len = usize::MAX;
+            for i in 0..self.replicas {
+                let r = (rr + i) % self.replicas;
+                let len = inner.queues[base + r].len();
+                if len < best_len {
+                    best_len = len;
+                    best = r;
+                }
+            }
+            inner.rr[tier] = (best + 1) % self.replicas;
+            inner.queues[base + best].push_back(req);
+        }
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until there is work, and claim one batch. Returns `None`
+    /// exactly when the dispatch is closed *and* every lane is empty —
+    /// the worker's signal to exit. `home_replica` is the lane the
+    /// worker drains first (its own), for locality under load.
+    pub(crate) fn claim(&self, home_tier: usize, home_replica: usize) -> Option<Claimed> {
+        let n_tiers = self.max_batch.len();
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // 1) Continuous batching over the home tier: own lane first,
+            //    then sibling lanes, up to max_batch in one claim.
+            if let Some(batch) = self.take_home(&mut inner, home_tier, home_replica) {
+                return Some(Claimed {
+                    tier: home_tier,
+                    stolen: false,
+                    batch,
+                });
+            }
+            // 2) Steal from another tier's tails (always during the
+            //    shutdown drain, so closing answers every request).
+            if self.steal || inner.closed {
+                let closed = inner.closed;
+                for off in 1..n_tiers {
+                    let t = (home_tier + off) % n_tiers;
+                    if let Some(batch) = self.steal_tail(&mut inner, t, closed) {
+                        return Some(Claimed {
+                            tier: t,
+                            stolen: true,
+                            batch,
+                        });
+                    }
+                }
+            }
+            if inner.closed {
+                return None;
+            }
+            // Timeout is a lost-wakeup backstop only; submits notify.
+            let (guard, _) = self
+                .cv
+                .wait_timeout(inner, Duration::from_millis(50))
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Take up to `max_batch[tier]` requests from the front of the
+    /// tier's lanes, starting with the worker's own lane.
+    fn take_home(
+        &self,
+        inner: &mut DispatchInner,
+        tier: usize,
+        home_replica: usize,
+    ) -> Option<Vec<Request>> {
+        let limit = self.max_batch[tier];
+        let base = tier * self.replicas;
+        let mut batch = Vec::new();
+        for i in 0..self.replicas {
+            let lane = base + (home_replica + i) % self.replicas;
+            while batch.len() < limit {
+                match inner.queues[lane].pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            if batch.len() >= limit {
+                break;
+            }
+        }
+        if batch.is_empty() {
+            None
+        } else {
+            Some(batch)
+        }
+    }
+
+    /// Steal up to one batch from tier `t`'s lane tails. Protected
+    /// (exact) tiers keep `steal_reserve` queued requests; a closed
+    /// dispatch waives the reserve so the drain completes.
+    fn steal_tail(&self, inner: &mut DispatchInner, t: usize, closed: bool) -> Option<Vec<Request>> {
+        let base = t * self.replicas;
+        let total: usize = inner.queues[base..base + self.replicas]
+            .iter()
+            .map(VecDeque::len)
+            .sum();
+        let reserve = if self.protected[t] && !closed {
+            self.steal_reserve
+        } else {
+            0
+        };
+        let take = total.saturating_sub(reserve).min(self.max_batch[t]);
+        if take == 0 {
+            return None;
+        }
+        let mut batch = Vec::with_capacity(take);
+        while batch.len() < take {
+            // Newest work first: pop from the tail of the longest lane.
+            let lane = (base..base + self.replicas)
+                .max_by_key(|&q| inner.queues[q].len())
+                .expect("replicas >= 1");
+            match inner.queues[lane].pop_back() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        Some(batch)
+    }
+
+    /// Per-lane queue depths of one tier, `[replica]`-indexed.
+    pub(crate) fn tier_depths(&self, tier: usize) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        let base = tier * self.replicas;
+        (base..base + self.replicas)
+            .map(|q| inner.queues[q].len())
+            .collect()
+    }
+
+    /// Close for new submits and wake every worker to drain + exit.
+    pub(crate) fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}

@@ -63,6 +63,12 @@ pub(crate) struct TierMetrics {
     cancelled: AtomicU64,
     sim_cycles: AtomicU64,
     corrupted: AtomicU64,
+    /// Batches of this tier's work executed by a foreign tier's idle
+    /// replica (work-stealing).
+    stolen: AtomicU64,
+    /// Wall-clock microseconds any worker spent executing this tier's
+    /// batches (its own replicas *and* thieves).
+    busy_us: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     /// Running true maximum — the one statistic a uniform reservoir
     /// systematically loses once eviction starts.
@@ -80,6 +86,8 @@ impl TierMetrics {
             cancelled: AtomicU64::new(0),
             sim_cycles: AtomicU64::new(0),
             corrupted: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
             latencies_us: Mutex::new(Reservoir::new()),
             max_latency_us: AtomicU64::new(0),
             started,
@@ -113,10 +121,29 @@ impl TierMetrics {
         *self.last_record.lock().unwrap() = Some(Instant::now());
     }
 
+    /// One batch of this tier's work was claimed by a foreign tier's
+    /// idle replica.
+    pub(crate) fn record_steal(&self) {
+        self.stolen.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker spent `d` executing one of this tier's batches.
+    pub(crate) fn record_busy(&self, d: Duration) {
+        self.busy_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
     /// A consistent-enough point-in-time copy (counters are relaxed; the
     /// percentiles come from the bounded reservoir, the max is exact).
-    /// `layer_gs` is the tier's schedule at snapshot time.
-    pub(crate) fn snapshot(&self, tier: &str, layer_gs: Vec<u32>) -> MetricsSnapshot {
+    /// `layer_gs` is the tier's schedule at snapshot time,
+    /// `replica_queue_depths` its per-lane queue depths, `replicas` the
+    /// configured lanes per tier (for the occupancy denominator).
+    pub(crate) fn snapshot(
+        &self,
+        tier: &str,
+        layer_gs: Vec<u32>,
+        replica_queue_depths: Vec<usize>,
+        replicas: usize,
+    ) -> MetricsSnapshot {
         let mut lat = self.latencies_us.lock().unwrap().buf.clone();
         lat.sort_unstable();
         let pick = |q: f64| -> u64 {
@@ -138,6 +165,13 @@ impl TierMetrics {
             }
             None => 0.0,
         };
+        let elapsed_us = self.started.elapsed().as_micros() as u64;
+        let occupancy = if elapsed_us > 0 && replicas > 0 {
+            self.busy_us.load(Ordering::Relaxed) as f64
+                / (elapsed_us as f64 * replicas as f64)
+        } else {
+            0.0
+        };
         MetricsSnapshot {
             tier: tier.to_string(),
             layer_gs,
@@ -147,6 +181,10 @@ impl TierMetrics {
             cancelled: self.cancelled.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             corrupted: self.corrupted.load(Ordering::Relaxed),
+            steals: self.stolen.load(Ordering::Relaxed),
+            queue_depth: replica_queue_depths.iter().sum(),
+            replica_queue_depths,
+            occupancy,
             p50_us: pick(0.50),
             p95_us: pick(0.95),
             p99_us: pick(0.99),
@@ -180,6 +218,17 @@ pub struct MetricsSnapshot {
     pub sim_cycles: u64,
     /// Undervolting-corrupted values injected into this tier's traffic.
     pub corrupted: u64,
+    /// Batches of this tier's work executed by a foreign tier's idle
+    /// replica (work-stealing).
+    pub steals: u64,
+    /// Requests queued for this tier right now, summed over its lanes.
+    pub queue_depth: usize,
+    /// Per-replica-lane queue depths at snapshot time.
+    pub replica_queue_depths: Vec<usize>,
+    /// Busy time of this tier's batches over `replicas × wall-clock`.
+    /// Can exceed 1.0 when foreign thieves execute this tier's backlog
+    /// on top of its own replicas.
+    pub occupancy: f64,
     /// End-to-end latency percentiles over a bounded reservoir [µs].
     pub p50_us: u64,
     /// 95th percentile latency [µs].
@@ -233,7 +282,10 @@ mod tests {
         m.record(100, &lats, 1234, 5);
         m.record_errors(2);
         m.record_cancelled(1);
-        let s = m.snapshot("t", vec![2; 4]);
+        m.record_steal();
+        m.record_steal();
+        m.record_busy(Duration::from_millis(3));
+        let s = m.snapshot("t", vec![2; 4], vec![1, 0, 2], 3);
         assert_eq!(s.tier, "t");
         // The snapshot's energy schedule is the tier's own allocation.
         assert_eq!(
@@ -247,6 +299,10 @@ mod tests {
         assert_eq!(s.cancelled, 1);
         assert_eq!(s.sim_cycles, 1234);
         assert_eq!(s.corrupted, 5);
+        assert_eq!(s.steals, 2);
+        assert_eq!(s.queue_depth, 3, "lane depths sum");
+        assert_eq!(s.replica_queue_depths, vec![1, 0, 2]);
+        assert!(s.occupancy > 0.0, "recorded busy time must show up");
         assert!(s.p50_us > 0 && s.p50_us <= s.p95_us);
         assert!(s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
         assert_eq!(s.max_us, 100_000);
@@ -255,9 +311,12 @@ mod tests {
 
     #[test]
     fn empty_snapshot_is_all_zero() {
-        let s = TierMetrics::new(Instant::now()).snapshot("idle", Vec::new());
+        let s = TierMetrics::new(Instant::now()).snapshot("idle", Vec::new(), vec![0, 0], 2);
         assert_eq!(s.requests, 0);
         assert_eq!((s.p50_us, s.p99_us, s.max_us), (0, 0, 0));
         assert_eq!(s.requests_per_sec, 0.0);
+        assert_eq!(s.steals, 0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.occupancy, 0.0);
     }
 }

@@ -1,18 +1,26 @@
 //! `gavina::serve` — the QoS serving layer: bounded admission, per-request
-//! energy tiers, and a load-adaptive undervolting governor.
+//! energy tiers, continuous batching over sharded replicas, and a
+//! load-adaptive undervolting governor.
 //!
 //! This module replaces the old `coordinator`'s ad-hoc types (public
 //! `Request` fields, client-stamped timestamps, an unbounded queue and
 //! one global policy frozen at build) with a typed serving surface:
 //!
 //! ```text
-//! Session::submit ──▶ bounded admission ──▶ batcher ──▶ worker pool ──▶ Ticket
-//!   (tier, deadline,    (queue_depth;        (per-tier    (N threads; each
-//!    cancellation)       Overloaded when      batches)     batch runs its
-//!                        full)                             tier's Engine)
-//!                                        governor thread ──┘
-//!                                        (adapts the default tier's
-//!                                         per-layer G under load)
+//! Session::submit ──▶ bounded admission ──▶ per-replica lanes ──▶ Ticket
+//!   (tier, deadline,    (queue_depth;         │ tier₀: [r0] [r1] …
+//!    cancellation)       Overloaded when      │ tier₁: [r0] [r1] …
+//!                        full)                ▼
+//!                                     replica workers (tiers × replicas)
+//!                                       · claim ALL queued home-tier
+//!                                         work up to max_batch — no
+//!                                         batch windows (continuous)
+//!                                       · idle ⇒ steal a batch from a
+//!                                         foreign tier's lane tails
+//!                                         (exact tiers keep a reserve)
+//!                                     governor thread ──┘
+//!                                     (adapts the default tier's
+//!                                      per-layer G under load)
 //! ```
 //!
 //! * [`Session`] — the only way in. `submit(image) -> Ticket` stamps the
@@ -24,9 +32,20 @@
 //!   drops an accepted request.
 //! * [`TierSpec`] **QoS tiers** — each tier maps to a pre-resolved
 //!   engine variant (`Engine::with_policy`, sharing packed planes) with
-//!   its own batching and [`MetricsSnapshot`]. The `exact` tier runs
-//!   `max_batch = 1`, making its logits bit-identical to a standalone
-//!   [`Engine::infer`](crate::engine::Engine::infer).
+//!   `replicas` dedicated worker lanes and its own [`MetricsSnapshot`].
+//!   Cross-request batches use **per-image activation quantization**
+//!   ([`Engine::infer_rows_parallel`](crate::engine::Engine::infer_rows_parallel)),
+//!   so an `exact`-tier request returns logits bit-identical to a
+//!   standalone [`Engine::infer`](crate::engine::Engine::infer) no
+//!   matter which requests share its batch.
+//! * **Continuous batching + work-stealing** ([`dispatch`] module) — an
+//!   idle worker immediately claims everything queued for its home tier
+//!   (up to `max_batch`) instead of waiting out a batch window, and
+//!   steals batches from other tiers' lane tails when its own tier is
+//!   empty, so a slow aggressive-tier backlog cannot idle exact-tier
+//!   replicas (and vice versa). Each batch's error-injection stream is
+//!   seeded from a monotonically increasing batch id, so no two batches
+//!   replay the same RNG stream.
 //! * [`GovernorOptions`] **governor** — a control loop that slides the
 //!   default tier along a pre-resolved per-layer-G ladder under observed
 //!   load or a modeled power budget, recording a [`GovernorStep`]
@@ -37,6 +56,7 @@
 //! drains every accepted ticket before returning the final
 //! [`ServeReport`].
 
+mod dispatch;
 mod governor;
 mod metrics;
 mod session;
@@ -47,51 +67,41 @@ pub use metrics::MetricsSnapshot;
 pub use session::{Response, Session, SubmitOptions, Ticket};
 pub use tier::{ServeOptions, TierSpec};
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::dnn::IMAGE_LEN;
-use crate::engine::{Engine, GavinaError};
+use crate::engine::{Engine, GavPolicy, GavinaError};
 use crate::power::PowerModel;
 
+use dispatch::Dispatch;
 use metrics::TierMetrics;
 use session::{Admission, Request};
 
-/// Messages into the batcher thread.
-pub(crate) enum Msg {
-    /// `(tier index, request)`.
-    Req(usize, Request),
-    Shutdown,
-}
-
-/// Sentinel tier index the batcher sends to poison one worker.
-const POISON: usize = usize::MAX;
-
-/// One tier at runtime: its (swappable) engine, batching knobs, metrics.
+/// One tier at runtime: its (swappable) engine, batching bound, metrics.
 pub(crate) struct TierRuntime {
     pub(crate) name: Arc<str>,
     /// Swapped by the governor (default tier only); workers clone the
     /// `Arc` per batch, so in-flight batches finish on the old schedule.
     pub(crate) engine: Mutex<Arc<Engine>>,
     pub(crate) max_batch: usize,
-    pub(crate) batch_timeout: Duration,
     pub(crate) metrics: TierMetrics,
 }
 
-/// State shared by sessions, batcher, workers and the governor.
+/// State shared by sessions, workers and the governor.
 pub(crate) struct Shared {
     pub(crate) admission: Arc<Admission>,
     pub(crate) tiers: Vec<TierRuntime>,
     pub(crate) default_tier: usize,
+    pub(crate) dispatch: Dispatch,
     /// Submissions rejected at admission ([`GavinaError::Overloaded`]).
     pub(crate) rejected: AtomicU64,
-    /// Set (SeqCst) *before* the `Shutdown` message is sent, and
-    /// re-checked by `submit` *after* its own send: a submit that
-    /// observes `closed == false` post-send is guaranteed FIFO-ahead of
-    /// the `Shutdown` message, so every `Ok` ticket really is drained.
-    pub(crate) closed: AtomicBool,
+    /// Monotonic batch id: every executed batch draws a fresh value and
+    /// mixes it into its error-injection stream seed, so two batches on
+    /// the same worker never replay one RNG stream.
+    pub(crate) batch_seq: AtomicU64,
     pub(crate) started: Instant,
 }
 
@@ -102,6 +112,16 @@ impl Shared {
 
     pub(crate) fn tier_names(&self) -> Vec<String> {
         self.tiers.iter().map(|t| t.name.to_string()).collect()
+    }
+
+    fn snapshot_tier(&self, i: usize) -> MetricsSnapshot {
+        let t = &self.tiers[i];
+        t.metrics.snapshot(
+            &t.name,
+            t.engine.lock().unwrap().layer_gs(),
+            self.dispatch.tier_depths(i),
+            self.dispatch.replicas(),
+        )
     }
 }
 
@@ -127,14 +147,19 @@ impl ServeReport {
     pub fn requests(&self) -> u64 {
         self.tiers.iter().map(|t| t.requests).sum()
     }
+
+    /// Total batches stolen across tiers (executed by a foreign tier's
+    /// idle replica).
+    pub fn steals(&self) -> u64 {
+        self.tiers.iter().map(|t| t.steals).sum()
+    }
 }
 
-/// The running service: batcher + worker pool + optional governor over a
-/// shared [`Engine`]. Create client handles with [`Service::session`].
+/// The running service: `tiers × replicas` claim-and-steal workers plus
+/// an optional governor over a shared [`Engine`]. Create client handles
+/// with [`Service::session`].
 pub struct Service {
-    tx: Sender<Msg>,
     shared: Arc<Shared>,
-    batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     governor: Option<(governor::StopHandle, std::thread::JoinHandle<()>)>,
     trajectory: Arc<Mutex<std::collections::VecDeque<GovernorStep>>>,
@@ -142,12 +167,13 @@ pub struct Service {
 
 impl Service {
     /// Validate `opts`, pre-resolve every tier's engine variant (and the
-    /// governor's ladder), and start the batcher + worker pool (also
+    /// governor's ladder), and start the replica worker pool (also
     /// reachable as [`Engine::serve`](crate::engine::Engine::serve)).
     pub fn start(engine: Arc<Engine>, opts: ServeOptions) -> Result<Self, GavinaError> {
         opts.validate()?;
         let started = Instant::now();
         let mut tiers = Vec::with_capacity(opts.tiers.len());
+        let mut protected = Vec::with_capacity(opts.tiers.len());
         for spec in &opts.tiers {
             let tier_engine = match &spec.policy {
                 None => Arc::clone(&engine),
@@ -156,11 +182,14 @@ impl Service {
                 // shared with the base engine (PR 3).
                 Some(p) => Arc::new(engine.with_policy(p.clone())?),
             };
+            // Fully-guarded tiers get steal protection: thieves leave
+            // `steal_reserve` queued requests behind, so exact traffic
+            // keeps its dedicated lanes under mixed load.
+            protected.push(matches!(tier_engine.policy(), GavPolicy::Exact));
             tiers.push(TierRuntime {
                 name: Arc::from(spec.name.as_str()),
                 engine: Mutex::new(tier_engine),
                 max_batch: spec.max_batch,
-                batch_timeout: spec.batch_timeout,
                 metrics: TierMetrics::new(started),
             });
         }
@@ -169,12 +198,20 @@ impl Service {
             .iter()
             .position(|t| t.name == opts.default_tier)
             .expect("validated: default_tier exists");
+        let dispatch = Dispatch::new(
+            opts.replicas,
+            opts.steal,
+            opts.steal_reserve,
+            tiers.iter().map(|t| t.max_batch).collect(),
+            protected,
+        );
         let shared = Arc::new(Shared {
             admission: Arc::new(Admission::new(opts.queue_depth)),
             tiers,
             default_tier,
+            dispatch,
             rejected: AtomicU64::new(0),
-            closed: AtomicBool::new(false),
+            batch_seq: AtomicU64::new(0),
             started,
         });
 
@@ -191,31 +228,27 @@ impl Service {
             }
         };
 
-        let (tx, rx) = channel::<Msg>();
-        let (work_tx, work_rx) = channel::<(usize, Vec<Request>)>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-
-        let mut workers = Vec::with_capacity(opts.workers);
-        for wi in 0..opts.workers {
-            let shared = Arc::clone(&shared);
-            let work_rx = Arc::clone(&work_rx);
-            workers.push(std::thread::spawn(move || {
-                loop {
-                    let msg = { work_rx.lock().unwrap().recv() };
-                    let Ok((ti, batch)) = msg else { break };
-                    if ti == POISON {
-                        break;
+        let n_tiers = shared.tiers.len();
+        let mut workers = Vec::with_capacity(n_tiers * opts.replicas);
+        for ti in 0..n_tiers {
+            for ri in 0..opts.replicas {
+                let shared = Arc::clone(&shared);
+                let worker_id = (ti * opts.replicas + ri) as u64;
+                workers.push(std::thread::spawn(move || {
+                    loop {
+                        let Some(claim) = shared.dispatch.claim(ti, ri) else {
+                            break; // closed and fully drained
+                        };
+                        if claim.stolen {
+                            shared.tiers[claim.tier].metrics.record_steal();
+                        }
+                        let t0 = Instant::now();
+                        run_batch(&shared, claim.tier, worker_id, claim.batch);
+                        shared.tiers[claim.tier].metrics.record_busy(t0.elapsed());
                     }
-                    run_batch(&shared, ti, wi as u64, batch);
-                }
-            }));
+                }));
+            }
         }
-
-        let batcher_shared = Arc::clone(&shared);
-        let n_workers = opts.workers;
-        let batcher = std::thread::spawn(move || {
-            batcher_loop(rx, work_tx, &batcher_shared, n_workers);
-        });
 
         let trajectory = Arc::new(Mutex::new(std::collections::VecDeque::new()));
         let governor = ladder.map(|(g_opts, rungs, rung0)| {
@@ -229,9 +262,7 @@ impl Service {
         });
 
         Ok(Self {
-            tx,
             shared,
-            batcher: Some(batcher),
             workers,
             governor,
             trajectory,
@@ -241,26 +272,20 @@ impl Service {
     /// A client handle (cheap to clone, one per producer thread).
     pub fn session(&self) -> Session {
         Session {
-            tx: self.tx.clone(),
             shared: Arc::clone(&self.shared),
         }
     }
 
     /// Point-in-time metrics for every tier, in tier order.
     pub fn metrics(&self) -> Vec<MetricsSnapshot> {
-        self.shared
-            .tiers
-            .iter()
-            .map(|t| t.metrics.snapshot(&t.name, t.engine.lock().unwrap().layer_gs()))
+        (0..self.shared.tiers.len())
+            .map(|i| self.shared.snapshot_tier(i))
             .collect()
     }
 
     /// Point-in-time metrics for one named tier.
     pub fn tier_metrics(&self, name: &str) -> Option<MetricsSnapshot> {
-        self.shared.tier_index(name).map(|i| {
-            let t = &self.shared.tiers[i];
-            t.metrics.snapshot(name, t.engine.lock().unwrap().layer_gs())
-        })
+        self.shared.tier_index(name).map(|i| self.shared.snapshot_tier(i))
     }
 
     /// Submissions rejected at admission so far.
@@ -296,22 +321,19 @@ impl Service {
             .map(|i| self.shared.tiers[i].engine.lock().unwrap().layer_gs())
     }
 
-    /// Stop the governor, drain **every accepted ticket** (pending
-    /// batches are flushed and executed, never dropped), join all
-    /// threads, and return the final [`ServeReport`].
+    /// Stop the governor, drain **every accepted ticket** (queued
+    /// requests are claimed and executed — with stealing unconditionally
+    /// enabled so any worker finishes any tier's backlog — never
+    /// dropped), join all threads, and return the final [`ServeReport`].
     pub fn shutdown(mut self) -> ServeReport {
         if let Some((stop, handle)) = self.governor.take() {
             let _ = stop.send(());
             let _ = handle.join();
         }
-        // Order matters: close admission-for-new-submits *before* the
-        // Shutdown message, so `Session::submit`'s post-send re-check
-        // can never hand out a ticket the batcher won't see.
-        self.shared.closed.store(true, Ordering::SeqCst);
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
-        }
+        // `closed` lives under the dispatch lock: a submit either
+        // enqueued before this and will be drained, or gets a typed
+        // shutdown error — no ticket can be stranded.
+        self.shared.dispatch.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -319,75 +341,6 @@ impl Service {
             tiers: self.metrics(),
             rejected: self.rejected(),
             governor: self.governor_trajectory(),
-        }
-    }
-}
-
-/// The batcher thread: groups requests into per-tier batches bounded by
-/// each tier's `max_batch` / `batch_timeout`, because the accelerator
-/// amortizes its A0/B0 plane streams over the `L` dimension.
-fn batcher_loop(
-    rx: Receiver<Msg>,
-    work_tx: Sender<(usize, Vec<Request>)>,
-    shared: &Shared,
-    workers: usize,
-) {
-    let n_tiers = shared.tiers.len();
-    let mut pending: Vec<Vec<Request>> = (0..n_tiers).map(|_| Vec::new()).collect();
-    let mut deadlines: Vec<Option<Instant>> = vec![None; n_tiers];
-    loop {
-        let timeout = deadlines
-            .iter()
-            .flatten()
-            .min()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_secs(3600));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(ti, r)) => {
-                if pending[ti].is_empty() {
-                    deadlines[ti] = Some(Instant::now() + shared.tiers[ti].batch_timeout);
-                }
-                pending[ti].push(r);
-                if pending[ti].len() >= shared.tiers[ti].max_batch {
-                    let _ = work_tx.send((ti, std::mem::take(&mut pending[ti])));
-                    deadlines[ti] = None;
-                }
-            }
-            Ok(Msg::Shutdown) => {
-                // Accepted tickets racing shutdown: pull everything that
-                // already made it into the channel before draining.
-                while let Ok(msg) = rx.try_recv() {
-                    if let Msg::Req(ti, r) = msg {
-                        pending[ti].push(r);
-                    }
-                }
-                for (ti, batch) in pending.iter_mut().enumerate() {
-                    if !batch.is_empty() {
-                        let _ = work_tx.send((ti, std::mem::take(batch)));
-                    }
-                }
-                // Poison the pool: one sentinel per worker, FIFO-after
-                // the flushed batches, so every batch executes first.
-                for _ in 0..workers {
-                    let _ = work_tx.send((POISON, Vec::new()));
-                }
-                break;
-            }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-        // Sweep expired partial batches after *every* wakeup, not just
-        // on recv timeouts — with continuous traffic to other tiers,
-        // recv_timeout keeps returning messages and the timeout arm
-        // alone would starve an expired tier's flush indefinitely.
-        let now = Instant::now();
-        for ti in 0..n_tiers {
-            if deadlines[ti].is_some_and(|d| d <= now) {
-                if !pending[ti].is_empty() {
-                    let _ = work_tx.send((ti, std::mem::take(&mut pending[ti])));
-                }
-                deadlines[ti] = None;
-            }
         }
     }
 }
@@ -416,8 +369,9 @@ fn respond(
 
 /// Execute one tier batch on a worker thread. Cancelled, deadline-missed
 /// and malformed requests get per-request error [`Response`]s and never
-/// reach the executor; the rest proceed. Worker threads must survive
-/// arbitrary client input.
+/// reach the executor; the rest run as one cross-request packed batch
+/// (per-image activation scales keep every row bit-independent). Worker
+/// threads must survive arbitrary client input.
 fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
     let tier = &shared.tiers[ti];
     let engine = { Arc::clone(&tier.engine.lock().unwrap()) };
@@ -429,10 +383,7 @@ fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
         // runs the request normally. gavina-lint: allow(relaxed-order)
         if r.cancelled.load(Ordering::Relaxed) {
             dropped.push((r, GavinaError::Cancelled));
-        } else if r
-            .deadline
-            .is_some_and(|d| r.submitted.elapsed() > d)
-        {
+        } else if r.deadline.is_some_and(|d| r.submitted.elapsed() > d) {
             let waited_ms = r.submitted.elapsed().as_millis() as u64;
             dropped.push((r, GavinaError::DeadlineExceeded { waited_ms }));
         } else if r.image.len() != IMAGE_LEN {
@@ -472,11 +423,24 @@ fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
         return;
     }
 
-    let mut images = Vec::with_capacity(n * IMAGE_LEN);
-    for r in &good {
-        images.extend_from_slice(&r.image);
-    }
-    match engine.infer_parallel(&images, n, worker_id.wrapping_mul(0xD1F)) {
+    // Per-batch stream seed: mixing a fresh monotonic batch id means
+    // consecutive batches on one worker draw *different* injection
+    // streams; the old worker_id-only seed replayed one stream forever.
+    // Guarded/exact execution is stream-independent, so determinism
+    // contracts hold. Relaxed: only uniqueness matters, nothing
+    // synchronizes on the counter. gavina-lint: allow(relaxed-order)
+    let batch_id = shared.batch_seq.fetch_add(1, Ordering::Relaxed);
+    let stream = batch_id
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ worker_id.wrapping_mul(0xD1F);
+
+    // Cross-request packed batch: rows borrow the request images — no
+    // concatenated copy — and per-image activation scales keep each
+    // row's logits identical to standalone execution.
+    let rows: Vec<&[f32]> = good.iter().map(|r| r.image.as_slice()).collect();
+    let result = engine.infer_rows_parallel(&rows, stream);
+    drop(rows);
+    match result {
         Ok(result) => {
             let classes = result.classes;
             let mut lats = Vec::with_capacity(n);
@@ -506,8 +470,10 @@ fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
 mod tests {
     use super::*;
     use crate::arch::{ArchConfig, Precision};
-    use crate::engine::{EngineBuilder, GavPolicy};
+    use crate::engine::backend::{BackendGemm, ExecBackend, LayerGemm};
+    use crate::engine::{EngineBuilder, FloatBackend, GavPolicy};
     use crate::util::Prng;
+    use std::sync::Condvar;
 
     fn small_engine(threads: usize) -> Arc<Engine> {
         Arc::new(
@@ -523,16 +489,17 @@ mod tests {
         )
     }
 
-    fn one_tier_opts(max_batch: usize, timeout: Duration) -> ServeOptions {
+    fn one_tier_opts(max_batch: usize) -> ServeOptions {
         ServeOptions {
-            workers: 2,
+            replicas: 2,
             queue_depth: 64,
+            steal: true,
+            steal_reserve: 2,
             default_tier: "guarded".into(),
             tiers: vec![TierSpec {
                 name: "guarded".into(),
                 policy: None,
                 max_batch,
-                batch_timeout: timeout,
             }],
             governor: None,
         }
@@ -542,11 +509,95 @@ mod tests {
         (0..IMAGE_LEN).map(|_| rng.next_f32()).collect()
     }
 
+    /// A backend gate for deterministic concurrency tests: every GEMM
+    /// blocks at its first layer until `open()`, and `blocked()` reports
+    /// how many worker threads are currently parked inside the engine —
+    /// so tests can pin "this worker is mid-batch" without sleeps.
+    struct Gate {
+        state: Mutex<(bool, usize)>, // (open, currently blocked)
+        cv: Condvar,
+    }
+
+    impl Gate {
+        fn new() -> Arc<Self> {
+            Arc::new(Self {
+                state: Mutex::new((false, 0)),
+                cv: Condvar::new(),
+            })
+        }
+
+        fn open(&self) {
+            self.state.lock().unwrap().0 = true;
+            self.cv.notify_all();
+        }
+
+        fn pass(&self) {
+            let mut s = self.state.lock().unwrap();
+            if s.0 {
+                return;
+            }
+            s.1 += 1;
+            self.cv.notify_all();
+            while !s.0 {
+                s = self.cv.wait(s).unwrap();
+            }
+            s.1 -= 1;
+        }
+
+        /// Wait (bounded) until `n` workers are parked at the gate.
+        fn await_blocked(&self, n: usize) {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            let mut s = self.state.lock().unwrap();
+            while s.1 < n {
+                assert!(Instant::now() < deadline, "gate never saw {n} blocked workers");
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(s, Duration::from_millis(20))
+                    .unwrap();
+                s = guard;
+            }
+        }
+    }
+
+    struct GatedFloat {
+        gate: Arc<Gate>,
+    }
+
+    impl ExecBackend for GatedFloat {
+        fn name(&self) -> &'static str {
+            "gated-float"
+        }
+
+        fn run_layer_gemm(&self, job: &LayerGemm) -> BackendGemm {
+            self.gate.pass();
+            FloatBackend.run_layer_gemm(job)
+        }
+
+        fn is_simulated(&self) -> bool {
+            false
+        }
+    }
+
+    fn gated_engine(gate: &Arc<Gate>, policy: GavPolicy) -> Arc<Engine> {
+        Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 1)
+                .precision(Precision::new(2, 2))
+                .arch(ArchConfig::tiny())
+                .backend(Arc::new(GatedFloat {
+                    gate: Arc::clone(gate),
+                }))
+                .policy(policy)
+                .seed(1)
+                .threads(1)
+                .build()
+                .unwrap(),
+        )
+    }
+
     #[test]
     fn serves_requests_end_to_end() {
-        let service = small_engine(1)
-            .serve(one_tier_opts(4, Duration::from_millis(5)))
-            .unwrap();
+        let service = small_engine(1).serve(one_tier_opts(4)).unwrap();
         let session = service.session();
         let mut rng = Prng::new(2);
         let mut tickets = Vec::new();
@@ -571,15 +622,15 @@ mod tests {
         assert!(m.p50_us > 0 && m.p95_us >= m.p50_us && m.p99_us >= m.p95_us);
         assert!(m.max_us >= m.p99_us);
         assert!(m.requests_per_sec > 0.0);
+        assert!(m.occupancy > 0.0, "busy time must be accounted");
+        assert_eq!(m.queue_depth, 0, "drained at shutdown");
         assert_eq!(report.rejected, 0);
         assert!(report.governor.is_empty());
     }
 
     #[test]
     fn bad_request_gets_error_response_and_workers_survive() {
-        let service = small_engine(1)
-            .serve(one_tier_opts(4, Duration::from_millis(5)))
-            .unwrap();
+        let service = small_engine(1).serve(one_tier_opts(4)).unwrap();
         let session = service.session();
         let mut rng = Prng::new(3);
         let mut good = Vec::new();
@@ -613,9 +664,7 @@ mod tests {
 
     #[test]
     fn batching_respects_max_batch_and_intra_batch_threads() {
-        let service = small_engine(2)
-            .serve(one_tier_opts(2, Duration::from_millis(5)))
-            .unwrap();
+        let service = small_engine(2).serve(one_tier_opts(2)).unwrap();
         let session = service.session();
         let mut rng = Prng::new(4);
         let tickets: Vec<_> = (0..6)
@@ -630,64 +679,92 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_flushes_pending() {
-        // max_batch never reached, timeout never fires: the pending
-        // sub-batch must still drain at shutdown.
-        let service = small_engine(1)
-            .serve(one_tier_opts(64, Duration::from_secs(3600)))
-            .unwrap();
+    fn shutdown_drains_queued_requests() {
+        // The single replica is parked inside a batch at the gate while a
+        // second request sits queued; shutdown must claim and execute it,
+        // never drop it.
+        let gate = Gate::new();
+        let mut opts = one_tier_opts(1);
+        opts.replicas = 1;
+        let service = gated_engine(&gate, GavPolicy::Exact).serve(opts).unwrap();
         let session = service.session();
         let mut rng = Prng::new(6);
-        let ticket = session.submit(rand_image(&mut rng)).unwrap();
+        let first = session.submit(rand_image(&mut rng)).unwrap();
+        gate.await_blocked(1);
+        let queued = session.submit(rand_image(&mut rng)).unwrap();
         let handle = std::thread::spawn(move || service.shutdown());
-        let resp = ticket
-            .wait_timeout(Duration::from_secs(120))
-            .unwrap()
-            .expect("flushed");
-        assert_eq!(resp.expect_logits("flushed request").len(), 10);
+        gate.open();
+        assert_eq!(
+            first
+                .wait_timeout(Duration::from_secs(120))
+                .unwrap()
+                .expect("in-flight request")
+                .expect_logits("served")
+                .len(),
+            10
+        );
+        assert_eq!(
+            queued
+                .wait_timeout(Duration::from_secs(120))
+                .unwrap()
+                .expect("queued request drains at shutdown")
+                .expect_logits("drained")
+                .len(),
+            10
+        );
         let report = handle.join().unwrap();
-        assert_eq!(report.requests(), 1);
+        assert_eq!(report.requests(), 2);
     }
 
     #[test]
     fn cancellation_yields_typed_cancelled_response() {
-        // Long batch timeout: the request sits in the batcher until
-        // shutdown flushes it, by which point it is cancelled.
-        let service = small_engine(1)
-            .serve(one_tier_opts(64, Duration::from_secs(3600)))
-            .unwrap();
+        // Park the only replica at the gate, queue a second request,
+        // cancel it: when the worker reaches it, it must answer with a
+        // typed Cancelled instead of executing.
+        let gate = Gate::new();
+        let mut opts = one_tier_opts(1);
+        opts.replicas = 1;
+        let service = gated_engine(&gate, GavPolicy::Exact).serve(opts).unwrap();
         let session = service.session();
         let mut rng = Prng::new(8);
-        let ticket = session.submit(rand_image(&mut rng)).unwrap();
-        ticket.cancel();
-        let handle = std::thread::spawn(move || service.shutdown());
-        let resp = ticket
+        let first = session.submit(rand_image(&mut rng)).unwrap();
+        gate.await_blocked(1);
+        let victim = session.submit(rand_image(&mut rng)).unwrap();
+        victim.cancel();
+        gate.open();
+        let resp = victim
             .wait_timeout(Duration::from_secs(120))
             .unwrap()
             .expect("cancelled response");
         assert!(matches!(resp.result(), Err(GavinaError::Cancelled)));
-        let report = handle.join().unwrap();
+        first.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+        let report = service.shutdown();
         let m = report.tier("guarded").unwrap();
         assert_eq!(m.cancelled, 1);
-        assert_eq!(m.requests, 0);
+        assert_eq!(m.requests, 1);
     }
 
     #[test]
     fn deadline_expired_requests_get_typed_response() {
-        let service = small_engine(1)
-            .serve(one_tier_opts(64, Duration::from_millis(30)))
-            .unwrap();
+        let gate = Gate::new();
+        let mut opts = one_tier_opts(1);
+        opts.replicas = 1;
+        let service = gated_engine(&gate, GavPolicy::Exact).serve(opts).unwrap();
         let session = service.session();
         let mut rng = Prng::new(9);
-        // A deadline that has certainly passed by the time the batch
-        // timeout (30 ms) flushes it.
-        let ticket = session
+        let first = session.submit(rand_image(&mut rng)).unwrap();
+        gate.await_blocked(1);
+        // Queued behind the parked replica with a deadline that expires
+        // while it waits.
+        let late = session
             .submit_with(
                 rand_image(&mut rng),
                 SubmitOptions::new().deadline(Duration::from_millis(1)),
             )
             .unwrap();
-        let resp = ticket
+        std::thread::sleep(Duration::from_millis(10));
+        gate.open();
+        let resp = late
             .wait_timeout(Duration::from_secs(120))
             .unwrap()
             .expect("deadline response");
@@ -695,6 +772,7 @@ mod tests {
             Err(GavinaError::DeadlineExceeded { waited_ms }) => assert!(*waited_ms >= 1),
             other => panic!("expected DeadlineExceeded, got {other:?}"),
         }
+        first.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
         service.shutdown();
     }
 
@@ -705,7 +783,7 @@ mod tests {
         // the instant its response arrives always finds the
         // queue_depth-1 slot free — `rejected` staying at zero is the
         // whole assertion.
-        let mut opts = one_tier_opts(1, Duration::from_millis(1));
+        let mut opts = one_tier_opts(1);
         opts.queue_depth = 1;
         let service = small_engine(1).serve(opts).unwrap();
         let session = service.session();
@@ -722,15 +800,13 @@ mod tests {
     #[test]
     fn submit_shutdown_race_never_strands_an_accepted_ticket() {
         // Races submitters against shutdown (this also runs under the CI
-        // ThreadSanitizer job). The SeqCst `closed` re-check in
-        // `submit_with` is the invariant under test: every `Ok` ticket
-        // must resolve with a response and every refusal must be a typed
-        // error — a ticket that never fires is the one forbidden
-        // outcome.
+        // ThreadSanitizer job). The invariant under test: `closed` lives
+        // under the same lock as the queues, so a submit either enqueues
+        // before close() (and is drained) or gets a typed error — every
+        // `Ok` ticket must resolve with a response; a ticket that never
+        // fires is the one forbidden outcome.
         for seed in 0..4u64 {
-            let service = small_engine(1)
-                .serve(one_tier_opts(4, Duration::from_millis(1)))
-                .unwrap();
+            let service = small_engine(1).serve(one_tier_opts(4)).unwrap();
             let start = Arc::new(std::sync::Barrier::new(5));
             let mut submitters = Vec::new();
             for worker in 0..4u64 {
@@ -762,17 +838,13 @@ mod tests {
             for h in submitters {
                 resolved += h.join().unwrap();
             }
-            // `<=`, not `==`: a submit that races the shutdown window
-            // returns `Err` after its send, yet the drained request may
-            // still execute and be counted — only the reverse (a
-            // resolved ticket the metrics missed) would be a bug.
-            assert!(resolved <= report.requests(), "resolved tickets counted");
+            assert_eq!(resolved, report.requests(), "every Ok ticket resolves, every resolution is counted");
         }
     }
 
     #[test]
     fn submit_routes_to_named_tier_and_unknown_tier_is_typed() {
-        let mut opts = one_tier_opts(4, Duration::from_millis(5));
+        let mut opts = one_tier_opts(4);
         opts.tiers
             .push(TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1));
         let service = small_engine(1).serve(opts).unwrap();
@@ -790,5 +862,132 @@ mod tests {
         }
         let report = service.shutdown();
         assert_eq!(report.tier("exact").unwrap().requests, 1);
+    }
+
+    #[test]
+    fn consecutive_batches_on_one_worker_use_distinct_injection_streams() {
+        use crate::errmodel::{ErrorTables, ModelParams};
+        // Undervolted engine with dense error tables: injection depends
+        // on the per-batch RNG stream. Two sequential submissions of the
+        // *same image* on the *same worker* must observe different
+        // streams — the old worker_id-only seed replayed one stream and
+        // returned identical corrupted logits forever.
+        let arch = ArchConfig::tiny();
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        for bit in 0..params.s_bits {
+            for e in 0..=params.c_dim as u16 {
+                for pb in 0..params.p_bins {
+                    for cd in 0..params.n_cond(bit) {
+                        tables.set_prob(bit, e, pb, cd, 0.5);
+                    }
+                }
+            }
+        }
+        let engine = Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 1)
+                .precision(Precision::new(2, 2))
+                .arch(arch)
+                .tables(tables)
+                .policy(GavPolicy::Uniform(0))
+                .seed(7)
+                .threads(1)
+                .build()
+                .unwrap(),
+        );
+        let mut opts = one_tier_opts(1);
+        opts.replicas = 1; // exactly one worker => both batches run on it
+        let service = engine.serve(opts).unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(17);
+        let image = rand_image(&mut rng);
+        let a = session
+            .submit(image.clone())
+            .unwrap()
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("first batch")
+            .expect_logits("first batch");
+        let b = session
+            .submit(image)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap()
+            .expect("second batch")
+            .expect_logits("second batch");
+        assert_ne!(
+            a, b,
+            "two batches on one worker must draw different injection streams"
+        );
+        let report = service.shutdown();
+        assert!(report.tier("guarded").unwrap().corrupted > 0);
+    }
+
+    #[test]
+    fn work_stealing_drains_foreign_tiers_but_respects_exact_reserve() {
+        // Two tiers, one replica each. The gold (exact) tier's replica is
+        // parked at the gate; its queue fills to the steal reserve — the
+        // busy tier's idle replica must NOT steal from it. One request
+        // past the reserve, the thief takes exactly the excess, runs it
+        // on gold's engine, and gold's steal counter records the theft.
+        let gate = Gate::new();
+        let opts = ServeOptions {
+            replicas: 1,
+            queue_depth: 32,
+            steal: true,
+            steal_reserve: 2,
+            default_tier: "busy".into(),
+            tiers: vec![
+                TierSpec {
+                    name: "busy".into(),
+                    policy: None,
+                    max_batch: 4,
+                },
+                TierSpec {
+                    name: "gold".into(),
+                    policy: Some(GavPolicy::Exact),
+                    max_batch: 4,
+                },
+            ],
+            governor: None,
+        };
+        let service = gated_engine(&gate, GavPolicy::Uniform(1)).serve(opts).unwrap();
+        let session = service.session();
+        let mut rng = Prng::new(19);
+        let image = rand_image(&mut rng);
+        let gold = |img: Vec<f32>| {
+            session
+                .submit_with(img, SubmitOptions::new().tier("gold"))
+                .unwrap()
+        };
+        // Busy's replica cannot steal gold's first request: the reserve
+        // already protects a single queued exact request. Gold's own
+        // replica claims it and parks at the gate.
+        let mut tickets = vec![gold(image.clone())];
+        gate.await_blocked(1);
+        // Two more: exactly at the reserve — still protected.
+        tickets.push(gold(image.clone()));
+        tickets.push(gold(image.clone()));
+        std::thread::sleep(Duration::from_millis(150)); // > claim() poll period
+        let m = service.tier_metrics("gold").unwrap();
+        assert_eq!(m.steals, 0, "at/below the reserve nothing is stolen");
+        assert_eq!(m.queue_depth, 2, "both requests still queued for gold");
+        // One past the reserve: busy's idle replica steals the excess and
+        // parks inside gold's engine — the second blocked worker.
+        tickets.push(gold(image.clone()));
+        gate.await_blocked(2);
+        let m = service.tier_metrics("gold").unwrap();
+        assert_eq!(m.steals, 1, "the excess past the reserve is stolen");
+        gate.open();
+        for t in tickets {
+            let resp = t.wait_timeout(Duration::from_secs(120)).unwrap().expect("response");
+            assert_eq!(resp.tier(), "gold", "stolen work still runs as its own tier");
+            assert_eq!(resp.expect_logits("served").len(), 10);
+        }
+        let report = service.shutdown();
+        assert_eq!(report.tier("gold").unwrap().requests, 4);
+        assert_eq!(report.tier("busy").unwrap().steals, 0);
+        assert_eq!(report.steals(), 1);
     }
 }

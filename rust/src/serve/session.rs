@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::GavinaError;
 
-use super::{Msg, Shared};
+use super::Shared;
 
 /// The bounded admission gate: a counting semaphore over every request
 /// the service has accepted but not yet answered. When `capacity`
@@ -144,7 +144,6 @@ impl SubmitOptions {
 /// clone; hand one to every producer thread.
 #[derive(Clone)]
 pub struct Session {
-    pub(crate) tx: Sender<Msg>,
     pub(crate) shared: Arc<Shared>,
 }
 
@@ -217,23 +216,13 @@ impl Session {
             resp: resp_tx,
             _permit: permit,
         };
-        // A failed send drops the request: the permit releases and the
-        // caller gets a typed error instead of a ticket that never fires.
-        self.tx
-            .send(Msg::Req(tier, req))
-            .map_err(|_| GavinaError::Backend("serving pipeline is shut down".into()))?;
-        // Re-check the shutdown flag *after* the send: if it is still
-        // unset here, our message is FIFO-ahead of the Shutdown message
-        // (the flag is stored before Shutdown is sent), so the batcher
-        // is guaranteed to drain this ticket. If it is set, the request
-        // may have raced past the batcher's final drain — report the
-        // shutdown instead of handing out a ticket that might never
-        // fire (the admission permit is released either way).
-        if self.shared.closed.load(Ordering::SeqCst) {
-            return Err(GavinaError::Backend(
-                "serving pipeline is shut down".into(),
-            ));
-        }
+        // The dispatch holds `closed` under the same lock as its queues,
+        // so this either enqueues before shutdown's close() (and the
+        // drain answers the ticket) or returns a typed error here — in
+        // which case dropping `req` releases the admission permit. No
+        // post-enqueue re-check is needed; the old channel-based path's
+        // SeqCst race window is gone by construction.
+        self.shared.dispatch.submit(tier, req)?;
         Ok(Ticket {
             rx: resp_rx,
             cancelled,

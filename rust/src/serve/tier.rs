@@ -3,13 +3,17 @@
 //! A **tier** is a named energy/accuracy operating point: a
 //! [`GavPolicy`] (resolved once at service start via
 //! [`Engine::with_policy`](crate::engine::Engine::with_policy), sharing
-//! the packed weight planes) plus its own batching knobs and metrics.
-//! The built-in trio mirrors the paper's flexibility axis:
+//! the packed weight planes) plus its own batching bound and metrics.
+//! Each tier gets `replicas` dedicated worker lanes; idle replicas steal
+//! batches from other tiers (see the [`serve`](super) module docs). The
+//! built-in trio mirrors the paper's flexibility axis:
 //!
-//! * `exact` — fully guarded, `max_batch = 1`: per-request activation
-//!   quantization, so served logits are **bit-identical** to a
-//!   standalone [`Engine::infer`](crate::engine::Engine::infer) call
-//!   regardless of batch co-tenants. The reproducibility tier.
+//! * `exact` — fully guarded. Per-image activation quantization makes
+//!   every served request **bit-identical** to a standalone
+//!   [`Engine::infer`](crate::engine::Engine::infer) call regardless of
+//!   batch co-tenants, so the exact tier batches too (`max_batch = 4`).
+//!   Its queue is also a protected steal victim: thieves leave
+//!   `steal_reserve` requests behind. The reproducibility tier.
 //! * `guarded` — the base engine's own policy, normal batching. The
 //!   balanced default.
 //! * `aggressive` — `G = 0` everywhere (every LSB plane-combination
@@ -20,15 +24,16 @@
 //!
 //! ```toml
 //! [serve]
-//! workers = 2              # batch worker threads (>= 1)
+//! replicas = 2             # worker lanes per tier (>= 1)
+//! steal = true             # idle replicas steal foreign tiers' batches
+//! steal_reserve = 2        # queued requests a protected tier keeps
 //! queue_depth = 64         # bounded admission: max in-flight requests
 //! default_tier = "guarded"
-//! max_batch = 8            # global batching defaults...
-//! batch_timeout_ms = 20    # ...tiers may override below
+//! max_batch = 8            # global batching default; tiers may override
 //!
 //! [serve.tier.exact]
 //! policy = "exact"
-//! max_batch = 1
+//! max_batch = 4
 //!
 //! [serve.tier.guarded]
 //! policy = "uniform"
@@ -38,7 +43,6 @@
 //! policy = "uniform"
 //! g = 0
 //! max_batch = 16
-//! batch_timeout_ms = 5
 //!
 //! [serve.governor]         # present => load-adaptive governor enabled
 //! period_ms = 100
@@ -47,6 +51,13 @@
 //! low_load = 0.25
 //! min_g = 0
 //! ```
+//!
+//! `workers = N` (the pre-replica total worker count) is still accepted
+//! and maps to `replicas = ceil(N / n_tiers)`; setting both `workers`
+//! and `replicas` is an error. `batch_timeout_ms` is accepted and
+//! type-checked for compatibility but **ignored**: continuous batching
+//! has no flush windows — an idle worker claims everything queued the
+//! moment it is free.
 //!
 //! Tier policies: `exact`, `base` (the engine's own policy as built),
 //! `uniform` (needs `g`), `per_layer` (needs `layer_gs`). `ilp` is
@@ -72,20 +83,18 @@ pub struct TierSpec {
     /// resolved via `Engine::with_policy` at service start, sharing the
     /// packed weight planes.
     pub policy: Option<GavPolicy>,
-    /// Largest batch handed to one worker (1 = per-request execution).
+    /// Largest batch one worker claims in one go (1 = per-request
+    /// execution). There is no timeout knob: batching is continuous.
     pub max_batch: usize,
-    /// Deadline after which a partial batch is flushed.
-    pub batch_timeout: Duration,
 }
 
 impl TierSpec {
-    /// A tier with the default batching knobs (`max_batch 8`, 20 ms).
+    /// A tier with the default batching bound (`max_batch 8`).
     pub fn new(name: &str, policy: Option<GavPolicy>) -> Self {
         Self {
             name: name.to_string(),
             policy,
             max_batch: 8,
-            batch_timeout: Duration::from_millis(20),
         }
     }
 
@@ -93,25 +102,28 @@ impl TierSpec {
         self.max_batch = n;
         self
     }
-
-    pub fn batch_timeout(mut self, d: Duration) -> Self {
-        self.batch_timeout = d;
-        self
-    }
 }
 
-/// Service configuration: admission bound, worker pool, QoS tiers and
-/// the optional governor. Everything model/accelerator-side (precision,
-/// error tables, intra-batch threads) lives on the
-/// [`Engine`](crate::engine::Engine).
+/// Service configuration: admission bound, per-tier replica lanes,
+/// work-stealing, QoS tiers and the optional governor. Everything
+/// model/accelerator-side (precision, error tables, intra-batch threads)
+/// lives on the [`Engine`](crate::engine::Engine).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Batch worker threads (each drains whole batches).
-    pub workers: usize,
+    /// Worker lanes **per tier** — the pool is `tiers × replicas`
+    /// threads, each with its own FIFO lane.
+    pub replicas: usize,
     /// Bounded admission: the maximum number of accepted-but-unanswered
     /// requests. At the bound, `submit` fails fast with
     /// [`GavinaError::Overloaded`].
     pub queue_depth: usize,
+    /// Idle replicas steal batches from other tiers' lane tails. Off,
+    /// tiers are fully isolated (stealing still happens during the
+    /// shutdown drain so no accepted ticket is stranded).
+    pub steal: bool,
+    /// Queued requests a protected (exact-policy) tier keeps away from
+    /// thieves, preserving its replicas' locality under mixed load.
+    pub steal_reserve: usize,
     /// Name of the tier `submit` routes to when no tier is given; the
     /// governor (when enabled) adapts this tier's per-layer G.
     pub default_tier: String,
@@ -123,19 +135,19 @@ pub struct ServeOptions {
 
 impl Default for ServeOptions {
     /// The built-in `exact` / `guarded` / `aggressive` trio (see the
-    /// [module docs](self)), two workers, admission depth 64, governor
-    /// off.
+    /// [module docs](self)), two replicas per tier, stealing on,
+    /// admission depth 64, governor off.
     fn default() -> Self {
         Self {
-            workers: 2,
+            replicas: 2,
             queue_depth: 64,
+            steal: true,
+            steal_reserve: 2,
             default_tier: "guarded".into(),
             tiers: vec![
-                TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(1),
+                TierSpec::new("exact", Some(GavPolicy::Exact)).max_batch(4),
                 TierSpec::new("guarded", None),
-                TierSpec::new("aggressive", Some(GavPolicy::Uniform(0)))
-                    .max_batch(16)
-                    .batch_timeout(Duration::from_millis(5)),
+                TierSpec::new("aggressive", Some(GavPolicy::Uniform(0))).max_batch(16),
             ],
             governor: None,
         }
@@ -147,9 +159,9 @@ impl ServeOptions {
     /// `Service::start` calls this, so a hand-built `ServeOptions` gets
     /// the same checks as a parsed one.
     pub fn validate(&self) -> Result<(), GavinaError> {
-        if self.workers == 0 {
+        if self.replicas == 0 {
             return Err(GavinaError::Config(
-                "[serve] workers must be ≥ 1 (0 workers would never serve)".into(),
+                "[serve] replicas must be ≥ 1 (0 workers would never serve)".into(),
             ));
         }
         if self.queue_depth == 0 {
@@ -208,8 +220,16 @@ impl ServeOptions {
     /// schema). Unknown keys, ill-typed values and out-of-range numbers
     /// are [`GavinaError::Config`] errors carrying the config line.
     pub fn from_config(cfg: &Config) -> Result<Self, GavinaError> {
-        const KNOWN_TOP: &[&str] =
-            &["workers", "queue_depth", "max_batch", "batch_timeout_ms", "default_tier"];
+        const KNOWN_TOP: &[&str] = &[
+            "workers",
+            "replicas",
+            "steal",
+            "steal_reserve",
+            "queue_depth",
+            "max_batch",
+            "batch_timeout_ms",
+            "default_tier",
+        ];
         const KNOWN_TIER: &[&str] = &["policy", "g", "layer_gs", "max_batch", "batch_timeout_ms"];
         const KNOWN_GOV: &[&str] =
             &["period_ms", "target_power_mw", "high_load", "low_load", "min_g"];
@@ -321,29 +341,34 @@ impl ServeOptions {
                     .ok_or_else(|| bad(key, format!("'{key}' must be a string"))),
             }
         };
+        let bool_or = |key: &str, default: bool| -> Result<bool, GavinaError> {
+            match cfg.get(&format!("serve.{key}")) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| bad(key, format!("'{key}' must be a boolean"))),
+            }
+        };
 
         let d = ServeOptions::default();
-        let workers = int_ge("workers", d.workers as i64, 1)? as usize;
         let queue_depth = int_ge("queue_depth", d.queue_depth as i64, 1)? as usize;
+        let steal = bool_or("steal", d.steal)?;
+        let steal_reserve = int_ge("steal_reserve", d.steal_reserve as i64, 0)? as usize;
         let global_batch = int_ge("max_batch", 8, 1)? as usize;
-        let global_timeout_ms = int_ge("batch_timeout_ms", 20, 1)? as u64;
+        // Accepted for compatibility with pre-continuous-batching
+        // configs: type-checked (a typo'd value still fails loudly) but
+        // otherwise ignored — there are no flush windows any more.
+        let _ = int_ge("batch_timeout_ms", 20, 1)?;
 
         let tiers = if tier_names.is_empty() {
             // No [serve.tier.*] sections: the built-in trio, with the
-            // global batching knobs (when given) applied to every tier —
-            // except the exact tier's max_batch = 1, which is its
-            // bit-identical-to-`Engine::infer` guarantee.
-            let mut tiers = d.tiers;
+            // global batching bound (when given) applied to every tier —
+            // including exact: per-image activation quantization keeps
+            // exact-tier responses bit-identical at any batch size.
+            let mut tiers = d.tiers.clone();
             if cfg.get("serve.max_batch").is_some() {
                 for t in &mut tiers {
-                    if t.name != "exact" {
-                        t.max_batch = global_batch;
-                    }
-                }
-            }
-            if cfg.get("serve.batch_timeout_ms").is_some() {
-                for t in &mut tiers {
-                    t.batch_timeout = Duration::from_millis(global_timeout_ms);
+                    t.max_batch = global_batch;
                 }
             }
             tiers
@@ -432,16 +457,35 @@ impl ServeOptions {
                     ));
                 }
                 let max_batch = int_ge(&k("max_batch"), global_batch as i64, 1)? as usize;
-                let timeout_ms =
-                    int_ge(&k("batch_timeout_ms"), global_timeout_ms as i64, 1)? as u64;
+                // Compatibility: type-checked, ignored (see above).
+                let _ = int_ge(&k("batch_timeout_ms"), 20, 1)?;
                 tiers.push(TierSpec {
                     name: name.clone(),
                     policy,
                     max_batch,
-                    batch_timeout: Duration::from_millis(timeout_ms),
                 });
             }
             tiers
+        };
+
+        // Replica resolution, after tiers so the legacy total-worker form
+        // can divide by the tier count.
+        let replicas = match (cfg.get("serve.replicas"), cfg.get("serve.workers")) {
+            (Some(_), Some(_)) => {
+                return Err(bad(
+                    "replicas",
+                    "set either replicas (per tier) or the legacy workers (total), not both"
+                        .into(),
+                ))
+            }
+            (Some(_), None) => int_ge("replicas", d.replicas as i64, 1)? as usize,
+            (None, Some(_)) => {
+                // Legacy `workers = N` was the TOTAL worker count over one
+                // shared queue; spread it across the per-tier lanes.
+                let workers = int_ge("workers", 2, 1)? as usize;
+                workers.div_ceil(tiers.len()).max(1)
+            }
+            (None, None) => d.replicas,
         };
 
         let default_tier = match str_opt("default_tier")? {
@@ -471,8 +515,10 @@ impl ServeOptions {
         };
 
         let opts = ServeOptions {
-            workers,
+            replicas,
             queue_depth,
+            steal,
+            steal_reserve,
             default_tier,
             tiers,
             governor,
@@ -493,24 +539,41 @@ mod tests {
         d.validate().unwrap();
         assert_eq!(d.tiers.len(), 3);
         assert_eq!(d.tiers[0].name, "exact");
-        assert_eq!(d.tiers[0].max_batch, 1, "exact tier is per-request");
+        assert_eq!(d.tiers[0].max_batch, 4, "exact batches too (per-image scales)");
         assert_eq!(d.default_tier, "guarded");
+        assert_eq!(d.replicas, 2);
+        assert!(d.steal);
     }
 
     #[test]
     fn legacy_flat_serve_section_still_loads() {
-        let cfg = parse("[serve]\nworkers = 3\nmax_batch = 16\n").unwrap();
+        let cfg = parse("[serve]\nworkers = 3\nmax_batch = 16\nbatch_timeout_ms = 5\n").unwrap();
         let opts = ServeOptions::from_config(&cfg).unwrap();
-        assert_eq!(opts.workers, 3);
-        // Global batching applies to the built-in tiers — except exact,
-        // whose max_batch = 1 is its determinism guarantee.
-        assert!(opts
-            .tiers
-            .iter()
-            .all(|t| t.max_batch == 16 || t.name == "exact"));
-        assert_eq!(opts.tiers[0].max_batch, 1);
+        // Legacy total worker count spreads across the per-tier lanes:
+        // ceil(3 / 3 tiers) = 1 replica per tier.
+        assert_eq!(opts.replicas, 1);
+        // The global batching bound applies to every tier, exact
+        // included — per-image quantization keeps it bit-identical.
+        assert!(opts.tiers.iter().all(|t| t.max_batch == 16));
         assert_eq!(opts.tiers.len(), 3);
         assert!(opts.governor.is_none());
+    }
+
+    #[test]
+    fn replicas_and_steal_keys_load_and_conflict_with_workers() {
+        let cfg = parse("[serve]\nreplicas = 4\nsteal = false\nsteal_reserve = 0\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.replicas, 4);
+        assert!(!opts.steal);
+        assert_eq!(opts.steal_reserve, 0);
+
+        let cfg = parse("[serve]\nreplicas = 4\nworkers = 2\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("not both"), "{err}");
+
+        let cfg = parse("[serve]\nsteal = 3\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("'steal' must be a boolean"), "{err}");
     }
 
     #[test]
@@ -529,8 +592,8 @@ mod tests {
         assert_eq!(opts.tiers[0].name, "fast");
         assert_eq!(opts.tiers[0].policy, Some(GavPolicy::Uniform(1)));
         assert_eq!(opts.tiers[0].max_batch, 4);
+        // batch_timeout_ms is tolerated (type-checked, ignored).
         assert_eq!(opts.tiers[1].policy, Some(GavPolicy::Exact));
-        assert_eq!(opts.tiers[1].batch_timeout, Duration::from_millis(5));
         assert_eq!(opts.tiers[2].policy, None);
     }
 
@@ -625,7 +688,7 @@ mod tests {
     #[test]
     fn validate_catches_structural_mistakes() {
         let base = ServeOptions::default;
-        assert!(ServeOptions { workers: 0, ..base() }.validate().is_err());
+        assert!(ServeOptions { replicas: 0, ..base() }.validate().is_err());
         assert!(ServeOptions { queue_depth: 0, ..base() }.validate().is_err());
         assert!(ServeOptions { default_tier: "none".into(), ..base() }
             .validate()
