@@ -17,9 +17,13 @@ floors (``rust/BENCH_baseline.json``) and exits non-zero when
 (``BENCH_serve.json``): the baseline may carry an optional
 ``serve_floors`` list of ``{"replicas": R, "throughput_rps": floor}``
 entries; each is compared against the sweep point with the same replica
-count (same tolerance). When the baseline has no ``serve_floors``
-section the gate is a no-op that still prints the observed sweep, so
-the floors can be ratcheted in later from real artifact runs.
+count (same tolerance). A floor entry may additionally name the QoS
+tiers it expects the sweep point to report (``"tiers": ["exact", ...]``)
+— a sweep point missing one of those tier keys warns loudly instead of
+silently gating on a shrunken tier set. When the baseline has no
+``serve_floors`` section the gate is a no-op that still prints the
+observed sweep, so the floors can be ratcheted in later from real
+artifact runs.
 
 Prints a GitHub-flavoured markdown delta table; pipe it into
 ``$GITHUB_STEP_SUMMARY``. Baseline keys missing from the current run
@@ -45,13 +49,18 @@ def serve_gate(baseline_path, serve_path):
     with open(serve_path) as f:
         cur = json.load(f)
     tol = float(base.get("tolerance", 0.15))
-    floors = {int(e["replicas"]): float(e["throughput_rps"]) for e in base.get("serve_floors", [])}
-    points = {int(e["replicas"]): float(e["throughput_rps"]) for e in cur.get("entries", [])}
+    floors, floor_tiers = {}, {}
+    for e in base.get("serve_floors", []):
+        r = int(e["replicas"])
+        floors[r] = float(e["throughput_rps"])
+        floor_tiers[r] = list(e.get("tiers", []))
+    entries = {int(e["replicas"]): e for e in cur.get("entries", [])}
+    points = {r: float(e["throughput_rps"]) for r, e in entries.items()}
 
     print(f"### serve throughput gate (tolerance {tol:.0%})\n")
     print("| replicas | floor rps | current rps | delta | verdict |")
     print("|---|---|---|---|---|")
-    failures = []
+    failures, warnings = [], []
     for r in sorted(points):
         c = points[r]
         b = floors.get(r)
@@ -64,8 +73,17 @@ def serve_gate(baseline_path, serve_path):
             failures.append(f"replicas={r}: {c:.1f} rps vs floor {b:.1f} ({delta:+.1%})")
         verdict = "ok" if ok else f"**REGRESSION >{tol:.0%}**"
         print(f"| {r} | {b:.1f} | {c:.1f} | {delta:+.1%} | {verdict} |")
+        swept = {t.get("tier") for t in entries[r].get("tiers", [])}
+        for name in floor_tiers.get(r, []):
+            if name not in swept:
+                warnings.append(
+                    f"replicas={r}: baseline expects tier '{name}' in the sweep point, "
+                    f"but BENCH_serve.json only reports {sorted(t for t in swept if t)}"
+                )
     for r in sorted(set(floors) - set(points)):
-        print(f"\n> warning: serve floor for replicas={r} not produced by this run")
+        warnings.append(f"serve floor for replicas={r} not produced by this run")
+    for w in warnings:
+        print(f"\n> warning: {w}")
     if failures:
         print("\n**serve gate FAILED:**\n")
         for f_ in failures:

@@ -23,7 +23,7 @@ use gavina::dnn;
 use gavina::engine::{EngineBuilder, GavPolicy, GavinaError};
 use gavina::errmodel;
 use gavina::power::PowerModel;
-use gavina::serve::{GovernorOptions, ServeOptions, SubmitOptions};
+use gavina::serve::{CanaryOptions, GovernorOptions, ServeOptions, SubmitOptions};
 use gavina::stats::accuracy;
 
 fn main() {
@@ -79,7 +79,9 @@ fn main() {
             .expect("engine config"),
     );
 
-    // Three QoS tiers + the governor on the default (guarded) tier.
+    // Three QoS tiers + the governor on the default (guarded) tier,
+    // with the canary re-running a slice of served requests on the
+    // bit-exact reference so the governor reacts to *measured* drift.
     let opts = ServeOptions {
         replicas: 2,
         queue_depth: 256,
@@ -87,11 +89,15 @@ fn main() {
             period: Duration::from_millis(20),
             ..Default::default()
         }),
+        canary: Some(CanaryOptions {
+            sample_rate: 0.25,
+            ..Default::default()
+        }),
         ..Default::default()
     };
     println!(
         "starting service: {} replicas/tier × {} intra-batch threads, admission depth {}, \
-         tiers [{}], governor on, {prec} ({})",
+         tiers [{}], governor on, canary on, {prec} ({})",
         opts.replicas,
         gavina::util::parallel::resolve_threads(engine.threads()),
         opts.queue_depth,
@@ -183,4 +189,11 @@ fn main() {
             .collect::<Vec<_>>()
             .join(" ")
     );
+    for c in &report.canary {
+        println!("{}", c.summary_line());
+        let hot = c.hot_layers();
+        if !hot.is_empty() {
+            println!("  hot layers (step-error rate): {hot}");
+        }
+    }
 }

@@ -25,7 +25,8 @@ use std::time::{Duration, Instant};
 use gavina::arch::{ArchConfig, Precision};
 use gavina::engine::{Engine, EngineBuilder, GavPolicy, GavinaError};
 use gavina::serve::{
-    GovernorOptions, ServeOptions, Service, Session, SubmitOptions, Ticket, TierSpec,
+    CanaryOptions, GovernorOptions, ServeOptions, Service, Session, SubmitOptions, Ticket,
+    TierSpec,
 };
 use gavina::util::Prng;
 
@@ -114,9 +115,19 @@ fn governor_ramp(engine: &Arc<Engine>, quick: bool) {
             low_load: 0.3,
             ..Default::default()
         }),
+        // Canary on: the bench engine carries no error tables, so the
+        // observed flip rate is 0.0 and the governor's load behavior is
+        // unchanged — but the sampling/re-run path runs end-to-end and
+        // the per-tier observed_flip_rate lines below are a CI artifact
+        // check.
+        canary: Some(CanaryOptions {
+            sample_rate: 0.25,
+            ..Default::default()
+        }),
     };
     println!(
-        "[serve] closed-loop bench: {}, queue_depth {queue_depth}, governor period 15 ms",
+        "[serve] closed-loop bench: {}, queue_depth {queue_depth}, governor period 15 ms, \
+         canary sample rate 0.25",
         engine.precision()
     );
 
@@ -196,6 +207,17 @@ fn governor_ramp(engine: &Arc<Engine>, quick: bool) {
          across the load ramp (saw {})",
         distinct.len()
     );
+
+    // Per-tier canary drift lines (CI greps for observed_flip_rate).
+    assert!(!report.canary.is_empty(), "canary was enabled — reports must exist");
+    for c in &report.canary {
+        println!("[serve] {}", c.summary_line());
+        assert!(c.sampled > 0, "rate 0.25 over the ramp must sample requests");
+        assert_eq!(
+            c.flips, 0,
+            "no error tables — served logits must match the exact reference"
+        );
+    }
 }
 
 /// One sweep point's results, for the JSON artifact and the asserts.
@@ -227,6 +249,7 @@ fn sweep_point(
             TierSpec::new("aggressive", Some(GavPolicy::Uniform(0))).max_batch(16),
         ],
         governor: None,
+        canary: None,
     };
     let service = Arc::clone(engine).serve(opts).expect("serve options");
     let session = service.session();

@@ -1,0 +1,231 @@
+//! Per-tier sliding-window drift statistics.
+//!
+//! Every canary-sampled request contributes one [`DriftSample`]: did the
+//! top-1 class flip vs the bit-exact reference, and how far did the
+//! logits move in L∞? The estimator keeps a bounded window of recent
+//! samples (the governor reacts to *current* conditions, not the whole
+//! history), cumulative totals for reporting, the sampled-set
+//! fingerprint (determinism pin) and per-layer observed step-error
+//! counters surfaced from the simulator's injection path on the *served*
+//! batches themselves.
+
+use std::collections::VecDeque;
+
+use crate::dnn::ForwardStats;
+
+/// One canary observation: served output vs exact reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftSample {
+    /// The served top-1 class differs from the reference's.
+    pub top1_flip: bool,
+    /// `max_k |served_k - reference_k|` over the logits.
+    pub linf: f64,
+}
+
+/// A snapshot of one tier's drift state, safe to hand across threads.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DriftStats {
+    /// Samples currently in the sliding window.
+    pub window_len: usize,
+    /// Top-1 flip rate over the window — the feedback signal.
+    pub flip_rate: f64,
+    /// 95% normal-approximation confidence half-width on `flip_rate`
+    /// (`1.96·sqrt(p(1-p)/n)`; 0 when the window is empty).
+    pub flip_ci: f64,
+    /// Mean / max logit L∞ drift over the window.
+    pub mean_linf: f64,
+    pub max_linf: f64,
+    /// Cumulative totals since the service started.
+    pub sampled_total: u64,
+    pub flips_total: u64,
+    /// XOR fingerprint of every sampled `(stream, row)` hash — two runs
+    /// sampled identical sets iff these match.
+    pub fingerprint: u64,
+    /// Observed per-conv-layer step-error rate (corrupted values per
+    /// undervolted step) accumulated from served batches' counters.
+    pub layer_step_error_rates: Vec<f64>,
+}
+
+/// The mutable estimator behind one tier's `Mutex`.
+#[derive(Debug)]
+pub struct DriftEstimator {
+    window: VecDeque<DriftSample>,
+    cap: usize,
+    sampled_total: u64,
+    flips_total: u64,
+    fingerprint: u64,
+    layer_corrupted: Vec<u64>,
+    layer_steps: Vec<u64>,
+}
+
+impl DriftEstimator {
+    pub fn new(window: usize) -> Self {
+        Self {
+            window: VecDeque::with_capacity(window.max(1)),
+            cap: window.max(1),
+            sampled_total: 0,
+            flips_total: 0,
+            fingerprint: 0,
+            layer_corrupted: Vec::new(),
+            layer_steps: Vec::new(),
+        }
+    }
+
+    /// Record one canary comparison plus its sampled-set fingerprint
+    /// contribution (`sampler::row_hash(stream, row)`).
+    pub fn observe(&mut self, sample: DriftSample, row_hash: u64) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(sample);
+        self.sampled_total += 1;
+        self.flips_total += sample.top1_flip as u64;
+        self.fingerprint ^= row_hash;
+    }
+
+    /// Fold a served batch's per-layer injection counters in. This runs
+    /// for every batch of an observed tier (not only sampled ones): the
+    /// counters are already collected by the executor, so the per-layer
+    /// signal is free and converges much faster than the sampled one.
+    pub fn observe_layers(&mut self, stats: &ForwardStats) {
+        if self.layer_corrupted.len() < stats.layer_corrupted.len() {
+            self.layer_corrupted.resize(stats.layer_corrupted.len(), 0);
+            self.layer_steps.resize(stats.layer_steps.len(), 0);
+        }
+        for (i, (&c, &s)) in stats.layer_corrupted.iter().zip(&stats.layer_steps).enumerate() {
+            self.layer_corrupted[i] += c;
+            self.layer_steps[i] += s;
+        }
+    }
+
+    /// Current snapshot.
+    pub fn stats(&self) -> DriftStats {
+        let n = self.window.len();
+        let flips = self.window.iter().filter(|s| s.top1_flip).count();
+        let p = if n == 0 { 0.0 } else { flips as f64 / n as f64 };
+        let ci = if n == 0 {
+            0.0
+        } else {
+            1.96 * (p * (1.0 - p) / n as f64).sqrt()
+        };
+        let (mut sum, mut max) = (0.0f64, 0.0f64);
+        for s in &self.window {
+            sum += s.linf;
+            max = max.max(s.linf);
+        }
+        DriftStats {
+            window_len: n,
+            flip_rate: p,
+            flip_ci: ci,
+            mean_linf: if n == 0 { 0.0 } else { sum / n as f64 },
+            max_linf: max,
+            sampled_total: self.sampled_total,
+            flips_total: self.flips_total,
+            fingerprint: self.fingerprint,
+            layer_step_error_rates: self
+                .layer_corrupted
+                .iter()
+                .zip(&self.layer_steps)
+                .map(|(&c, &s)| if s == 0 { 0.0 } else { c as f64 / s as f64 })
+                .collect(),
+        }
+    }
+}
+
+/// Compare one served row against its exact re-run: top-1 flip (ties
+/// break to the first maximum on both sides, so identical logits never
+/// flip) and L∞ logit drift.
+pub fn compare_row(served: &[f32], reference: &[f32]) -> DriftSample {
+    debug_assert_eq!(served.len(), reference.len());
+    let argmax = |v: &[f32]| {
+        let mut best = 0usize;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    let linf = served
+        .iter()
+        .zip(reference)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    DriftSample {
+        top1_flip: argmax(served) != argmax(reference),
+        linf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_estimator_is_all_zero() {
+        let e = DriftEstimator::new(8);
+        let s = e.stats();
+        assert_eq!(s.window_len, 0);
+        assert_eq!(s.flip_rate, 0.0);
+        assert_eq!(s.flip_ci, 0.0);
+        assert_eq!(s.mean_linf, 0.0);
+        assert_eq!(s.sampled_total, 0);
+        assert_eq!(s.fingerprint, 0);
+        assert!(s.layer_step_error_rates.is_empty());
+    }
+
+    #[test]
+    fn window_slides_and_totals_accumulate() {
+        let mut e = DriftEstimator::new(4);
+        for i in 0..10 {
+            e.observe(
+                DriftSample {
+                    top1_flip: i % 2 == 0,
+                    linf: i as f64,
+                },
+                1 << i,
+            );
+        }
+        let s = e.stats();
+        assert_eq!(s.window_len, 4, "window is bounded");
+        // Window holds samples 6..=9: flips at 6 and 8.
+        assert!((s.flip_rate - 0.5).abs() < 1e-12);
+        assert!((s.mean_linf - 7.5).abs() < 1e-12);
+        assert_eq!(s.max_linf, 9.0);
+        assert_eq!(s.sampled_total, 10, "totals outlive the window");
+        assert_eq!(s.flips_total, 5);
+        assert_eq!(s.fingerprint, (1 << 10) - 1, "XOR of all row hashes");
+        // CI shrinks as the window fills: p=0.5, n=4 → 1.96·0.25.
+        assert!((s.flip_ci - 1.96 * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_counters_sum_across_batches() {
+        let mut e = DriftEstimator::new(4);
+        let mut a = ForwardStats::default();
+        a.record_layer_errors(1, 2, 10);
+        let mut b = ForwardStats::default();
+        b.record_layer_errors(1, 4, 10);
+        b.record_layer_errors(3, 1, 5);
+        e.observe_layers(&a);
+        e.observe_layers(&b);
+        let rates = e.stats().layer_step_error_rates;
+        assert_eq!(rates.len(), 4);
+        assert!((rates[1] - 6.0 / 20.0).abs() < 1e-12);
+        assert!((rates[3] - 0.2).abs() < 1e-12);
+        assert_eq!(rates[0], 0.0);
+    }
+
+    #[test]
+    fn compare_row_detects_flips_and_linf() {
+        let s = compare_row(&[0.1, 0.9, 0.0], &[0.1, 0.9, 0.0]);
+        assert!(!s.top1_flip);
+        assert_eq!(s.linf, 0.0);
+        let s = compare_row(&[0.95, 0.9, 0.0], &[0.1, 0.9, 0.0]);
+        assert!(s.top1_flip);
+        assert!((s.linf - 0.85).abs() < 1e-6);
+        // Identical logits with ties: same first-max on both sides.
+        let s = compare_row(&[0.5, 0.5], &[0.5, 0.5]);
+        assert!(!s.top1_flip);
+    }
+}

@@ -1,0 +1,274 @@
+//! The feedback law that closes the governor loop on measured drift.
+//!
+//! The load/power governor keeps its historical behavior as a *ceiling*;
+//! this module adds the second input: when the observed top-1 flip rate
+//! of the governed tier crosses the **high watermark**, the ladder steps
+//! toward guarded ([`StepTrigger::Drift`]) and a **dwell** counter arms.
+//! The ladder may not re-descend toward aggressive until the flip rate
+//! has fallen to the **low watermark** *and* the dwell ticks have run
+//! out — oscillating load cannot flap the schedule while drift is hot.
+//!
+//! Everything here is a pure state machine over snapshots — no clocks,
+//! no threads — so the hysteresis contract is pinned by deterministic
+//! unit tests and the governor thread just calls [`Feedback::advise`] +
+//! [`decide`] once per tick.
+
+use std::fmt;
+
+use super::estimator::DriftStats;
+use super::CanaryOptions;
+
+/// Why a governor trajectory entry holds its rung — the signal that
+/// produced (or blocked) the transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepTrigger {
+    /// No signal asked for a change.
+    Steady,
+    /// The admission-load signal moved the ladder (the historical path).
+    Load,
+    /// The power-budget ceiling pulled the rung back toward aggressive.
+    PowerBudget,
+    /// Observed flip rate crossed the high watermark: step to guarded.
+    Drift,
+    /// Drift hysteresis blocked a load-driven descent (watermark band or
+    /// unexpired dwell).
+    DwellHold,
+}
+
+impl fmt::Display for StepTrigger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            StepTrigger::Steady => "steady",
+            StepTrigger::Load => "load",
+            StepTrigger::PowerBudget => "power-budget",
+            StepTrigger::Drift => "drift",
+            StepTrigger::DwellHold => "dwell-hold",
+        })
+    }
+}
+
+/// What the drift signal asks of this governor tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftAdvice {
+    /// Flip rate at/above the high watermark: step toward guarded now.
+    Escalate,
+    /// In the hysteresis band or dwelling: hold — no descent allowed.
+    Hold,
+    /// Below the low watermark with dwell expired: load rules again.
+    Clear,
+}
+
+/// The per-governor feedback state: just the dwell countdown.
+#[derive(Debug, Default)]
+pub struct Feedback {
+    dwell_remaining: u32,
+}
+
+impl Feedback {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ticks left before a descent can be considered (diagnostics).
+    pub fn dwell_remaining(&self) -> u32 {
+        self.dwell_remaining
+    }
+
+    /// One governor tick's worth of drift advice. `stats` is `None` when
+    /// canary is disabled or the tier has no estimator — the dwell still
+    /// drains so a canary torn down mid-dwell cannot pin the ladder
+    /// forever.
+    pub fn advise(&mut self, stats: Option<&DriftStats>, opts: &CanaryOptions) -> DriftAdvice {
+        if let Some(s) = stats {
+            let confident = s.window_len >= opts.min_samples;
+            if confident && s.flip_rate >= opts.high_watermark {
+                self.dwell_remaining = opts.dwell_ticks;
+                return DriftAdvice::Escalate;
+            }
+            if confident && s.flip_rate > opts.low_watermark {
+                // Hysteresis band: neither escalate nor consume dwell.
+                return DriftAdvice::Hold;
+            }
+        }
+        if self.dwell_remaining > 0 {
+            self.dwell_remaining -= 1;
+            return DriftAdvice::Hold;
+        }
+        DriftAdvice::Clear
+    }
+}
+
+/// Combine the drift advice with the historical load signal into the next
+/// ladder rung. Rung 0 is the most aggressive schedule, `n_rungs - 1`
+/// fully guarded (the ladder orientation of `serve::governor`). Drift has
+/// priority: an escalation steps toward guarded regardless of load, and a
+/// hold vetoes the high-load descent while still allowing low-load ascent
+/// (moving toward guarded is always drift-safe). The power budget is NOT
+/// applied here — the governor applies it after, as a ceiling, tagging
+/// the entry [`StepTrigger::PowerBudget`] when it wins.
+pub fn decide(
+    cur: usize,
+    n_rungs: usize,
+    advice: DriftAdvice,
+    load: f64,
+    low_load: f64,
+    high_load: f64,
+) -> (usize, StepTrigger) {
+    debug_assert!(n_rungs > 0 && cur < n_rungs);
+    let ascent = (cur + 1).min(n_rungs - 1); // toward guarded
+    match advice {
+        DriftAdvice::Escalate => (ascent, StepTrigger::Drift),
+        DriftAdvice::Hold => {
+            if load <= low_load && ascent != cur {
+                (ascent, StepTrigger::Load)
+            } else {
+                (cur, StepTrigger::DwellHold)
+            }
+        }
+        DriftAdvice::Clear => {
+            if load >= high_load && cur > 0 {
+                (cur - 1, StepTrigger::Load)
+            } else if load <= low_load && ascent != cur {
+                (ascent, StepTrigger::Load)
+            } else {
+                (cur, StepTrigger::Steady)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> CanaryOptions {
+        CanaryOptions {
+            sample_rate: 0.25,
+            window: 64,
+            high_watermark: 0.10,
+            low_watermark: 0.02,
+            dwell_ticks: 3,
+            min_samples: 4,
+        }
+    }
+
+    fn stats(window_len: usize, flip_rate: f64) -> DriftStats {
+        DriftStats {
+            window_len,
+            flip_rate,
+            ..DriftStats::default()
+        }
+    }
+
+    #[test]
+    fn spike_escalates_within_one_tick_once_confident() {
+        let o = opts();
+        let mut fb = Feedback::new();
+        // Too few samples: no reaction, even at 100% flips.
+        assert_eq!(fb.advise(Some(&stats(3, 1.0)), &o), DriftAdvice::Clear);
+        // One tick after the window reaches min_samples: escalate.
+        assert_eq!(fb.advise(Some(&stats(4, 0.5)), &o), DriftAdvice::Escalate);
+        assert_eq!(fb.dwell_remaining(), 3);
+    }
+
+    #[test]
+    fn dwell_blocks_redescent_until_expiry() {
+        let o = opts();
+        let mut fb = Feedback::new();
+        assert_eq!(fb.advise(Some(&stats(8, 0.5)), &o), DriftAdvice::Escalate);
+        // Flip rate back below the low watermark: still held for
+        // exactly dwell_ticks ticks, then clear.
+        for i in 0..o.dwell_ticks {
+            assert_eq!(
+                fb.advise(Some(&stats(8, 0.0)), &o),
+                DriftAdvice::Hold,
+                "tick {i} must still dwell"
+            );
+        }
+        assert_eq!(fb.advise(Some(&stats(8, 0.0)), &o), DriftAdvice::Clear);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_without_consuming_dwell() {
+        let o = opts();
+        let mut fb = Feedback::new();
+        assert_eq!(fb.advise(Some(&stats(8, 0.5)), &o), DriftAdvice::Escalate);
+        // Between the watermarks: hold indefinitely, dwell untouched.
+        for _ in 0..10 {
+            assert_eq!(fb.advise(Some(&stats(8, 0.05)), &o), DriftAdvice::Hold);
+        }
+        assert_eq!(fb.dwell_remaining(), o.dwell_ticks);
+        // A fresh spike re-arms rather than draining.
+        assert_eq!(fb.advise(Some(&stats(8, 0.2)), &o), DriftAdvice::Escalate);
+        assert_eq!(fb.dwell_remaining(), o.dwell_ticks);
+    }
+
+    #[test]
+    fn missing_stats_drain_the_dwell() {
+        let o = opts();
+        let mut fb = Feedback::new();
+        fb.advise(Some(&stats(8, 0.5)), &o);
+        for _ in 0..o.dwell_ticks {
+            assert_eq!(fb.advise(None, &o), DriftAdvice::Hold);
+        }
+        assert_eq!(fb.advise(None, &o), DriftAdvice::Clear);
+    }
+
+    #[test]
+    fn decide_gives_drift_priority_over_load() {
+        // High load wants to descend; escalation overrides it.
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Escalate, 0.9, 0.2, 0.7),
+            (3, StepTrigger::Drift)
+        );
+        // Already fully guarded: stay, still drift-tagged.
+        assert_eq!(
+            decide(4, 5, DriftAdvice::Escalate, 0.9, 0.2, 0.7),
+            (4, StepTrigger::Drift)
+        );
+    }
+
+    #[test]
+    fn hold_vetoes_descent_but_allows_guarded_ascent() {
+        // Oscillating load during a hold: the high-load descent is
+        // blocked and tagged, so the ladder cannot flap.
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Hold, 0.9, 0.2, 0.7),
+            (2, StepTrigger::DwellHold)
+        );
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Hold, 0.5, 0.2, 0.7),
+            (2, StepTrigger::DwellHold)
+        );
+        // Low load still ascends toward guarded — always drift-safe.
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Hold, 0.1, 0.2, 0.7),
+            (3, StepTrigger::Load)
+        );
+    }
+
+    #[test]
+    fn clear_restores_the_historical_load_law() {
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Clear, 0.9, 0.2, 0.7),
+            (1, StepTrigger::Load)
+        );
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Clear, 0.1, 0.2, 0.7),
+            (3, StepTrigger::Load)
+        );
+        assert_eq!(
+            decide(2, 5, DriftAdvice::Clear, 0.5, 0.2, 0.7),
+            (2, StepTrigger::Steady)
+        );
+        // Boundary rungs clamp instead of wrapping.
+        assert_eq!(
+            decide(0, 5, DriftAdvice::Clear, 0.9, 0.2, 0.7),
+            (0, StepTrigger::Steady)
+        );
+        assert_eq!(
+            decide(4, 5, DriftAdvice::Clear, 0.1, 0.2, 0.7),
+            (4, StepTrigger::Steady)
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! `gavina::canary` — online error observability for the serving stack.
+//!
+//! The §IV error model is calibrated offline; at serving time the
+//! governor historically stepped the G-schedule ladder on admission load
+//! against a *modeled* power budget, blind to what undervolting was
+//! actually doing to logits. This subsystem turns injected-error
+//! telemetry into a closed loop:
+//!
+//! ```text
+//!   served batches ──► sampler ──► exact re-run ──► estimator ──► feedback ──► ladder
+//!   (stream, row)      (pure fn)   (Exact replica,  (per-tier      (watermarks   (governor
+//!                                   no admission)    window stats)   + dwell)      rung)
+//! ```
+//!
+//! * [`sampler`] deterministically selects a configured fraction of
+//!   in-flight rows per tier, keyed by the batch's injection stream — so
+//!   replays reproduce the exact sampled set.
+//! * Sampled rows are re-executed on a bit-exact [`GavPolicy::Exact`]
+//!   replica via [`Engine::canary_rerun`], which sits *below* the serve
+//!   stack: re-runs never touch admission permits or dispatch queues.
+//! * [`estimator`] maintains per-tier sliding-window drift statistics
+//!   (top-1 flip rate with a confidence interval, logit L∞ drift,
+//!   per-layer observed step-error rates from the served batches' own
+//!   simulator counters).
+//! * [`feedback`] extends the governor with the measured signal:
+//!   flip-rate above the high watermark steps the ladder toward guarded
+//!   ([`StepTrigger::Drift`]); hysteresis (low watermark + dwell ticks)
+//!   blocks re-descent; load/power stay in force as a ceiling.
+//! * [`report`] renders the per-tier summaries carried on `ServeReport`.
+//!
+//! Configured through `[serve.canary]` (see
+//! [`ServeOptions::from_config`](crate::serve::ServeOptions::from_config)).
+//!
+//! [`GavPolicy::Exact`]: crate::engine::GavPolicy::Exact
+//! [`Engine::canary_rerun`]: crate::engine::Engine::canary_rerun
+
+pub mod estimator;
+pub mod feedback;
+pub mod report;
+pub mod sampler;
+
+use std::sync::{Arc, Mutex};
+
+use crate::dnn::ForwardResult;
+use crate::engine::{Engine, GavinaError};
+
+pub use estimator::{DriftEstimator, DriftSample, DriftStats};
+pub use feedback::{decide, DriftAdvice, Feedback, StepTrigger};
+pub use report::CanaryTierReport;
+
+/// `[serve.canary]` configuration. A bare `[serve.canary]` section
+/// enables the defaults.
+#[derive(Clone, Debug)]
+pub struct CanaryOptions {
+    /// Fraction of served requests re-executed on the exact reference,
+    /// in `(0, 1]`.
+    pub sample_rate: f64,
+    /// Sliding-window size (samples) behind the drift estimates.
+    pub window: usize,
+    /// Flip rate at/above which the ladder steps toward guarded.
+    pub high_watermark: f64,
+    /// Flip rate the window must fall to before a descent is considered.
+    pub low_watermark: f64,
+    /// Governor ticks the ladder must hold after the flip rate clears
+    /// the low watermark before re-descending.
+    pub dwell_ticks: u32,
+    /// Minimum window occupancy before the feedback acts (confidence
+    /// gate — one early flip must not swing the schedule).
+    pub min_samples: usize,
+}
+
+impl Default for CanaryOptions {
+    fn default() -> Self {
+        Self {
+            sample_rate: 0.05,
+            window: 256,
+            high_watermark: 0.05,
+            low_watermark: 0.01,
+            dwell_ticks: 8,
+            min_samples: 16,
+        }
+    }
+}
+
+impl CanaryOptions {
+    pub fn validate(&self) -> Result<(), GavinaError> {
+        let bad = |msg: String| Err(GavinaError::Config(format!("[serve.canary]: {msg}")));
+        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
+            return bad(format!(
+                "sample_rate must be in (0, 1], got {}",
+                self.sample_rate
+            ));
+        }
+        if self.window == 0 {
+            return bad("window must be >= 1".into());
+        }
+        if self.min_samples == 0 {
+            return bad("min_samples must be >= 1".into());
+        }
+        if self.min_samples > self.window {
+            return bad(format!(
+                "min_samples ({}) cannot exceed window ({})",
+                self.min_samples, self.window
+            ));
+        }
+        if !(self.high_watermark > 0.0 && self.high_watermark <= 1.0) {
+            return bad(format!(
+                "high_watermark must be in (0, 1], got {}",
+                self.high_watermark
+            ));
+        }
+        if !(self.low_watermark >= 0.0 && self.low_watermark < self.high_watermark) {
+            return bad(format!(
+                "low_watermark must be in [0, high_watermark), got {} vs {}",
+                self.low_watermark, self.high_watermark
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One observed tier's estimator slot.
+struct TierCanary {
+    /// Exact-policy tiers are the reference itself — never observed.
+    observed: bool,
+    estimator: Mutex<DriftEstimator>,
+}
+
+/// The shared canary runtime: the exact reference replica plus one
+/// estimator per observed tier. Workers call [`CanaryRuntime::pick_rows`]
+/// before responding (pure decision) and
+/// [`CanaryRuntime::observe_batch`] after — the re-run happens inline on
+/// the worker thread, off the request critical path, and through
+/// [`Engine::canary_rerun`] only, so it can never consume an admission
+/// permit or occupy a dispatch lane.
+pub struct CanaryRuntime {
+    opts: CanaryOptions,
+    threshold: u64,
+    reference: Arc<Engine>,
+    tiers: Vec<TierCanary>,
+}
+
+impl CanaryRuntime {
+    /// `observed[t]` says whether tier `t` is canary-observed (serve
+    /// passes `false` for Exact-policy tiers).
+    pub fn new(opts: CanaryOptions, reference: Arc<Engine>, observed: Vec<bool>) -> Self {
+        let threshold = sampler::sample_threshold(opts.sample_rate);
+        let tiers = observed
+            .into_iter()
+            .map(|o| TierCanary {
+                observed: o,
+                estimator: Mutex::new(DriftEstimator::new(opts.window)),
+            })
+            .collect();
+        Self {
+            opts,
+            threshold,
+            reference,
+            tiers,
+        }
+    }
+
+    pub fn options(&self) -> &CanaryOptions {
+        &self.opts
+    }
+
+    /// The bit-exact reference replica (shared packed planes).
+    pub fn reference(&self) -> &Arc<Engine> {
+        &self.reference
+    }
+
+    /// Whether `tier` is canary-observed.
+    pub fn observes(&self, tier: usize) -> bool {
+        self.tiers.get(tier).is_some_and(|t| t.observed)
+    }
+
+    /// The rows of an `n`-row batch on `tier` to sample — pure in
+    /// `(stream, n)`; empty for unobserved tiers.
+    pub fn pick_rows(&self, tier: usize, stream: u64, n: usize) -> Vec<usize> {
+        if !self.observes(tier) {
+            return Vec::new();
+        }
+        sampler::pick_rows(stream, n, self.threshold)
+    }
+
+    /// Fold one served batch into the tier's estimator: the batch's own
+    /// per-layer injection counters (every batch), plus the exact re-run
+    /// comparison of the sampled rows (`picked` pairs each sampled row
+    /// index with a clone of its image, taken before the response was
+    /// sent). Returns the number of samples recorded.
+    pub fn observe_batch(
+        &self,
+        tier: usize,
+        stream: u64,
+        picked: &[(usize, Vec<f32>)],
+        served: &ForwardResult,
+    ) -> usize {
+        if !self.observes(tier) {
+            return 0;
+        }
+        let samples: Vec<(usize, DriftSample)> = if picked.is_empty() {
+            Vec::new()
+        } else {
+            let rows: Vec<&[f32]> = picked.iter().map(|(_, img)| img.as_slice()).collect();
+            match self.reference.canary_rerun(&rows) {
+                // A rerun failure (malformed row) cannot corrupt the
+                // estimate — the batch simply contributes no samples.
+                Err(_) => Vec::new(),
+                Ok(reference) => picked
+                    .iter()
+                    .enumerate()
+                    .map(|(j, (row, _))| {
+                        let c = served.classes;
+                        let s = &served.logits[row * c..(row + 1) * c];
+                        let r = &reference.logits[j * c..(j + 1) * c];
+                        (*row, estimator::compare_row(s, r))
+                    })
+                    .collect(),
+            }
+        };
+        let mut est = self.tiers[tier].estimator.lock().unwrap();
+        est.observe_layers(&served.stats);
+        let n = samples.len();
+        for (row, sample) in samples {
+            est.observe(sample, sampler::row_hash(stream, row as u64));
+        }
+        n
+    }
+
+    /// Current drift snapshot for `tier` (`None` when unobserved) — the
+    /// governor's second input.
+    pub fn tier_stats(&self, tier: usize) -> Option<DriftStats> {
+        let t = self.tiers.get(tier)?;
+        if !t.observed {
+            return None;
+        }
+        Some(t.estimator.lock().unwrap().stats())
+    }
+
+    /// Shutdown/snapshot reports for every observed tier, labelled with
+    /// `names` (parallel to the tier indices).
+    pub fn reports(&self, names: &[&str]) -> Vec<CanaryTierReport> {
+        self.tiers
+            .iter()
+            .zip(names)
+            .filter(|(t, _)| t.observed)
+            .map(|(t, name)| CanaryTierReport::from_stats(name, &t.estimator.lock().unwrap().stats()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, Precision};
+    use crate::engine::{EngineBuilder, GavPolicy};
+    use crate::errmodel::{ErrorTables, ModelParams};
+    use crate::util::Prng;
+
+    #[test]
+    fn options_validation() {
+        assert!(CanaryOptions::default().validate().is_ok());
+        let bad = |f: fn(&mut CanaryOptions)| {
+            let mut o = CanaryOptions::default();
+            f(&mut o);
+            o.validate().is_err()
+        };
+        assert!(bad(|o| o.sample_rate = 0.0));
+        assert!(bad(|o| o.sample_rate = 1.5));
+        assert!(bad(|o| o.window = 0));
+        assert!(bad(|o| o.min_samples = 0));
+        assert!(bad(|o| {
+            o.window = 4;
+            o.min_samples = 5;
+        }));
+        assert!(bad(|o| o.high_watermark = 0.0));
+        assert!(bad(|o| o.low_watermark = o.high_watermark));
+        let ok = CanaryOptions {
+            sample_rate: 1.0,
+            low_watermark: 0.0,
+            ..CanaryOptions::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    /// MSB-always-flips tables: undervolted steps corrupt loudly.
+    fn hot_tables(arch: &ArchConfig) -> ErrorTables {
+        let params = ModelParams::paper(arch.c_dim);
+        let mut tables = ErrorTables::zeroed(params);
+        let msb = params.s_bits - 1;
+        for e in 0..=params.c_dim as u16 {
+            for pb in 0..params.p_bins {
+                tables.set_prob(msb, e, pb, 0, 1.0);
+            }
+        }
+        tables
+    }
+
+    #[test]
+    fn runtime_observes_drift_on_an_aggressive_engine() {
+        let arch = ArchConfig::tiny();
+        let engine = Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 41)
+                .precision(Precision::new(2, 2))
+                .arch(arch.clone())
+                .tables(Arc::new(hot_tables(&arch)))
+                .policy(GavPolicy::Uniform(0))
+                .seed(42)
+                .build()
+                .expect("engine"),
+        );
+        let reference = Arc::new(engine.exact_reference().expect("exact replica"));
+        let opts = CanaryOptions {
+            sample_rate: 1.0,
+            window: 32,
+            ..CanaryOptions::default()
+        };
+        let rt = CanaryRuntime::new(opts, Arc::clone(&reference), vec![true, false]);
+        assert!(rt.observes(0));
+        assert!(!rt.observes(1), "exact tiers are never observed");
+        assert!(rt.pick_rows(1, 7, 8).is_empty());
+
+        let mut rng = Prng::new(43);
+        let images: Vec<f32> = (0..4 * crate::dnn::IMAGE_LEN).map(|_| rng.next_f32()).collect();
+        let rows: Vec<&[f32]> = images.chunks(crate::dnn::IMAGE_LEN).collect();
+        let stream = 0x5EED;
+        let served = engine.infer_rows(&rows, stream).expect("served batch");
+        assert!(served.stats.corrupted > 0, "tables must inject");
+
+        let picked_idx = rt.pick_rows(0, stream, rows.len());
+        assert_eq!(picked_idx.len(), 4, "rate 1.0 samples every row");
+        let picked: Vec<(usize, Vec<f32>)> =
+            picked_idx.iter().map(|&i| (i, rows[i].to_vec())).collect();
+        let n = rt.observe_batch(0, stream, &picked, &served);
+        assert_eq!(n, 4);
+
+        let stats = rt.tier_stats(0).expect("observed tier has stats");
+        assert_eq!(stats.window_len, 4);
+        assert_eq!(stats.sampled_total, 4);
+        assert!(stats.max_linf > 0.0, "MSB flips must move logits");
+        assert!(
+            stats.layer_step_error_rates.iter().any(|r| *r > 0.0),
+            "per-layer counters must surface the injections"
+        );
+        // The reference itself observes zero drift against itself.
+        let ref_served = reference.infer_rows(&rows, stream).expect("reference batch");
+        let rt2 = CanaryRuntime::new(
+            CanaryOptions {
+                sample_rate: 1.0,
+                ..CanaryOptions::default()
+            },
+            Arc::clone(&reference),
+            vec![true],
+        );
+        rt2.observe_batch(0, stream, &picked, &ref_served);
+        let s2 = rt2.tier_stats(0).unwrap();
+        assert_eq!(s2.flips_total, 0);
+        assert_eq!(s2.max_linf, 0.0, "exact vs exact is bit-identical");
+
+        let reports = rt.reports(&["aggressive", "exact"]);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].tier, "aggressive");
+        assert!(reports[0].summary_line().contains("observed_flip_rate"));
+    }
+
+    #[test]
+    fn sampling_and_fingerprint_replay_identically() {
+        let arch = ArchConfig::tiny();
+        let engine = Arc::new(
+            EngineBuilder::new()
+                .synthetic_weights(0.125, 51)
+                .precision(Precision::new(2, 2))
+                .arch(arch)
+                .policy(GavPolicy::Exact)
+                .seed(52)
+                .build()
+                .expect("engine"),
+        );
+        let opts = CanaryOptions {
+            sample_rate: 0.5,
+            ..CanaryOptions::default()
+        };
+        let mk = || {
+            CanaryRuntime::new(opts.clone(), Arc::clone(&engine), vec![true])
+        };
+        let (a, b) = (mk(), mk());
+        let mut rng = Prng::new(53);
+        let images: Vec<f32> = (0..6 * crate::dnn::IMAGE_LEN).map(|_| rng.next_f32()).collect();
+        let rows: Vec<&[f32]> = images.chunks(crate::dnn::IMAGE_LEN).collect();
+        for stream in [1u64, 2, 3] {
+            let served = engine.infer_rows(&rows, stream).unwrap();
+            for rt in [&a, &b] {
+                let picked: Vec<(usize, Vec<f32>)> = rt
+                    .pick_rows(0, stream, rows.len())
+                    .into_iter()
+                    .map(|i| (i, rows[i].to_vec()))
+                    .collect();
+                rt.observe_batch(0, stream, &picked, &served);
+            }
+        }
+        let (sa, sb) = (a.tier_stats(0).unwrap(), b.tier_stats(0).unwrap());
+        assert_eq!(sa, sb, "replay must reproduce the estimate exactly");
+        assert_ne!(sa.sampled_total, 0, "rate 0.5 over 18 rows must sample");
+        assert_eq!(sa.fingerprint, sb.fingerprint);
+    }
+}

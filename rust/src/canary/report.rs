@@ -1,0 +1,123 @@
+//! Operator-facing canary reports: one per observed tier, carried on the
+//! final `ServeReport` and printed by `gavina serve`, `examples/serve.rs`
+//! and `benches/serve.rs` (whose `observed_flip_rate` line is grepped as
+//! a blocking CI artifact check).
+
+use super::estimator::DriftStats;
+
+/// One tier's canary summary at shutdown (or snapshot time).
+#[derive(Clone, Debug)]
+pub struct CanaryTierReport {
+    pub tier: String,
+    /// Requests re-executed on the exact reference since start.
+    pub sampled: u64,
+    /// Top-1 flips observed since start.
+    pub flips: u64,
+    /// Flip rate over the sliding window (the feedback signal) and its
+    /// 95% confidence half-width.
+    pub observed_flip_rate: f64,
+    pub flip_ci: f64,
+    /// Samples currently in the window.
+    pub window_len: usize,
+    /// Logit L∞ drift over the window.
+    pub mean_linf: f64,
+    pub max_linf: f64,
+    /// XOR fingerprint of the sampled set (replay determinism pin).
+    pub fingerprint: u64,
+    /// Observed per-conv-layer step-error rates from served batches.
+    pub layer_step_error_rates: Vec<f64>,
+}
+
+impl CanaryTierReport {
+    pub fn from_stats(tier: &str, s: &DriftStats) -> Self {
+        Self {
+            tier: tier.to_string(),
+            sampled: s.sampled_total,
+            flips: s.flips_total,
+            observed_flip_rate: s.flip_rate,
+            flip_ci: s.flip_ci,
+            window_len: s.window_len,
+            mean_linf: s.mean_linf,
+            max_linf: s.max_linf,
+            fingerprint: s.fingerprint,
+            layer_step_error_rates: s.layer_step_error_rates.clone(),
+        }
+    }
+
+    /// The canonical one-line rendering. Every reporter prints this same
+    /// form, so the CI grep for `observed_flip_rate` pins all of them.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "tier {:10} canary: sampled {:5} ({} flips)  observed_flip_rate {:.4} ±{:.4} \
+             (window {})  linf mean {:.3e} max {:.3e}",
+            self.tier,
+            self.sampled,
+            self.flips,
+            self.observed_flip_rate,
+            self.flip_ci,
+            self.window_len,
+            self.mean_linf,
+            self.max_linf,
+        )
+    }
+
+    /// Non-zero per-layer step-error rates as `layer:rate` pairs — empty
+    /// string when every layer ran clean (or guarded).
+    pub fn hot_layers(&self) -> String {
+        self.layer_step_error_rates
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r > 0.0)
+            .map(|(i, r)| format!("{i}:{r:.2e}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_line_carries_the_grepped_fields() {
+        let r = CanaryTierReport {
+            tier: "aggressive".into(),
+            sampled: 12,
+            flips: 3,
+            observed_flip_rate: 0.25,
+            flip_ci: 0.1,
+            window_len: 12,
+            mean_linf: 0.5,
+            max_linf: 2.0,
+            fingerprint: 0xABCD,
+            layer_step_error_rates: vec![0.0, 0.125, 0.0],
+        };
+        let line = r.summary_line();
+        assert!(line.contains("observed_flip_rate 0.2500"), "{line}");
+        assert!(line.contains("tier aggressive"), "{line}");
+        assert!(line.contains("(3 flips)"), "{line}");
+        assert_eq!(r.hot_layers(), "1:1.25e-1");
+    }
+
+    #[test]
+    fn from_stats_copies_every_field() {
+        let s = DriftStats {
+            window_len: 5,
+            flip_rate: 0.2,
+            flip_ci: 0.05,
+            mean_linf: 1.0,
+            max_linf: 3.0,
+            sampled_total: 40,
+            flips_total: 8,
+            fingerprint: 77,
+            layer_step_error_rates: vec![0.5],
+        };
+        let r = CanaryTierReport::from_stats("exact", &s);
+        assert_eq!(r.tier, "exact");
+        assert_eq!(r.sampled, 40);
+        assert_eq!(r.flips, 8);
+        assert_eq!(r.observed_flip_rate, 0.2);
+        assert_eq!(r.fingerprint, 77);
+        assert_eq!(r.layer_step_error_rates, vec![0.5]);
+    }
+}

@@ -1,0 +1,108 @@
+//! Deterministic canary sampling.
+//!
+//! The sampling decision is a **pure function** of the batch's injection
+//! stream (the PR 8 `batch_seq`-derived seed already carried by every
+//! served batch) and the row's index within the batch — no RNG state, no
+//! clock, no per-worker mutation. Replaying the same request stream
+//! therefore reproduces the exact same sampled set, which is what makes
+//! canary drift estimates comparable across runs and pinnable in tests.
+
+/// SplitMix64-style finalizer over `(stream, row)`. The constants are the
+/// standard SplitMix64 multipliers; `stream` already encodes
+/// `(batch_seq, worker)` so mixing the row index in is enough to give
+/// every row of every batch an independent, uniformly distributed hash.
+pub fn row_hash(stream: u64, row: u64) -> u64 {
+    let mut z = stream ^ row.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a sampling rate in `[0, 1]` onto a threshold in u64 hash space.
+/// `1.0` maps to "always sample" (see [`sampled`] — a plain `<` against
+/// `u64::MAX` would exclude the one row hashing to the maximum).
+pub fn sample_threshold(rate: f64) -> u64 {
+    let r = rate.clamp(0.0, 1.0);
+    if r >= 1.0 {
+        u64::MAX
+    } else {
+        (r * u64::MAX as f64) as u64
+    }
+}
+
+/// Whether `(stream, row)` is canary-sampled at `threshold`.
+pub fn sampled(stream: u64, row: usize, threshold: u64) -> bool {
+    threshold == u64::MAX || row_hash(stream, row as u64) < threshold
+}
+
+/// The row indices of one batch selected at `threshold` — the worker
+/// clones exactly these images before responding.
+pub fn pick_rows(stream: u64, n: usize, threshold: u64) -> Vec<usize> {
+    (0..n).filter(|&i| sampled(stream, i, threshold)).collect()
+}
+
+/// Order-independent fingerprint of a sampled set: XOR of the row hashes.
+/// Two runs sampled the same `(stream, row)` pairs iff (up to XOR
+/// collisions) their fingerprints match — the determinism pin used by
+/// `tests/serve_qos.rs`.
+pub fn fold_fingerprint(acc: u64, stream: u64, row: usize) -> u64 {
+    acc ^ row_hash(stream, row as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_a_pure_function_of_stream_and_row() {
+        let t = sample_threshold(0.25);
+        for stream in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            for row in 0..64 {
+                assert_eq!(sampled(stream, row, t), sampled(stream, row, t));
+            }
+        }
+        assert_eq!(pick_rows(42, 32, t), pick_rows(42, 32, t));
+    }
+
+    #[test]
+    fn rate_bounds_sample_everything_or_nothing() {
+        assert_eq!(pick_rows(7, 16, sample_threshold(1.0)).len(), 16);
+        assert_eq!(pick_rows(7, 16, sample_threshold(0.0)).len(), 0);
+        // Out-of-range rates clamp instead of wrapping.
+        assert_eq!(pick_rows(7, 16, sample_threshold(2.5)).len(), 16);
+        assert_eq!(pick_rows(7, 16, sample_threshold(-1.0)).len(), 0);
+    }
+
+    #[test]
+    fn observed_rate_tracks_the_configured_rate() {
+        // Over many (stream, row) pairs the hit fraction must approach
+        // the configured rate — the hash is uniform enough for control.
+        let t = sample_threshold(0.1);
+        let n = 20_000u64;
+        let hits = (0..n).filter(|&i| sampled(i * 31 + 7, (i % 13) as usize, t)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.02, "observed {rate}");
+    }
+
+    #[test]
+    fn different_streams_pick_different_rows() {
+        let t = sample_threshold(0.5);
+        let a = pick_rows(1, 256, t);
+        let b = pick_rows(2, 256, t);
+        assert_ne!(a, b, "stream must perturb the sampled set");
+    }
+
+    #[test]
+    fn fingerprint_is_order_independent_and_set_sensitive() {
+        let mut f1 = 0u64;
+        for r in [0usize, 3, 5] {
+            f1 = fold_fingerprint(f1, 9, r);
+        }
+        let mut f2 = 0u64;
+        for r in [5usize, 0, 3] {
+            f2 = fold_fingerprint(f2, 9, r);
+        }
+        assert_eq!(f1, f2);
+        assert_ne!(f1, fold_fingerprint(f1, 9, 7), "extra row must show");
+    }
+}

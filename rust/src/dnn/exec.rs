@@ -77,20 +77,35 @@ pub struct ForwardStats {
     pub corrupted: u64,
     pub useful_macs: u64,
     pub executed_macs: u64,
+    /// Significance steps executed undervolted (error injection armed).
+    pub steps_approx: u64,
+    /// Significance steps executed guarded (always exact).
+    pub steps_guarded: u64,
     /// Per-conv-layer useful MACs (the ILP operation weights).
     pub layer_macs: Vec<u64>,
     /// Per-conv-layer (C, L, K) GEMM dims.
     pub layer_dims: Vec<(usize, usize, usize)>,
+    /// Per-conv-layer corrupted-value counts from the simulator's
+    /// per-step injection path (accumulated, unlike the geometry tables).
+    pub layer_corrupted: Vec<u64>,
+    /// Per-conv-layer undervolted step counts — the denominator of the
+    /// observed per-layer step-error rate `layer_corrupted / layer_steps`.
+    pub layer_steps: Vec<u64>,
 }
 
 impl ForwardStats {
-    /// Grow both per-layer tables so index `idx` is valid — the one place
-    /// that keeps `layer_macs` and `layer_dims` the same length (they
-    /// used to be resized independently at every record site).
+    /// Grow every per-layer table so index `idx` is valid — the one place
+    /// that keeps `layer_macs`, `layer_dims`, `layer_corrupted` and
+    /// `layer_steps` the same length (they used to be resized
+    /// independently at every record site).
     pub fn ensure_layer(&mut self, idx: usize) {
         if self.layer_macs.len() <= idx {
             self.layer_macs.resize(idx + 1, 0);
             self.layer_dims.resize(idx + 1, (0, 0, 0));
+        }
+        if self.layer_corrupted.len() <= idx {
+            self.layer_corrupted.resize(idx + 1, 0);
+            self.layer_steps.resize(idx + 1, 0);
         }
     }
 
@@ -101,21 +116,53 @@ impl ForwardStats {
         self.layer_dims[idx] = dims;
     }
 
-    /// Accumulate another pass's counters. The per-layer tables are
-    /// copied from the first non-empty source only: they describe that
-    /// pass's per-layer shape (layer MACs scale with its batch size), so
-    /// treat them as representative geometry, not accumulated totals.
+    /// Accumulate one layer's observed injection counters at `idx`:
+    /// corrupted values and undervolted steps, summed (a layer can run
+    /// more than once per pass when batches are chunked across threads).
+    pub fn record_layer_errors(&mut self, idx: usize, corrupted: u64, steps_approx: u64) {
+        self.ensure_layer(idx);
+        self.layer_corrupted[idx] += corrupted;
+        self.layer_steps[idx] += steps_approx;
+    }
+
+    /// Observed per-layer step-error rate: corrupted values per
+    /// undervolted step (0.0 for fully guarded layers).
+    pub fn layer_step_error_rates(&self) -> Vec<f64> {
+        self.layer_corrupted
+            .iter()
+            .zip(&self.layer_steps)
+            .map(|(&c, &s)| if s == 0 { 0.0 } else { c as f64 / s as f64 })
+            .collect()
+    }
+
+    /// Accumulate another pass's counters. The geometry tables are copied
+    /// from the first non-empty source only: they describe that pass's
+    /// per-layer shape (layer MACs scale with its batch size), so treat
+    /// them as representative geometry, not accumulated totals. The
+    /// per-layer error counters, in contrast, are true totals and are
+    /// summed element-wise (chunked parallel batches must not drop the
+    /// other chunks' injections).
     pub fn absorb(&mut self, other: &ForwardStats) {
         self.cycles += other.cycles;
         self.tiles += other.tiles;
         self.corrupted += other.corrupted;
         self.useful_macs += other.useful_macs;
         self.executed_macs += other.executed_macs;
-        // Both tables travel together (ensure_layer keeps them the same
-        // length), so guard on both before adopting the source geometry.
+        self.steps_approx += other.steps_approx;
+        self.steps_guarded += other.steps_guarded;
+        // Both geometry tables travel together (ensure_layer keeps them
+        // the same length), so guard on both before adopting the source.
         if self.layer_macs.is_empty() && self.layer_dims.is_empty() {
             self.layer_macs.clone_from(&other.layer_macs);
             self.layer_dims.clone_from(&other.layer_dims);
+        }
+        if self.layer_corrupted.len() < other.layer_corrupted.len() {
+            self.layer_corrupted.resize(other.layer_corrupted.len(), 0);
+            self.layer_steps.resize(other.layer_steps.len(), 0);
+        }
+        for (i, (&c, &s)) in other.layer_corrupted.iter().zip(&other.layer_steps).enumerate() {
+            self.layer_corrupted[i] += c;
+            self.layer_steps[i] += s;
         }
     }
 }
@@ -327,8 +374,15 @@ impl<'a> Executor<'a> {
         stats.tiles += out.counters.tiles;
         stats.corrupted += out.counters.corrupted;
         stats.executed_macs += out.counters.executed_macs;
+        stats.steps_approx += out.counters.steps_approx;
+        stats.steps_guarded += out.counters.steps_guarded;
         stats.useful_macs += g.macs();
         stats.record_layer(plan.layer_idx(), g.macs(), (c_dim, l_dim, k_dim));
+        stats.record_layer_errors(
+            plan.layer_idx(),
+            out.counters.corrupted,
+            out.counters.steps_approx,
+        );
 
         // --- fused dequant + folded BN (+ ReLU), written straight into
         //     the NHWC output tensor ---
@@ -741,10 +795,23 @@ mod tests {
         };
         let all_guard = mk(vec![prec.max_g(); 20]);
         assert_eq!(all_guard.stats.corrupted, 0);
+        assert_eq!(all_guard.stats.steps_approx, 0);
+        assert!(all_guard.stats.steps_guarded > 0);
         let mut gs = vec![prec.max_g(); 20];
         gs[5] = 0;
         let one_uv = mk(gs);
         assert!(one_uv.stats.corrupted > 0);
+        // The per-layer error counters localize the injections to the one
+        // undervolted layer — the canary estimator's per-layer signal.
+        assert!(one_uv.stats.layer_corrupted[5] > 0);
+        assert!(one_uv.stats.layer_steps[5] > 0);
+        let rates = one_uv.stats.layer_step_error_rates();
+        assert!(rates[5] > 0.0);
+        for (i, r) in rates.iter().enumerate() {
+            if i != 5 {
+                assert_eq!(*r, 0.0, "layer {i} is guarded, must observe no errors");
+            }
+        }
     }
 
     #[test]
@@ -764,5 +831,22 @@ mod tests {
         u.record_layer(0, 99, (9, 9, 9));
         u.absorb(&s);
         assert_eq!(u.layer_macs, vec![99]);
+    }
+
+    #[test]
+    fn absorb_sums_per_layer_error_counters() {
+        // Geometry is adopt-first (representative shape), but injection
+        // counters are true totals: chunked parallel batches must sum.
+        let mut a = ForwardStats::default();
+        a.record_layer_errors(2, 3, 10);
+        let mut b = ForwardStats::default();
+        b.record_layer_errors(2, 5, 20);
+        b.record_layer_errors(4, 1, 8);
+        a.absorb(&b);
+        assert_eq!(a.layer_corrupted, vec![0, 0, 8, 0, 1]);
+        assert_eq!(a.layer_steps, vec![0, 0, 30, 0, 8]);
+        let rates = a.layer_step_error_rates();
+        assert!((rates[2] - 8.0 / 30.0).abs() < 1e-12);
+        assert_eq!(rates[0], 0.0);
     }
 }

@@ -60,6 +60,10 @@ pub struct GemmCounters {
     pub tiles: u64,
     pub corrupted: u64,
     pub executed_macs: u64,
+    /// Significance steps executed undervolted (error injection armed).
+    pub steps_approx: u64,
+    /// Significance steps executed guarded (always exact).
+    pub steps_guarded: u64,
 }
 
 /// A backend GEMM result: the `[K, L]` product plus counters.
@@ -155,6 +159,8 @@ impl ExecBackend for GavinaBackend {
                 tiles: rep.n_tiles,
                 corrupted: rep.values_corrupted,
                 executed_macs: rep.executed_macs,
+                steps_approx: rep.steps_approx,
+                steps_guarded: rep.steps_guarded,
             },
         }
     }
@@ -185,6 +191,8 @@ impl ExecBackend for GlsBackend {
                 tiles: rep.n_tiles,
                 corrupted: rep.values_corrupted,
                 executed_macs: rep.executed_macs,
+                steps_approx: rep.steps_approx,
+                steps_guarded: rep.steps_guarded,
             },
         }
     }
@@ -242,6 +250,9 @@ mod tests {
         assert_eq!(exact.p, guarded.p);
         assert!(guarded.counters.cycles > 0);
         assert_eq!(guarded.counters.corrupted, 0);
+        // All-guarded schedule: every step is guarded, none undervolted.
+        assert!(guarded.counters.steps_guarded > 0);
+        assert_eq!(guarded.counters.steps_approx, 0);
     }
 
     #[test]

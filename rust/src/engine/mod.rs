@@ -791,6 +791,28 @@ impl Engine {
         Service::start(self, opts)
     }
 
+    /// The bit-exact reference replica for canary re-execution: this
+    /// engine rescheduled under [`GavPolicy::Exact`] (fully guarded, no
+    /// error injection), sharing its packed weight planes. Exact
+    /// execution is stream-independent, so the reference reproduces
+    /// [`Engine::infer`] for any served row regardless of the batch or
+    /// injection stream it originally rode in.
+    pub fn exact_reference(&self) -> Result<Engine, GavinaError> {
+        self.with_policy(GavPolicy::Exact)
+    }
+
+    /// Re-execute already-served rows for the canary observability loop
+    /// (see [`crate::canary`]). This entry point deliberately lives on
+    /// the engine, *below* the serving stack: it never touches the
+    /// session, the bounded-admission semaphore or the dispatch queues,
+    /// so canary re-runs cannot consume client capacity by construction.
+    /// Runs with `stream = 0`, the standalone-inference stream — on an
+    /// exact/guarded engine the result is stream-independent and
+    /// bit-identical to [`Engine::infer`] row for row.
+    pub fn canary_rerun(&self, rows: &[&[f32]]) -> Result<ForwardResult, GavinaError> {
+        self.infer_rows(rows, 0)
+    }
+
     /// The uniform-G schedule that best represents this engine's resolved
     /// allocation ([`GavSchedule::representative`]) — what energy/TOP-per-W
     /// modelling of this engine's traffic should use.

@@ -36,6 +36,10 @@
 //! * [`serve`] — the QoS serving layer: `Session`/`Ticket` request API,
 //!   bounded admission, per-request energy tiers, load-adaptive
 //!   undervolting governor, per-tier metrics.
+//! * [`canary`] — online error observability: deterministic canary
+//!   sampling of in-flight requests, exact-replica re-execution, per-tier
+//!   drift estimation and the feedback law that closes the governor loop
+//!   on *measured* flip rate.
 //! * [`config`] — TOML-subset run-configuration parser (no external deps).
 //! * [`util`] — deterministic PRNG and small shared helpers.
 //!
@@ -51,6 +55,7 @@
 
 pub mod arch;
 pub mod baseline;
+pub mod canary;
 pub mod config;
 pub mod dnn;
 pub mod engine;

@@ -497,7 +497,12 @@ fn cmd_serve(args: &Args) {
             .map(|t| format!("{} (batch {})", t.name, t.max_batch))
             .collect::<Vec<_>>()
             .join(", "),
-        if opts.governor.is_some() { ", governor on" } else { "" },
+        match (opts.governor.is_some(), opts.canary.is_some()) {
+            (true, true) => ", governor on, canary on",
+            (true, false) => ", governor on",
+            (false, true) => ", canary on",
+            (false, false) => "",
+        },
     );
     let service = or_die(Arc::clone(&engine).serve(opts));
     let session = service.session();
@@ -575,6 +580,15 @@ fn cmd_serve(args: &Args) {
             report.governor.len(),
             mean_gs.join(" ")
         );
+        let last = report.governor.last().expect("non-empty");
+        println!("  governor: final trigger {}", last.trigger);
+    }
+    for c in &report.canary {
+        println!("  {}", c.summary_line());
+        let hot = c.hot_layers();
+        if !hot.is_empty() {
+            println!("    hot layers (step-error rate): {hot}");
+        }
     }
 }
 

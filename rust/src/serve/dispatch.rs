@@ -19,6 +19,11 @@
 //! `max_batch`, and runs it as one packed GEMM A-side. A lone request
 //! never waits for a barrier; a burst packs densely.
 //!
+//! Canary re-runs never pass through these lanes: sampled rows execute
+//! inline on the worker that served them, *after* its responses went
+//! out, via `Engine::canary_rerun` — dispatch only ever carries client
+//! requests.
+//!
 //! **Work-stealing**: a worker whose home tier is empty takes up to one
 //! batch from another tier's lane *tails* (newest first — the classic
 //! owner-FIFO/thief-LIFO split) and runs it on the *victim's* engine, so

@@ -23,14 +23,27 @@
 //! default tier's engine pointer (an `Arc` store — in-flight batches
 //! finish on the old schedule). Every tick appends a [`GovernorStep`] to
 //! a bounded trajectory that benches and dashboards can read back.
+//!
+//! PR 9 closes the loop on *measured* drift: when a
+//! [`CanaryRuntime`](crate::canary::CanaryRuntime) is attached, each tick
+//! first consults the canary's observed top-1 flip rate for the governed
+//! tier via [`Feedback::advise`](crate::canary::Feedback::advise) +
+//! [`decide`](crate::canary::decide) — drift above the high watermark
+//! steps toward guarded ([`StepTrigger::Drift`]) and holds through a
+//! dwell before load may re-descend ([`StepTrigger::DwellHold`]). Load
+//! and the power budget keep their historical roles; every trajectory
+//! entry now carries the [`StepTrigger`] that produced it.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::canary::{decide, CanaryRuntime, DriftAdvice, Feedback};
 use crate::engine::{Engine, GavPolicy, GavinaError};
 use crate::power::PowerModel;
+
+pub use crate::canary::StepTrigger;
 
 use super::Shared;
 
@@ -105,6 +118,8 @@ pub struct GovernorStep {
     pub mean_g: f64,
     /// Modeled system power of the schedule [mW].
     pub modeled_power_mw: f64,
+    /// The signal that produced (or blocked) this tick's transition.
+    pub trigger: StepTrigger,
 }
 
 /// Bound on the recorded trajectory: a long-running service keeps the
@@ -186,24 +201,30 @@ pub(crate) fn run(
     stop_rx: Receiver<()>,
     trajectory: Arc<Mutex<VecDeque<GovernorStep>>>,
     mut rung: usize,
+    canary: Option<Arc<CanaryRuntime>>,
 ) {
+    let mut fb = Feedback::new();
     loop {
         match stop_rx.recv_timeout(opts.period) {
             Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
             Err(RecvTimeoutError::Timeout) => {}
         }
         let load = shared.admission.load_fraction();
-        let mut next = rung;
-        if load >= opts.high_load && next > 0 {
-            next -= 1;
-        } else if load <= opts.low_load && next + 1 < rungs.len() {
-            next += 1;
-        }
-        // The power budget is a ceiling, not a signal: never settle on a
-        // rung whose modeled power exceeds it.
+        // Drift first: the canary's measured flip rate on the governed
+        // tier. With canary off, `advise` degenerates to `Clear` and
+        // `decide` reproduces the historical load-only law exactly.
+        let advice = match &canary {
+            Some(c) => fb.advise(c.tier_stats(shared.default_tier).as_ref(), c.options()),
+            None => DriftAdvice::Clear,
+        };
+        let (mut next, mut trigger) =
+            decide(rung, rungs.len(), advice, load, opts.low_load, opts.high_load);
+        // The power budget stays a ceiling, not a signal: never settle on
+        // a rung whose modeled power exceeds it — even one drift asked for.
         if let Some(budget) = opts.target_power_mw {
             while next > 0 && rungs[next].power_mw > budget {
                 next -= 1;
+                trigger = StepTrigger::PowerBudget;
             }
         }
         if next != rung {
@@ -211,12 +232,14 @@ pub(crate) fn run(
             *shared.tiers[shared.default_tier].engine.lock().unwrap() =
                 Arc::clone(&rungs[rung].engine);
         }
+        *shared.governor_state.lock().unwrap() = Some((rung, trigger));
         let step = GovernorStep {
             at: shared.started.elapsed(),
             load,
             layer_gs: rungs[rung].layer_gs.clone(),
             mean_g: rungs[rung].mean_g,
             modeled_power_mw: rungs[rung].power_mw,
+            trigger,
         };
         let mut t = trajectory.lock().unwrap();
         if t.len() >= TRAJECTORY_CAP {

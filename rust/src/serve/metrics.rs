@@ -12,6 +12,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::arch::{GavSchedule, Precision};
+use crate::canary::StepTrigger;
 use crate::power::PowerModel;
 
 /// Latency reservoir capacity: percentiles are computed over a uniform
@@ -137,12 +138,15 @@ impl TierMetrics {
     /// `layer_gs` is the tier's schedule at snapshot time,
     /// `replica_queue_depths` its per-lane queue depths, `replicas` the
     /// configured lanes per tier (for the occupancy denominator).
+    /// `governor` is the governor's `(rung, trigger)` state when this
+    /// tier is the governed one, `None` otherwise.
     pub(crate) fn snapshot(
         &self,
         tier: &str,
         layer_gs: Vec<u32>,
         replica_queue_depths: Vec<usize>,
         replicas: usize,
+        governor: Option<(usize, StepTrigger)>,
     ) -> MetricsSnapshot {
         let mut lat = self.latencies_us.lock().unwrap().buf.clone();
         lat.sort_unstable();
@@ -190,6 +194,8 @@ impl TierMetrics {
             p99_us: pick(0.99),
             max_us: self.max_latency_us.load(Ordering::Relaxed),
             requests_per_sec,
+            governor_rung: governor.map(|(r, _)| r),
+            governor_trigger: governor.map(|(_, t)| t),
         }
     }
 }
@@ -239,6 +245,13 @@ pub struct MetricsSnapshot {
     pub max_us: u64,
     /// Served requests per second, service start → last recorded batch.
     pub requests_per_sec: f64,
+    /// The governor's current ladder rung (0 = most aggressive), when
+    /// this tier is the governed default tier and the governor has
+    /// ticked at least once.
+    pub governor_rung: Option<usize>,
+    /// The signal behind the governor's latest transition (or hold) —
+    /// see [`StepTrigger`].
+    pub governor_trigger: Option<StepTrigger>,
 }
 
 impl MetricsSnapshot {
@@ -285,8 +298,10 @@ mod tests {
         m.record_steal();
         m.record_steal();
         m.record_busy(Duration::from_millis(3));
-        let s = m.snapshot("t", vec![2; 4], vec![1, 0, 2], 3);
+        let s = m.snapshot("t", vec![2; 4], vec![1, 0, 2], 3, Some((1, StepTrigger::Drift)));
         assert_eq!(s.tier, "t");
+        assert_eq!(s.governor_rung, Some(1));
+        assert_eq!(s.governor_trigger, Some(StepTrigger::Drift));
         // The snapshot's energy schedule is the tier's own allocation.
         assert_eq!(
             s.effective_schedule(Precision::new(2, 2)).g(),
@@ -311,8 +326,10 @@ mod tests {
 
     #[test]
     fn empty_snapshot_is_all_zero() {
-        let s = TierMetrics::new(Instant::now()).snapshot("idle", Vec::new(), vec![0, 0], 2);
+        let s = TierMetrics::new(Instant::now()).snapshot("idle", Vec::new(), vec![0, 0], 2, None);
         assert_eq!(s.requests, 0);
+        assert_eq!(s.governor_rung, None);
+        assert_eq!(s.governor_trigger, None);
         assert_eq!((s.p50_us, s.p99_us, s.max_us), (0, 0, 0));
         assert_eq!(s.requests_per_sec, 0.0);
         assert_eq!(s.steals, 0);

@@ -50,6 +50,13 @@
 //!   default tier along a pre-resolved per-layer-G ladder under observed
 //!   load or a modeled power budget, recording a [`GovernorStep`]
 //!   trajectory.
+//! * [`CanaryOptions`] **canary** ([`crate::canary`]) — deterministic
+//!   sampling of served rows, re-executed on a bit-exact reference
+//!   replica below the serve stack (no admission permits, no dispatch
+//!   lanes); the measured top-1 flip rate closes the governor loop:
+//!   drift above the high watermark steps the ladder toward guarded and
+//!   holds through a dwell, every trajectory entry tagged with its
+//!   [`StepTrigger`].
 //!
 //! Start a service with [`Engine::serve`](crate::engine::Engine::serve)
 //! or [`Service::start`]; stop it with [`Service::shutdown`], which
@@ -62,7 +69,8 @@ mod metrics;
 mod session;
 mod tier;
 
-pub use governor::{GovernorOptions, GovernorStep};
+pub use crate::canary::{CanaryOptions, CanaryTierReport};
+pub use governor::{GovernorOptions, GovernorStep, StepTrigger};
 pub use metrics::MetricsSnapshot;
 pub use session::{Response, Session, SubmitOptions, Ticket};
 pub use tier::{ServeOptions, TierSpec};
@@ -72,6 +80,7 @@ use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::canary::CanaryRuntime;
 use crate::dnn::IMAGE_LEN;
 use crate::engine::{Engine, GavPolicy, GavinaError};
 use crate::power::PowerModel;
@@ -103,6 +112,13 @@ pub(crate) struct Shared {
     /// the same worker never replay one RNG stream.
     pub(crate) batch_seq: AtomicU64,
     pub(crate) started: Instant,
+    /// Canary drift observability (`[serve.canary]`): workers sample and
+    /// re-execute rows through it, the governor reads its drift stats.
+    pub(crate) canary: Option<Arc<CanaryRuntime>>,
+    /// The governor's latest `(rung, trigger)` — surfaced on the default
+    /// tier's [`MetricsSnapshot`]; `None` until the first tick (or when
+    /// the governor is off).
+    pub(crate) governor_state: Mutex<Option<(usize, StepTrigger)>>,
 }
 
 impl Shared {
@@ -116,11 +132,17 @@ impl Shared {
 
     fn snapshot_tier(&self, i: usize) -> MetricsSnapshot {
         let t = &self.tiers[i];
+        let governor = if i == self.default_tier {
+            *self.governor_state.lock().unwrap()
+        } else {
+            None
+        };
         t.metrics.snapshot(
             &t.name,
             t.engine.lock().unwrap().layer_gs(),
             self.dispatch.tier_depths(i),
             self.dispatch.replicas(),
+            governor,
         )
     }
 }
@@ -135,6 +157,9 @@ pub struct ServeReport {
     pub rejected: u64,
     /// Governor ticks (empty when the governor was off).
     pub governor: Vec<GovernorStep>,
+    /// Canary drift reports, one per observed tier (empty when the
+    /// canary was off).
+    pub canary: Vec<CanaryTierReport>,
 }
 
 impl ServeReport {
@@ -198,6 +223,22 @@ impl Service {
             .iter()
             .position(|t| t.name == opts.default_tier)
             .expect("validated: default_tier exists");
+        // Canary runtime before any thread spawns: resolving the exact
+        // reference replica can fail, and like the governor ladder it
+        // must fail fast with nothing to tear down. An exact tier's
+        // already-resolved engine doubles as the reference; Exact tiers
+        // themselves are never observed (they ARE the reference).
+        let canary = match &opts.canary {
+            None => None,
+            Some(copts) => {
+                let reference = match tiers.iter().zip(&protected).find(|(_, &p)| p) {
+                    Some((t, _)) => Arc::clone(&t.engine.lock().unwrap()),
+                    None => Arc::new(engine.exact_reference()?),
+                };
+                let observed: Vec<bool> = protected.iter().map(|&p| !p).collect();
+                Some(Arc::new(CanaryRuntime::new(copts.clone(), reference, observed)))
+            }
+        };
         let dispatch = Dispatch::new(
             opts.replicas,
             opts.steal,
@@ -213,6 +254,8 @@ impl Service {
             rejected: AtomicU64::new(0),
             batch_seq: AtomicU64::new(0),
             started,
+            canary,
+            governor_state: Mutex::new(None),
         });
 
         // Resolve the governor's ladder before any thread spawns, so a
@@ -256,7 +299,8 @@ impl Service {
             let g_shared = Arc::clone(&shared);
             let g_traj = Arc::clone(&trajectory);
             let handle = std::thread::spawn(move || {
-                governor::run(g_shared, rungs, g_opts, stop_rx, g_traj, rung0);
+                let canary = g_shared.canary.clone();
+                governor::run(g_shared, rungs, g_opts, stop_rx, g_traj, rung0, canary);
             });
             (stop_tx, handle)
         });
@@ -341,6 +385,13 @@ impl Service {
             tiers: self.metrics(),
             rejected: self.rejected(),
             governor: self.governor_trajectory(),
+            canary: match &self.shared.canary {
+                None => Vec::new(),
+                Some(c) => {
+                    let names = self.shared.tier_names();
+                    c.reports(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+                }
+            },
         }
     }
 }
@@ -443,6 +494,17 @@ fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
     match result {
         Ok(result) => {
             let classes = result.classes;
+            // The canary's sampling decision is pure in (stream, row) and
+            // its image clones are taken *before* the responses go out —
+            // `respond` consumes the requests.
+            let picked: Vec<(usize, Vec<f32>)> = match &shared.canary {
+                None => Vec::new(),
+                Some(c) => c
+                    .pick_rows(ti, stream, n)
+                    .into_iter()
+                    .map(|i| (i, good[i].image.clone()))
+                    .collect(),
+            };
             let mut lats = Vec::with_capacity(n);
             for (i, r) in good.into_iter().enumerate() {
                 lats.push(respond(
@@ -454,6 +516,12 @@ fn run_batch(shared: &Shared, ti: usize, worker_id: u64, batch: Vec<Request>) {
             }
             tier.metrics
                 .record(n, &lats, result.stats.cycles, result.stats.corrupted);
+            // Exact re-runs happen after every response is sent: off the
+            // request critical path, and through `Engine::canary_rerun`
+            // only — below admission, so no permit is ever consumed.
+            if let Some(c) = &shared.canary {
+                c.observe_batch(ti, stream, &picked, &result);
+            }
         }
         Err(e) => {
             // Shouldn't happen (shapes were validated above), but a
@@ -502,6 +570,7 @@ mod tests {
                 max_batch,
             }],
             governor: None,
+            canary: None,
         }
     }
 
@@ -951,6 +1020,7 @@ mod tests {
                 },
             ],
             governor: None,
+            canary: None,
         };
         let service = gated_engine(&gate, GavPolicy::Uniform(1)).serve(opts).unwrap();
         let session = service.session();

@@ -20,6 +20,11 @@ use super::Shared;
 /// the service has accepted but not yet answered. When `capacity`
 /// requests are in flight, [`Session::submit`] fails fast with
 /// [`GavinaError::Overloaded`] instead of buffering unboundedly.
+///
+/// Only `submit` acquires permits. Canary re-runs deliberately sit below
+/// this gate ([`Engine::canary_rerun`](crate::engine::Engine::canary_rerun)
+/// executes directly, never through a `Session`), so observability can
+/// never steal admission capacity from client traffic.
 pub(crate) struct Admission {
     available: AtomicUsize,
     capacity: usize,

@@ -50,6 +50,14 @@
 //! high_load = 0.75
 //! low_load = 0.25
 //! min_g = 0
+//!
+//! [serve.canary]           # present => canary drift observability enabled
+//! sample_rate = 0.05       # fraction of requests re-run on the exact replica
+//! window = 256             # sliding drift window (samples)
+//! high_watermark = 0.05    # flip rate that steps the ladder toward guarded
+//! low_watermark = 0.01     # flip rate below which dwell may drain
+//! dwell_ticks = 8          # governor ticks held before re-descending
+//! min_samples = 16         # window fill before the signal is trusted
 //! ```
 //!
 //! `workers = N` (the pre-replica total worker count) is still accepted
@@ -68,6 +76,7 @@
 
 use std::time::Duration;
 
+use crate::canary::CanaryOptions;
 use crate::config::{Config, Value};
 use crate::engine::{GavPolicy, GavinaError};
 
@@ -131,6 +140,11 @@ pub struct ServeOptions {
     pub tiers: Vec<TierSpec>,
     /// Load-adaptive undervolting governor for the default tier.
     pub governor: Option<GovernorOptions>,
+    /// Canary drift observability: deterministic sampling of in-flight
+    /// requests, exact-replica re-execution and the drift feedback the
+    /// governor closes its loop on. `None` = no canary (the historical
+    /// load-only governor behavior).
+    pub canary: Option<CanaryOptions>,
 }
 
 impl Default for ServeOptions {
@@ -150,6 +164,7 @@ impl Default for ServeOptions {
                 TierSpec::new("aggressive", Some(GavPolicy::Uniform(0))).max_batch(16),
             ],
             governor: None,
+            canary: None,
         }
     }
 }
@@ -212,6 +227,9 @@ impl ServeOptions {
         if let Some(g) = &self.governor {
             g.validate()?;
         }
+        if let Some(c) = &self.canary {
+            c.validate()?;
+        }
         Ok(())
     }
 
@@ -233,6 +251,14 @@ impl ServeOptions {
         const KNOWN_TIER: &[&str] = &["policy", "g", "layer_gs", "max_batch", "batch_timeout_ms"];
         const KNOWN_GOV: &[&str] =
             &["period_ms", "target_power_mw", "high_load", "low_load", "min_g"];
+        const KNOWN_CANARY: &[&str] = &[
+            "sample_rate",
+            "window",
+            "high_watermark",
+            "low_watermark",
+            "dwell_ticks",
+            "min_samples",
+        ];
 
         // Error helper: every diagnostic names the config line when the
         // key came from a file (mirrors the parser's duplicate-key
@@ -251,6 +277,7 @@ impl ServeOptions {
         // a hard error.
         let mut tier_names: Vec<String> = Vec::new();
         let mut has_governor = false;
+        let mut has_canary = false;
         for (sect, line) in cfg.sections_with_prefix("serve.") {
             if let Some(name) = sect.strip_prefix("tier.") {
                 if name.is_empty() || name.contains('.') {
@@ -264,10 +291,12 @@ impl ServeOptions {
                 }
             } else if sect == "governor" {
                 has_governor = true;
+            } else if sect == "canary" {
+                has_canary = true;
             } else {
                 return Err(GavinaError::Config(format!(
                     "unknown section [serve.{sect}] (config line {line}; want \
-                     [serve.tier.<name>] or [serve.governor])"
+                     [serve.tier.<name>], [serve.governor] or [serve.canary])"
                 )));
             }
         }
@@ -302,11 +331,23 @@ impl ServeOptions {
                     ));
                 }
                 has_governor = true;
+            } else if let Some(ckey) = key.strip_prefix("canary.") {
+                if !KNOWN_CANARY.contains(&ckey) {
+                    return Err(bad(
+                        key,
+                        format!(
+                            "unknown canary key '{ckey}' (known: {})",
+                            KNOWN_CANARY.join(", ")
+                        ),
+                    ));
+                }
+                has_canary = true;
             } else if !KNOWN_TOP.contains(&key) {
                 return Err(bad(
                     key,
                     format!(
-                        "unknown key '{key}' (known: {}; plus tier.<name>.* and governor.*)",
+                        "unknown key '{key}' (known: {}; plus tier.<name>.*, governor.* \
+                         and canary.*)",
                         KNOWN_TOP.join(", ")
                     ),
                 ));
@@ -514,6 +555,23 @@ impl ServeOptions {
             None
         };
 
+        let canary = if has_canary {
+            let cd = CanaryOptions::default();
+            let float_or = |key: &str, dflt: f64| -> Result<f64, GavinaError> {
+                Ok(float_opt(key)?.unwrap_or(dflt))
+            };
+            Some(CanaryOptions {
+                sample_rate: float_or("canary.sample_rate", cd.sample_rate)?,
+                window: int_ge("canary.window", cd.window as i64, 1)? as usize,
+                high_watermark: float_or("canary.high_watermark", cd.high_watermark)?,
+                low_watermark: float_or("canary.low_watermark", cd.low_watermark)?,
+                dwell_ticks: int_ge("canary.dwell_ticks", cd.dwell_ticks as i64, 0)? as u32,
+                min_samples: int_ge("canary.min_samples", cd.min_samples as i64, 1)? as usize,
+            })
+        } else {
+            None
+        };
+
         let opts = ServeOptions {
             replicas,
             queue_depth,
@@ -522,6 +580,7 @@ impl ServeOptions {
             default_tier,
             tiers,
             governor,
+            canary,
         };
         opts.validate()?;
         Ok(opts)
@@ -683,6 +742,59 @@ mod tests {
         let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
         assert!(err.contains("unknown section [serve.bogus]"), "{err}");
         assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn canary_section_loads_with_defaults_and_overrides() {
+        // Bare header: "presence enables", all defaults.
+        let cfg = parse("[serve.canary]\n").unwrap();
+        let opts = ServeOptions::from_config(&cfg).unwrap();
+        let c = opts.canary.expect("bare section enables canary");
+        let d = CanaryOptions::default();
+        assert_eq!(c.sample_rate, d.sample_rate);
+        assert_eq!(c.window, d.window);
+        assert_eq!(c.dwell_ticks, d.dwell_ticks);
+
+        // Explicit keys override; defaults fill the rest.
+        let cfg = parse(
+            "[serve.canary]\nsample_rate = 0.2\nwindow = 32\nhigh_watermark = 0.2\n\
+             low_watermark = 0.05\ndwell_ticks = 4\nmin_samples = 8\n",
+        )
+        .unwrap();
+        let c = ServeOptions::from_config(&cfg).unwrap().canary.unwrap();
+        assert!((c.sample_rate - 0.2).abs() < 1e-12);
+        assert_eq!(c.window, 32);
+        assert!((c.high_watermark - 0.2).abs() < 1e-12);
+        assert!((c.low_watermark - 0.05).abs() < 1e-12);
+        assert_eq!(c.dwell_ticks, 4);
+        assert_eq!(c.min_samples, 8);
+
+        // No section: no canary (historical governor behavior).
+        let cfg = parse("[serve]\nreplicas = 1\n").unwrap();
+        assert!(ServeOptions::from_config(&cfg).unwrap().canary.is_none());
+    }
+
+    #[test]
+    fn canary_mistakes_are_loud_line_numbered_errors() {
+        let cfg = parse("[serve.canary]\nsample_rte = 0.1\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown canary key 'sample_rte'"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+
+        // Out-of-range values fail CanaryOptions::validate via the same
+        // from_config path.
+        let cfg = parse("[serve.canary]\nsample_rate = 0.0\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("sample_rate"), "{err}");
+
+        let cfg =
+            parse("[serve.canary]\nhigh_watermark = 0.01\nlow_watermark = 0.05\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("low_watermark"), "{err}");
+
+        let cfg = parse("[serve.canary]\nmin_samples = 99\nwindow = 8\n").unwrap();
+        let err = ServeOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("min_samples"), "{err}");
     }
 
     #[test]

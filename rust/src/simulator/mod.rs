@@ -80,6 +80,17 @@ impl SimReport {
     pub fn energy_mj(&self, power: &PowerModel, sched: &GavSchedule) -> f64 {
         power.energy_mj(sched, self.cycles)
     }
+
+    /// Observed step-error rate: iPE outputs the error model corrupted
+    /// per undervolted step executed (0.0 when nothing ran undervolted).
+    /// The canary estimator surfaces this per layer at serving time.
+    pub fn step_error_rate(&self) -> f64 {
+        if self.steps_approx == 0 {
+            0.0
+        } else {
+            self.values_corrupted as f64 / self.steps_approx as f64
+        }
+    }
 }
 
 /// Where undervolting errors come from during approximate steps.
@@ -544,6 +555,15 @@ mod tests {
         let rep = sim.run_gemm(&job_a);
         assert!(rep.values_corrupted > 0);
         assert_ne!(rep.p, exact);
+        // The observed step-error rate is the serving-time control
+        // signal: corrupted values per undervolted step, 0 when guarded.
+        assert!(rep.step_error_rate() > 0.0);
+        assert!(
+            (rep.step_error_rate() - rep.values_corrupted as f64 / rep.steps_approx as f64).abs()
+                < 1e-12
+        );
+        let mut sim2 = GavinaSim::new(arch.clone(), Some(&tables), 11);
+        assert_eq!(sim2.run_gemm(&job_g).step_error_rate(), 0.0);
     }
 
     #[test]

@@ -187,6 +187,8 @@ fn per_request_qconv(
     stats.tiles += out.counters.tiles;
     stats.corrupted += out.counters.corrupted;
     stats.executed_macs += out.counters.executed_macs;
+    stats.steps_approx += out.counters.steps_approx;
+    stats.steps_guarded += out.counters.steps_guarded;
     stats.useful_macs += g.macs();
     if stats.layer_macs.len() <= layer_idx {
         stats.layer_macs.resize(layer_idx + 1, 0);
@@ -194,6 +196,12 @@ fn per_request_qconv(
     }
     stats.layer_macs[layer_idx] = g.macs();
     stats.layer_dims[layer_idx] = (c_dim, l_dim, k_dim);
+    if stats.layer_corrupted.len() <= layer_idx {
+        stats.layer_corrupted.resize(layer_idx + 1, 0);
+        stats.layer_steps.resize(layer_idx + 1, 0);
+    }
+    stats.layer_corrupted[layer_idx] += out.counters.corrupted;
+    stats.layer_steps[layer_idx] += out.counters.steps_approx;
 
     // --- dequantize ---
     let mut p = vec![0.0f32; k_dim * l_dim];

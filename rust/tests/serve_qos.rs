@@ -6,7 +6,11 @@
 //! * the `exact` tier's served logits are bit-identical to
 //!   `Engine::infer` on the same images, regardless of traffic around
 //!   them — including when exact requests are packed into cross-request
-//!   batches (per-image activation quantization).
+//!   batches (per-image activation quantization),
+//! * the canary closes the governor loop: sampling is replay-
+//!   deterministic, re-runs are bit-identical to `Engine::infer` and
+//!   never consume admission permits, and measured drift steps the
+//!   ladder toward guarded and holds it there through the dwell.
 //!
 //! Concurrency-sensitive tests pin worker state with a gated backend
 //! (every GEMM blocks until the test opens the gate) instead of timing
@@ -19,7 +23,7 @@ use std::time::{Duration, Instant};
 use gavina::arch::{ArchConfig, Precision};
 use gavina::engine::backend::{BackendGemm, LayerGemm};
 use gavina::engine::{Engine, EngineBuilder, ExecBackend, FloatBackend, GavPolicy, GavinaError};
-use gavina::serve::{ServeOptions, SubmitOptions, TierSpec};
+use gavina::serve::{CanaryOptions, ServeOptions, StepTrigger, SubmitOptions, TierSpec};
 use gavina::util::Prng;
 
 const IMAGE_LEN: usize = 32 * 32 * 3;
@@ -138,6 +142,7 @@ fn one_tier(replicas: usize, queue_depth: usize, max_batch: usize) -> ServeOptio
             max_batch,
         }],
         governor: None,
+        canary: None,
     }
 }
 
@@ -219,6 +224,7 @@ fn exact_tier_is_bit_identical_to_engine_infer() {
             TierSpec::new("guarded", None).max_batch(4),
         ],
         governor: None,
+        canary: None,
     };
     let service = Arc::clone(&engine).serve(opts).unwrap();
     let session = service.session();
@@ -322,4 +328,262 @@ fn governed_service_swaps_schedules_under_pinned_load() {
     let first = &report.governor.first().unwrap().layer_gs;
     let distinct = report.governor.iter().any(|s| &s.layer_gs != first);
     assert!(distinct, "trajectory must contain at least two schedules");
+    // Every trajectory entry carries its trigger: with the canary off,
+    // the only signals are load and steady.
+    assert!(report
+        .governor
+        .iter()
+        .all(|s| matches!(s.trigger, StepTrigger::Load | StepTrigger::Steady)));
+}
+
+/// MSB-always-flips error tables: every undervolted significance step
+/// corrupts loudly, so an aggressive schedule drifts hard and a guarded
+/// one is clean.
+fn hot_tables(arch: &ArchConfig) -> gavina::errmodel::ErrorTables {
+    use gavina::errmodel::{ErrorTables, ModelParams};
+    let params = ModelParams::paper(arch.c_dim);
+    let mut tables = ErrorTables::zeroed(params);
+    let msb = params.s_bits - 1;
+    for e in 0..=params.c_dim as u16 {
+        for pb in 0..params.p_bins {
+            tables.set_prob(msb, e, pb, 0, 1.0);
+        }
+    }
+    tables
+}
+
+fn hot_engine(seed: u64) -> Arc<Engine> {
+    let arch = ArchConfig::tiny();
+    Arc::new(
+        EngineBuilder::new()
+            .synthetic_weights(0.125, 1)
+            .precision(Precision::new(2, 2))
+            .arch(arch.clone())
+            .tables(Arc::new(hot_tables(&arch)))
+            .policy(GavPolicy::Uniform(0))
+            .seed(seed)
+            .threads(1)
+            .build()
+            .unwrap(),
+    )
+}
+
+/// One tier, one replica, canary on — sequential submit/wait keeps the
+/// batch-id sequence (and therefore every injection and sampling stream)
+/// fully deterministic.
+fn canary_opts(sample_rate: f64) -> ServeOptions {
+    ServeOptions {
+        canary: Some(CanaryOptions {
+            sample_rate,
+            window: 16,
+            min_samples: 2,
+            ..Default::default()
+        }),
+        ..one_tier(1, 8, 1)
+    }
+}
+
+#[test]
+fn canary_rerun_is_bit_identical_to_engine_infer() {
+    // The re-run entry point is the per-request data plane: row-sliced
+    // logits from one canary_rerun call must equal standalone
+    // Engine::infer on each image (per-image activation quantization).
+    let engine = tiny_engine(GavPolicy::Exact);
+    let images = rand_images(21, 3);
+    let rows: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    let rerun = engine.canary_rerun(&rows).unwrap();
+    let c = rerun.classes;
+    for (i, img) in images.iter().enumerate() {
+        assert_eq!(
+            &rerun.logits[i * c..(i + 1) * c],
+            engine.infer(img, 1).unwrap().logits.as_slice(),
+            "canary re-run must be bit-identical to Engine::infer"
+        );
+    }
+}
+
+#[test]
+fn canary_sampling_and_estimates_replay_identically() {
+    // Two services over the same engine, fed the same request stream:
+    // the sampled set (pinned by the XOR fingerprint) and every drift
+    // estimate must reproduce exactly.
+    let engine = hot_engine(9);
+    let images = rand_images(23, 10);
+    let run = || {
+        let service = Arc::clone(&engine).serve(canary_opts(0.5)).unwrap();
+        let session = service.session();
+        for img in &images {
+            session
+                .submit(img.clone())
+                .unwrap()
+                .wait_timeout(Duration::from_secs(120))
+                .unwrap()
+                .expect("served");
+        }
+        let report = service.shutdown();
+        assert_eq!(report.canary.len(), 1, "one observed tier");
+        report.canary.into_iter().next().unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.fingerprint, b.fingerprint, "identical sampled sets");
+    assert_eq!(a.sampled, b.sampled);
+    assert_eq!(a.flips, b.flips);
+    assert_eq!(a.observed_flip_rate, b.observed_flip_rate);
+    assert_eq!(a.mean_linf, b.mean_linf);
+    assert_eq!(a.max_linf, b.max_linf);
+    assert_eq!(a.layer_step_error_rates, b.layer_step_error_rates);
+    assert!(a.sampled > 0, "rate 0.5 over 10 requests must sample");
+    assert!(
+        a.max_linf > 0.0,
+        "hot tables on an aggressive tier must show measurable drift"
+    );
+}
+
+#[test]
+fn canary_reruns_never_consume_admission_permits() {
+    // queue_depth 1 + sample_rate 1.0: every request is re-run on the
+    // reference, yet the sequential submit/wait loop must never see
+    // Overloaded — the re-run path sits below the admission gate.
+    let opts = ServeOptions {
+        canary: Some(CanaryOptions {
+            sample_rate: 1.0,
+            ..Default::default()
+        }),
+        ..one_tier(1, 1, 1)
+    };
+    let engine = tiny_engine(GavPolicy::Uniform(1));
+    let service = Arc::clone(&engine).serve(opts).unwrap();
+    let session = service.session();
+    let images = rand_images(29, 8);
+    for img in &images {
+        let t = session.submit(img.clone()).expect("slot free: canary holds no permit");
+        t.wait_timeout(Duration::from_secs(120)).unwrap().expect("served");
+    }
+    let report = service.shutdown();
+    assert_eq!(report.rejected, 0, "canary re-runs must not occupy admission slots");
+    assert_eq!(report.canary.len(), 1);
+    let c = &report.canary[0];
+    assert_eq!(c.sampled, 8, "rate 1.0 samples every request");
+    // No error tables: the undervolted tier computes exactly — served
+    // logits match the reference bit for bit.
+    assert_eq!(c.flips, 0);
+    assert_eq!(c.max_linf, 0.0);
+}
+
+#[test]
+fn measured_drift_escalates_the_governor_and_dwell_blocks_redescent() {
+    use gavina::serve::GovernorOptions;
+    // Aggressive default tier with always-flip tables, load pinned HIGH
+    // (which, alone, would hold the ladder at its most aggressive rung):
+    // only measured drift can move the schedule toward guarded, so every
+    // ascent is Drift-tagged; afterwards the huge dwell must veto the
+    // high-load descent (DwellHold) — the ladder may not flap back.
+    let engine = hot_engine(31);
+    let mut opts = ServeOptions {
+        canary: Some(CanaryOptions {
+            sample_rate: 1.0,
+            window: 8,
+            min_samples: 2,
+            high_watermark: 0.05,
+            low_watermark: 0.01,
+            dwell_ticks: 100_000,
+        }),
+        ..one_tier(1, 16, 4)
+    };
+    opts.governor = Some(GovernorOptions {
+        period: Duration::from_millis(5),
+        high_load: 0.5,
+        low_load: 0.05,
+        ..Default::default()
+    });
+    let max_g = engine.precision().max_g();
+    let service = Arc::clone(&engine).serve(opts).unwrap();
+    let session = service.session();
+    let before = service.tier_layer_gs("guarded").unwrap();
+    assert!(before.iter().sum::<u32>() < before.len() as u32 * max_g);
+
+    // Closed loop keeping ~12 in flight: load ≈ 12/16 = 0.75 ≥ 0.5, so
+    // the load signal always votes for the aggressive rung.
+    let images = rand_images(37, 16);
+    let mut outstanding: std::collections::VecDeque<gavina::serve::Ticket> = Default::default();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut i = 0usize;
+    let mut guarded_since: Option<usize> = None;
+    loop {
+        while outstanding.len() < 12 {
+            match session.submit(images[i % images.len()].clone()) {
+                Ok(t) => outstanding.push_back(t),
+                Err(GavinaError::Overloaded { .. }) => break,
+                Err(e) => panic!("submit failed: {e}"),
+            }
+            i += 1;
+        }
+        if let Some(t) = outstanding.pop_front() {
+            t.wait_timeout(Duration::from_secs(120)).unwrap().expect("served");
+        }
+        let gs = service.tier_layer_gs("guarded").unwrap();
+        let ticks = service.governor_ticks();
+        if gs.iter().all(|&g| g == max_g) {
+            // Fully guarded: keep the load pinned for ≥ 10 more governor
+            // ticks so the dwell veto is actually exercised.
+            let since = *guarded_since.get_or_insert(ticks);
+            if ticks >= since + 10 {
+                break;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "drift never escalated the ladder to fully guarded"
+        );
+    }
+    for t in outstanding {
+        t.wait_timeout(Duration::from_secs(120)).unwrap().expect("drained");
+    }
+    let report = service.shutdown();
+
+    // (1) Drift did the climbing: ascents under pinned-high load carry
+    // the Drift tag.
+    let traj = &report.governor;
+    let first_drift = traj
+        .iter()
+        .position(|s| s.trigger == StepTrigger::Drift)
+        .expect("at least one Drift-tagged escalation");
+    // (2) No re-descent after escalation began: mean G is monotonically
+    // non-decreasing from the first Drift step on — oscillating load
+    // cannot flap the schedule while drift is hot.
+    for w in traj[first_drift..].windows(2) {
+        assert!(
+            w[1].mean_g >= w[0].mean_g - 1e-12,
+            "ladder re-descended during the dwell: {} -> {}",
+            w[0].mean_g,
+            w[1].mean_g
+        );
+    }
+    // (3) The veto is visible: with load pinned high and dwell armed,
+    // held ticks are DwellHold-tagged (a Load tag after the climb would
+    // be exactly the forbidden descent).
+    assert!(
+        traj[first_drift..]
+            .iter()
+            .any(|s| s.trigger == StepTrigger::DwellHold),
+        "dwell veto must appear in the trajectory"
+    );
+    assert!(traj[first_drift..]
+        .iter()
+        .all(|s| s.trigger != StepTrigger::Load));
+    // (4) The drift was real and measured.
+    let c = &report.canary[0];
+    assert!(c.flips > 0, "always-flip tables must flip top-1 classes");
+    assert!(c.observed_flip_rate >= 0.0 && c.sampled > 0);
+    // (5) The default tier's metrics surface the governor state.
+    let m = report.tier("guarded").unwrap();
+    assert!(m.governor_rung.is_some(), "governed tier exposes its rung");
+    assert!(
+        matches!(
+            m.governor_trigger,
+            Some(StepTrigger::Drift | StepTrigger::DwellHold)
+        ),
+        "final trigger must be drift-side, got {:?}",
+        m.governor_trigger
+    );
 }

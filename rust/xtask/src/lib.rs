@@ -352,7 +352,9 @@ const UNSAFE_ALLOWLIST: &[&str] = &[
 ];
 
 /// The only library homes for thread creation: the scoped worker pool and
-/// the serving layer.
+/// the serving layer. `rust/src/canary/` deliberately stays *outside*
+/// this list — the observability plane runs on the governor and worker
+/// threads and must never spawn its own (pinned by the fixture tests).
 const SPAWN_ALLOWLIST: &[&str] = &["rust/src/util/parallel.rs", "rust/src/serve/"];
 
 fn in_allowlist(label: &str, list: &[&str]) -> bool {

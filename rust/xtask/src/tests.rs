@@ -93,6 +93,10 @@ fn stray_thread_spawn_fires_spawn_scope() {
     assert_eq!(ids(&diags), vec!["spawn-scope"]);
     assert!(check_source("rust/src/serve/mod.rs", src).is_empty());
     assert!(check_source("rust/src/util/parallel.rs", src).is_empty());
+    // The canary subsystem is pure observability — it runs on the
+    // governor/worker threads and must never spawn its own.
+    let canary = check_source("rust/src/canary/sampler.rs", src);
+    assert_eq!(ids(&canary), vec!["spawn-scope"]);
     // Integration tests and benches drive the library from outside it.
     assert!(check_source("rust/tests/serve_qos.rs", src).is_empty());
 }
@@ -110,6 +114,10 @@ fn relaxed_ordering_requires_an_annotation() {
                       let n = x.load(Ordering::Relaxed);\n";
     let whole_file = check_source("rust/src/serve/metrics.rs", file_scope);
     assert!(whole_file.is_empty());
+    // src/canary/ is covered like the rest of the library: a bare
+    // Relaxed in the drift estimator needs the same annotation.
+    let in_canary = check_source("rust/src/canary/estimator.rs", bare);
+    assert_eq!(ids(&in_canary), vec!["relaxed-order"]);
 }
 
 #[test]
