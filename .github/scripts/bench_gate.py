@@ -13,6 +13,15 @@ floors (``rust/BENCH_baseline.json``) and exits non-zero when
 * the active SIMD fused kernel fails to beat the scalar fused kernel at
   the same (precision, threads=1) — the whole point of the SIMD path.
 
+The baseline may additionally carry an optional ``prologue_floors``
+list of ``{"kernel", "precision", "threads",
+"min_speedup_vs_reference"}`` entries gating the fused streaming
+activation prologue's measured ``speedup_vs_reference`` from the
+``prologue`` section of the current artifact (same tolerance). A floor
+whose key this host did not produce only warns, and a baseline without
+the section skips the prologue gate entirely — so floors can be
+ratcheted in from real artifact runs.
+
 ``--serve`` mode gates the serving replica sweep
 (``BENCH_serve.json``): the baseline may carry an optional
 ``serve_floors`` list of ``{"replicas": R, "throughput_rps": floor}``
@@ -40,6 +49,14 @@ def key_map(doc):
         (e["kernel"], e["precision"], e["threads"]): float(e["bitmacs_per_s"])
         for e in doc["entries"]
         if "bitmacs_per_s" in e
+    }
+
+
+def prologue_map(doc):
+    return {
+        (e["kernel"], e["precision"], int(e["threads"])): float(e["speedup_vs_reference"])
+        for e in doc.get("prologue", [])
+        if "speedup_vs_reference" in e
     }
 
 
@@ -155,6 +172,37 @@ def main():
         if ratio <= 1.0:
             failures.append("SIMD kernel not faster than scalar: " + line)
         print(f"\n{line}")
+
+    # Optional prologue floors: the fused streaming activation prologue
+    # must keep its measured speedup over the retained three-pass
+    # reference path.
+    pfloors = {
+        (e["kernel"], e["precision"], int(e["threads"])): float(e["min_speedup_vs_reference"])
+        for e in base.get("prologue_floors", [])
+    }
+    pcur = prologue_map(cur)
+    if pfloors or pcur:
+        print("\n### prologue gate (fused streaming pass vs three-pass reference)\n")
+        print("| kernel | precision | threads | floor speedup | current | verdict |")
+        print("|---|---|---|---|---|---|")
+        for key in sorted(set(pfloors) | set(pcur)):
+            k, p, t = key
+            floor, c = pfloors.get(key), pcur.get(key)
+            if c is None:
+                warnings.append(f"prologue floor {key} not produced by this host")
+                print(f"| {k} | {p} | {t} | {floor:.2f}x | — | not run on this host |")
+                continue
+            if floor is None:
+                print(f"| {k} | {p} | {t} | — | {c:.2f}x | new key (no floor yet) |")
+                continue
+            ok = c >= floor * (1.0 - tol)
+            if not ok:
+                failures.append(
+                    f"prologue {key}: {c:.2f}x vs floor {floor:.2f}x "
+                    f"(fused pass no longer pays for itself)"
+                )
+            verdict = "ok" if ok else f"**REGRESSION >{tol:.0%}**"
+            print(f"| {k} | {p} | {t} | {floor:.2f}x | {c:.2f}x | {verdict} |")
 
     for w in warnings:
         print(f"\n> warning: {w}")

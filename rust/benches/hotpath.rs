@@ -3,9 +3,14 @@
 //! * bit-packed binary-plane GEMM (u64 AND+popcount) — bit-MACs/ms
 //! * multithreaded bit-serial GEMM, single vs `--threads N` — bit-MACs/ms
 //! * fused plane-interleaved kernel vs the reference step-sequence
-//!   kernel at a4w4/a8w8, serial + MT — speedup lines plus a structured
-//!   `BENCH_hotpath.json` artifact (kernel, precision, threads,
-//!   bit-MACs/s) that CI uploads so the perf trajectory is tracked
+//!   kernel at a4w4/a8w8, serial + MT, on **every** available SIMD path
+//!   — speedup lines plus a structured `BENCH_hotpath.json` artifact
+//!   (kernel, precision, threads, bit-MACs/s) that CI uploads so the
+//!   perf trajectory is tracked
+//! * fused streaming activation prologue (im2col→quantize→interleave in
+//!   one pass) vs the retained three-pass reference — `prologue_ms` vs
+//!   `gemm_ms` split per (kernel, precision, threads) in the artifact,
+//!   with an in-bench bit-equality check against the reference packing
 //! * full bit-serial tile GEMM (pack + 16 steps + recombine)
 //! * error-model injection throughput — values/ms
 //! * cycle-simulator end-to-end GEMM — MACs/ms
@@ -126,11 +131,11 @@ fn main() {
     }
 
     // ---- fused vs reference kernel (+ BENCH_hotpath.json artifact) ------
-    // Times the scalar fused kernel (always) and the active SIMD path
-    // (when the host has one) against the step-sequence reference, per
-    // precision, serial + MT — and records which kernel/block the
-    // dispatcher picked so the perf trajectory in CI knows *which* path
-    // each number came from.
+    // Times the fused kernel on every available path (scalar always,
+    // plus each SIMD kind the host supports — avx2/avx512/avx512hs/neon)
+    // against the step-sequence reference, per precision, serial + MT —
+    // and records which kernel/block the dispatcher picked so the perf
+    // trajectory in CI knows *which* path each number came from.
     {
         use gavina::gemm::kernel::{fused_gemm_mt_with, fused_gemm_with};
         use gavina::gemm::simd::{self, KernelKind};
@@ -146,13 +151,12 @@ fn main() {
             block.l_cols,
             avail.join("+")
         );
-        let mut kinds = vec![KernelKind::Scalar];
-        if active != KernelKind::Scalar {
-            kinds.push(active);
-        }
+        let kinds = simd::available();
+        debug_assert_eq!(kinds[0], KernelKind::Scalar, "scalar anchors the ratio column");
         let mut entries: Vec<String> = Vec::new();
         let mut speedups: Vec<String> = Vec::new();
         let mut simd_ratios: Vec<String> = Vec::new();
+        let mut prologues: Vec<String> = Vec::new();
         let (c, l, k) = if quick { (1152, 32, 64) } else { (2304, 64, 128) };
         for prec in [Precision::new(4, 4), Precision::new(8, 8)] {
             let (a, b) = gemm_workload(c, l, k, prec, &mut rng);
@@ -207,10 +211,11 @@ fn main() {
                 }
                 timed.push((kind, s_fus1));
             }
-            if let [(_, s_sc1), (ks, s_simd1)] = timed[..] {
+            let (_, s_sc1) = timed[0];
+            for &(ks, s_simd1) in &timed[1..] {
                 println!(
                     "[perf] {:44} {:>11.2}x (scalar {:.3} -> {ks} {:.3} ms, 1 thr)",
-                    format!("simd over scalar {} {c}x{l}x{k}", prec.tag()),
+                    format!("simd over scalar [{ks}] {} {c}x{l}x{k}", prec.tag()),
                     s_sc1 / s_simd1.max(1e-12),
                     s_sc1 * 1e3 / reps as f64,
                     s_simd1 * 1e3 / reps as f64,
@@ -223,19 +228,99 @@ fn main() {
                 ));
             }
         }
+        // ---- fused activation prologue vs three-pass reference ----------
+        // Times the streaming im2col→quantize→interleave prologue
+        // (`pack_a_fused_with`) against the retained three-pass reference
+        // (f32 im2col matrix → i32 staging → repack) on a ResNet-ish 3×3
+        // SAME conv at a8w8 with per-image scales, per kernel and thread
+        // count — and splits the per-layer cost into prologue_ms vs
+        // gemm_ms so `bench_gate.py` can floor the prologue speedup
+        // independently of the GEMM throughput floors.
+        {
+            use gavina::dnn::exec::{pack_a_fused_with, pack_a_reference};
+            use gavina::dnn::lower::ConvGeom;
+            use gavina::dnn::tensor::robust_amax_slice;
+            use gavina::dnn::Tensor;
+            use gavina::gemm::kernel::fused_gemm_mt_with as gemm_mt;
+
+            let prec = Precision::new(8, 8);
+            let hi_a = ((1i32 << (prec.a_bits - 1)) - 1) as f32;
+            let (n, h, w, cin, cout) =
+                if quick { (2, 16, 16, 32, 16) } else { (4, 32, 32, 64, 32) };
+            let g = ConvGeom::from_dims(n, h, w, &[3, 3, cin, cout], 1);
+            let mut prng = Prng::new(0xA11);
+            let data: Vec<f32> =
+                (0..n * h * w * cin).map(|_| prng.next_f32() * 2.0 - 1.0).collect();
+            let img = h * w * cin;
+            let sa: Vec<f32> = (0..n)
+                .map(|i| robust_amax_slice(&data[i * img..(i + 1) * img]) / hi_a)
+                .collect();
+            let x = Tensor::new(vec![n, h, w, cin], data);
+            let (_, bm) = gemm_workload(g.c_dim(), 8, g.k_dim(), prec, &mut prng);
+            let ib = InterleavedPlanes::from_b_matrix(&bm, g.k_dim(), g.c_dim(), prec.b_bits);
+            let reps = if quick { 5 } else { 20 };
+
+            // The serial three-pass baseline (kernel-independent): warm
+            // the scratch allocations once, then time steady-state reps.
+            let (mut af, mut qa) = (Vec::new(), Vec::new());
+            let mut ia_ref = InterleavedPlanes::zeroed(prec.a_bits, 0, 0);
+            pack_a_reference(&x, &g, &sa, hi_a, prec.a_bits, &mut af, &mut qa, &mut ia_ref);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                pack_a_reference(&x, &g, &sa, hi_a, prec.a_bits, &mut af, &mut qa, &mut ia_ref);
+            }
+            let ref_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+            let ths = if threads > 1 { vec![1, threads] } else { vec![1] };
+            let mut ia = InterleavedPlanes::zeroed(prec.a_bits, 0, 0);
+            for &kind in &kinds {
+                for &th in &ths {
+                    pack_a_fused_with(kind, &x, &g, &sa, hi_a, prec.a_bits, th, &mut ia);
+                    assert_eq!(
+                        ia, ia_ref,
+                        "fused prologue [{kind}, {th} thr] must be bit-identical to the reference"
+                    );
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..reps {
+                        pack_a_fused_with(kind, &x, &g, &sa, hi_a, prec.a_bits, th, &mut ia);
+                    }
+                    let fus_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..reps {
+                        std::hint::black_box(gemm_mt(kind, &ia, &ib, th));
+                    }
+                    let gemm_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+                    println!(
+                        "[perf] {:44} {:>11.2}x (ref {ref_ms:.3} -> fused {fus_ms:.3} ms, \
+                         gemm {gemm_ms:.3} ms, {th} thr)",
+                        format!("prologue fused[{kind}] {} {n}x{h}x{w}x{cin}", prec.tag()),
+                        ref_ms / fus_ms.max(1e-9),
+                    );
+                    prologues.push(format!(
+                        "    {{\"kernel\": \"fused-{kind}\", \"precision\": \"{}\", \
+                         \"threads\": {th}, \"prologue_ms\": {fus_ms:.3}, \
+                         \"gemm_ms\": {gemm_ms:.3}, \"reference_prologue_ms\": {ref_ms:.3}, \
+                         \"speedup_vs_reference\": {:.3}}}",
+                        prec.tag(),
+                        ref_ms / fus_ms.max(1e-9)
+                    ));
+                }
+            }
+        }
         let json = format!(
             "{{\n  \"bench\": \"hotpath\",\n  \"quick\": {quick},\n  \"threads\": {threads},\n  \
              \"dispatch\": {{\"kernel\": \"{}\", \"block_c_words\": {}, \"block_l_cols\": {}, \
              \"available\": \"{}\"}},\n  \
              \"entries\": [\n{}\n  ],\n  \"fused_vs_reference\": [\n{}\n  ],\n  \
-             \"simd_over_scalar\": [\n{}\n  ]\n}}\n",
+             \"simd_over_scalar\": [\n{}\n  ],\n  \"prologue\": [\n{}\n  ]\n}}\n",
             active.name(),
             block.c_words,
             block.l_cols,
             avail.join("+"),
             entries.join(",\n"),
             speedups.join(",\n"),
-            simd_ratios.join(",\n")
+            simd_ratios.join(",\n"),
+            prologues.join(",\n")
         );
         std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
         println!(

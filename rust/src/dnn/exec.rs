@@ -12,9 +12,11 @@
 //! network is lowered into per-layer [`LayerPlan`]s — quantized weights
 //! pre-packed as bit-planes, BN folded, geometry and GAV schedule
 //! resolved — either at `EngineBuilder::build()` or in
-//! [`Executor::new`]. A request then only pays for activation work:
-//! im2col into a reusable scratch arena, activation quantization, one
-//! A-side plane packing per layer, and the backend GEMM.
+//! [`Executor::new`]. A request then only pays for activation work: one
+//! **streaming fused prologue** per layer ([`pack_a_fused`] — patch
+//! gather, robust-scale quantization and bit-plane interleave in a
+//! single multi-threaded pass over the input, no materialized im2col
+//! matrix), and the backend GEMM.
 //!
 //! Execution is delegated to a pluggable [`ExecBackend`]
 //! (see [`crate::engine::backend`]): the exact fake-quant reference
@@ -28,13 +30,16 @@
 use std::borrow::Cow;
 use std::cell::RefCell;
 
-use super::lower::im2col_into;
+use super::lower::{im2col_into, visit_col_runs, ColRun, ConvGeom};
 use super::plan::{LayerPlan, PlannedModel};
 use super::tensor::{robust_amax_slice, Tensor};
 use super::weights::TensorMap;
 use crate::arch::Precision;
 use crate::engine::backend::{ExecBackend, LayerGemm};
+use crate::gemm::simd::{self, KernelKind};
+use crate::quant::simd::RunPacker;
 use crate::quant::InterleavedPlanes;
+use crate::util::parallel::parallel_chunks_mut;
 
 /// Elements of one 32×32×3 input image.
 pub const IMAGE_LEN: usize = 32 * 32 * 3;
@@ -195,24 +200,21 @@ pub struct ForwardResult {
     pub stats: ForwardStats,
 }
 
-/// Reusable scratch buffers: im2col, activation quantization output and
-/// the packed A-side planes.
+/// Reusable scratch: just the packed A-side planes. The fused streaming
+/// prologue ([`pack_a_fused`]) quantizes and packs straight from the
+/// input tensor, so the f32 im2col matrix and the i32 staging vector
+/// that used to live here no longer exist on the hot path (they survive
+/// only as locals of the property-test reference, [`pack_a_reference`]).
 struct Scratch {
-    /// im2col patch matrix `A[C, L]` (f32).
-    af: Vec<f32>,
-    /// Quantized activations (same layout).
-    qa: Vec<i32>,
     /// A-side planes packed straight into the fused kernel's interleaved
     /// layout, one reused allocation across layers and requests
-    /// ([`InterleavedPlanes::repack_a`]).
+    /// ([`InterleavedPlanes::reshape_zeroed`]).
     ia: InterleavedPlanes,
 }
 
 impl Default for Scratch {
     fn default() -> Self {
         Self {
-            af: Vec::new(),
-            qa: Vec::new(),
             ia: InterleavedPlanes::zeroed(2, 0, 0),
         }
     }
@@ -239,6 +241,12 @@ pub struct Executor<'a> {
     /// Deterministic sub-batch stream id mixed into the backend's
     /// per-layer seed (serving shards); `0` for standalone runs.
     pub stream: u64,
+    /// Worker threads for the fused activation prologue (`0` = one per
+    /// core, `1` = serial). Purely a speed knob: prologue workers own
+    /// disjoint column spans of the interleaved A buffer and each column
+    /// is packed by exactly the serial arithmetic, so any value produces
+    /// bit-identical planes — and therefore bit-identical logits.
+    pub threads: usize,
 }
 
 impl<'a> Executor<'a> {
@@ -257,6 +265,7 @@ impl<'a> Executor<'a> {
             model: Cow::Owned(PlannedModel::lower(weights, width_mult, prec, &gs)),
             backend,
             stream: 0,
+            threads: 1,
         }
     }
 
@@ -267,6 +276,7 @@ impl<'a> Executor<'a> {
             model: Cow::Borrowed(model),
             backend,
             stream: 0,
+            threads: 1,
         }
     }
 
@@ -336,34 +346,16 @@ impl<'a> Executor<'a> {
         };
         let out = SCRATCH.with(|cell| {
             let mut scratch = cell.borrow_mut();
-            let Scratch { af, qa, ia } = &mut *scratch;
-            im2col_into(x, &g, af);
-            qa.clear();
-            match q {
-                ActQuant::PerBatch => {
-                    let s = sa[0];
-                    qa.extend(
-                        af.iter()
-                            .map(|&v| ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32)),
-                    );
-                }
-                ActQuant::PerImage => {
-                    // A is `[C, L]` row-major (`a[c·L + l]`), so the image
-                    // owning element `idx` is `(idx % l_dim) / ohw`.
-                    qa.reserve(af.len());
-                    qa.extend(af.iter().enumerate().map(|(idx, &v)| {
-                        let s = sa[(idx % l_dim) / ohw];
-                        ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32)
-                    }));
-                }
-            }
-
-            // Pack the A-side planes once per layer, directly in the
-            // plane-interleaved layout the fused kernel consumes and into
-            // the reused scratch allocation; B was packed (in both
-            // layouts) at build() and lives in the plan. Then the integer
-            // GEMM through the pluggable backend.
-            ia.repack_a(qa, c_dim, l_dim, prec.a_bits);
+            let Scratch { ia } = &mut *scratch;
+            // One streaming pass over the input: every prologue worker
+            // gathers its columns' patch runs (or takes the 1×1 strided
+            // view), quantizes with the owning image's scale, and packs
+            // bit-planes directly into its disjoint span of the reused
+            // interleaved A allocation — no f32 im2col matrix, no i32
+            // staging vector. B was packed (in both layouts) at build()
+            // and lives in the plan. Then the integer GEMM through the
+            // pluggable backend.
+            pack_a_fused(x, &g, &sa, hi_a, prec.a_bits, self.threads, ia);
             self.backend.run_layer_gemm(&LayerGemm {
                 a: ia,
                 plan,
@@ -528,6 +520,108 @@ impl<'a> Executor<'a> {
     }
 }
 
+
+/// The fused activation prologue on the process's active kernel: one
+/// streaming, multi-threaded im2col → quantize → bit-plane-interleave
+/// pass. See [`pack_a_fused_with`].
+pub fn pack_a_fused(
+    x: &Tensor,
+    g: &ConvGeom,
+    sa: &[f32],
+    hi_a: f32,
+    bits: u8,
+    threads: usize,
+    ia: &mut InterleavedPlanes,
+) {
+    pack_a_fused_with(simd::active(), x, g, sa, hi_a, bits, threads, ia);
+}
+
+/// Build the interleaved A-side planes for one conv in **one streaming
+/// pass**: the im2col L axis is partitioned into contiguous column
+/// blocks over `threads` workers, and each worker walks its columns'
+/// patch runs ([`visit_col_runs`] — for a 1×1/fc geometry each column is
+/// a single strided view of the input, nothing is gathered), quantizes
+/// every value with the owning image's scale on the `kind` SIMD path,
+/// and packs bit-planes directly into the column's disjoint chunk range
+/// of `ia` (`[l·words·bits, (l+1)·words·bits)`). No f32 im2col matrix or
+/// i32 staging vector is ever materialized.
+///
+/// `sa` holds either one scale for the whole batch or one per image
+/// (column `l` belongs to image `l / (oh·ow)`). Bit-identical to
+/// [`pack_a_reference`] for every kernel kind and thread count
+/// (property-tested below): each column's values are quantized by
+/// exactly the scalar expression `((v / s).round() as i32).clamp(…)`
+/// and packed in C order, and zero-padding taps pack to all-zero planes
+/// just as quantized `0.0` does.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_fused_with(
+    kind: KernelKind,
+    x: &Tensor,
+    g: &ConvGeom,
+    sa: &[f32],
+    hi_a: f32,
+    bits: u8,
+    threads: usize,
+    ia: &mut InterleavedPlanes,
+) {
+    let (c_dim, l_dim) = (g.c_dim(), g.l_dim());
+    assert!(sa.len() == 1 || sa.len() == g.n, "one scale, or one per image");
+    ia.reshape_zeroed(bits, l_dim, c_dim);
+    if c_dim == 0 || l_dim == 0 {
+        return;
+    }
+    let row = ia.words * bits as usize;
+    let ohw = g.oh * g.ow;
+    parallel_chunks_mut(ia.logical_mut(), row, threads, |l, chunk| {
+        let s = if sa.len() == 1 { sa[0] } else { sa[l / ohw] };
+        let mut p = RunPacker::new(chunk, bits, s, hi_a, kind);
+        visit_col_runs(x, g, l, |r| match r {
+            ColRun::Data(run) => p.push_run(run),
+            ColRun::Zeros(z) => p.push_zeros(z),
+        });
+        let pushed = p.finish();
+        debug_assert_eq!(pushed, c_dim, "column {l} must cover the C axis");
+    });
+}
+
+/// The retained three-pass reference prologue: materialize the f32
+/// im2col matrix, scalar-quantize it into an i32 staging vector
+/// (resize + indexed writes — no `clear`/`extend` reallocation churn),
+/// then re-pack into the interleaved layout. Serial by construction.
+/// This is the ground truth [`pack_a_fused_with`] is property-tested
+/// against, and the baseline the prologue benchmark times the fused
+/// path over.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_reference(
+    x: &Tensor,
+    g: &ConvGeom,
+    sa: &[f32],
+    hi_a: f32,
+    bits: u8,
+    af: &mut Vec<f32>,
+    qa: &mut Vec<i32>,
+    ia: &mut InterleavedPlanes,
+) {
+    let (c_dim, l_dim) = (g.c_dim(), g.l_dim());
+    assert!(sa.len() == 1 || sa.len() == g.n, "one scale, or one per image");
+    let ohw = g.oh * g.ow;
+    im2col_into(x, g, af);
+    qa.resize(af.len(), 0);
+    if sa.len() == 1 {
+        let s = sa[0];
+        for (dst, &v) in qa.iter_mut().zip(af.iter()) {
+            *dst = ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32);
+        }
+    } else {
+        // A is `[C, L]` row-major (`a[c·L + l]`), so the image owning
+        // element `idx` is `(idx % l_dim) / ohw`.
+        for (idx, (dst, &v)) in qa.iter_mut().zip(af.iter()).enumerate() {
+            let s = sa[(idx % l_dim) / ohw];
+            *dst = ((v / s).round() as i32).clamp(-hi_a as i32, hi_a as i32);
+        }
+    }
+    ia.repack_a(qa, c_dim, l_dim, bits);
+}
 
 /// Synthetic-weight support: a random-but-valid weight map with the exact
 /// key/shape structure of the trained artifacts — lets tests, benches and
@@ -728,6 +822,85 @@ mod tests {
                 alone.logits[..],
                 "row {i} must be unaffected by its batch mates"
             );
+        }
+    }
+
+    #[test]
+    fn fused_prologue_matches_reference_three_pass() {
+        // The tentpole contract: the streaming multi-threaded single-pass
+        // prologue must produce bit-identical interleaved planes to the
+        // retained three-pass reference, across per-batch vs per-image
+        // scales, 1×1 (pointwise fast path) vs general geometry, partial
+        // final C-words (c = 65, 130, 135), every available SIMD kind,
+        // and thread counts 1 / 2 / 64.
+        let geoms: &[(usize, usize, usize, usize, usize, usize)] = &[
+            // (n, h, w, cin, k, stride)
+            (2, 6, 5, 3, 3, 1),   // general 3×3, SAME pad
+            (2, 7, 7, 15, 3, 2),  // strided 3×3, c = 135 (2 words + 7 bits)
+            (1, 4, 4, 65, 1, 1),  // pointwise, c = 65 (one spill bit)
+            (3, 5, 5, 130, 1, 2), // strided pointwise, c = 130
+            (2, 8, 8, 8, 1, 1),   // pointwise, c = 8 (sub-word)
+        ];
+        let mut rng = Prng::new(0xF0CC);
+        for &(n, h, w, cin, k, stride) in geoms {
+            let g = crate::dnn::lower::ConvGeom::from_dims(n, h, w, &[k, k, cin, 4], stride);
+            let x = Tensor::new(
+                vec![n, h, w, cin],
+                (0..n * h * w * cin)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect(),
+            );
+            for bits in [2u8, 4, 8] {
+                let hi_a = ((1i32 << (bits - 1)) - 1) as f32;
+                let per = x.data.len() / n;
+                let sa_batch = vec![x.robust_amax().max(1e-8) / hi_a];
+                let sa_image: Vec<f32> = (0..n)
+                    .map(|i| robust_amax_slice(&x.data[i * per..(i + 1) * per]).max(1e-8) / hi_a)
+                    .collect();
+                // s = 1.0 exposes exact-halfway quantization inputs.
+                let sa_unit = vec![1.0f32];
+                for sa in [&sa_batch, &sa_image, &sa_unit] {
+                    let mut reference = InterleavedPlanes::zeroed(2, 0, 0);
+                    let (mut af, mut qa) = (Vec::new(), Vec::new());
+                    pack_a_reference(&x, &g, sa, hi_a, bits, &mut af, &mut qa, &mut reference);
+                    for kind in simd::available() {
+                        for threads in [1usize, 2, 64] {
+                            let mut fused = InterleavedPlanes::zeroed(2, 0, 0);
+                            pack_a_fused_with(kind, &x, &g, sa, hi_a, bits, threads, &mut fused);
+                            assert_eq!(
+                                fused, reference,
+                                "k={k} s={stride} cin={cin} bits={bits} \
+                                 scales={} kind={kind} threads={threads}",
+                                sa.len()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executor_threads_do_not_change_logits() {
+        // The prologue thread count is a pure speed knob: any value must
+        // produce bit-identical logits (disjoint span writes of identical
+        // values), including 0 = auto.
+        let wm = 0.125;
+        let weights = synthetic_weights(wm, 41);
+        let mut rng = Prng::new(42);
+        let imgs = rand_images(&mut rng, 2);
+        let sim = GavinaBackend {
+            arch: ArchConfig::tiny(),
+            tables: None,
+            seed: 43,
+        };
+        let mut ex = Executor::new(&weights, wm, Precision::new(4, 4), &sim);
+        let serial = ex.forward(&imgs, 2);
+        for threads in [2usize, 3, 0] {
+            ex.threads = threads;
+            let par = ex.forward(&imgs, 2);
+            assert_eq!(serial.logits, par.logits, "threads={threads}");
+            assert_eq!(serial.stats, par.stats, "threads={threads}");
         }
     }
 

@@ -94,6 +94,65 @@ impl ConvGeom {
     pub fn macs(&self) -> u64 {
         (self.c_dim() * self.l_dim() * self.k_dim()) as u64
     }
+
+    /// Decompose a GEMM column index `l = (n·oh + ohi)·ow + owi` into
+    /// `(n, ohi, owi)` — the inverse of the [`im2col`] column map.
+    #[inline]
+    pub fn col_coords(&self, l: usize) -> (usize, usize, usize) {
+        let ohw = self.oh * self.ow;
+        (l / ohw, (l % ohw) / self.ow, l % self.ow)
+    }
+
+    /// 1×1 kernel with no padding: every im2col column is one contiguous
+    /// `cin`-length slice of the NHWC input (a strided view — nothing to
+    /// gather). SAME padding of a 1×1 kernel is always 0, so this covers
+    /// all pointwise convs and the fc head at any stride.
+    #[inline]
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.pad_h == 0 && self.pad_w == 0
+    }
+}
+
+/// One maximal contiguous piece of an im2col column, as streamed by
+/// [`visit_col_runs`]: either a run of input values that are consecutive
+/// in NHWC memory, or a run of zero-padding taps.
+pub enum ColRun<'a> {
+    Data(&'a [f32]),
+    Zeros(usize),
+}
+
+/// Stream im2col column `l` as contiguous runs, in C order (`c =
+/// (khi·kw + kwi)·cin + ci`), without materializing anything: each
+/// in-bounds `(khi, kwi)` tap of the patch is one `cin`-length contiguous
+/// NHWC slice, each out-of-bounds tap is `Zeros(cin)` (whole padded rows
+/// collapse to `Zeros(kw·cin)`), and a pointwise geometry is a single
+/// `cin`-length run. Concatenating the runs reproduces column `l` of
+/// [`im2col`] exactly (property-tested below) — this is the traversal the
+/// fused streaming prologue (`dnn::exec::pack_a_fused`) quantizes and
+/// packs per-column instead of building the `A[C, L]` matrix.
+pub fn visit_col_runs(x: &Tensor, g: &ConvGeom, l: usize, mut f: impl FnMut(ColRun<'_>)) {
+    let (ni, ohi, owi) = g.col_coords(l);
+    if g.is_pointwise() {
+        let base = ((ni * g.h + ohi * g.stride) * g.w + owi * g.stride) * g.cin;
+        f(ColRun::Data(&x.data[base..base + g.cin]));
+        return;
+    }
+    for khi in 0..g.kh {
+        let hi = (ohi * g.stride + khi) as isize - g.pad_h as isize;
+        if hi < 0 || hi >= g.h as isize {
+            f(ColRun::Zeros(g.kw * g.cin));
+            continue;
+        }
+        for kwi in 0..g.kw {
+            let wi = (owi * g.stride + kwi) as isize - g.pad_w as isize;
+            if wi < 0 || wi >= g.w as isize {
+                f(ColRun::Zeros(g.cin));
+                continue;
+            }
+            let base = ((ni * g.h + hi as usize) * g.w + wi as usize) * g.cin;
+            f(ColRun::Data(&x.data[base..base + g.cin]));
+        }
+    }
 }
 
 /// im2col: build the `A[C, L]` patch matrix (row-major `a[c·L + l]`) from
@@ -278,6 +337,59 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn col_runs_concatenate_to_im2col_columns() {
+        check("visit_col_runs == im2col column", 20, |rng| {
+            let n = rng.int_in(1, 2) as usize;
+            let h = rng.int_in(3, 9) as usize;
+            let w = rng.int_in(3, 9) as usize;
+            let cin = rng.int_in(1, 6) as usize;
+            let k = *[1usize, 3].get(rng.index(2)).unwrap();
+            let stride = rng.int_in(1, 2) as usize;
+            let x = Tensor::new(
+                vec![n, h, w, cin],
+                (0..n * h * w * cin)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect(),
+            );
+            let g = ConvGeom::new(&x, &[k, k, cin, 4], stride);
+            let a = im2col(&x, &g);
+            let (c_dim, l_dim) = (g.c_dim(), g.l_dim());
+            for l in 0..l_dim {
+                let mut col = Vec::with_capacity(c_dim);
+                visit_col_runs(&x, &g, l, |r| match r {
+                    ColRun::Data(run) => col.extend_from_slice(run),
+                    ColRun::Zeros(z) => col.extend(std::iter::repeat(0.0f32).take(z)),
+                });
+                assert_eq!(col.len(), c_dim, "k={k} s={stride} l={l}");
+                for (c, &v) in col.iter().enumerate() {
+                    assert_eq!(
+                        v.to_bits(),
+                        a[c * l_dim + l].to_bits(),
+                        "k={k} s={stride} l={l} c={c}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pointwise_predicate_and_coords() {
+        // 1x1 at any stride has zero SAME padding -> pointwise fast path.
+        for stride in [1usize, 2] {
+            let g = ConvGeom::from_dims(2, 8, 6, &[1, 1, 3, 4], stride);
+            assert!(g.is_pointwise(), "stride={stride}");
+        }
+        let g3 = ConvGeom::from_dims(1, 8, 8, &[3, 3, 3, 4], 1);
+        assert!(!g3.is_pointwise());
+        let g = ConvGeom::from_dims(2, 8, 6, &[3, 3, 3, 4], 2);
+        for l in 0..g.l_dim() {
+            let (ni, ohi, owi) = g.col_coords(l);
+            assert_eq!((ni * g.oh + ohi) * g.ow + owi, l);
+            assert!(ni < g.n && ohi < g.oh && owi < g.ow);
+        }
     }
 
     #[test]

@@ -39,9 +39,9 @@ impl Tensor {
         self.data[((n * dh + h) * dw + w) * dc + c]
     }
 
-    /// Robust activation range: `min(max|x|, mean|x| + 6·std|x|)` —
-    /// mirrors `python/compile/model.py::act_amax` exactly so both
-    /// executors quantize to the same integers.
+    /// Robust activation range: `min(max|x|, mean|x| + 6·std|x|)` — the
+    /// same statistic as `python/compile/model.py::act_amax` so both
+    /// executors quantize with the same scales.
     pub fn robust_amax(&self) -> f32 {
         robust_amax_slice(&self.data)
     }
@@ -85,25 +85,14 @@ impl Tensor {
 /// Slice form of [`Tensor::robust_amax`], exposed so per-image
 /// activation quantization (`dnn::exec::forward_rows`) can scale each
 /// image's sub-slice with bit-identical arithmetic to the whole-tensor
-/// path: same f64 accumulation, same `min(max|x|, mean|x| + 6·std|x|)`
-/// cap, same `1e-8` empty fallback.
+/// path. Both forms are one implementation — the SIMD-dispatched
+/// [`crate::quant::simd::robust_amax`], whose canonical 4-lane-blocked
+/// f64 accumulation produces identical bits on every kernel — so the
+/// activation scale can never depend on the code path that computed it.
+/// Same `min(max|x|, mean|x| + 6·std|x|)` cap, same `1e-8` empty
+/// fallback as before.
 pub fn robust_amax_slice(data: &[f32]) -> f32 {
-    if data.is_empty() {
-        return 1e-8;
-    }
-    let n = data.len() as f64;
-    let mut maxa = 0.0f64;
-    let mut sum = 0.0f64;
-    let mut sum2 = 0.0f64;
-    for &v in data {
-        let a = v.abs() as f64;
-        maxa = maxa.max(a);
-        sum += a;
-        sum2 += a * a;
-    }
-    let mu = sum / n;
-    let var = (sum2 / n - mu * mu).max(0.0);
-    (maxa.min(mu + 6.0 * var.sqrt())) as f32
+    crate::quant::simd::robust_amax(data)
 }
 
 #[cfg(test)]

@@ -193,7 +193,10 @@ impl EngineBuilder {
     }
 
     /// Intra-batch worker threads for [`Engine::infer_parallel`] and the
-    /// serving layer (`1` = serial, `0` = one per core).
+    /// serving layer (`1` = serial, `0` = one per core). The
+    /// single-executor entry points ([`Engine::infer_shard`],
+    /// [`Engine::infer_rows`]) spend the same budget inside the fused
+    /// activation prologue instead — bit-identical either way.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
@@ -668,6 +671,11 @@ impl Engine {
         self.check_images(images, n)?;
         let mut ex = self.executor();
         ex.stream = stream;
+        // Single-executor path: spend the engine's thread budget inside
+        // the fused activation prologue (bit-identical at any count — the
+        // batch-parallel paths below keep their sub-executors serial
+        // instead, so the two levels never multiply).
+        ex.threads = self.threads;
         Ok(ex.forward(images, n))
     }
 
@@ -740,6 +748,9 @@ impl Engine {
         self.check_rows(rows)?;
         let mut ex = self.executor();
         ex.stream = stream;
+        // As in `infer_shard`: the single-executor row path parallelizes
+        // the prologue; the chunked path keeps sub-executors serial.
+        ex.threads = self.threads;
         Ok(ex.forward_rows(rows))
     }
 

@@ -14,18 +14,25 @@
 //! multithreaded GEMM all run the same code path.
 //!
 //! One implementation is selected **once per process** by [`active`], in
-//! detection order AVX-512 → AVX2 → NEON → scalar:
+//! detection order AVX-512 → AVX-512-HS → AVX2 → NEON → scalar:
 //!
 //! | kind | ISA | per-lane popcount | u64 lanes |
 //! |------|-----|-------------------|-----------|
 //! | `avx512` | AVX-512F + AVX-512-VPOPCNTDQ | `vpopcntq` | 8 |
+//! | `avx512hs` | AVX-512F + AVX-512BW | Harley–Seal CSA tree + `vpshufb` LUT | 8 |
 //! | `avx2` | AVX2 | `vpshufb` nibble LUT + `vpsadbw` (Mula) | 4 |
 //! | `neon` | AArch64 NEON | `cnt` + pairwise widening adds | 2 |
 //! | `scalar` | portable | `u64::count_ones` | 1 |
 //!
-//! `GAVINA_KERNEL=scalar|avx2|avx512|neon` overrides detection (the CI
-//! matrix pins its forced-scalar job with it); requesting a kernel the
-//! host cannot run aborts loudly rather than silently falling back.
+//! `avx512hs` is the pre-Ice-Lake x86 tier: 512-bit vectors without
+//! `vpopcntq`, so eight AND-ed vectors at a time are compressed through a
+//! carry-save-adder tree (`vpternlogq`) and only every eighth vector pays
+//! the byte-LUT popcount — the Harley–Seal construction.
+//!
+//! `GAVINA_KERNEL=scalar|avx2|avx512|avx512hs|neon` overrides detection
+//! (the CI matrix pins its forced-scalar job with it, and probes for an
+//! `avx512hs` host); requesting a kernel the host cannot run aborts
+//! loudly rather than silently falling back.
 //! `GAVINA_BLOCK=<c_words>x<l_cols>` likewise pins the cache-block shape
 //! that [`block_shape`] otherwise autotunes at first use.
 //!
@@ -55,6 +62,10 @@ pub enum KernelKind {
     /// 512-bit AVX-512: native `vpopcntq` (needs AVX-512-VPOPCNTDQ), all
     /// 8 planes of an a8 operand in one vector.
     Avx512,
+    /// 512-bit AVX-512 without `vpopcntq` (pre-Ice-Lake: needs only
+    /// AVX-512F + AVX-512BW): Harley–Seal carry-save-adder compression
+    /// over 8 vectors per LUT popcount.
+    Avx512Hs,
     /// 128-bit NEON: `and` + `cnt` with pairwise widening adds.
     Neon,
 }
@@ -67,6 +78,7 @@ impl KernelKind {
             KernelKind::Scalar => "scalar",
             KernelKind::Avx2 => "avx2",
             KernelKind::Avx512 => "avx512",
+            KernelKind::Avx512Hs => "avx512hs",
             KernelKind::Neon => "neon",
         }
     }
@@ -77,6 +89,7 @@ impl KernelKind {
             "scalar" => Some(KernelKind::Scalar),
             "avx2" => Some(KernelKind::Avx2),
             "avx512" => Some(KernelKind::Avx512),
+            "avx512hs" => Some(KernelKind::Avx512Hs),
             "neon" => Some(KernelKind::Neon),
             _ => None,
         }
@@ -87,7 +100,7 @@ impl KernelKind {
         match self {
             KernelKind::Scalar => 1,
             KernelKind::Avx2 => 4,
-            KernelKind::Avx512 => 8,
+            KernelKind::Avx512 | KernelKind::Avx512Hs => 8,
             KernelKind::Neon => 2,
         }
     }
@@ -97,7 +110,9 @@ impl KernelKind {
     pub(crate) fn f32_lanes(self) -> usize {
         match self {
             KernelKind::Scalar => 0,
-            KernelKind::Avx2 | KernelKind::Avx512 => 8,
+            // avx512hs implies AVX2, whose 8-wide AVX float block is all
+            // the f32 head needs.
+            KernelKind::Avx2 | KernelKind::Avx512 | KernelKind::Avx512Hs => 8,
             KernelKind::Neon => 4,
         }
     }
@@ -111,7 +126,12 @@ impl std::fmt::Display for KernelKind {
 
 /// Detection preference order (best first); [`KernelKind::Scalar`] is the
 /// implicit fallback.
-const PREFERENCE: [KernelKind; 3] = [KernelKind::Avx512, KernelKind::Avx2, KernelKind::Neon];
+const PREFERENCE: [KernelKind; 4] = [
+    KernelKind::Avx512,
+    KernelKind::Avx512Hs,
+    KernelKind::Avx2,
+    KernelKind::Neon,
+];
 
 /// Can this host execute `kind`?
 pub fn is_available(kind: KernelKind) -> bool {
@@ -123,6 +143,11 @@ pub fn is_available(kind: KernelKind) -> bool {
         KernelKind::Avx512 => {
             std::arch::is_x86_feature_detected!("avx512f")
                 && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx512Hs => {
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512bw")
         }
         #[cfg(target_arch = "aarch64")]
         KernelKind::Neon => std::arch::is_aarch64_feature_detected!("neon"),
@@ -156,7 +181,7 @@ pub fn active() -> KernelKind {
     *ACTIVE.get_or_init(|| match std::env::var("GAVINA_KERNEL") {
         Ok(s) if !s.trim().is_empty() => {
             let kind = KernelKind::parse(&s).unwrap_or_else(|| {
-                panic!("GAVINA_KERNEL='{s}': expected scalar|avx2|avx512|neon")
+                panic!("GAVINA_KERNEL='{s}': expected scalar|avx2|avx512|avx512hs|neon")
             });
             assert!(
                 is_available(kind),
@@ -425,6 +450,8 @@ unsafe fn dot(
             KernelKind::Avx2 => x86::dot_avx2(a, b, words, pa, pb, tab),
             #[cfg(target_arch = "x86_64")]
             KernelKind::Avx512 => x86::dot_avx512(a, b, words, pa, pb, tab),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx512Hs => x86::dot_avx512hs(a, b, words, pa, pb, tab),
             #[cfg(target_arch = "aarch64")]
             KernelKind::Neon => aarch64::dot_neon(a, b, words, pa, pb, tab),
             _ => unreachable!("no SIMD dot for kernel '{}' on this target", kind.name()),
@@ -459,7 +486,7 @@ pub(crate) unsafe fn affine_cols(
     unsafe {
         match kind {
             #[cfg(target_arch = "x86_64")]
-            KernelKind::Avx2 | KernelKind::Avx512 => {
+            KernelKind::Avx2 | KernelKind::Avx512 | KernelKind::Avx512Hs => {
                 x86::affine_cols8_avx(x, w, stride, cin, bias, out)
             }
             #[cfg(target_arch = "aarch64")]
@@ -491,6 +518,7 @@ mod tests {
             KernelKind::Scalar,
             KernelKind::Avx2,
             KernelKind::Avx512,
+            KernelKind::Avx512Hs,
             KernelKind::Neon,
         ] {
             assert_eq!(KernelKind::parse(k.name()), Some(k));

@@ -1,9 +1,11 @@
 //! x86-64 dots for the fused bit-serial kernel: AVX2 (`vpand` + the
-//! `vpshufb` nibble-LUT popcount + `vpsllvq` weighted fold) and AVX-512
-//! (native `vpopcntq` when AVX-512-VPOPCNTDQ is present), plus the AVX
-//! `dense_affine` column block. Lane semantics come from
-//! [`super::StepTables`]; pointer and tail-pad contracts are documented
-//! on the dispatchers in `super`.
+//! `vpshufb` nibble-LUT popcount + `vpsllvq` weighted fold), AVX-512
+//! (native `vpopcntq` when AVX-512-VPOPCNTDQ is present), and the
+//! Harley–Seal AVX-512 path for pre-Ice-Lake hosts (AVX-512F + BW only:
+//! carry-save-adder compression so only every eighth vector pays a LUT
+//! popcount), plus the AVX `dense_affine` column block. Lane semantics
+//! come from [`super::StepTables`]; pointer and tail-pad contracts are
+//! documented on the dispatchers in `super`.
 
 use std::arch::x86_64::*;
 
@@ -143,6 +145,132 @@ pub(crate) unsafe fn dot_avx512(
                 let v = _mm512_sub_epi64(_mm512_xor_si512(v, sgv[bp]), sgv[bp]);
                 acc = _mm512_add_epi64(acc, v);
             }
+        }
+        _mm512_reduce_add_epi64(acc)
+    }
+}
+
+/// Per-u64-lane popcount of a 512-bit vector without `vpopcntq`: the
+/// Mula nibble-LUT (as in [`popcnt_epi64_avx2`]) widened to 512 bits —
+/// `vpshufb`, `vpsrlw` and `vpsadbw` at this width need only AVX-512BW.
+/// Safe fn: every intrinsic here is pure register arithmetic, unsafe
+/// only without the features the `target_feature` attribute guarantees
+/// to the body.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+fn popcnt_epi64_avx512bw(v: __m512i) -> __m512i {
+    let lut = _mm512_broadcast_i32x4(_mm_setr_epi8(0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4));
+    let low = _mm512_set1_epi8(0x0f);
+    let lo = _mm512_and_si512(v, low);
+    let hi = _mm512_and_si512(_mm512_srli_epi16::<4>(v), low);
+    let cnt = _mm512_add_epi8(_mm512_shuffle_epi8(lut, lo), _mm512_shuffle_epi8(lut, hi));
+    _mm512_sad_epu8(cnt, _mm512_setzero_si512())
+}
+
+/// Carry-save adder over three bit-vectors in one `vpternlogq` pair:
+/// returns `(carry, sum)` with `a + b + c = 2·carry + sum` per bit
+/// position (imm `0x96` = three-way XOR, `0xE8` = majority). Safe fn:
+/// register arithmetic only, guarded by the `target_feature` attribute.
+#[inline]
+#[target_feature(enable = "avx512f")]
+fn csa(a: __m512i, b: __m512i, c: __m512i) -> (__m512i, __m512i) {
+    let sum = _mm512_ternarylogic_epi64::<0x96>(a, b, c);
+    let carry = _mm512_ternarylogic_epi64::<0xE8>(a, b, c);
+    (carry, sum)
+}
+
+/// Harley–Seal AVX-512 weighted plane dot for hosts **without**
+/// `vpopcntq` (pre-Ice-Lake Skylake-X/Cascade Lake): per B-plane, the
+/// strip's AND-ed chunk vectors are compressed eight at a time through a
+/// carry-save-adder tree (`ones`/`twos`/`fours` partial bit-sums), so
+/// only one [`popcnt_epi64_avx512bw`] runs per 8 input vectors (weighted
+/// `× 8`); the tree is drained (`× 4`, `× 2`, `× 1`) and remainder words
+/// counted directly. The per-lane step weighting
+/// `sign · (count << (ba+bb))` is applied **once per strip** to the
+/// accumulated counts — exact because shift and sign are constant per
+/// `(lane, b_plane)` and distribute over the integer sum, and because
+/// `inc` masks zero dead/garbage lanes before the shift (counts stay
+/// ≪ 2⁶³ · 2⁻¹⁴, so no overflow).
+///
+/// # Safety
+///
+/// Caller upholds the contract of `super::dot` and has verified
+/// AVX-512F + AVX-512BW.
+#[target_feature(enable = "avx512f,avx512bw")]
+pub(crate) unsafe fn dot_avx512hs(
+    a: *const u64,
+    b: *const u64,
+    words: usize,
+    pa: usize,
+    pb: usize,
+    tab: &StepTables,
+) -> i64 {
+    debug_assert_eq!(tab.lanes, 8);
+    debug_assert_eq!(tab.chunks, 1);
+    debug_assert!(pb <= 8);
+    // SAFETY: the `super::dot` contract the caller upholds.
+    // - Provenance/bounds: `a` is valid for `words * pa` u64 reads and `b`
+    //   for `words * pb`; every 8-lane chunk load stays inside the
+    //   plane-interleaved buffer because its `TAIL_PAD_WORDS` zeroed tail
+    //   covers the `8 >= pa` lane overread of the last word (lanes past
+    //   `pa` carry garbage counts that `inv` masks to zero at fold time,
+    //   exactly as in `dot_avx512`).
+    // - Table bounds: `tab.row(bp, 0)` indexes `shifts`/`signs`/`incs`
+    //   rows padded to 8 i64 lanes, so each 512-bit load is in bounds.
+    unsafe {
+        let mut shv = [_mm512_setzero_si512(); 8];
+        let mut sgv = [_mm512_setzero_si512(); 8];
+        let mut inv = [_mm512_setzero_si512(); 8];
+        for bp in 0..pb {
+            let r = tab.row(bp, 0);
+            shv[bp] = _mm512_loadu_epi64(tab.shifts.as_ptr().add(r).cast());
+            sgv[bp] = _mm512_loadu_epi64(tab.signs.as_ptr().add(r).cast());
+            inv[bp] = _mm512_loadu_epi64(tab.incs.as_ptr().add(r).cast());
+        }
+        let mut acc = _mm512_setzero_si512();
+        for bp in 0..pb {
+            // One AND-ed chunk vector of this B-plane's strip.
+            macro_rules! xw {
+                ($w:expr) => {
+                    _mm512_and_si512(
+                        _mm512_loadu_epi64(a.add(($w) * pa).cast()),
+                        _mm512_set1_epi64(*b.add(($w) * pb + bp) as i64),
+                    )
+                };
+            }
+            let mut ones = _mm512_setzero_si512();
+            let mut twos = _mm512_setzero_si512();
+            let mut fours = _mm512_setzero_si512();
+            let mut count = _mm512_setzero_si512();
+            let mut w = 0usize;
+            while w + 8 <= words {
+                let (t0, s0) = csa(ones, xw!(w), xw!(w + 1));
+                let (t1, s1) = csa(s0, xw!(w + 2), xw!(w + 3));
+                let (t2, s2) = csa(s1, xw!(w + 4), xw!(w + 5));
+                let (t3, s3) = csa(s2, xw!(w + 6), xw!(w + 7));
+                ones = s3;
+                let (f0, tw0) = csa(twos, t0, t1);
+                let (f1, tw1) = csa(tw0, t2, t3);
+                twos = tw1;
+                let (eights, f2) = csa(fours, f0, f1);
+                fours = f2;
+                count = _mm512_add_epi64(
+                    count,
+                    _mm512_slli_epi64::<3>(popcnt_epi64_avx512bw(eights)),
+                );
+                w += 8;
+            }
+            count = _mm512_add_epi64(count, _mm512_slli_epi64::<2>(popcnt_epi64_avx512bw(fours)));
+            count = _mm512_add_epi64(count, _mm512_slli_epi64::<1>(popcnt_epi64_avx512bw(twos)));
+            count = _mm512_add_epi64(count, popcnt_epi64_avx512bw(ones));
+            while w < words {
+                count = _mm512_add_epi64(count, popcnt_epi64_avx512bw(xw!(w)));
+                w += 1;
+            }
+            // Deferred weighted fold: sign · (count << shift) per lane.
+            let v = _mm512_sllv_epi64(_mm512_and_si512(count, inv[bp]), shv[bp]);
+            let v = _mm512_sub_epi64(_mm512_xor_si512(v, sgv[bp]), sgv[bp]);
+            acc = _mm512_add_epi64(acc, v);
         }
         _mm512_reduce_add_epi64(acc)
     }

@@ -90,16 +90,35 @@ impl InterleavedPlanes {
     /// allocation churn (property-tested below, including shape changes
     /// and dirty prior contents).
     pub fn repack_a(&mut self, a: &[i32], c_dim: usize, l_dim: usize, bits: u8) {
+        self.reshape_zeroed(bits, l_dim, c_dim);
+        self.fill_a(a);
+    }
+
+    /// Reshape for a new operand and zero every retained word (stale bits
+    /// from a previous, larger layer must not survive), keeping the
+    /// allocation's capacity. The shared reuse prologue of
+    /// [`Self::repack_a`] and the fused streaming pack
+    /// (`dnn::exec::pack_a_fused`), which fills the zeroed store through
+    /// [`Self::logical_mut`] instead of an i32 staging matrix.
+    pub(crate) fn reshape_zeroed(&mut self, bits: u8, n_vecs: usize, c_dim: usize) {
         self.bits = bits;
-        self.n_vecs = l_dim;
+        self.n_vecs = n_vecs;
         self.c_dim = c_dim;
         self.words = c_dim.div_ceil(64);
-        // clear + resize zeroes every retained word (stale bits from a
-        // previous, larger layer must not survive), keeping capacity.
         self.data.clear();
         self.data
-            .resize(l_dim * self.words * bits as usize + Self::TAIL_PAD_WORDS, 0);
-        self.fill_a(a);
+            .resize(n_vecs * self.words * bits as usize + Self::TAIL_PAD_WORDS, 0);
+    }
+
+    /// The logical (pad-free) backing words, mutably: vector `v` owns the
+    /// disjoint contiguous range `[v·words·bits, (v+1)·words·bits)`, which
+    /// is what lets the fused prologue's workers pack disjoint L-blocks
+    /// concurrently via `util::parallel::parallel_chunks_mut` without
+    /// touching the shared tail pad.
+    #[inline]
+    pub(crate) fn logical_mut(&mut self) -> &mut [u64] {
+        let n = self.n_vecs * self.words * self.bits as usize;
+        &mut self.data[..n]
     }
 
     /// The shared `A[C, L]` packing loop of [`Self::from_a_matrix`] /

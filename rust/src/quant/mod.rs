@@ -13,6 +13,7 @@
 
 pub mod interleaved;
 pub mod packed;
+pub mod simd;
 
 pub use interleaved::InterleavedPlanes;
 pub use packed::PackedPlanes;

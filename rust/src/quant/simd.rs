@@ -1,0 +1,659 @@
+//! SIMD activation-side quantize + bit-plane pack + robust range — the
+//! prologue analogue of [`crate::gemm::simd`]: the same
+//! [`KernelKind`] runtime dispatch, the same scalar-is-ground-truth
+//! rule, applied to the three per-element operations the streaming fused
+//! prologue (`dnn::exec::pack_a_fused`) performs on every activation:
+//! `q = clamp(round(v / s))`, the two's-complement bit-plane pack, and
+//! the robust range statistic that derives `s`.
+//!
+//! ## Exactness contract
+//!
+//! Every path here is **bit-identical** to the scalar expressions the
+//! reference three-pass prologue uses (pinned by the tests below):
+//!
+//! * Quantization is exactly `((v / s).round() as i32).clamp(-hi, hi)`.
+//!   Rust's `f32::round` is round-half-away-from-zero and `as i32`
+//!   saturates (NaN → 0); x86's `cvtps2dq` rounds half-to-even and
+//!   returns `i32::MIN` on overflow/NaN, so [`quant_pack8_avx2`] fixes
+//!   up exactly the halfway, positive-overflow and NaN lanes. AArch64's
+//!   `fcvtas` (`vcvtaq_s32_f32`) natively matches the Rust semantics —
+//!   ties away from zero, saturating, NaN → 0 — and needs no fixup.
+//! * [`robust_amax`] accumulates its f64 sums in a **canonical 4-lane
+//!   blocked order** (element `i` feeds lane `i % 4`; lanes combine as
+//!   `(l0 + l1) + (l2 + l3)`), which the scalar, AVX2 and NEON
+//!   implementations all reproduce exactly — so the activation scale,
+//!   and therefore every quantized integer, never depends on which
+//!   kernel is active. (Inputs are finite activations; the statistic is
+//!   meaningless on NaN.)
+//!
+//! The float work here lives outside `gemm::simd` on purpose: the GEMM
+//! ISA files are integer-only by lint (`gavina-xtask`'s `float-accum`
+//! rule), while this module is the activation/float side of the fence.
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use crate::gemm::simd::{self, KernelKind};
+
+/// The quantize lane width this module actually runs for a GEMM kernel
+/// choice. All x86 tiers (AVX2 and both AVX-512 kinds) share the 8-wide
+/// AVX2 quantize path — `cvtps2dq`/`vpmovmskb` cover it and every
+/// AVX-512 host has AVX2 — but availability is still re-checked so a
+/// forced kind on an impossible host degrades to scalar instead of UB.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum QuantPath {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+fn quant_path(kind: KernelKind) -> QuantPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if matches!(
+            kind,
+            KernelKind::Avx2 | KernelKind::Avx512 | KernelKind::Avx512Hs
+        ) && simd::is_available(KernelKind::Avx2)
+        {
+            return QuantPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if kind == KernelKind::Neon && simd::is_available(KernelKind::Neon) {
+            return QuantPath::Neon;
+        }
+    }
+    let _ = kind;
+    QuantPath::Scalar
+}
+
+/// The scalar activation quantizer every SIMD path must match bit for
+/// bit: `((v / s).round() as i32).clamp(-hi, hi)` — exactly the
+/// expression the historical three-pass prologue inlined.
+#[inline]
+pub(crate) fn quantize_one(v: f32, s: f32, hi: f32) -> i32 {
+    ((v / s).round() as i32).clamp(-hi as i32, hi as i32)
+}
+
+/// OR the `bits` two's-complement bit-planes of `q` into `acc` at bit
+/// position `dc` — the single-value form of [`super::pack_chunk`].
+#[inline]
+fn pack_one(acc: &mut [u64; 8], dc: u32, q: i32, bits: u8) {
+    debug_assert!(bits <= 8 && dc < 64);
+    let mask = (1u32 << bits) - 1;
+    let u = (q as u32) & mask;
+    for (plane, word) in acc.iter_mut().enumerate().take(bits as usize) {
+        *word |= (((u >> plane) & 1) as u64) << dc;
+    }
+}
+
+/// Quantize 8 consecutive f32s and OR their bit-planes into `acc` at bit
+/// offset `dc`: one `vdivps` + `cvtps2dq` + the documented fixups, then
+/// one shift + `movmskps` per plane gathers 8 plane bits at once (lane 0
+/// → bit `dc`). Assumes the default MXCSR rounding mode (round to
+/// nearest even), which Rust guarantees.
+///
+/// # Safety
+///
+/// Caller has verified AVX2; `vals` must be valid for 8 f32 reads;
+/// `dc ≤ 56` and `bits ≤ 8`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quant_pack8_avx2(vals: *const f32, s: f32, hi: f32, bits: u8, dc: u32, acc: &mut [u64; 8]) {
+    debug_assert!(dc <= 56 && bits <= 8);
+    // SAFETY: `vals` is valid for 8 f32 reads (caller contract); all other
+    // intrinsics are pure register arithmetic, unsafe only without AVX2,
+    // which the caller verified (`target_feature` guarantees the body).
+    unsafe {
+        let q = _mm256_div_ps(_mm256_loadu_ps(vals), _mm256_set1_ps(s));
+        // cvtps2dq rounds half to even; Rust rounds half away from zero.
+        // A halfway case rounded toward even is off by exactly ±0.5 from
+        // q (the subtraction is exact: halfway cases only exist below
+        // 2^23, where f32 subtraction of `q − round(q)` is lossless), so
+        // nudge exactly those lanes one step away from zero. Saturated
+        // lanes (|q| ≥ 2^31) can't alias a halfway case: their diff is
+        // astronomically larger than 0.5.
+        let r = _mm256_cvtps_epi32(q);
+        let diff = _mm256_sub_ps(q, _mm256_cvtepi32_ps(r));
+        let zero = _mm256_setzero_ps();
+        let one = _mm256_set1_epi32(1);
+        let up = _mm256_and_si256(
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(diff, _mm256_set1_ps(0.5))),
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GT_OQ>(q, zero)),
+        );
+        let dn = _mm256_and_si256(
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(diff, _mm256_set1_ps(-0.5))),
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(q, zero)),
+        );
+        let r = _mm256_add_epi32(r, _mm256_and_si256(up, one));
+        let r = _mm256_sub_epi32(r, _mm256_and_si256(dn, one));
+        // `as i32` saturates q ≥ 2^31 to i32::MAX where cvtps2dq returned
+        // i32::MIN (negative overflow already matches), and maps NaN to 0
+        // where cvtps2dq returned i32::MIN.
+        let big = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GE_OQ>(
+            q,
+            _mm256_set1_ps(2147483648.0),
+        ));
+        let r = _mm256_blendv_epi8(r, _mm256_set1_epi32(i32::MAX), big);
+        let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(q, q));
+        let r = _mm256_andnot_si256(nan, r);
+        let hiv = _mm256_set1_epi32(hi as i32);
+        let q32 = _mm256_min_epi32(
+            _mm256_max_epi32(r, _mm256_sub_epi32(_mm256_setzero_si256(), hiv)),
+            hiv,
+        );
+        // Pack: slide bit `plane` of every lane to bit 31, movmskps reads
+        // the 8 sign bits as one byte — LSB is lane 0, i.e. vals[0], so
+        // the byte drops into the plane word at `dc` in pack_chunk order.
+        for plane in 0..bits as i32 {
+            let m = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_sll_epi32(
+                q32,
+                _mm_cvtsi32_si128(31 - plane),
+            )));
+            acc[plane as usize] |= ((m as u32) as u64) << dc;
+        }
+    }
+}
+
+/// Quantize 4 consecutive f32s: `fdiv` + `fcvtas`, which already rounds
+/// ties away from zero, saturates, and maps NaN to 0 — exactly the Rust
+/// scalar semantics, so no fixups. The 4 integers are packed by the
+/// shared scalar bit loop (4 values don't amortize a vector transpose).
+///
+/// # Safety
+///
+/// Caller has verified NEON; `vals` must be valid for 4 f32 reads.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn quantize4_neon(vals: *const f32, s: f32, hi: f32) -> [i32; 4] {
+    // SAFETY: `vals` is valid for 4 f32 reads (caller contract); the rest
+    // is register arithmetic guarded by the verified `neon` feature.
+    unsafe {
+        let q = vdivq_f32(vld1q_f32(vals), vdupq_n_f32(s));
+        let r = vcvtaq_s32_f32(q);
+        let hiv = vdupq_n_s32(hi as i32);
+        let c = vminq_s32(vmaxq_s32(r, vnegq_s32(hiv)), hiv);
+        let mut out = [0i32; 4];
+        vst1q_s32(out.as_mut_ptr(), c);
+        out
+    }
+}
+
+/// Streaming quantize-and-pack cursor over one packed vector (one im2col
+/// column) of an interleaved A operand: the caller feeds the column's C
+/// axis as contiguous f32 runs and zero-padding gaps, and the packer
+/// quantizes each value with the column's scale and ORs its bit-planes
+/// into the column's `words · bits` chunk words — no f32 or i32 staging
+/// buffer ever exists. `out` must be the column's (pre-zeroed) span in
+/// [`super::InterleavedPlanes`] chunk layout: chunk `w` of the column at
+/// `out[w·bits .. (w+1)·bits]`, plane words LSB = C position `64·w`.
+pub(crate) struct RunPacker<'a> {
+    out: &'a mut [u64],
+    bits: u8,
+    s: f32,
+    hi: f32,
+    path: QuantPath,
+    /// Next C position: bit `c % 64` of chunk `c / 64`.
+    c: usize,
+    /// Plane words of the current (possibly partial) 64-element chunk.
+    acc: [u64; 8],
+}
+
+impl<'a> RunPacker<'a> {
+    pub(crate) fn new(out: &'a mut [u64], bits: u8, s: f32, hi: f32, kind: KernelKind) -> Self {
+        debug_assert!(bits >= 1 && bits <= 8);
+        Self {
+            out,
+            bits,
+            s,
+            hi,
+            path: quant_path(kind),
+            c: 0,
+            acc: [0u64; 8],
+        }
+    }
+
+    /// Store the just-completed chunk's plane words and reset the
+    /// accumulator.
+    #[inline]
+    fn flush_chunk(&mut self) {
+        debug_assert!(self.c % 64 == 0 && self.c > 0);
+        let base = (self.c / 64 - 1) * self.bits as usize;
+        self.out[base..base + self.bits as usize].copy_from_slice(&self.acc[..self.bits as usize]);
+        self.acc = [0u64; 8];
+    }
+
+    /// Append `n` zero-padding values (all planes of a 0 are 0, so this
+    /// only advances the cursor and flushes chunk boundaries it crosses).
+    pub(crate) fn push_zeros(&mut self, mut n: usize) {
+        while n > 0 {
+            let take = (64 - self.c % 64).min(n);
+            self.c += take;
+            n -= take;
+            if self.c % 64 == 0 {
+                self.flush_chunk();
+            }
+        }
+    }
+
+    /// Quantize and append one contiguous run of values.
+    pub(crate) fn push_run(&mut self, vals: &[f32]) {
+        let mut i = 0;
+        while i < vals.len() {
+            let dc = self.c % 64;
+            let room = 64 - dc;
+            let left = vals.len() - i;
+            #[cfg(target_arch = "x86_64")]
+            if self.path == QuantPath::Avx2 && room >= 8 && left >= 8 {
+                // SAFETY: AVX2 was verified when `path` was selected;
+                // `i + 8 <= vals.len()` so the 8 reads are in bounds;
+                // `room >= 8` gives `dc <= 56`; `bits <= 8` by `new`.
+                unsafe {
+                    quant_pack8_avx2(
+                        vals.as_ptr().add(i),
+                        self.s,
+                        self.hi,
+                        self.bits,
+                        dc as u32,
+                        &mut self.acc,
+                    );
+                }
+                self.c += 8;
+                i += 8;
+                if self.c % 64 == 0 {
+                    self.flush_chunk();
+                }
+                continue;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if self.path == QuantPath::Neon && room >= 4 && left >= 4 {
+                // SAFETY: NEON was verified when `path` was selected and
+                // `i + 4 <= vals.len()` keeps the 4 reads in bounds.
+                let q4 = unsafe { quantize4_neon(vals.as_ptr().add(i), self.s, self.hi) };
+                for (k, &q) in q4.iter().enumerate() {
+                    pack_one(&mut self.acc, (dc + k) as u32, q, self.bits);
+                }
+                self.c += 4;
+                i += 4;
+                if self.c % 64 == 0 {
+                    self.flush_chunk();
+                }
+                continue;
+            }
+            let _ = (room, left);
+            let q = quantize_one(vals[i], self.s, self.hi);
+            pack_one(&mut self.acc, dc as u32, q, self.bits);
+            self.c += 1;
+            i += 1;
+            if self.c % 64 == 0 {
+                self.flush_chunk();
+            }
+        }
+    }
+
+    /// Flush a trailing partial chunk. Returns the total number of C
+    /// positions pushed, so callers can assert full coverage.
+    pub(crate) fn finish(mut self) -> usize {
+        if self.c % 64 != 0 {
+            let base = (self.c / 64) * self.bits as usize;
+            self.out[base..base + self.bits as usize]
+                .copy_from_slice(&self.acc[..self.bits as usize]);
+        }
+        self.c
+    }
+}
+
+/// Combine the canonical 4-lane partial sums and apply the robust-range
+/// epilogue: `min(max|x|, mean|x| + 6·std|x|)` over f64 statistics.
+fn finish_amax(n: usize, maxa: f64, sum: [f64; 4], sum2: [f64; 4]) -> f32 {
+    let n = n as f64;
+    let s = (sum[0] + sum[1]) + (sum[2] + sum[3]);
+    let s2 = (sum2[0] + sum2[1]) + (sum2[2] + sum2[3]);
+    let mu = s / n;
+    let var = (s2 / n - mu * mu).max(0.0);
+    (maxa.min(mu + 6.0 * var.sqrt())) as f32
+}
+
+/// The canonical accumulation every SIMD path reproduces bit for bit:
+/// element `i` feeds f64 lane `i % 4` (a trailing partial block fills
+/// lanes `0..r`), the max folds sequentially (order-insensitive for the
+/// finite inputs this statistic is defined on).
+fn robust_amax_scalar(data: &[f32]) -> f32 {
+    let mut sum = [0.0f64; 4];
+    let mut sum2 = [0.0f64; 4];
+    let mut maxa = 0.0f64;
+    let mut blocks = data.chunks_exact(4);
+    for b in &mut blocks {
+        for (j, &v) in b.iter().enumerate() {
+            let a = (v as f64).abs();
+            maxa = maxa.max(a);
+            sum[j] += a;
+            sum2[j] += a * a;
+        }
+    }
+    for (j, &v) in blocks.remainder().iter().enumerate() {
+        let a = (v as f64).abs();
+        maxa = maxa.max(a);
+        sum[j] += a;
+        sum2[j] += a * a;
+    }
+    finish_amax(data.len(), maxa, sum, sum2)
+}
+
+/// AVX2 lanes of the canonical accumulation: 4 f32s widen to 4 f64 lanes
+/// per step, so vector lane `j` receives exactly the elements scalar
+/// lane `j` receives, in the same order.
+///
+/// # Safety
+///
+/// Caller has verified AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn robust_amax_avx2(data: &[f32]) -> f32 {
+    // SAFETY: every `data.as_ptr().add(i)` load reads 4 f32s at
+    // `i <= n4 - 4 <= data.len() - 4`, in bounds; the stores target local
+    // `[f64; 4]` arrays; the rest is register arithmetic guarded by the
+    // verified `avx2` feature.
+    unsafe {
+        let absmask = _mm256_castsi256_pd(_mm256_set1_epi64x(0x7fff_ffff_ffff_ffff));
+        let mut vmax = _mm256_setzero_pd();
+        let mut vsum = _mm256_setzero_pd();
+        let mut vsum2 = _mm256_setzero_pd();
+        let n4 = data.len() / 4 * 4;
+        let mut i = 0;
+        while i < n4 {
+            let a = _mm256_and_pd(_mm256_cvtps_pd(_mm_loadu_ps(data.as_ptr().add(i))), absmask);
+            vmax = _mm256_max_pd(vmax, a);
+            vsum = _mm256_add_pd(vsum, a);
+            vsum2 = _mm256_add_pd(vsum2, _mm256_mul_pd(a, a));
+            i += 4;
+        }
+        let mut sum = [0.0f64; 4];
+        let mut sum2 = [0.0f64; 4];
+        let mut mx = [0.0f64; 4];
+        _mm256_storeu_pd(sum.as_mut_ptr(), vsum);
+        _mm256_storeu_pd(sum2.as_mut_ptr(), vsum2);
+        _mm256_storeu_pd(mx.as_mut_ptr(), vmax);
+        let mut maxa = mx[0].max(mx[1]).max(mx[2]).max(mx[3]);
+        for (j, &v) in data[n4..].iter().enumerate() {
+            let a = (v as f64).abs();
+            maxa = maxa.max(a);
+            sum[j] += a;
+            sum2[j] += a * a;
+        }
+        finish_amax(data.len(), maxa, sum, sum2)
+    }
+}
+
+/// NEON lanes of the canonical accumulation: lanes 0–1 live in one
+/// float64x2, lanes 2–3 in another, fed from the low/high halves of each
+/// 4-wide f32 load — the same element→lane map as the scalar form.
+///
+/// # Safety
+///
+/// Caller has verified NEON.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn robust_amax_neon(data: &[f32]) -> f32 {
+    // SAFETY: every `data.as_ptr().add(i)` load reads 4 f32s at
+    // `i <= n4 - 4`, in bounds; the rest is register arithmetic guarded
+    // by the verified `neon` feature.
+    unsafe {
+        let mut vmax = [vdupq_n_f64(0.0); 2];
+        let mut vsum = [vdupq_n_f64(0.0); 2];
+        let mut vsum2 = [vdupq_n_f64(0.0); 2];
+        let n4 = data.len() / 4 * 4;
+        let mut i = 0;
+        while i < n4 {
+            let v = vld1q_f32(data.as_ptr().add(i));
+            let lo = vabsq_f64(vcvt_f64_f32(vget_low_f32(v)));
+            let hi = vabsq_f64(vcvt_high_f64_f32(v));
+            vmax[0] = vmaxq_f64(vmax[0], lo);
+            vmax[1] = vmaxq_f64(vmax[1], hi);
+            vsum[0] = vaddq_f64(vsum[0], lo);
+            vsum[1] = vaddq_f64(vsum[1], hi);
+            vsum2[0] = vaddq_f64(vsum2[0], vmulq_f64(lo, lo));
+            vsum2[1] = vaddq_f64(vsum2[1], vmulq_f64(hi, hi));
+            i += 4;
+        }
+        let mut sum = [0.0f64; 4];
+        let mut sum2 = [0.0f64; 4];
+        let mut mx = [0.0f64; 4];
+        for h in 0..2 {
+            vst1q_f64(sum.as_mut_ptr().add(h * 2), vsum[h]);
+            vst1q_f64(sum2.as_mut_ptr().add(h * 2), vsum2[h]);
+            vst1q_f64(mx.as_mut_ptr().add(h * 2), vmax[h]);
+        }
+        let mut maxa = mx[0].max(mx[1]).max(mx[2]).max(mx[3]);
+        for (j, &v) in data[n4..].iter().enumerate() {
+            let a = (v as f64).abs();
+            maxa = maxa.max(a);
+            sum[j] += a;
+            sum2[j] += a * a;
+        }
+        finish_amax(data.len(), maxa, sum, sum2)
+    }
+}
+
+/// Robust activation range `min(max|x|, mean|x| + 6·std|x|)` on the
+/// kernel `kind` would use — all implementations produce identical bits
+/// (canonical lane order, pinned below), so this only picks the fast
+/// path, never the answer. Empty input falls back to `1e-8`.
+pub fn robust_amax_with(kind: KernelKind, data: &[f32]) -> f32 {
+    if data.is_empty() {
+        return 1e-8;
+    }
+    match quant_path(kind) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `quant_path` only returns `Avx2` after verifying AVX2
+        // availability on this host.
+        QuantPath::Avx2 => unsafe { robust_amax_avx2(data) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `quant_path` only returns `Neon` after verifying NEON
+        // availability on this host.
+        QuantPath::Neon => unsafe { robust_amax_neon(data) },
+        QuantPath::Scalar => robust_amax_scalar(data),
+    }
+}
+
+/// [`robust_amax_with`] on the process's active kernel — the single
+/// slice-based implementation behind [`crate::dnn::tensor::robust_amax_slice`]
+/// and [`crate::dnn::tensor::Tensor::robust_amax`].
+pub fn robust_amax(data: &[f32]) -> f32 {
+    robust_amax_with(simd::active(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack_chunk;
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    /// Values that hit every fixup path of the SIMD quantizer: exact
+    /// halfway cases of both signs, clamp saturation, ±overflow past
+    /// i32, NaN, ±inf and signed zero.
+    fn adversarial_vals() -> Vec<f32> {
+        vec![
+            0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 3.5, -3.5, 126.5, -126.5, 127.5, -127.5, 200.0,
+            -200.0, 1e20, -1e20, 2147483648.0, -2147483904.0, f32::NAN, f32::INFINITY,
+            f32::NEG_INFINITY, 0.0, -0.0, 0.49999997, -0.49999997, 8388608.5, 16777215.0,
+        ]
+    }
+
+    /// Reference pack of one column through the historical two-buffer
+    /// path: scalar-quantize everything into a staging vector, then
+    /// `pack_chunk` per 64-element chunk.
+    fn reference_pack(vals: &[f32], s: f32, hi: f32, bits: u8) -> Vec<u64> {
+        let q: Vec<i32> = vals.iter().map(|&v| quantize_one(v, s, hi)).collect();
+        let words = vals.len().div_ceil(64).max(1);
+        let mut out = vec![0u64; words * bits as usize];
+        for w in 0..words {
+            let c0 = w * 64;
+            let cn = 64.min(vals.len().saturating_sub(c0));
+            let acc = pack_chunk(q[c0..c0 + cn].iter().copied(), bits);
+            out[w * bits as usize..(w + 1) * bits as usize]
+                .copy_from_slice(&acc[..bits as usize]);
+        }
+        out
+    }
+
+    #[test]
+    fn run_packer_matches_reference_on_every_available_kernel() {
+        check("RunPacker == quantize+pack_chunk", 40, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let hi = ((1i32 << (bits - 1)) - 1) as f32;
+            let n = rng.int_in(1, 200) as usize;
+            let s = (rng.next_f32() * 0.5 + 1e-3).max(1e-4);
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+            let expect = reference_pack(&vals, s, hi, bits);
+            for kind in simd::available() {
+                // Feed the run in irregular pieces (including zero gaps
+                // replaced by literal 0.0 in the reference input).
+                let mut out = vec![0u64; expect.len()];
+                let mut p = RunPacker::new(&mut out, bits, s, hi, kind);
+                let mut i = 0;
+                while i < n {
+                    let take = (rng.int_in(1, 23) as usize).min(n - i);
+                    p.push_run(&vals[i..i + take]);
+                    i += take;
+                }
+                assert_eq!(p.finish(), n);
+                assert_eq!(out, expect, "kind={kind} n={n} bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn push_zeros_equals_pushing_zero_values() {
+        check("push_zeros == push_run(0.0)", 30, |rng| {
+            let bits = rng.int_in(2, 8) as u8;
+            let hi = ((1i32 << (bits - 1)) - 1) as f32;
+            let s = rng.next_f32() * 0.5 + 1e-3;
+            // Alternate runs and gaps over an odd C length.
+            let n = rng.int_in(60, 190) as usize;
+            let mut vals = vec![0.0f32; n];
+            let mut mask = vec![false; n];
+            for (i, v) in vals.iter_mut().enumerate() {
+                if rng.next_f32() < 0.6 {
+                    *v = rng.next_f32() * 4.0 - 2.0;
+                    mask[i] = true;
+                }
+            }
+            let expect = reference_pack(&vals, s, hi, bits);
+            for kind in simd::available() {
+                let mut out = vec![0u64; expect.len()];
+                let mut p = RunPacker::new(&mut out, bits, s, hi, kind);
+                let mut i = 0;
+                while i < n {
+                    let mut j = i;
+                    while j < n && mask[j] == mask[i] {
+                        j += 1;
+                    }
+                    if mask[i] {
+                        p.push_run(&vals[i..j]);
+                    } else {
+                        p.push_zeros(j - i);
+                    }
+                    i = j;
+                }
+                assert_eq!(p.finish(), n);
+                assert_eq!(out, expect, "kind={kind} n={n} bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn simd_quantize_matches_scalar_on_adversarial_values() {
+        // Halfway ties, clamp, ±overflow, NaN, ±inf: every lane fixup in
+        // quant_pack8_avx2 (and the fixup-free NEON path) must reproduce
+        // the scalar `round() as i32` semantics bit for bit.
+        let vals = adversarial_vals();
+        for &s in &[1.0f32, 0.25, 3.0, 1e-6] {
+            for bits in [2u8, 4, 8] {
+                let hi = ((1i32 << (bits - 1)) - 1) as f32;
+                let expect = reference_pack(&vals, s, hi, bits);
+                for kind in simd::available() {
+                    let mut out = vec![0u64; expect.len()];
+                    let mut p = RunPacker::new(&mut out, bits, s, hi, kind);
+                    p.push_run(&vals);
+                    assert_eq!(p.finish(), vals.len());
+                    assert_eq!(out, expect, "kind={kind} s={s} bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_runs_cross_chunk_boundaries_correctly() {
+        // Runs deliberately straddling the 64-bit chunk boundary at every
+        // phase, with partial final chunks (c = 65 and 130).
+        for &n in &[65usize, 130] {
+            let mut rng = Prng::new(0xC0DE + n as u64);
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let (s, bits) = (0.02f32, 4u8);
+            let hi = 7.0f32;
+            let expect = reference_pack(&vals, s, hi, bits);
+            for kind in simd::available() {
+                for phase in [1usize, 3, 7, 8, 61, 63] {
+                    let mut out = vec![0u64; expect.len()];
+                    let mut p = RunPacker::new(&mut out, bits, s, hi, kind);
+                    p.push_run(&vals[..phase.min(n)]);
+                    if phase < n {
+                        p.push_run(&vals[phase..]);
+                    }
+                    assert_eq!(p.finish(), n);
+                    assert_eq!(out, expect, "kind={kind} n={n} phase={phase}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn robust_amax_is_bitwise_identical_across_kernels() {
+        check("robust_amax kernel-invariant", 40, |rng| {
+            let n = rng.int_in(0, 300) as usize;
+            let data: Vec<f32> = (0..n).map(|_| rng.next_f32() * 10.0 - 5.0).collect();
+            let scalar = robust_amax_with(KernelKind::Scalar, &data);
+            for kind in simd::available() {
+                let got = robust_amax_with(kind, &data);
+                assert_eq!(got.to_bits(), scalar.to_bits(), "kind={kind} n={n}");
+            }
+            assert_eq!(robust_amax(&data).to_bits(), scalar.to_bits());
+        });
+    }
+
+    #[test]
+    fn robust_amax_keeps_the_statistic() {
+        // The canonical lane-blocked order is a reassociation of the same
+        // f64 sums: the statistic itself must match a plain sequential
+        // accumulation to fp tolerance, and the outlier cap must bite.
+        let mut rng = Prng::new(77);
+        let data: Vec<f32> = (0..1000).map(|_| rng.next_f32()).collect();
+        let seq = {
+            let n = data.len() as f64;
+            let (mut maxa, mut s, mut s2) = (0.0f64, 0.0f64, 0.0f64);
+            for &v in &data {
+                let a = (v as f64).abs();
+                maxa = maxa.max(a);
+                s += a;
+                s2 += a * a;
+            }
+            let mu = s / n;
+            let var = (s2 / n - mu * mu).max(0.0);
+            (maxa.min(mu + 6.0 * var.sqrt())) as f32
+        };
+        let got = robust_amax_scalar(&data);
+        assert!((got - seq).abs() <= 1e-6 * seq.abs().max(1.0), "{got} vs {seq}");
+        assert_eq!(robust_amax(&[]), 1e-8);
+        let mut outliers = vec![0.1f32; 1000];
+        outliers.push(100.0);
+        let capped = robust_amax(&outliers);
+        assert!(capped < 50.0 && capped > 0.1, "cap must bite: {capped}");
+    }
+}

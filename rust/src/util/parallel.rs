@@ -113,6 +113,28 @@ where
     });
 }
 
+/// Run `f(row_index, row)` on every `align`-length row of `data`, with
+/// rows partitioned over at most `threads` scoped workers.
+///
+/// A per-row convenience over [`parallel_spans_mut`] for consumers that
+/// think in rows rather than spans — the fused activation prologue packs
+/// one im2col column per row this way. Inherits the parent's guarantees:
+/// contiguous row ranges per worker, every row visited exactly once, and
+/// a partition that depends only on `(data.len(), align, threads)`.
+///
+/// Panics if `data.len()` is not a multiple of `align`.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], align: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    parallel_spans_mut(data, align, threads, |start, span| {
+        for (i, row) in span.chunks_exact_mut(align).enumerate() {
+            f(start / align + i, row);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -245,6 +267,32 @@ mod tests {
             // 61 rows over 8 workers -> ceil(61 / 8) = 8 spans.
             assert_eq!(spans_run.load(Ordering::SeqCst), 8);
             assert!(data.iter().all(|&v| v == 1), "each cell exactly once");
+        }
+    }
+
+    #[test]
+    fn chunks_visit_every_row_exactly_once_and_match_serial() {
+        // Row-granular variant of the span tests (also runs under the CI
+        // ThreadSanitizer job): each worker stamps its rows with a value
+        // derived from the row index; any thread count must reproduce the
+        // serial stamping bit for bit, with each row visited once.
+        let align = 6;
+        let rows = 41;
+        let expect: Vec<u64> = (0..rows * align)
+            .map(|i| (i / align) as u64 * 1000 + (i % align) as u64)
+            .collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let visits = AtomicUsize::new(0);
+            let mut data = vec![0u64; rows * align];
+            parallel_chunks_mut(&mut data, align, threads, |row, span| {
+                assert_eq!(span.len(), align);
+                visits.fetch_add(1, Ordering::SeqCst);
+                for (j, v) in span.iter_mut().enumerate() {
+                    *v = row as u64 * 1000 + j as u64;
+                }
+            });
+            assert_eq!(visits.load(Ordering::SeqCst), rows, "threads={threads}");
+            assert_eq!(data, expect, "threads={threads}");
         }
     }
 

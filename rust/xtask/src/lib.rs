@@ -81,7 +81,9 @@ impl Rule {
     pub fn describe(self) -> &'static str {
         match self {
             Rule::UnsafeDoc => "every `unsafe` site carries a SAFETY: comment",
-            Rule::UnsafeScope => "unsafe only in gemm/simd/, gemm/kernel.rs, quant/interleaved.rs",
+            Rule::UnsafeScope => {
+                "unsafe only in gemm/simd/, gemm/kernel.rs, quant/interleaved.rs, quant/simd.rs"
+            }
             Rule::NoFma => "no mul_add / FMA intrinsics anywhere (bit-exactness contract)",
             Rule::FloatAccum => "float intrinsics in SIMD ISA files only inside affine* fns",
             Rule::FeatureGuard => "#[target_feature] must be runtime-detected in simd/mod.rs",
@@ -344,11 +346,13 @@ impl<'a> SourceView<'a> {
 // ---------------------------------------------------------------------
 
 /// Modules audited for `unsafe` (PR 6's SIMD hot path and the layouts it
-/// reads). Everything else must stay safe code.
+/// reads, plus the SIMD quantize+pack prologue). Everything else must
+/// stay safe code.
 const UNSAFE_ALLOWLIST: &[&str] = &[
     "rust/src/gemm/simd/",
     "rust/src/gemm/kernel.rs",
     "rust/src/quant/interleaved.rs",
+    "rust/src/quant/simd.rs",
 ];
 
 /// The only library homes for thread creation: the scoped worker pool and
@@ -509,9 +513,10 @@ pub fn check_source(label: &str, text: &str) -> Vec<Diagnostic> {
 }
 
 /// `feature-guard`: every feature named by a `#[target_feature(enable =
-/// "…")]` attribute in the SIMD files must be runtime-detected in the
-/// dispatch file (`gemm/simd/mod.rs`), directly or via the implication
-/// closure below (detecting `avx2` proves `avx`).
+/// "…")]` attribute in the SIMD files (`gemm/simd/` and the quantize
+/// prologue `quant/simd.rs`) must be runtime-detected in the dispatch
+/// file (`gemm/simd/mod.rs`), directly or via the implication closure
+/// below (detecting `avx2` proves `avx`).
 pub fn check_feature_guards(files: &[(String, String)]) -> Vec<Diagnostic> {
     const IMPLIES: &[(&str, &[&str])] = &[("avx2", &["avx"]), ("avx512f", &["avx2", "avx"])];
     fn contains_str(v: &[String], s: &str) -> bool {
@@ -548,7 +553,7 @@ pub fn check_feature_guards(files: &[(String, String)]) -> Vec<Diagnostic> {
     }
     let mut diags = Vec::new();
     for (label, text) in files {
-        if !label.contains("gemm/simd/") {
+        if !label.contains("gemm/simd/") && !label.contains("quant/simd") {
             continue;
         }
         let view = SourceView::new(text);
@@ -693,8 +698,9 @@ fn label_for(repo_root: &Path, path: &Path) -> String {
 
 /// Run the whole contract check over the repository tree: source rules
 /// on `rust/src`, `rust/tests`, `rust/benches` and `examples/`,
-/// `feature-guard` across `gemm/simd/`, and `dep-guard` on every
-/// `Cargo.toml` under `rust/` (the xtask's own manifest included).
+/// `feature-guard` across `gemm/simd/` + `quant/simd.rs`, and
+/// `dep-guard` on every `Cargo.toml` under `rust/` (the xtask's own
+/// manifest included).
 pub fn run_check(repo_root: &Path) -> io::Result<CheckReport> {
     let mut report = CheckReport::default();
     let mut rs_files = Vec::new();
@@ -714,7 +720,7 @@ pub fn run_check(repo_root: &Path) -> io::Result<CheckReport> {
     }
     let mut simd: Vec<(String, String)> = Vec::new();
     for (label, text) in &sources {
-        if label.contains("gemm/simd/") {
+        if label.contains("gemm/simd/") || label.contains("quant/simd") {
             simd.push((label.clone(), text.clone()));
         }
     }

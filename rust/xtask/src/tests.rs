@@ -47,6 +47,18 @@ fn unsafe_outside_the_allowlist_fires_unsafe_scope() {
 }
 
 #[test]
+fn quant_simd_is_in_the_unsafe_allowlist() {
+    // The SIMD quantize+pack prologue is an audited unsafe module; the
+    // rest of quant/ (and dnn/) stays safe code.
+    let src = "// SAFETY: fixture\nlet v = unsafe { *p };\n";
+    assert!(check_source("rust/src/quant/simd.rs", src).is_empty());
+    assert_eq!(
+        ids(&check_source("rust/src/quant/packed.rs", src)),
+        vec!["unsafe-scope"]
+    );
+}
+
+#[test]
 fn unsafe_in_prose_or_identifier_does_not_fire() {
     let src = "#![deny(unsafe_op_in_unsafe_fn)]\n\
                // this comment says unsafe and that is fine\n\
@@ -201,6 +213,28 @@ fn detected_and_implied_features_pass_feature_guard() {
         ("rust/src/gemm/simd/x86.rs".to_string(), isa.to_string()),
     ];
     assert!(check_feature_guards(&files).is_empty());
+}
+
+#[test]
+fn feature_guard_scan_covers_quant_simd() {
+    // quant/simd.rs uses #[target_feature] too; its features must be
+    // detected in gemm/simd/mod.rs like the ISA files' own.
+    let dispatch = "pub fn is_available() -> bool {\n    \
+                    std::arch::is_x86_feature_detected!(\"avx2\")\n}\n";
+    let detected = "#[target_feature(enable = \"avx2\")]\nunsafe fn q() {}\n";
+    let undetected = "#[target_feature(enable = \"avx512vpopcntdq\")]\nunsafe fn q() {}\n";
+    let ok = vec![
+        ("rust/src/gemm/simd/mod.rs".to_string(), dispatch.to_string()),
+        ("rust/src/quant/simd.rs".to_string(), detected.to_string()),
+    ];
+    assert!(check_feature_guards(&ok).is_empty());
+    let bad = vec![
+        ("rust/src/gemm/simd/mod.rs".to_string(), dispatch.to_string()),
+        ("rust/src/quant/simd.rs".to_string(), undetected.to_string()),
+    ];
+    let diags = check_feature_guards(&bad);
+    assert_eq!(ids(&diags), vec!["feature-guard"]);
+    assert_eq!(diags[0].file, "rust/src/quant/simd.rs");
 }
 
 #[test]
